@@ -1,0 +1,68 @@
+"""Kernel microbenchmarks (interpret-mode on CPU: correctness-path timing;
+TPU wall-clock comes from the roofline analysis). Derived = allclose error
+vs the ref.py oracle, so the bench doubles as a numerics gate."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.dueling_score import dueling_score
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.ssd_scan import ssd_scan
+
+from .common import emit
+
+
+def _time(fn, n=3):
+    fn()  # warmup/compile
+    t0 = time.time()
+    for _ in range(n):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+
+    q = jax.random.normal(ks[0], (1, 4, 256, 128))
+    k = jax.random.normal(ks[1], (1, 2, 256, 128))
+    s = _time(lambda: flash_attention(q, k, k, causal=True))
+    err = float(jnp.abs(flash_attention(q, k, k, causal=True)
+                        - ref.attention_ref(q, k, k, causal=True)).max())
+    rows.append(emit("kernels/flash_attention_256", s, f"max_err={err:.2e}"))
+
+    la = -jnp.abs(jax.random.normal(ks[2], (2, 256, 512))) * 0.1
+    xi = jax.random.normal(ks[3], (2, 256, 512))
+    s = _time(lambda: rglru_scan(la, xi))
+    err = float(jnp.abs(rglru_scan(la, xi)[0]
+                        - ref.rglru_ref(la, xi)[0]).max())
+    rows.append(emit("kernels/rglru_scan_256", s, f"max_err={err:.2e}"))
+
+    x = jax.random.normal(ks[4], (1, 256, 4, 64))
+    bt = jax.random.normal(ks[5], (1, 256, 64))
+    dt = jax.nn.softplus(jax.random.normal(ks[6], (1, 256, 4)))
+    s = _time(lambda: ssd_scan(x, bt, bt, -0.1 * dt, dt))
+    err = float(jnp.abs(ssd_scan(x, bt, bt, -0.1 * dt, dt)[0]
+                        - ref.ssd_ref(x, bt, bt, -0.1 * dt, dt)[0]).max())
+    rows.append(emit("kernels/ssd_scan_256", s, f"max_err={err:.2e}"))
+
+    xq = jax.random.normal(ks[7], (256, 384))
+    ae = jax.random.normal(ks[0], (11, 384))
+    th = jax.random.normal(ks[1], (2, 384))
+    s = _time(lambda: dueling_score(xq, ae, th))
+    err = float(jnp.abs(dueling_score(xq, ae, th)
+                        - ref.dueling_score_ref(xq, ae, th[0], th[1])).max())
+    rows.append(emit("kernels/dueling_score_256x11", s, f"max_err={err:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,83 @@
+"""Paper Fig. 3 + Fig. 8 (§5.2): MixInstruct — no category metadata, eq. 6
+label-proportion embeddings, Condorcet-scored utilities, ambiguity removal.
+
+Arms: {e5b_E4 (eq.6, fine-tuned), OpenAItext_5 (generic, prompt)} x
+ambiguity removal {8%, 15%}.
+
+Validation targets:
+  1. eq. 6 embeddings beat the generic-embedding arm (Fig. 3a);
+  2. removing 15% is WORSE than removing 8% (Fig. 3b — discarding learnable
+     information hurts).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import mixinstruct as mi
+from repro.data import pipeline
+from repro.data.synth import CorpusConfig
+
+from .common import (CORPUS, curve_summary, default_fgts_cfg, emit,
+                     get_encoder, run_fgts_curves, save_curve, timed)
+
+N_QUERIES = 900
+N_OFFLINE = 80          # ~10 per latent category (paper footnote 9)
+
+
+def run(seed: int = 0, encoder_tag: str = "e5b", epochs: int = 4):
+    rows = []
+    key = jax.random.PRNGKey(seed + 29)
+    cc = dataclasses.replace(CORPUS,
+                             n_categories=mi.MixInstructConfig().n_latent_cats)
+    data_full = mi.make_dataset(key, cc, mi.MixInstructConfig(
+        n_queries=N_QUERIES))
+
+    # Fine-tune WITHOUT category labels: MixInstruct has none, so the paper's
+    # pair construction uses the *source* grouping; our stand-in uses the
+    # best-model label from pairwise scores (available in the offline pool).
+    labels = mi.best_model_labels(data_full["pairwise"])[:N_OFFLINE]
+    offline = (data_full["tokens"][:N_OFFLINE], data_full["mask"][:N_OFFLINE],
+               labels)
+    gen_params, gen_cfg = get_encoder(encoder_tag, "generic", variant="mix")
+    ft_params, ft_cfg = get_encoder(f"{encoder_tag}", "ft", offline=offline,
+                                    epochs=epochs, corpus=cc, variant="mix")
+
+    finals = {}
+    for frac, tag in ((0.08, "8"), (0.15, "15")):
+        data = mi.remove_ambiguous(data_full, frac)
+        for enc_name, (p, c) in {
+            f"{encoder_tag}_E{epochs}": (ft_params, ft_cfg),
+            "OpenAItext_5": (gen_params, gen_cfg),
+        }.items():
+            e, a = pipeline.mixinstruct_env_and_embeddings(
+                p, c, data, n_offline=N_OFFLINE)
+            cfg = default_fgts_cfg(dim=e.x.shape[1], horizon=e.x.shape[0],
+                                   n_models=mi.N_MODELS)
+            (mean, _), secs = timed(run_fgts_curves, e, a, cfg)
+            name = f"{enc_name}_{tag}"
+            save_curve(f"mixinstruct_{name}", mean)
+            # normalize per-round (streams differ in length after removal)
+            per_round = mean[-1] / len(mean)
+            finals[name] = per_round
+            rows.append(emit(f"fig3_mixinstruct/{name}",
+                             secs / e.x.shape[0],
+                             curve_summary(mean) +
+                             f";per_round={per_round:.4f}"))
+
+    checks = {
+        "eq6_beats_generic": (
+            finals[f"{encoder_tag}_E{epochs}_8"] < finals["OpenAItext_5_8"]),
+        "remove8_better_than_15": (
+            finals[f"{encoder_tag}_E{epochs}_8"]
+            <= finals[f"{encoder_tag}_E{epochs}_15"]),
+    }
+    rows.append(emit("fig3_mixinstruct/paper_orderings", 0.0,
+                     ";".join(f"{k}={v}" for k, v in checks.items())))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

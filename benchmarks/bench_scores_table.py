@@ -1,0 +1,64 @@
+"""Paper Tab. 1: Perf_cost (i), Excel_perf_cost (ii), Excel_mask (iii) scores
+derived from the embedded Tab. 3 metadata (lambda = 0.05, tau = 3).
+
+Derived value = max |table - spot-checked paper entries| over the cells the
+paper quotes (0 means exact reproduction).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ccft
+from repro.data import routerbench as rb
+
+from .common import emit
+
+# Paper Tab. 1 lists the first ten LLMs (GPT-4 excluded).
+PAPER_SPOT_CHECKS = {
+    # (llm, benchmark): (col_i, col_ii, col_iii)
+    ("WizardLM 13B", "MMLU"): (0.562, 0.0, 0.0),
+    ("Mixtral 8x7B", "MT-Bench"): (0.920, 0.920, 1.0),
+    ("Yi 34B", "HellaSwag"): (0.834, 0.834, 1.0),
+    ("GPT-3.5", "MBPP"): (0.649, 0.649, 1.0),
+    ("Claude Instant V1", "GSM8k"): (0.561, 0.561, 1.0),
+    ("Claude V2", "HellaSwag"): (-0.554, 0.0, 0.0),
+    ("Claude V1", "MT-Bench"): (0.920, 0.920, 1.0),
+    ("GPT-3.5", "MT-Bench"): (0.907, 0.907, 1.0),  # dense-rank tie case
+    ("Llama 70B", "ARC"): (0.784, 0.0, 0.0),
+}
+
+
+def run():
+    t0 = time.time()
+    # Tab. 1 scope: the ten listed LLMs, scores rounded to 3 decimals before
+    # ranking (the paper's table was built from the displayed precision —
+    # Mixtral 0.9204 and Claude V1 0.91995 tie at 0.920 there).
+    s = jnp.round(jnp.asarray(rb.scores()[:10]), 3)
+    col_i = np.asarray(s)
+    col_ii = np.asarray(ccft.top_tau(s, 3))
+    col_iii = np.asarray(ccft.mask_tau(s, 3))
+
+    print("\nTab. 1 reproduction (lambda=0.05, tau=3):")
+    hdr = f"{'LLM':<18}" + "".join(f"{b:>26}" for b in rb.BENCHMARKS)
+    print(hdr)
+    for k, name in enumerate(rb.LLMS[:10]):
+        cells = "".join(
+            f"  ({col_i[k, m]:+.3f},{col_ii[k, m]:.3f},{col_iii[k, m]:.0f})"
+            for m in range(7))
+        print(f"{name:<18}{cells}")
+
+    err = 0.0
+    for (llm, bench), want in PAPER_SPOT_CHECKS.items():
+        k = rb.LLMS.index(llm)
+        m = rb.BENCHMARKS.index(bench)
+        got = (col_i[k, m], col_ii[k, m], col_iii[k, m])
+        err = max(err, max(abs(g - w) for g, w in zip(got, want)))
+    return [emit("tab1_scores/spot_check_max_err", time.time() - t0,
+                 f"{err:.4f}")]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,143 @@
+"""Shared benchmark infrastructure: trained-encoder cache, curve runners,
+CSV emission. Every benchmark prints ``name,us_per_call,derived`` rows
+(derived = final cumulative regret unless stated otherwise)."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.contrastive import finetune_categorical, pretrain_generic
+from repro.core import env as env_lib
+from repro.core import fgts, regret
+from repro.data.synth import CorpusConfig, make_split
+from repro.encoder import EncoderConfig, init_encoder
+
+RESULTS = os.environ.get("REPRO_RESULTS", "results")
+SEED = 0
+N_RUNS = int(os.environ.get("REPRO_RUNS", "5"))      # paper: average of 5
+
+# The two "text models" we train in-framework (stand-ins for e5b / MiniLM).
+ENCODERS = {
+    "e5b": EncoderConfig(vocab_size=2048, d_model=128, n_layers=3, n_heads=4,
+                         d_ff=512, max_len=32, name="e5b-repro"),
+    "minilm": EncoderConfig(vocab_size=2048, d_model=96, n_layers=2,
+                            n_heads=4, d_ff=384, max_len=32,
+                            name="minilm-repro"),
+}
+
+# Corpus with overlapping category blocks: a generic (token-overlap) encoder
+# blurs neighbouring categories; contrastive fine-tuning separates them —
+# reproducing the paper's generic-vs-fine-tuned contrast (Fig. 5).
+CORPUS = CorpusConfig(n_categories=7, seq_len=32, common_frac=0.55,
+                      common_pool=384, block_size=224, block_overlap=0.5)
+
+
+def _ckpt_dir(tag: str) -> str:
+    return os.path.join(RESULTS, "encoders", tag)
+
+
+def get_encoder(tag: str, kind: str, offline=None, epochs: int = 4,
+                corpus: CorpusConfig = CORPUS, force: bool = False,
+                variant: str = ""):
+    """kind: 'generic' (pretrained ctrl / OpenAItext stand-in) or
+    'ft' (CCFT fine-tuned on the given offline split). ``variant`` keys the
+    cache per experiment (offline splits differ across benchmarks)."""
+    cfg = ENCODERS[tag]
+    key = jax.random.PRNGKey(hash((tag, kind, epochs, variant)) % (2 ** 31))
+    params0 = init_encoder(jax.random.PRNGKey(SEED), cfg)
+    chash = abs(hash(corpus)) % 100_000
+    cache = _ckpt_dir(f"{tag}_{variant}_{kind}_{epochs}_{chash}"
+                      if kind == "ft" else f"{tag}_{variant}_{kind}_{chash}")
+    from repro.checkpoint import latest_step
+    if not force and latest_step(cache) is not None:
+        return restore_checkpoint(cache, latest_step(cache), params0), cfg
+
+    # generic pretraining corpus (unlabelled)
+    pt_tok, pt_mask, _ = make_split(jax.random.PRNGKey(SEED + 1), 120, corpus)
+    params, _ = pretrain_generic(key, params0, pt_tok, pt_mask, cfg,
+                                 steps=150, batch=64)
+    if kind == "ft":
+        assert offline is not None
+        tok, mask, cats = offline
+        params, _ = finetune_categorical(key, params, tok, mask, cats, cfg,
+                                         epochs=epochs, steps_per_epoch=40,
+                                         batch=64)
+    save_checkpoint(cache, 1, params)
+    return params, cfg
+
+
+# ---------------------------------------------------------------------------
+# Curve runners
+# ---------------------------------------------------------------------------
+
+def default_fgts_cfg(dim: int, horizon: int, **kw) -> fgts.FGTSConfig:
+    # eta/steps/eps tuned on the cost-aware RouterBench env (see
+    # EXPERIMENTS.md §Reproduction notes): the posterior must be likelihood-
+    # dominated for embedding quality to express itself.
+    base = dict(n_models=11, dim=dim, horizon=horizon, eta=8.0, mu=0.2,
+                sgld_steps=20, sgld_eps=5e-4, sgld_minibatch=64)
+    base.update(kw)
+    return fgts.FGTSConfig(**base)
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def _fgts_runner(cfg: fgts.FGTSConfig):
+    """One compiled program per FGTSConfig — env/a_emb arrays are arguments,
+    so every curve with the same shapes reuses the XLA executable."""
+
+    @jax.jit
+    def run(keys, x, utils, fb, a_emb):
+        e = env_lib.EnvData(x=x, utils=utils, feedback_scale=fb)
+        return jax.vmap(lambda k: env_lib.run_fgts(k, e, a_emb, cfg)[0])(keys)
+
+    return run
+
+
+def run_fgts_curves(e: env_lib.EnvData, a_emb, cfg: fgts.FGTSConfig,
+                    n_runs: int = N_RUNS, seed: int = SEED):
+    """Average cumulative regret over n_runs seeds (vmapped)."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_runs)
+    curves = np.asarray(_fgts_runner(cfg)(keys, e.x, e.utils,
+                                          e.feedback_scale, a_emb))
+    return curves.mean(axis=0), curves
+
+
+def run_policy_curves(e: env_lib.EnvData, policy, n_runs: int = N_RUNS,
+                      seed: int = SEED):
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_runs)
+    run = jax.jit(jax.vmap(lambda k: env_lib.run_policy(k, e, policy)[0]))
+    curves = np.asarray(run(keys))
+    return curves.mean(axis=0), curves
+
+
+def save_curve(name: str, curve: np.ndarray):
+    os.makedirs(os.path.join(RESULTS, "curves"), exist_ok=True)
+    np.save(os.path.join(RESULTS, "curves", f"{name}.npy"), curve)
+
+
+def emit(name: str, seconds: float, derived) -> str:
+    """CSV row: name,us_per_call,derived."""
+    row = f"{name},{seconds * 1e6:.1f},{derived}"
+    print(row)
+    return row
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    return out, time.time() - t0
+
+
+def curve_summary(curve: np.ndarray) -> str:
+    return (f"final={curve[-1]:.1f};slope_ratio="
+            f"{regret.slope_ratio(curve):.3f}")

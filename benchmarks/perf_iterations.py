@@ -1,0 +1,155 @@
+"""§Perf hillclimb driver — hypothesis → change → re-lower → re-analyse.
+
+Three pairs chosen from the baseline roofline table (EXPERIMENTS.md §Roofline):
+
+  P1 mistral-large-123b × prefill_32k — worst dominant term
+     (collective 3.4e3 s, memory 1.5e3 s vs compute 1.0e1 s)
+  P2 arctic-480b × decode_32k — most collective-bound *serving* combo
+     (the paper's router serves decode traffic; useful-FLOP ratio 0.03)
+  P3 granite-moe-3b-a800m × train_4k — worst useful-FLOP ratio (0.06),
+     and the expert-dispatch structure closest to the paper's routing theme
+
+Each iteration records hypothesis, napkin-math prediction, and the measured
+before/after roofline terms into results/perf.json; EXPERIMENTS.md §Perf is
+written from that log.
+
+Run (needs the 512-device env, so go through the dryrun module):
+    PYTHONPATH=src python -m benchmarks.perf_iterations [--pair P1]
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+import argparse  # noqa: E402
+import json      # noqa: E402
+import time      # noqa: E402
+
+from repro.launch.dryrun import dryrun_one            # noqa: E402
+from benchmarks.roofline import analyse               # noqa: E402
+from benchmarks.common import RESULTS                 # noqa: E402
+
+PLAN = {
+    "P1": {
+        "pair": ("mistral-large-123b", "prefill_32k"),
+        "iterations": [
+            {"name": "baseline", "overrides": {},
+             "hypothesis": "paper-faithful baseline: grouped GQA (kv=8 not "
+                           "divisible by model=16 -> head_dim-sharded QK => "
+                           "every layer all-reduces the f32 (B,H,S,T) score "
+                           "tensor; scores also materialize in HBM)."},
+            {"name": "repeat_kv", "overrides": {"gqa_impl": "repeat"},
+             "hypothesis": "repeat KV to 96 heads; Q/O head-sharded, KV "
+                           "replicated => attention has NO sharded "
+                           "contraction. Predict collective term drops "
+                           ">50x (score all-reduce was ~S*T*H*4B/layer = "
+                           "~4e11 B/dev/layer); memory term ~unchanged "
+                           "(scores still materialize)."},
+            {"name": "repeat_kv+qchunk",
+             "overrides": {"gqa_impl": "repeat", "attn_q_chunk": 2048},
+             "hypothesis": "blockwise attention over q chunks bounds the "
+                           "live score buffer 16x (32768->2048 rows). "
+                           "Predict memory term drops ~5-15x toward the "
+                           "weights+KV traffic floor; compute unchanged."},
+        ],
+    },
+    "P2": {
+        "pair": ("arctic-480b", "decode_32k"),
+        "iterations": [
+            {"name": "baseline", "overrides": {},
+             "hypothesis": "baseline decode uses DENSE MoE dispatch (every "
+                           "token through all 128 experts): compute waste "
+                           "E/topk = 64x, and the (E,N,d) combine all-"
+                           "reduces across the expert-sharded axis."},
+            {"name": "sparse_decode_moe", "overrides": {"moe_decode_impl": "sparse"},
+             "hypothesis": "capacity-bucketed dispatch at decode: compute "
+                           "drops ~64x (only top-2 experts run); predict "
+                           "the dominant term flips from collective toward "
+                           "memory (reading 2/128 of expert weights)."},
+            {"name": "sparse+repeat_kv",
+             "overrides": {"moe_decode_impl": "sparse", "gqa_impl": "repeat"},
+             "hypothesis": "negative control: arctic has 56 q-heads, "
+                           "56 % 16 != 0, so the repeat-KV sharding layout "
+                           "is inapplicable (attn_specs falls back to the "
+                           "grouped layout) — expect ~no further change."},
+        ],
+    },
+    "P3": {
+        "pair": ("granite-moe-3b-a800m", "train_4k"),
+        "iterations": [
+            {"name": "baseline", "overrides": {},
+             "hypothesis": "baseline sparse dispatch: with d_ff=512 and E=40 "
+                           "the expert matmuls are tiny, so the argsort + "
+                           "scatter/gather dispatch machinery dominates "
+                           "bytes (useful-FLOP ratio 0.06) and the fwd+bwd "
+                           "gathers all-gather token buffers."},
+            {"name": "dense_moe", "overrides": {"moe_impl": "dense"},
+             "hypothesis": "dense dispatch costs E/topk = 5x extra FFN "
+                           "FLOPs but removes sort/scatter entirely; for "
+                           "d_ff=512 the FFN is ~23% of layer FLOPs, so "
+                           "predict flops +~1.9x NET but bytes and "
+                           "collectives down 2-4x -> dominant (memory) "
+                           "term improves."},
+            {"name": "dense_moe+qchunk",
+             "overrides": {"moe_impl": "dense", "attn_q_chunk": 1024},
+             "hypothesis": "4096-seq attention scores (B,24H,4096,4096) "
+                           "also sit in the bytes term; chunking q 4x "
+                           "bounds the buffer. Predict a further memory-"
+                           "term cut of ~1.5-2x."},
+        ],
+    },
+}
+
+
+def run_pair(tag: str, plan: dict, out: dict):
+    arch, shape = plan["pair"]
+    out.setdefault(tag, {"arch": arch, "shape": shape, "iterations": []})
+    done = {it["name"] for it in out[tag]["iterations"]}
+    for it in plan["iterations"]:
+        if it["name"] in done:
+            continue
+        t0 = time.time()
+        rec = dryrun_one(arch, shape, multi_pod=False, verbose=False,
+                         overrides=it["overrides"] or None)
+        r = analyse(rec)
+        entry = {
+            "name": it["name"],
+            "overrides": it["overrides"],
+            "hypothesis": it["hypothesis"],
+            "compute_s": r["compute_s"],
+            "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "dominant": r["dominant"],
+            "useful_ratio": r["useful_ratio"],
+            "wall_s": round(time.time() - t0, 1),
+        }
+        base = out[tag]["iterations"][0] if out[tag]["iterations"] else entry
+        entry["dominant_vs_baseline"] = round(
+            base[f"{base['dominant']}_s"] / max(entry[f"{base['dominant']}_s"],
+                                                1e-12), 2)
+        out[tag]["iterations"].append(entry)
+        print(f"[perf:{tag}] {it['name']}: compute={r['compute_s']:.3e} "
+              f"memory={r['memory_s']:.3e} collective={r['collective_s']:.3e} "
+              f"dominant={r['dominant']} useful={r['useful_ratio']:.2f} "
+              f"({entry['wall_s']}s)")
+        _save(out)
+
+
+def _save(out):
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "perf.json"), "w") as f:
+        json.dump(out, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", choices=sorted(PLAN), default=None)
+    args = ap.parse_args()
+    path = os.path.join(RESULTS, "perf.json")
+    out = json.load(open(path)) if os.path.exists(path) else {}
+    for tag in ([args.pair] if args.pair else sorted(PLAN)):
+        run_pair(tag, PLAN[tag], out)
+    _save(out)
+    print("[perf] wrote results/perf.json")
+
+
+if __name__ == "__main__":
+    main()

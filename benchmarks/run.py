@@ -1,0 +1,72 @@
+"""Benchmark orchestrator — one harness per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,roofline] [--fast]
+
+Emits ``name,us_per_call,derived`` CSV rows (also written to
+results/bench.csv). Mapping to the paper:
+
+    fig1      bench_mmlu_naive      Fig. 1 / Fig. 4 (naive phi fails)
+    tab1      bench_scores_table    Tab. 1 (scores i/ii/iii)
+    fig2      bench_routerbench     Fig. 2a/2b + Fig. 6 (RouterBench)
+    fig2cd    bench_generalization  Fig. 2c/2d + Fig. 7 (unseen benchmark)
+    fig3      bench_mixinstruct     Fig. 3 + Fig. 8 (MixInstruct)
+    b3        bench_baselines       App. B.3 (MixLLM) + ablations
+    kernels   bench_kernels         Pallas-vs-oracle numerics + timing
+    roofline  roofline              EXPERIMENTS.md §Roofline source
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of bench names")
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer seeds (REPRO_RUNS=2)")
+    args = ap.parse_args()
+    if args.fast:
+        os.environ["REPRO_RUNS"] = "2"
+
+    from . import (bench_baselines, bench_generalization, bench_kernels,
+                   bench_mixinstruct, bench_mmlu_naive, bench_routerbench,
+                   bench_scores_table, roofline)
+    benches = {
+        "tab1": bench_scores_table.run,
+        "kernels": bench_kernels.run,
+        "fig1": bench_mmlu_naive.run,
+        "fig2": bench_routerbench.run,
+        "fig2cd": bench_generalization.run,
+        "fig3": bench_mixinstruct.run,
+        "b3": bench_baselines.run,
+        "roofline": roofline.run,
+    }
+    wanted = (args.only.split(",") if args.only else list(benches))
+
+    print("name,us_per_call,derived")
+    all_rows, failures = [], []
+    for name in wanted:
+        t0 = time.time()
+        try:
+            rows = benches[name]()
+            all_rows.extend(rows or [])
+            print(f"# {name}: ok in {time.time()-t0:.1f}s")
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            print(f"# {name}: FAILED\n{traceback.format_exc()}")
+
+    from .common import RESULTS
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "bench.csv"), "w") as f:
+        f.write("name,us_per_call,derived\n")
+        f.write("\n".join(all_rows) + "\n")
+    if failures:
+        raise SystemExit(f"failed benches: {failures}")
+
+
+if __name__ == "__main__":
+    main()

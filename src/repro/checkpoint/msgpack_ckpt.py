@@ -1,0 +1,56 @@
+"""Msgpack-based pytree checkpointing (atomic write, step-indexed)."""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "leaves": [{"dtype": str(np.asarray(l).dtype),
+                    "shape": list(np.asarray(l).shape),
+                    "data": np.asarray(l).tobytes()} for l in leaves],
+    }
+    return msgpack.packb(payload, use_bin_type=True)
+
+
+def save_checkpoint(path: str, step: int, tree) -> str:
+    os.makedirs(path, exist_ok=True)
+    fname = os.path.join(path, f"ckpt_{step:08d}.msgpack")
+    fd, tmp = tempfile.mkstemp(dir=path)
+    with os.fdopen(fd, "wb") as f:
+        f.write(_encode(jax.device_get(tree)))
+    os.replace(tmp, fname)
+    return fname
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(f[5:13]) for f in os.listdir(path)
+             if f.startswith("ckpt_") and f.endswith(".msgpack")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(path: str, step: int, like):
+    """Restore into the structure of `like` (shape/dtype check)."""
+    fname = os.path.join(path, f"ckpt_{step:08d}.msgpack")
+    with open(fname, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves_like, treedef = jax.tree.flatten(like)
+    stored = payload["leaves"]
+    assert len(stored) == len(leaves_like), "checkpoint structure mismatch"
+    out = []
+    for rec, ref in zip(stored, leaves_like):
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"])
+        assert tuple(arr.shape) == tuple(np.asarray(ref).shape), (
+            arr.shape, np.asarray(ref).shape)
+        out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out)

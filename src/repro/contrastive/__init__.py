@@ -1,0 +1,2 @@
+from .finetune import (cosine_loss, finetune_categorical, make_category_pairs,
+                       make_generic_pairs, pretrain_generic, train_step)

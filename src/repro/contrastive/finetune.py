@@ -1,0 +1,101 @@
+"""Contrastive training of the embedding encoder.
+
+Two stages, mirroring the paper's setup:
+
+* ``pretrain_generic`` — the stand-in for a general-purpose pretrained
+  sentence encoder (the paper's OpenAItext / non-fine-tuned ctrl models):
+  cosine-similarity regression against *token-overlap* (Jaccard) targets —
+  a label-free semantic signal.
+* ``finetune_categorical`` — the paper's CCFT fine-tuning step: build
+  similar/dissimilar pairs from the offline queries' source category and
+  regress cosine similarity to 1 (same category) / 0 (different), the
+  sentence-transformers CosineSimilarityLoss recipe (Reimers & Gurevych).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.encoder.model import EncoderConfig, encode
+from repro.optim import adamw_init, adamw_update
+
+
+def _pair_cosine(params, toks_a, mask_a, toks_b, mask_b, cfg):
+    ea = encode(params, toks_a, mask_a, cfg)
+    eb = encode(params, toks_b, mask_b, cfg)
+    return jnp.sum(ea * eb, axis=-1)
+
+
+def cosine_loss(params, batch, cfg: EncoderConfig):
+    sim = _pair_cosine(params, batch["tok_a"], batch["mask_a"],
+                       batch["tok_b"], batch["mask_b"], cfg)
+    return jnp.mean(jnp.square(sim - batch["target"]))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "lr"))
+def train_step(params, opt_state, batch, cfg: EncoderConfig, lr: float = 2e-3):
+    loss, grads = jax.value_and_grad(cosine_loss)(params, batch, cfg)
+    params, opt_state = adamw_update(params, grads, opt_state, lr,
+                                     weight_decay=0.01)
+    return params, opt_state, loss
+
+
+def jaccard_targets(tok_a: jax.Array, tok_b: jax.Array, vocab: int):
+    """Token-overlap similarity in [0,1] — generic pretraining target."""
+    oa = jnp.zeros((tok_a.shape[0], vocab)).at[
+        jnp.arange(tok_a.shape[0])[:, None], tok_a].set(1.0)
+    ob = jnp.zeros((tok_b.shape[0], vocab)).at[
+        jnp.arange(tok_b.shape[0])[:, None], tok_b].set(1.0)
+    inter = jnp.sum(oa * ob, axis=-1)
+    union = jnp.maximum(jnp.sum(jnp.maximum(oa, ob), axis=-1), 1.0)
+    return inter / union
+
+
+def make_category_pairs(key, tokens, mask, cats, batch: int):
+    """Pairs labelled by category equality (the paper's pair construction)."""
+    k1, k2 = jax.random.split(key)
+    n = tokens.shape[0]
+    ia = jax.random.randint(k1, (batch,), 0, n)
+    ib = jax.random.randint(k2, (batch,), 0, n)
+    target = (cats[ia] == cats[ib]).astype(jnp.float32)
+    return {"tok_a": tokens[ia], "mask_a": mask[ia],
+            "tok_b": tokens[ib], "mask_b": mask[ib], "target": target}
+
+
+def make_generic_pairs(key, tokens, mask, vocab: int, batch: int):
+    k1, k2 = jax.random.split(key)
+    n = tokens.shape[0]
+    ia = jax.random.randint(k1, (batch,), 0, n)
+    ib = jax.random.randint(k2, (batch,), 0, n)
+    target = jaccard_targets(tokens[ia], tokens[ib], vocab)
+    return {"tok_a": tokens[ia], "mask_a": mask[ia],
+            "tok_b": tokens[ib], "mask_b": mask[ib], "target": target}
+
+
+def pretrain_generic(key, params, tokens, mask, cfg: EncoderConfig,
+                     steps: int = 200, batch: int = 64, lr: float = 2e-3):
+    opt = adamw_init(params)
+    losses = []
+    for i in range(steps):
+        key, kb = jax.random.split(key)
+        b = make_generic_pairs(kb, tokens, mask, cfg.vocab_size, batch)
+        params, opt, loss = train_step(params, opt, b, cfg, lr)
+        losses.append(float(loss))
+    return params, losses
+
+
+def finetune_categorical(key, params, tokens, mask, cats, cfg: EncoderConfig,
+                         epochs: int = 4, steps_per_epoch: int = 50,
+                         batch: int = 64, lr: float = 1e-3):
+    """The paper's E2/E4 fine-tuning: `epochs` x a fixed number of steps."""
+    opt = adamw_init(params)
+    losses = []
+    for e in range(epochs):
+        for i in range(steps_per_epoch):
+            key, kb = jax.random.split(key)
+            b = make_category_pairs(kb, tokens, mask, cats, batch)
+            params, opt, loss = train_step(params, opt, b, cfg, lr)
+            losses.append(float(loss))
+    return params, losses

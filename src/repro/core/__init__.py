@@ -1,0 +1,3 @@
+from . import baselines, btl, ccft, env, extensions, fgts, regret
+
+__all__ = ["baselines", "btl", "ccft", "env", "extensions", "fgts", "regret"]

@@ -1,0 +1,126 @@
+"""Baseline routing policies for comparison (paper §5, App. B.3).
+
+* ``uniform``        — random pair each round.
+* ``best_fixed``     — oracle best single arm in hindsight (plays (k*,k*));
+                       Tab. 2's "any fixed-LLM strategy" reference.
+* ``vanilla_ts``     — FGTS.CDB with mu = 0: ablates the feel-good term.
+* ``eps_greedy``     — MAP theta by SGD on the preference loss + epsilon
+                       exploration over arms.
+* ``linucb_duel``    — MixLLM-style LinUCB (Wang et al. 2025) adapted to the
+                       duel protocol: pointwise pseudo-rewards (y+1)/2 for a1
+                       and (1-y)/2 for a2 on phi features, UCB selection of
+                       the top-2 arms.
+
+Each exposes (init_fn, round_fn) compatible with ``env.run_policy``; FGTS
+variants reuse ``env.run_fgts``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .btl import logistic_loss, sample_preference
+from .ccft import phi, phi_all, scores_all
+
+
+def uniform_policy(n_models: int):
+    def init_fn(key):
+        return jnp.zeros(())
+
+    def round_fn(key, state, x_t, u_t, fb_scale):
+        a = jax.random.choice(key, n_models, (2,), replace=False)
+        return state, a[0], a[1]
+
+    return init_fn, round_fn
+
+
+def best_fixed_policy(utils_mean: jax.Array):
+    """utils_mean: (K,) average utility per arm over the stream (hindsight)."""
+    k_star = jnp.argmax(utils_mean).astype(jnp.int32)
+
+    def init_fn(key):
+        return jnp.zeros(())
+
+    def round_fn(key, state, x_t, u_t, fb_scale):
+        return state, k_star, k_star
+
+    return init_fn, round_fn
+
+
+@dataclasses.dataclass(frozen=True)
+class EpsGreedyConfig:
+    n_models: int
+    dim: int
+    eps: float = 0.1
+    lr: float = 0.05
+
+
+def eps_greedy_policy(a_emb: jax.Array, cfg: EpsGreedyConfig):
+    """SGD-MAP on the preference loss; epsilon-uniform exploration."""
+
+    def init_fn(key):
+        return {"theta": jax.random.normal(key, (cfg.dim,)) * 0.1}
+
+    def round_fn(key, state, x_t, u_t, fb_scale):
+        k_e, k_a, k_fb = jax.random.split(key, 3)
+        s = scores_all(x_t, a_emb, state["theta"])
+        a1_greedy = jnp.argmax(s)
+        a2_greedy = jnp.argmax(s.at[a1_greedy].set(-jnp.inf))
+        explore = jax.random.uniform(k_e) < cfg.eps
+        a_rand = jax.random.choice(k_a, cfg.n_models, (2,), replace=False)
+        a1 = jnp.where(explore, a_rand[0], a1_greedy).astype(jnp.int32)
+        a2 = jnp.where(explore, a_rand[1], a2_greedy).astype(jnp.int32)
+        y = sample_preference(k_fb, fb_scale * u_t[a1], fb_scale * u_t[a2])
+
+        def loss(theta):
+            z = y * ((phi(x_t, a_emb[a1]) - phi(x_t, a_emb[a2])) @ theta)
+            return logistic_loss(z)
+
+        g = jax.grad(loss)(state["theta"])
+        return {"theta": state["theta"] - cfg.lr * g}, a1, a2
+
+    return init_fn, round_fn
+
+
+@dataclasses.dataclass(frozen=True)
+class LinUCBConfig:
+    n_models: int
+    dim: int
+    alpha: float = 0.5       # exploration bonus
+    lam: float = 1.0         # ridge prior
+
+
+def linucb_duel_policy(a_emb: jax.Array, cfg: LinUCBConfig):
+    """MixLLM-style per-arm LinUCB with pointwise pseudo-feedback.
+
+    Per arm k: ridge statistics A_k = lam*I + sum phi phi^T, b_k = sum r*phi,
+    UCB_k = theta_k . phi + alpha * sqrt(phi^T A_k^{-1} phi). The duel y is
+    converted to pointwise rewards r(a1) = (y+1)/2, r(a2) = (1-y)/2 — the
+    pointwise-signal assumption MixLLM makes (App. B.3 discussion).
+    """
+    d = cfg.dim
+
+    def init_fn(key):
+        eye = jnp.broadcast_to(jnp.eye(d) * cfg.lam, (cfg.n_models, d, d))
+        return {"A": eye, "b": jnp.zeros((cfg.n_models, d))}
+
+    def round_fn(key, state, x_t, u_t, fb_scale):
+        feats = phi_all(x_t, a_emb)                        # (K, d)
+        a_inv = jnp.linalg.inv(state["A"])                 # (K, d, d)
+        theta = jnp.einsum("kij,kj->ki", a_inv, state["b"])
+        mean = jnp.sum(theta * feats, axis=-1)
+        var = jnp.einsum("ki,kij,kj->k", feats, a_inv, feats)
+        ucb = mean + cfg.alpha * jnp.sqrt(jnp.maximum(var, 0.0))
+        a1 = jnp.argmax(ucb).astype(jnp.int32)
+        a2 = jnp.argmax(ucb.at[a1].set(-jnp.inf)).astype(jnp.int32)
+        y = sample_preference(key, fb_scale * u_t[a1], fb_scale * u_t[a2])
+        r1, r2 = (y + 1) / 2, (1 - y) / 2
+        f1, f2 = feats[a1], feats[a2]
+        new_a = state["A"].at[a1].add(jnp.outer(f1, f1)).at[a2].add(
+            jnp.outer(f2, f2))
+        new_b = state["b"].at[a1].add(r1 * f1).at[a2].add(r2 * f2)
+        return {"A": new_a, "b": new_b}, a1, a2
+
+    return init_fn, round_fn

@@ -1,0 +1,26 @@
+"""Bradley-Terry-Luce preference model (paper §3).
+
+The paper writes P(y=1 | x, a1, a2) = exp(-sigma(r1 - r2)) with
+sigma(z) = log(1 + exp(-z)); algebraically this is the familiar
+sigmoid(r1 - r2). y = +1 means a1 preferred, y = -1 means a2 preferred.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def logistic_loss(z: jax.Array) -> jax.Array:
+    """sigma(z) = log(1 + exp(-z)) — the paper's preference loss."""
+    return jax.nn.softplus(-z)
+
+
+def preference_prob(r1: jax.Array, r2: jax.Array) -> jax.Array:
+    """P(y = +1 | r1, r2) = exp(-sigma(r1-r2)) = sigmoid(r1 - r2)."""
+    return jax.nn.sigmoid(r1 - r2)
+
+
+def sample_preference(key: jax.Array, r1: jax.Array, r2: jax.Array) -> jax.Array:
+    """Draw y in {+1, -1} from the BTL model."""
+    p = preference_prob(r1, r2)
+    return jnp.where(jax.random.uniform(key, p.shape) < p, 1.0, -1.0)

@@ -1,0 +1,135 @@
+"""Category-Calibrated Fine-Tuning (CCFT) — the paper's §4.2 contribution.
+
+Builds LLM (model) embeddings a_k from category embeddings xi_m and
+per-category skill scores s_k via four categorical-weighting variants:
+
+    perf            a_k = xi softmax(s_k)                      (eq. 3)
+    perf_cost       same, with s_km = perf_km - lambda*cost_km (eq. 3)
+    excel_perf_cost a_k = xi softmax(top^tau(s_k))             (eq. 4)
+    excel_mask      a_k = xi mask^tau(s_k) / tau               (eq. 5)
+
+plus the score-free label-proportion embedding (eq. 6 / Prop. 1) used for
+MixInstruct-style data, and the feature map phi(x, a) = normalize(x ⊙ a).
+
+``top``/``mask`` rank each *category column* across models: s_(tau),m is the
+tau-th largest of {s_1m..s_Km}; entries below it are zeroed/masked.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WEIGHTINGS = ("perf", "perf_cost", "excel_perf_cost", "excel_mask")
+
+
+def perf_cost_scores(perf: jax.Array, cost: jax.Array, lam: float = 0.05):
+    """s = perf - lambda*cost (paper uses lambda = 0.05)."""
+    return perf - lam * cost
+
+
+def _dense_tau_threshold(s: jax.Array, tau: int) -> jax.Array:
+    """tau-th largest *distinct* value per category column (dense ranking).
+
+    The paper's Tab. 1 shows four nonzero MT-Bench entries under tau = 3
+    because Mixtral and Claude V1 tie at 0.920 and share one rank — so
+    s_(tau),m ranks distinct values, ties collapsing to one position.
+    """
+    srt = -jnp.sort(-s, axis=0)                       # (K, M) descending
+    newv = jnp.concatenate(
+        [jnp.ones((1, s.shape[1]), bool), srt[1:] < srt[:-1] - 1e-9], axis=0)
+    rank = jnp.cumsum(newv, axis=0)                   # dense rank 1..K
+    masked = jnp.where(rank <= tau, srt, jnp.inf)
+    return jnp.min(masked, axis=0)
+
+
+def top_tau(s: jax.Array, tau: int) -> jax.Array:
+    """Keep s_km iff it is among the top-tau (dense-ranked) of its category
+    column. s: (K, M). Returns (K, M) with non-top entries zeroed (eq. 4)."""
+    thresh = _dense_tau_threshold(s, tau)
+    return jnp.where(s >= thresh - 1e-9, s, 0.0)
+
+
+def mask_tau(s: jax.Array, tau: int) -> jax.Array:
+    """Binary version of top_tau (eq. 5's mask fn)."""
+    thresh = _dense_tau_threshold(s, tau)
+    return (s >= thresh - 1e-9).astype(s.dtype)
+
+
+def model_embeddings(xi: jax.Array, scores: jax.Array, weighting: str,
+                     tau: int = 3) -> jax.Array:
+    """xi: (d, M) category embeddings; scores: (K, M). Returns A: (K, d).
+
+    ``scores`` should already be perf or perf-cost blended — ``perf`` and
+    ``perf_cost`` differ only in how the caller computed them.
+    """
+    if weighting in ("perf", "perf_cost"):
+        w = jax.nn.softmax(scores, axis=-1)                    # (K, M)
+    elif weighting == "excel_perf_cost":
+        w = jax.nn.softmax(top_tau(scores, tau), axis=-1)
+    elif weighting == "excel_mask":
+        w = mask_tau(scores, tau) / tau
+    else:
+        raise ValueError(weighting)
+    return w @ xi.T                                            # (K, d)
+
+
+def label_proportion_embeddings(query_emb: jax.Array, labels: jax.Array,
+                                n_models: int) -> jax.Array:
+    """Eq. 6: a_k = mean of offline query embeddings labelled k (Prop. 1).
+
+    query_emb: (N, d); labels: (N,) int in [0, K). Returns (K, d).
+    """
+    onehot = jax.nn.one_hot(labels, n_models, dtype=query_emb.dtype)  # (N, K)
+    sums = onehot.T @ query_emb                                        # (K, d)
+    counts = jnp.maximum(onehot.sum(axis=0)[:, None], 1.0)
+    return sums / counts
+
+
+def category_embeddings(query_emb: jax.Array, categories: jax.Array,
+                        n_categories: int) -> jax.Array:
+    """xi_m = mean embedding of offline queries in category m. Returns (d, M)."""
+    onehot = jax.nn.one_hot(categories, n_categories, dtype=query_emb.dtype)
+    sums = onehot.T @ query_emb                                        # (M, d)
+    counts = jnp.maximum(onehot.sum(axis=0)[:, None], 1.0)
+    return (sums / counts).T
+
+
+def append_metadata(a: jax.Array, metadata: jax.Array) -> jax.Array:
+    """Paper §5.1: append the 14 perf/cost metadata values to each a_k.
+
+    a: (K, d); metadata: (K, m). Returns (K, d+m).
+    """
+    return jnp.concatenate([a, metadata], axis=-1)
+
+
+def pad_queries(x: jax.Array, n_meta: int) -> jax.Array:
+    """Match query dim to metadata-extended model embeddings.
+
+    phi is a Hadamard product, so x gets ones in the metadata slots: the
+    metadata then passes through phi scaled only by theta.
+    """
+    ones = jnp.ones(x.shape[:-1] + (n_meta,), x.dtype)
+    return jnp.concatenate([x, ones], axis=-1)
+
+
+def phi(x: jax.Array, a: jax.Array) -> jax.Array:
+    """Feature map phi(x, a) = (x * a)/||x * a|| (paper's Hadamard choice).
+
+    Broadcasts: x (..., d) with a (..., d) -> (..., d).
+    """
+    p = x * a
+    n = jnp.linalg.norm(p, axis=-1, keepdims=True)
+    return p / jnp.maximum(n, 1e-12)
+
+
+def phi_all(x: jax.Array, a_all: jax.Array) -> jax.Array:
+    """phi for one query against all K models. x: (d,), a_all: (K,d) -> (K,d)."""
+    return phi(x[None, :], a_all)
+
+
+def scores_all(x: jax.Array, a_all: jax.Array, theta: jax.Array) -> jax.Array:
+    """<theta, phi(x, a_k)> for all k, via the matmul identity
+    ((x*theta) . a_k) / sqrt((x*x) . (a_k*a_k)) — see kernels/dueling_score."""
+    num = a_all @ (x * theta)
+    den = jnp.sqrt(jnp.maximum((a_all * a_all) @ (x * x), 1e-24))
+    return num / den

@@ -1,0 +1,77 @@
+"""Online routing environment + the fully-jitted online learning loop.
+
+The environment is a (pre-generated) stream of query features x_t and true
+per-model utilities u_t; preference feedback is drawn from the BTL model on
+the *utility* scale (the paper generates feedback "via the BTL protocol"
+using performance metadata as the utility function). The whole T-round loop
+is a single ``lax.scan`` so one benchmark run is one XLA program, and seeds
+are a ``vmap`` axis.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import fgts
+from .btl import sample_preference
+from .regret import instant_regret
+
+
+class EnvData(NamedTuple):
+    x: jax.Array        # (T, dim)  query features (phi-ready, metadata-padded)
+    utils: jax.Array    # (T, K)    true utilities (perf or perf-cost scale)
+    feedback_scale: jax.Array = jnp.asarray(5.0)  # BTL sharpness
+
+
+def run_fgts(key: jax.Array, env: EnvData, a_emb: jax.Array,
+             cfg: fgts.FGTSConfig):
+    """Run FGTS.CDB for T rounds. Returns (cum_regret (T,), final_state)."""
+    t_total = env.x.shape[0]
+    k_init, k_loop = jax.random.split(key)
+    state0 = fgts.init_state(cfg, k_init)
+
+    def round_fn(state, inp):
+        k, x_t, u_t = inp
+        k_alg, k_fb = jax.random.split(k)
+        state, a1, a2 = fgts.fgts_round(k_alg, state, x_t, a_emb, cfg)
+        y = sample_preference(k_fb, env.feedback_scale * u_t[a1],
+                              env.feedback_scale * u_t[a2])
+        state = fgts.observe(state, x_t, a1, a2, y)
+        return state, instant_regret(u_t, a1, a2)
+
+    keys = jax.random.split(k_loop, t_total)
+    state, regrets = jax.lax.scan(round_fn, state0, (keys, env.x, env.utils))
+    return jnp.cumsum(regrets), state
+
+
+def run_policy(key: jax.Array, env: EnvData, select_update):
+    """Generic loop for baseline policies.
+
+    ``select_update`` = (init_fn, round_fn) where
+        round_fn(key, state, x_t) -> (state, a1, a2, update_fn)
+        update_fn(state, y) -> state
+    is expressed as a single function round(key, state, x_t, u_t) -> (state, r).
+    """
+    init_fn, round_fn = select_update
+    t_total = env.x.shape[0]
+    k_init, k_loop = jax.random.split(key)
+    state0 = init_fn(k_init)
+
+    def step(state, inp):
+        k, x_t, u_t = inp
+        state, a1, a2 = round_fn(k, state, x_t, u_t, env.feedback_scale)
+        return state, instant_regret(u_t, a1, a2)
+
+    keys = jax.random.split(k_loop, t_total)
+    state, regrets = jax.lax.scan(step, state0, (keys, env.x, env.utils))
+    return jnp.cumsum(regrets), state
+
+
+def averaged_runs(run_fn: Callable, key: jax.Array, n_runs: int = 5):
+    """The paper's 'average of 5 runs': vmap over seeds, mean the curves."""
+    keys = jax.random.split(key, n_runs)
+    curves = jax.vmap(run_fn)(keys)
+    curves = curves[0] if isinstance(curves, tuple) else curves
+    return jnp.mean(curves, axis=0), curves

@@ -1,0 +1,151 @@
+"""Beyond-paper extensions to the dueling router core.
+
+1. **Plackett-Luce listwise feedback** (paper footnote 2): instead of a duel,
+   present m >= 2 candidates and observe a full ranking; the PL likelihood
+   generalizes BTL and plugs into the same SGLD pseudo-posterior.
+
+       P(rank pi | scores s) = prod_j exp(s_{pi_j}) / sum_{l >= j} exp(s_{pi_l})
+
+2. **Pointwise feedback unification** (paper §6 future work): like/dislike
+   signals y in {0,1} on a single arm enter the same posterior through a
+   Bernoulli likelihood on sigma(<theta, phi(x,a)>); mixed streams of duels
+   and clicks then update one theta.
+
+Both reuse phi/scores from ccft and the SGLD machinery from fgts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .btl import logistic_loss
+from .ccft import phi, scores_all
+from .fgts import FGTSConfig
+
+
+# ---------------------------------------------------------------------------
+# Plackett-Luce listwise feedback
+# ---------------------------------------------------------------------------
+
+def pl_log_likelihood(scores: jax.Array, ranking: jax.Array) -> jax.Array:
+    """Log P(ranking | scores) under Plackett-Luce.
+
+    scores: (m,) utilities of the *presented* candidates;
+    ranking: (m,) int32 permutation, ranking[0] = winner's index into scores.
+    """
+    s = scores[ranking]                                  # sorted by rank
+    m = s.shape[0]
+    # log-denominator of stage j: logsumexp over the remaining suffix
+    idx = jnp.arange(m)
+    mask = idx[None, :] >= idx[:, None]                  # (stage, candidate)
+    suffix_lse = jax.nn.logsumexp(jnp.where(mask, s[None, :], -jnp.inf),
+                                  axis=1)
+    return jnp.sum(s - suffix_lse)
+
+
+def sample_pl_ranking(key: jax.Array, scores: jax.Array) -> jax.Array:
+    """Draw a ranking via the Gumbel-max representation of PL."""
+    g = jax.random.gumbel(key, scores.shape)
+    return jnp.argsort(-(scores + g)).astype(jnp.int32)
+
+
+def pl_likelihood_term(theta: jax.Array, x: jax.Array, arms: jax.Array,
+                       ranking: jax.Array, a_emb: jax.Array,
+                       eta: float) -> jax.Array:
+    """-eta * log PL-likelihood for one listwise observation.
+
+    x: (d,); arms: (m,) arm ids presented; ranking: (m,) permutation of 0..m-1.
+    """
+    feats = phi(x[None, :], a_emb[arms])                 # (m, d)
+    scores = feats @ theta
+    return -eta * pl_log_likelihood(scores, ranking)
+
+
+def select_top_m(theta: jax.Array, x: jax.Array, a_emb: jax.Array,
+                 m: int) -> jax.Array:
+    """Listwise analogue of Alg. 1 line 6: the m best arms under theta."""
+    s = scores_all(x, a_emb, theta)
+    return jax.lax.top_k(s, m)[1].astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Pointwise (like/dislike) feedback in the same posterior
+# ---------------------------------------------------------------------------
+
+def pointwise_likelihood_term(theta: jax.Array, x: jax.Array, arm: jax.Array,
+                              y: jax.Array, a_emb: jax.Array,
+                              eta: float) -> jax.Array:
+    """Bernoulli NLL of a click: y in {0,1} on sigma(<theta, phi(x,a)>)."""
+    s = phi(x[None, :], a_emb[arm[None]])[0] @ theta
+    # -log P(y): softplus(-s) if y=1 else softplus(s)
+    return eta * jnp.where(y > 0.5, logistic_loss(s), logistic_loss(-s))
+
+
+class MixedHistory(NamedTuple):
+    """Fixed-capacity buffers for a mixed duel + click stream."""
+    x: jax.Array          # (H, d)
+    a1: jax.Array         # (H,)
+    a2: jax.Array         # (H,) — ignored for pointwise rows
+    y: jax.Array          # (H,)  duels: +-1 ; clicks: 0/1
+    is_duel: jax.Array    # (H,) bool
+    t: jax.Array
+
+
+def init_mixed(cfg: FGTSConfig) -> MixedHistory:
+    z = jnp.zeros
+    return MixedHistory(x=z((cfg.horizon, cfg.dim)), a1=z((cfg.horizon,),
+                        jnp.int32), a2=z((cfg.horizon,), jnp.int32),
+                        y=z((cfg.horizon,)), is_duel=z((cfg.horizon,), bool),
+                        t=z((), jnp.int32))
+
+
+def observe_mixed(h: MixedHistory, x, a1, a2, y, is_duel) -> MixedHistory:
+    i = h.t % h.x.shape[0]
+    return h._replace(x=h.x.at[i].set(x), a1=h.a1.at[i].set(a1),
+                      a2=h.a2.at[i].set(a2), y=h.y.at[i].set(y),
+                      is_duel=h.is_duel.at[i].set(is_duel), t=h.t + 1)
+
+
+def mixed_potential(theta: jax.Array, idx: jax.Array, h: MixedHistory,
+                    a_emb: jax.Array, cfg: FGTSConfig) -> jax.Array:
+    """U(theta) over a minibatch of mixed observations + Gaussian prior.
+
+    Duel rows use the paper's eq. 2 preference term (feel-good omitted for
+    the mixed estimator — it needs the opponent arm, undefined for clicks);
+    click rows use the Bernoulli term. One theta serves both streams.
+    """
+    xb, a1b, a2b = h.x[idx], h.a1[idx], h.a2[idx]
+    yb, duelb = h.y[idx], h.is_duel[idx]
+    phi1 = phi(xb, a_emb[a1b])
+    phi2 = phi(xb, a_emb[a2b])
+    duel_term = cfg.eta * logistic_loss(yb * ((phi1 - phi2) @ theta))
+    s1 = phi1 @ theta
+    click_term = cfg.eta * jnp.where(yb > 0.5, logistic_loss(s1),
+                                     logistic_loss(-s1))
+    terms = jnp.where(duelb, duel_term, click_term)
+    valid = (idx < h.t).astype(jnp.float32)
+    n_valid = jnp.maximum(valid.sum(), 1.0)
+    scale = h.t.astype(jnp.float32) / n_valid
+    prior = jnp.sum(theta * theta) / (2.0 * cfg.prior_var)
+    return scale * jnp.sum(terms * valid) + prior
+
+
+def mixed_sgld_sample(key: jax.Array, theta0: jax.Array, h: MixedHistory,
+                      a_emb: jax.Array, cfg: FGTSConfig) -> jax.Array:
+    grad_fn = jax.grad(mixed_potential)
+
+    def step(theta, k):
+        k_idx, k_noise = jax.random.split(k)
+        idx = jax.random.randint(k_idx, (cfg.sgld_minibatch,), 0,
+                                 jnp.maximum(h.t, 1))
+        g = grad_fn(theta, idx, h, a_emb, cfg)
+        noise = jax.random.normal(k_noise, theta.shape)
+        return theta - 0.5 * cfg.sgld_eps * g + jnp.sqrt(
+            cfg.sgld_eps) * noise, None
+
+    theta, _ = jax.lax.scan(step, theta0,
+                            jax.random.split(key, cfg.sgld_steps))
+    return theta

@@ -1,0 +1,159 @@
+"""FGTS.CDB — Feel-Good Thompson Sampling for Contextual Dueling Bandits
+(Li et al. 2024), instantiated for LLM routing (paper Alg. 1).
+
+Per round t:
+  1. sample theta^j (j = 1,2) from the pseudo-posterior
+         p^j(theta | S_{t-1}) ∝ exp(-sum_i L^j(theta, x_i, a1_i, a2_i, y_i)) p0(theta)
+     via Stochastic Gradient Langevin Dynamics (Welling & Teh 2011),
+     warm-started from the previous round's sample;
+  2. select a^j_t = argmax_k <theta^j, phi(x_t, a_k)>;
+  3. observe y_t, append to the replay history.
+
+The likelihood (paper eq. 2):
+    L^j = eta * sigma(y <theta, phi(x,a1) - phi(x,a2)>)
+        - mu  * max_k <theta, phi(x,k) - phi(x, a^{3-j})>
+with sigma(z) = log(1+exp(-z)). The history lives in fixed-capacity buffers
+so the whole online loop is one ``lax.scan`` (jit-compiled, vmappable over
+seeds/chains).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .btl import logistic_loss
+from .ccft import phi, scores_all
+
+
+@dataclasses.dataclass(frozen=True)
+class FGTSConfig:
+    n_models: int
+    dim: int
+    horizon: int                     # replay-buffer capacity (>= T)
+    eta: float = 1.0                 # preference-likelihood weight
+    mu: float = 0.2                  # feel-good weight
+    prior_var: float = 1.0           # Gaussian prior p0 variance
+    sgld_steps: int = 15
+    sgld_eps: float = 5e-4           # SGLD base step size
+    sgld_minibatch: int = 128
+    # Welling & Teh's polynomially-decaying step size: eps_t = eps0 *
+    # (decay_t0 / (decay_t0 + t))^decay_pow — the posterior sharpens as
+    # evidence accumulates (0 pow = constant steps).
+    sgld_decay_t0: float = 100.0
+    sgld_decay_pow: float = 0.0     # 0 = constant steps (decay lags the mode)
+    sgld_temp: float = 1.0          # posterior temperature: noise *= sqrt(T);
+                                    # T<1 tempers (sharpens) the posterior
+    force_distinct: bool = False     # force a2 != a1 at selection
+
+
+class FGTSState(NamedTuple):
+    x: jax.Array        # (H, dim)  query features
+    a1: jax.Array       # (H,) int32
+    a2: jax.Array       # (H,) int32
+    y: jax.Array        # (H,) float (+1/-1)
+    t: jax.Array        # scalar int32 — rounds seen
+    theta1: jax.Array   # (dim,) current posterior samples (warm start)
+    theta2: jax.Array
+
+
+def init_state(cfg: FGTSConfig, key: jax.Array) -> FGTSState:
+    k1, k2 = jax.random.split(key)
+    z = jnp.zeros
+    return FGTSState(
+        x=z((cfg.horizon, cfg.dim), jnp.float32),
+        a1=z((cfg.horizon,), jnp.int32),
+        a2=z((cfg.horizon,), jnp.int32),
+        y=z((cfg.horizon,), jnp.float32),
+        t=z((), jnp.int32),
+        theta1=jax.random.normal(k1, (cfg.dim,)) * cfg.prior_var ** 0.5,
+        theta2=jax.random.normal(k2, (cfg.dim,)) * cfg.prior_var ** 0.5,
+    )
+
+
+def likelihood_batch(theta: jax.Array, x: jax.Array, a1: jax.Array,
+                     a2: jax.Array, y: jax.Array, a_emb: jax.Array,
+                     j: int, cfg: FGTSConfig) -> jax.Array:
+    """Sum of L^j over a (masked) minibatch. x: (m,dim), a_emb: (K,dim)."""
+    phi1 = phi(x, a_emb[a1])                             # (m, dim)
+    phi2 = phi(x, a_emb[a2])
+    z = y * ((phi1 - phi2) @ theta)
+    pref = cfg.eta * logistic_loss(z)                    # (m,)
+    s_all = jax.vmap(lambda xi: scores_all(xi, a_emb, theta))(x)   # (m, K)
+    opp = phi2 if j == 1 else phi1                       # a^{3-j} features
+    s_opp = opp @ theta                                  # (m,)
+    feelgood = jnp.max(s_all, axis=-1) - s_opp
+    return pref - cfg.mu * feelgood                      # (m,)
+
+
+def _potential(theta, idx, state: FGTSState, a_emb, j, cfg: FGTSConfig):
+    """U(theta) = (T/m) * sum_minibatch L^j + ||theta||^2 / (2 prior_var)."""
+    m = idx.shape[0]
+    terms = likelihood_batch(theta, state.x[idx], state.a1[idx],
+                             state.a2[idx], state.y[idx], a_emb, j, cfg)
+    valid = (idx < state.t).astype(jnp.float32)
+    n_valid = jnp.maximum(jnp.sum(valid), 1.0)
+    scale = state.t.astype(jnp.float32) / n_valid
+    data_term = scale * jnp.sum(terms * valid)
+    prior = jnp.sum(theta * theta) / (2.0 * cfg.prior_var)
+    return data_term + prior
+
+
+def sgld_sample(key: jax.Array, theta0: jax.Array, state: FGTSState,
+                a_emb: jax.Array, j: int, cfg: FGTSConfig) -> jax.Array:
+    """Run cfg.sgld_steps of SGLD from theta0 on the pseudo-posterior,
+    with the Welling & Teh decaying step size in the round count t."""
+    grad_fn = jax.grad(_potential)
+    t = state.t.astype(jnp.float32)
+    eps = cfg.sgld_eps * (cfg.sgld_decay_t0
+                          / (cfg.sgld_decay_t0 + t)) ** cfg.sgld_decay_pow
+
+    def step(theta, k):
+        k_idx, k_noise = jax.random.split(k)
+        hi = jnp.maximum(state.t, 1)
+        idx = jax.random.randint(k_idx, (cfg.sgld_minibatch,), 0, hi)
+        g = grad_fn(theta, idx, state, a_emb, j, cfg)
+        noise = jax.random.normal(k_noise, theta.shape)
+        theta = theta - 0.5 * eps * g + jnp.sqrt(eps * cfg.sgld_temp) * noise
+        return theta, None
+
+    keys = jax.random.split(key, cfg.sgld_steps)
+    theta, _ = jax.lax.scan(step, theta0, keys)
+    return theta
+
+
+def select_arms(theta1: jax.Array, theta2: jax.Array, x_t: jax.Array,
+                a_emb: jax.Array, force_distinct: bool = False):
+    """Alg. 1 line 6: a^j = argmax_k <theta^j, phi(x_t, a_k)>."""
+    s1 = scores_all(x_t, a_emb, theta1)
+    s2 = scores_all(x_t, a_emb, theta2)
+    a1 = jnp.argmax(s1)
+    if force_distinct:
+        s2 = s2.at[a1].set(-jnp.inf)
+    a2 = jnp.argmax(s2)
+    return a1.astype(jnp.int32), a2.astype(jnp.int32)
+
+
+def observe(state: FGTSState, x_t: jax.Array, a1: jax.Array, a2: jax.Array,
+            y: jax.Array) -> FGTSState:
+    """Append (x_t, a1, a2, y) to the replay history (ring on overflow)."""
+    i = state.t % state.x.shape[0]
+    return state._replace(
+        x=state.x.at[i].set(x_t),
+        a1=state.a1.at[i].set(a1),
+        a2=state.a2.at[i].set(a2),
+        y=state.y.at[i].set(y),
+        t=state.t + 1,
+    )
+
+
+def fgts_round(key: jax.Array, state: FGTSState, x_t: jax.Array,
+               a_emb: jax.Array, cfg: FGTSConfig):
+    """One full FGTS.CDB round *before* feedback: returns (state', a1, a2)."""
+    k1, k2 = jax.random.split(key)
+    theta1 = sgld_sample(k1, state.theta1, state, a_emb, 1, cfg)
+    theta2 = sgld_sample(k2, state.theta2, state, a_emb, 2, cfg)
+    a1, a2 = select_arms(theta1, theta2, x_t, a_emb, cfg.force_distinct)
+    return state._replace(theta1=theta1, theta2=theta2), a1, a2

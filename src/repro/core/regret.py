@@ -1,0 +1,33 @@
+"""Cumulative dueling regret (paper eq. 1) and convergence diagnostics."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def instant_regret(utils_t, a1, a2):
+    """utils_t: (K,) true utilities this round. eq. 1 integrand."""
+    best = jnp.max(utils_t)
+    return best - 0.5 * (utils_t[a1] + utils_t[a2])
+
+
+def cumulative(regrets):
+    return jnp.cumsum(regrets)
+
+
+def slope_ratio(cum_regret: np.ndarray, frac: float = 0.2) -> float:
+    """Late-window slope / early-window slope — < 1 means converging.
+
+    The paper's qualitative criterion (Fig. 1): a successful router's regret
+    curve flattens; a failing one stays linear (ratio ~ 1).
+    """
+    cum = np.asarray(cum_regret)
+    t = len(cum)
+    w = max(int(t * frac), 2)
+    early = (cum[w] - cum[0]) / w
+    late = (cum[-1] - cum[-w]) / w
+    return float(late / max(early, 1e-9))
+
+
+def final_regret(cum_regret) -> float:
+    return float(np.asarray(cum_regret)[-1])

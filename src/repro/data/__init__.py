@@ -1,0 +1,3 @@
+from . import mixinstruct, pipeline, routerbench, synth
+
+__all__ = ["mixinstruct", "pipeline", "routerbench", "synth"]

@@ -1,0 +1,138 @@
+"""Glue: encoder -> CCFT embeddings -> online EnvData.
+
+This is the experiment assembly layer used by benchmarks and examples; it
+implements the paper's §5.1/§5.2 recipes end-to-end:
+
+  offline queries --encode--> xi_m --categorical weighting--> a_k
+  (+ metadata appended to a_k, ones appended to x: §5.1)
+  online queries  --encode--> x_t ; utils from metadata -> EnvData
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ccft
+from repro.core.env import EnvData
+from repro.encoder.model import EncoderConfig, encode
+
+from . import mixinstruct as mi
+from . import routerbench as rb
+
+
+def _batched_encode(params, tokens, mask, enc_cfg, batch: int = 256):
+    outs = []
+    for i in range(0, tokens.shape[0], batch):
+        outs.append(encode(params, tokens[i:i + batch], mask[i:i + batch],
+                           enc_cfg))
+    return jnp.concatenate(outs)
+
+
+def routerbench_model_embeddings(enc_params, enc_cfg: EncoderConfig,
+                                 split: rb.RouterBenchSplit, weighting: str,
+                                 tau: int = 3, lam: float = rb.LAMBDA_COST,
+                                 with_metadata: bool = True,
+                                 perf_override=None):
+    """CCFT §5.1: category embeddings from the offline split, categorical
+    weighting from Tab. 3 scores, metadata appended."""
+    m = len(split.benchmarks)
+    off_emb = _batched_encode(enc_params, split.offline_tokens,
+                              split.offline_mask, enc_cfg)
+    xi = ccft.category_embeddings(off_emb, split.offline_cats, m)   # (d, M)
+    perf = split.perf if perf_override is None else perf_override
+    if weighting == "perf":
+        s = perf
+    else:
+        s = ccft.perf_cost_scores(perf, split.cost, lam)
+    a = ccft.model_embeddings(xi, s, weighting, tau)                # (K, d)
+    if with_metadata:
+        a = ccft.append_metadata(a, _std_meta(perf, split.cost))
+    return a
+
+
+def _std_meta(perf, cost):
+    """Per-column standardized metadata. Raw costs span 0.003–24.29; without
+    standardization the cost dims dominate phi's norm and drown the semantic
+    dims (deviation from the paper noted in EXPERIMENTS.md §Reproduction)."""
+    meta = jnp.concatenate([perf, cost], axis=-1)                   # (K, 2M)
+    mu = meta.mean(axis=0, keepdims=True)
+    sd = jnp.maximum(meta.std(axis=0, keepdims=True), 1e-6)
+    return 0.3 * (meta - mu) / sd
+
+
+def routerbench_env(enc_params, enc_cfg: EncoderConfig,
+                    split: rb.RouterBenchSplit, *,
+                    with_metadata: bool = True,
+                    feedback_scale: float = 8.0,
+                    cost_aware: bool = True) -> EnvData:
+    """Online environment. The utility r*(x,a) "balances user satisfaction,
+    model expertise and inference cost" (paper §1/§3), so the default is the
+    cost-adjusted score perf - lambda*cost (Tab. 1 col (i)); with raw perf
+    the RouterBench stream degenerates to a fixed-best-arm problem (GPT-4
+    wins ~every benchmark) and embedding quality cannot express itself."""
+    x = _batched_encode(enc_params, split.online_tokens, split.online_mask,
+                        enc_cfg)
+    if with_metadata:
+        x = ccft.pad_queries(x, 2 * len(split.benchmarks))
+    u = (rb.scores(split.perf, split.cost) if cost_aware else split.perf)
+    utils = rb.utilities_for_stream(split.online_cats, jnp.asarray(u))
+    return EnvData(x=x, utils=utils,
+                   feedback_scale=jnp.asarray(feedback_scale))
+
+
+def openai_prompt_embeddings(enc_params, enc_cfg: EncoderConfig,
+                             split: rb.RouterBenchSplit, n_queries: int = 5,
+                             with_metadata: bool = True):
+    """OpenAItext_n emulation (§5.1 / App. D): the model description prompt
+    = n offline example queries from the LLM's strongest benchmark, encoded
+    by the *generic* (frozen) encoder."""
+    k_models = split.perf.shape[0]
+    best_cat = jnp.argmax(split.perf, axis=-1)                       # (K,)
+    embs = []
+    for k in range(k_models):
+        cat = int(best_cat[k])
+        idx = jnp.where(split.offline_cats == cat, size=n_queries,
+                        fill_value=0)[0]
+        toks = split.offline_tokens[idx].reshape(1, -1)[:, :enc_cfg.max_len]
+        msk = jnp.ones_like(toks, jnp.float32)
+        embs.append(encode(enc_params, toks, msk, enc_cfg)[0])
+    a = jnp.stack(embs)
+    if with_metadata:
+        a = ccft.append_metadata(a, _std_meta(split.perf, split.cost))
+    return a
+
+
+def mean_embeddings(enc_params, enc_cfg: EncoderConfig,
+                    split: rb.RouterBenchSplit, with_metadata: bool = True):
+    """OpenAItext_mean emulation (§4.1): a_k = mean offline-query embedding of
+    the LLM's strongest benchmark."""
+    best_cat = jnp.argmax(split.perf, axis=-1)
+    off_emb = _batched_encode(enc_params, split.offline_tokens,
+                              split.offline_mask, enc_cfg)
+    m = len(split.benchmarks)
+    xi = ccft.category_embeddings(off_emb, split.offline_cats, m)    # (d, M)
+    a = xi.T[best_cat]
+    if with_metadata:
+        a = ccft.append_metadata(a, _std_meta(split.perf, split.cost))
+    return a
+
+
+# ---------------------------------------------------------------------------
+# MixInstruct (§5.2)
+# ---------------------------------------------------------------------------
+
+def mixinstruct_env_and_embeddings(enc_params, enc_cfg: EncoderConfig,
+                                   data: dict, n_offline: int = 110,
+                                   feedback_scale: float = 8.0):
+    """Offline prefix -> eq. 6 label-proportion embeddings; the rest is the
+    online stream with utilities reconstructed from the pairwise tables.
+    The paper uses ten queries per (latent) category — we take an offline
+    prefix of comparable size with labels = best-matching LLM."""
+    emb = _batched_encode(enc_params, data["tokens"], data["mask"], enc_cfg)
+    labels = mi.best_model_labels(data["pairwise"])
+    a = ccft.label_proportion_embeddings(emb[:n_offline], labels[:n_offline],
+                                         mi.N_MODELS)
+    utils = mi.scores_from_pairwise(data["pairwise"])[n_offline:]
+    env = EnvData(x=emb[n_offline:], utils=utils,
+                  feedback_scale=jnp.asarray(feedback_scale))
+    return env, a

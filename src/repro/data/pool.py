@@ -1,0 +1,58 @@
+"""Candidate-pool registry: the 10 assigned architectures as router arms.
+
+Each zoo member gets a Kiviat-style per-category skill vector (DESIGN.md
+§Arch-applicability): derived deterministically from the architecture's
+published character — long-context archs score higher on long-doc categories,
+MoE on breadth, the VLM on multimodal, etc. — plus a relative serving cost
+from active-parameter count. These drive (a) the routed-serving example and
+(b) the router-at-scale dry-run.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import ARCHS
+
+CATEGORIES = ["reasoning", "code", "long-doc", "multilingual", "chat",
+              "multimodal", "summarize"]
+
+# Hand-specified skill profiles in [0,1] (rows: arch; cols: CATEGORIES).
+# Deterministic, documented, and only used as simulation ground truth.
+SKILLS = {
+    "recurrentgemma-9b":    [0.62, 0.55, 0.85, 0.55, 0.65, 0.10, 0.75],
+    "qwen2-7b":             [0.68, 0.72, 0.45, 0.80, 0.70, 0.10, 0.65],
+    "granite-moe-3b-a800m": [0.50, 0.60, 0.35, 0.50, 0.55, 0.05, 0.55],
+    "arctic-480b":          [0.85, 0.88, 0.55, 0.75, 0.80, 0.10, 0.80],
+    "gemma2-9b":            [0.72, 0.65, 0.60, 0.65, 0.78, 0.10, 0.72],
+    "granite-3-2b":         [0.48, 0.55, 0.30, 0.45, 0.58, 0.05, 0.52],
+    "mistral-large-123b":   [0.88, 0.85, 0.60, 0.82, 0.85, 0.10, 0.82],
+    "llava-next-34b":       [0.70, 0.55, 0.40, 0.55, 0.68, 0.90, 0.62],
+    "mamba2-1.3b":          [0.40, 0.42, 0.80, 0.35, 0.45, 0.05, 0.60],
+    "seamless-m4t-medium":  [0.35, 0.20, 0.30, 0.90, 0.50, 0.70, 0.45],
+}
+
+
+def skill_matrix() -> np.ndarray:
+    """(K, M) in registry order (sorted arch ids)."""
+    return np.asarray([SKILLS[a] for a in sorted(SKILLS)], np.float32)
+
+
+def arch_ids() -> list[str]:
+    return sorted(SKILLS)
+
+
+def serving_cost_per_1k() -> np.ndarray:
+    """Relative $ / 1k tokens ~ active params (normalized to granite-3-2b)."""
+    base = ARCHS["granite-3-2b"].active_param_count()
+    return np.asarray(
+        [0.05 * ARCHS[a].active_param_count() / base for a in sorted(SKILLS)],
+        np.float32)
+
+
+def utilities(categories: np.ndarray, lam: float = 0.0) -> np.ndarray:
+    """(T, K) ground-truth utilities for a category stream, optionally
+    cost-tilted (perf - lam * cost)."""
+    s = skill_matrix().T[categories]                     # (T, K)
+    if lam:
+        s = s - lam * serving_cost_per_1k()[None, :]
+    return s

@@ -1,0 +1,145 @@
+"""RouterBench metadata (Hu et al. 2024) and the paper's §5.1 pipeline.
+
+``PERF``/``COST`` are the paper's Tab. 3 (= Table 1 of Hu et al. 2024),
+embedded verbatim. Queries are synthesized per benchmark category
+(data/synth.py); utilities for the online environment are the performance
+metadata of the selected LLM on the query's benchmark — exactly the paper's
+protocol ("We use performance metadata as the utility function, from which we
+generate online feedback via the BTL protocol").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BENCHMARKS = ["MMLU", "MT-Bench", "MBPP", "HellaSwag", "Winogrande", "GSM8k",
+              "ARC"]
+
+LLMS = ["WizardLM 13B", "Mistral 7B", "Mixtral 8x7B", "Code Llama 34B",
+        "Yi 34B", "GPT-3.5", "Claude Instant V1", "Llama 70B", "Claude V1",
+        "Claude V2", "GPT-4"]
+
+# Tab. 3 — Performance (rows: LLMs, cols: benchmarks).
+PERF = np.array([
+    [0.568, 0.796, 0.364, 0.636, 0.512, 0.510, 0.660],   # WizardLM 13B
+    [0.562, 0.779, 0.349, 0.541, 0.562, 0.409, 0.642],   # Mistral 7B
+    [0.733, 0.921, 0.573, 0.707, 0.677, 0.515, 0.844],   # Mixtral 8x7B
+    [0.569, 0.796, 0.465, 0.525, 0.617, 0.462, 0.644],   # Code Llama 34B
+    [0.743, 0.938, 0.333, 0.931, 0.748, 0.552, 0.882],   # Yi 34B
+    [0.720, 0.908, 0.651, 0.816, 0.630, 0.601, 0.855],   # GPT-3.5
+    [0.384, 0.863, 0.550, 0.801, 0.512, 0.626, 0.821],   # Claude Instant V1
+    [0.647, 0.854, 0.302, 0.736, 0.504, 0.529, 0.794],   # Llama 70B
+    [0.475, 0.938, 0.527, 0.841, 0.570, 0.653, 0.889],   # Claude V1
+    [0.619, 0.854, 0.605, 0.421, 0.446, 0.664, 0.546],   # Claude V2
+    [0.828, 0.971, 0.682, 0.923, 0.858, 0.654, 0.921],   # GPT-4
+], np.float32)
+
+# Tab. 3 — Cost.
+COST = np.array([
+    [0.122, 0.006, 0.011, 0.727, 0.040, 0.354, 0.068],
+    [0.081, 0.003, 0.006, 0.485, 0.027, 0.210, 0.046],
+    [0.245, 0.012, 0.023, 1.455, 0.081, 0.594, 0.137],
+    [0.317, 0.015, 0.021, 1.882, 0.104, 0.752, 0.177],
+    [0.326, 0.018, 0.031, 1.938, 0.107, 0.867, 0.182],
+    [0.408, 0.026, 0.044, 2.426, 0.134, 1.170, 0.228],
+    [0.327, 0.030, 0.064, 1.943, 0.108, 1.300, 0.183],
+    [0.367, 0.022, 0.039, 2.183, 0.121, 0.870, 0.205],
+    [3.269, 0.361, 0.607, 19.43, 1.077, 11.09, 1.829],
+    [3.270, 0.277, 0.770, 19.50, 1.081, 13.49, 1.833],
+    [4.086, 0.721, 1.235, 24.29, 1.346, 19.08, 2.286],
+], np.float32)
+
+N_MODELS = len(LLMS)
+N_BENCHMARKS = len(BENCHMARKS)
+LAMBDA_COST = 0.05   # paper's balance parameter
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterBenchSplit:
+    """Offline (embedding-learning) + online (bandit) data."""
+    offline_tokens: jax.Array     # (N_off, L)
+    offline_mask: jax.Array
+    offline_cats: jax.Array       # (N_off,)
+    online_tokens: jax.Array      # (T, L)
+    online_mask: jax.Array
+    online_cats: jax.Array        # (T,)
+    perf: jax.Array               # (K, M) possibly restricted
+    cost: jax.Array
+    benchmarks: tuple
+
+
+def scores(perf=PERF, cost=COST, lam: float = LAMBDA_COST):
+    """Tab. 1 column (i): Perf_cost = Perf - lambda * Cost."""
+    return perf - lam * cost
+
+
+def utilities_for_stream(cats: jax.Array, perf: jax.Array) -> jax.Array:
+    """(T, K): utility of model k on query t = perf on its benchmark."""
+    return perf.T[cats]          # perf is (K, M) -> (M, K) -> index by cats
+
+
+def make_split(key: jax.Array, corpus_cfg, n_offline_per_cat: int = 5,
+               t_online: int = 700, benchmarks=None) -> RouterBenchSplit:
+    """Paper §5.1: 5 offline queries per benchmark (excluded from online)."""
+    from .synth import make_split as synth_split, sample_queries
+    bidx = (list(range(N_BENCHMARKS)) if benchmarks is None
+            else [BENCHMARKS.index(b) for b in benchmarks])
+    m = len(bidx)
+    cc = dataclasses.replace(corpus_cfg, n_categories=m)
+    k1, k2, k3 = jax.random.split(key, 3)
+    off_tok, off_mask, off_cats = synth_split(k1, n_offline_per_cat, cc)
+    on_cats = jax.random.randint(k2, (t_online,), 0, m)
+    on_tok, on_mask = sample_queries(k3, on_cats, cc)
+    perf = jnp.asarray(PERF[:, bidx])
+    cost = jnp.asarray(COST[:, bidx])
+    return RouterBenchSplit(off_tok, off_mask, off_cats, on_tok, on_mask,
+                            on_cats, perf, cost,
+                            tuple(BENCHMARKS[i] for i in bidx))
+
+
+def make_generalization_split(key: jax.Array, corpus_cfg,
+                              n_offline_per_cat: int = 15):
+    """§5.1.1 robust-generalization pipeline.
+
+    MT-Bench dropped entirely; ARC hidden during offline + section 1; the
+    online stream = 300 shuffled queries from the 5 seen benchmarks, then
+    120 ARC + 300 more seen-benchmark queries shuffled together.
+    """
+    from .synth import make_split as synth_split, sample_queries
+    seen = ["MMLU", "MBPP", "HellaSwag", "Winogrande", "GSM8k"]
+    unseen = "ARC"
+    all_b = seen + [unseen]
+    bidx = [BENCHMARKS.index(b) for b in all_b]
+    m = len(all_b)
+    cc = dataclasses.replace(corpus_cfg, n_categories=m)
+    ks = jax.random.split(key, 6)
+
+    # offline: only seen categories (ARC never sampled offline)
+    off_cats = jnp.repeat(jnp.arange(len(seen), dtype=jnp.int32),
+                          n_offline_per_cat)
+    off_cats = jax.random.permutation(ks[0], off_cats)
+    off_tok, off_mask = sample_queries(ks[1], off_cats, cc)
+
+    # section 1: 60 per seen benchmark, shuffled
+    s1_cats = jnp.repeat(jnp.arange(len(seen), dtype=jnp.int32), 60)
+    s1_cats = jax.random.permutation(ks[2], s1_cats)
+    s1_tok, s1_mask = sample_queries(ks[3], s1_cats, cc)
+
+    # section 2: 120 ARC + 60 per seen benchmark, shuffled together
+    s2_cats = jnp.concatenate([
+        jnp.full((120,), len(seen), jnp.int32),
+        jnp.repeat(jnp.arange(len(seen), dtype=jnp.int32), 60)])
+    s2_cats = jax.random.permutation(ks[4], s2_cats)
+    s2_tok, s2_mask = sample_queries(ks[5], s2_cats, cc)
+
+    on_tok = jnp.concatenate([s1_tok, s2_tok])
+    on_mask = jnp.concatenate([s1_mask, s2_mask])
+    on_cats = jnp.concatenate([s1_cats, s2_cats])
+    perf = jnp.asarray(PERF[:, bidx])
+    cost = jnp.asarray(COST[:, bidx])
+    return (RouterBenchSplit(off_tok, off_mask, off_cats, on_tok, on_mask,
+                             on_cats, perf, cost, tuple(all_b)),
+            len(seen))   # index of the unseen category

@@ -1,0 +1,72 @@
+"""Synthetic category-structured query corpus (DESIGN.md §2 simulation gate).
+
+Each category m draws tokens from a mixture of a shared "common-word" pool
+and a category-specific vocabulary block, so that (i) raw token overlap gives
+a weak generic similarity signal (what a generic pretrained encoder sees) and
+(ii) category membership is cleanly learnable by contrastive fine-tuning —
+matching the paper's t-SNE observation (Fig. 5) that real sentence encoders
+cluster queries by source benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusConfig:
+    n_categories: int = 7
+    vocab_size: int = 2048
+    seq_len: int = 32
+    common_frac: float = 0.35     # fraction of tokens from the shared pool
+    common_pool: int = 256        # tokens [0, common_pool) are shared
+    block_size: int = 192         # category-specific vocab block width
+    block_overlap: float = 0.0    # fraction of a block shared with the next
+                                  # category — token statistics alone (what a
+                                  # generic encoder sees) then blur neighbours
+    topic_temp: float = 1.2
+
+
+def category_token_logits(cfg: CorpusConfig) -> np.ndarray:
+    """(M, V) unnormalized token logits per category."""
+    rng = np.random.RandomState(1234)
+    stride = max(int(cfg.block_size * (1.0 - cfg.block_overlap)), 1)
+    logits = np.full((cfg.n_categories, cfg.vocab_size), -12.0, np.float32)
+    logits[:, :cfg.common_pool] = np.log(cfg.common_frac / cfg.common_pool)
+    for m in range(cfg.n_categories):
+        start = cfg.common_pool + m * stride
+        end = min(start + cfg.block_size, cfg.vocab_size)
+        logits[m, start:end] = (np.log((1 - cfg.common_frac) / cfg.block_size)
+                                + cfg.topic_temp
+                                * rng.randn(end - start).astype(np.float32))
+    return logits
+
+
+def sample_queries(key: jax.Array, categories: jax.Array,
+                   cfg: CorpusConfig):
+    """Sample token sequences for given category labels.
+
+    categories: (N,) int32. Returns (tokens (N, L) int32, mask (N, L)).
+    """
+    logits = jnp.asarray(category_token_logits(cfg))
+
+    def one(k, m):
+        return jax.random.categorical(k, logits[m], shape=(cfg.seq_len,))
+
+    keys = jax.random.split(key, categories.shape[0])
+    tokens = jax.vmap(one)(keys, categories)
+    mask = jnp.ones_like(tokens, jnp.float32)
+    return tokens.astype(jnp.int32), mask
+
+
+def make_split(key: jax.Array, n_per_category: int, cfg: CorpusConfig):
+    """Balanced split: returns (tokens, mask, categories)."""
+    m = cfg.n_categories
+    cats = jnp.repeat(jnp.arange(m, dtype=jnp.int32), n_per_category)
+    k1, k2 = jax.random.split(key)
+    cats = jax.random.permutation(k1, cats)
+    tokens, mask = sample_queries(k2, cats, cfg)
+    return tokens, mask, cats

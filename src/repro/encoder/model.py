@@ -1,0 +1,77 @@
+"""In-framework text embedding encoder (MiniLM-class).
+
+The paper fine-tunes all-MiniLM-L6-v2 / mpnet / e5-base; offline we implement
+the same class of model — a small bidirectional transformer with masked mean
+pooling and L2-normalized sentence embeddings — and pretrain + fine-tune it
+inside the framework (DESIGN.md §2 simulation gate).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as blk
+from repro.models.config import (FFN_MLP, MIXER_BIDIR_ATTN, LayerSpec,
+                                 ModelConfig)
+from repro.models.layers import init_embedding, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    vocab_size: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 1024
+    max_len: int = 64
+    name: str = "minilm-repro"
+
+    def to_model_config(self) -> ModelConfig:
+        return ModelConfig(
+            name=self.name, family="encoder",
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_heads, head_dim=self.d_model // self.n_heads,
+            d_ff=self.d_ff, vocab_size=self.vocab_size,
+            pattern=(LayerSpec(MIXER_BIDIR_ATTN, FFN_MLP),),
+            n_units=self.n_layers, dtype="float32",
+        )
+
+
+def init_encoder(key: jax.Array, cfg: EncoderConfig) -> dict:
+    mc = cfg.to_model_config()
+    k1, k2, k3 = jax.random.split(key, 3)
+    keys = jax.random.split(k2, cfg.n_layers)
+    units = jax.vmap(lambda k: blk.init_unit(k, mc, mc.pattern, jnp.float32))(keys)
+    return {
+        "embed": init_embedding(k1, cfg.vocab_size, cfg.d_model, jnp.float32),
+        "units": units,
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+
+
+def encode(params: dict, tokens: jax.Array, mask: jax.Array,
+           cfg: EncoderConfig) -> jax.Array:
+    """tokens: (B, L) int32; mask: (B, L) {0,1}. Returns L2-normed (B, d)."""
+    mc = cfg.to_model_config()
+    x = params["embed"][tokens]
+    b, l, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32), (b, l))
+
+    def scan_fn(h, uparams):
+        h, _ = blk.block_fwd(uparams["0"], h, positions, mc, mc.pattern[0])
+        return h, None
+
+    x, _ = jax.lax.scan(scan_fn, x, params["units"])
+    x = rms_norm(x, params["final_norm"])
+    m = mask[..., None].astype(jnp.float32)
+    pooled = jnp.sum(x * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+    return pooled / jnp.maximum(jnp.linalg.norm(pooled, axis=-1, keepdims=True),
+                                1e-12)
+
+
+# NOTE: padding tokens do attend in self-attention here (bidirectional mask
+# is all-ones); the pooling mask excludes them from the sentence embedding.
+# For the synthetic corpus (fixed-length sequences) this is exact; variable-
+# length inputs use the pooling mask as the semantic boundary.

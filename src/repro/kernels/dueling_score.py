@@ -1,0 +1,74 @@
+"""Dueling-score Pallas TPU kernel — the router's serving hot path.
+
+Computes, for a batch of query embeddings x and all K model embeddings a_k,
+the FGTS.CDB scores for both posterior samples theta^1, theta^2:
+
+    phi(x, a_k) = (x * a_k) / ||x * a_k||          (paper's Hadamard feature)
+    s_jk        = <theta^j, phi(x, a_k)>
+
+Key identity that makes this MXU work instead of a (B,K,d) elementwise blow-up:
+
+    <theta, (x*a)/||x*a||> = ((x*theta) . a) / sqrt((x*x) . (a*a))
+
+so each (B,K) tile is two matmuls: (x*theta_j) @ A^T and x^2 @ (A^2)^T.
+Tiling: grid (B/BB, K/BK); d is kept whole in VMEM (router dims are <= 1k).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BB = 128
+DEFAULT_BK = 128
+
+
+def _dueling_kernel(x_ref, a_ref, th_ref, s_ref, *, n_theta: int):
+    x = x_ref[...].astype(jnp.float32)              # (BB, d)
+    a = a_ref[...].astype(jnp.float32)              # (BK, d)
+    th = th_ref[...].astype(jnp.float32)            # (J, d)
+    den = jax.lax.dot_general(x * x, a * a, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    den = jnp.sqrt(jnp.maximum(den, 1e-24))         # (BB, BK)
+    for j in range(n_theta):
+        num = jax.lax.dot_general(x * th[j][None, :], a,
+                                  (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        s_ref[j] = num / den
+
+
+def dueling_score(x: jax.Array, a: jax.Array, thetas: jax.Array, *,
+                  bb: int = DEFAULT_BB, bk: int = DEFAULT_BK,
+                  interpret: bool = True) -> jax.Array:
+    """x: (B,d) queries; a: (K,d) model embeddings; thetas: (J,d).
+
+    Returns scores (J,B,K) float32.
+    """
+    b, d = x.shape
+    k = a.shape[0]
+    j = thetas.shape[0]
+    bb = min(bb, max(8, b))
+    bk = min(bk, max(8, k))
+    b_pad = -(-b // bb) * bb
+    k_pad = -(-k // bk) * bk
+    if b_pad != b:
+        x = jnp.pad(x, ((0, b_pad - b), (0, 0)))
+    if k_pad != k:
+        a = jnp.pad(a, ((0, k_pad - k), (0, 0)))
+
+    grid = (b_pad // bb, k_pad // bk)
+    out = pl.pallas_call(
+        functools.partial(_dueling_kernel, n_theta=j),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda bi, ki: (bi, 0)),
+            pl.BlockSpec((bk, d), lambda bi, ki: (ki, 0)),
+            pl.BlockSpec((j, d), lambda bi, ki: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((j, bb, bk), lambda bi, ki: (0, bi, ki)),
+        out_shape=jax.ShapeDtypeStruct((j, b_pad, k_pad), jnp.float32),
+        interpret=interpret,
+    )(x, a, thetas)
+    return out[:, :b, :k]

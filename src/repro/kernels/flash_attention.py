@@ -1,0 +1,118 @@
+"""Flash attention Pallas TPU kernel: causal / sliding-window, GQA,
+Gemma-2 logit soft-capping, online softmax.
+
+Tiling: q blocks (BQ=128) x kv blocks (BK=128) — MXU-aligned. The kv-block
+grid axis is innermost (sequential on TPU), accumulating into VMEM scratch
+(running max m, denominator l, output acc) and finalizing on the last block.
+GQA is folded into the index maps (kv head = q head // group).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, causal: bool, window: int, softcap: float,
+                 bq: int, bk: int, kv_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+
+    # Skip fully-masked tiles (the compiler removes the work under pl.when).
+    run = jnp.logical_not(jnp.all(jnp.logical_not(mask)))
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)         # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)         # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)         # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, scale: float | None = None,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, H, S, D); k/v: (B, KV, T, D) with H % KV == 0. Returns (B,H,S,D).
+
+    S and T are padded to block multiples internally.
+    """
+    b, h, s, d = q.shape
+    kvh, t = k.shape[1], k.shape[2]
+    assert h % kvh == 0
+    group = h // kvh
+    scale = d ** -0.5 if scale is None else scale
+
+    s_pad = -(-s // bq) * bq
+    t_pad = -(-t // bk) * bk
+    if s_pad != s:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+    if t_pad != t:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+
+    grid = (b, h, s_pad // bq, t_pad // bk)
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, bq=bq, bk=bk, kv_len=t)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :s]

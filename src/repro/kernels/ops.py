@@ -1,0 +1,41 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode; on TPU they lower
+to Mosaic. ``use_kernels()`` toggles whether the model substrate routes its
+hot paths through Pallas or the XLA reference path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .dueling_score import dueling_score
+from .flash_attention import flash_attention
+from .rglru_scan import rglru_scan
+from .ssd_scan import ssd_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap"))
+def flash_attention_op(q, k, v, *, causal=True, window=0, softcap=0.0):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           softcap=softcap, interpret=not _on_tpu())
+
+
+@jax.jit
+def rglru_scan_op(log_a, x_in, h0=None):
+    return rglru_scan(log_a, x_in, h0, interpret=not _on_tpu())
+
+
+@jax.jit
+def ssd_scan_op(x, bt, ct, log_a, dt, h0=None):
+    return ssd_scan(x, bt, ct, log_a, dt, h0, interpret=not _on_tpu())
+
+
+@jax.jit
+def dueling_score_op(x, a, thetas):
+    return dueling_score(x, a, thetas, interpret=not _on_tpu())

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0, scale=None):
+    """q: (B,H,S,D); k/v: (B,KV,T,D). Dense masked softmax attention."""
+    b, h, s, d = q.shape
+    kvh, t = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = d ** -0.5 if scale is None else scale
+    qr = q.reshape(b, kvh, g, s, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qr, k.astype(jnp.float32)) * scale
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kj <= qi
+    if window:
+        mask &= kj > qi - window
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, s, d).astype(q.dtype)
+
+
+def rglru_ref(log_a, x_in, h0=None):
+    """h_t = a_t h_{t-1} + sqrt(1-a_t^2) x_t, plain python scan.
+
+    log_a, x_in: (B,S,D) f32. Returns (h (B,S,D), h_last (B,D)).
+    """
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1 - jnp.exp(2 * log_a), 0.0)) * x_in
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    h0 = jnp.zeros_like(x_in[:, 0]) if h0 is None else h0
+    h_last, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0),
+                                         jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), h_last
+
+
+def ssd_ref(x, bt, ct, log_a, dt, h0=None):
+    """Sequential SSD recurrence oracle.
+
+    x: (B,S,H,P); bt/ct: (B,S,N); log_a/dt: (B,S,H).
+    h_t = a_t h_{t-1} + dt_t x_t B_t^T ; y_t = h_t C_t.
+    Returns (y (B,S,H,P), h_last (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    n = bt.shape[-1]
+    f32 = jnp.float32
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), f32)
+
+    def step(state, inp):
+        xt, btt, ctt, lat, dtt = inp
+        a = jnp.exp(lat)                                  # (B,H)
+        state = a[:, :, None, None] * state + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtt, xt.astype(f32), btt.astype(f32))
+        y = jnp.einsum("bhpn,bn->bhp", state, ctt.astype(f32))
+        return state, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(bt, 1, 0), jnp.moveaxis(ct, 1, 0),
+          jnp.moveaxis(log_a, 1, 0), jnp.moveaxis(dt, 1, 0))
+    h_last, ys = jax.lax.scan(step, h0.astype(f32), xs)
+    return jnp.moveaxis(ys, 0, 1), h_last
+
+
+def dueling_score_ref(x, a, theta1, theta2):
+    """phi(x, a_k) = (x*a_k)/||x*a_k||; s_jk = <theta_j, phi>.
+
+    x: (B,d), a: (K,d), theta: (d,). Returns scores (2,B,K) f32.
+    """
+    xf, af = x.astype(jnp.float32), a.astype(jnp.float32)
+    prod = xf[:, None, :] * af[None, :, :]                # (B,K,d)
+    norm = jnp.sqrt(jnp.sum(prod * prod, axis=-1))        # (B,K)
+    norm = jnp.maximum(norm, 1e-12)
+    s1 = jnp.einsum("bkd,d->bk", prod, theta1.astype(jnp.float32)) / norm
+    s2 = jnp.einsum("bkd,d->bk", prod, theta2.astype(jnp.float32)) / norm
+    return jnp.stack([s1, s2])

@@ -1,0 +1,132 @@
+"""Mamba-2 SSD chunked-scan Pallas TPU kernel.
+
+Grid: (batch * heads, seq-chunks), chunk axis innermost/sequential. Per chunk
+of length L the kernel computes the attention-like intra-chunk dual form
+(L x L masked matmul — MXU work) plus the inter-chunk contribution through the
+carried state (P x N) held in VMEM scratch:
+
+    cum_i   = cumsum(log_a)                          (L,)
+    M[i,j]  = exp(cum_i - cum_j) * (C_i . B_j) * dt_j   for j <= i
+    y_intra = M @ x
+    y_inter = exp(cum_i) * (C_i . state)
+    state'  = exp(cum_L) * state + sum_j exp(cum_L - cum_j) dt_j x_j B_j^T
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, la_ref, dt_ref, h0_ref,
+                y_ref, hlast_ref, state_ref, *,
+                chunk: int, seq_len: int, has_h0: bool):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        if has_h0:
+            state_ref[...] = h0_ref[0].astype(jnp.float32)
+        else:
+            state_ref[...] = jnp.zeros_like(state_ref)
+
+    l = chunk
+    x = x_ref[0].astype(jnp.float32)                 # (L, P)
+    bt = b_ref[0].astype(jnp.float32)                # (L, N)
+    ct = c_ref[0].astype(jnp.float32)                # (L, N)
+    log_a = la_ref[0]                                # (L,)
+    dt = dt_ref[0]                                   # (L,)
+
+    # Mask padded steps: no decay, no increment.
+    pos = ci * l + jax.lax.iota(jnp.int32, l)
+    valid = pos < seq_len
+    log_a = jnp.where(valid, log_a, 0.0)
+    dt = jnp.where(valid, dt, 0.0)
+
+    cum = jnp.cumsum(log_a)                          # (L,)
+    # Intra-chunk (L,L): decay(i,j) = exp(cum_i - cum_j) for j <= i.
+    di = cum[:, None] - cum[None, :]
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+            >= jax.lax.broadcasted_iota(jnp.int32, (l, l), 1))
+    m = jnp.where(mask, jnp.exp(di), 0.0)
+    cb = jax.lax.dot_general(ct, bt, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L,L)
+    w = cb * m * dt[None, :]
+    y_intra = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (L,P)
+
+    # Inter-chunk through the carried state: y_inter = exp(cum) * (C @ state^T).
+    state = state_ref[...]                           # (P, N)
+    y_inter = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        ct, state, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # State update: state' = a_chunk * state + sum_j w_out_j x_j (x) b_j.
+    dec_out = jnp.exp(cum[-1] - cum) * dt            # (L,)
+    xw = x * dec_out[:, None]                        # (L,P)
+    s_new = jax.lax.dot_general(xw, bt, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (P,N)
+    state_ref[...] = jnp.exp(cum[-1]) * state + s_new
+
+    @pl.when(ci == nc - 1)
+    def _fin():
+        hlast_ref[0] = state_ref[...]
+
+
+def ssd_scan(x: jax.Array, bt: jax.Array, ct: jax.Array, log_a: jax.Array,
+             dt: jax.Array, h0: jax.Array | None = None, *,
+             chunk: int = DEFAULT_CHUNK, interpret: bool = True):
+    """Chunked SSD over (B,S,H,...) inputs.
+
+    x: (B,S,H,P); bt/ct: (B,S,N); log_a/dt: (B,S,H).
+    Returns (y (B,S,H,P), h_last (B,H,P,N)).
+    """
+    b, s, h, p = x.shape
+    n = bt.shape[-1]
+    s_pad = -(-s // chunk) * chunk
+    if s_pad != s:
+        z = lambda t: jnp.pad(t, [(0, 0), (0, s_pad - s)] + [(0, 0)] * (t.ndim - 2))
+        x, bt, ct, log_a, dt = z(x), z(bt), z(ct), z(log_a), z(dt)
+
+    # Fold (B,H) into one grid axis; B/C are shared across heads.
+    xf = jnp.moveaxis(x, 2, 1).reshape(b * h, s_pad, p)
+    laf = jnp.moveaxis(log_a, 2, 1).reshape(b * h, s_pad)
+    dtf = jnp.moveaxis(dt, 2, 1).reshape(b * h, s_pad)
+    has_h0 = h0 is not None
+    h0f = (h0.reshape(b * h, p, n).astype(jnp.float32) if has_h0
+           else jnp.zeros((b * h, p, n), jnp.float32))
+
+    grid = (b * h, s_pad // chunk)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, seq_len=s,
+                               has_h0=has_h0)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bh, ci, hh=h: (bh // hh, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bh, ci, hh=h: (bh // hh, ci, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, chunk), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, p, n), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, p, n), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, s_pad, p), jnp.float32),
+            jax.ShapeDtypeStruct((b * h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xf, bt, ct, laf, dtf, h0f)
+    y = jnp.moveaxis(y.reshape(b, h, s_pad, p), 1, 2)[:, :s]
+    return y, h_last.reshape(b, h, p, n)

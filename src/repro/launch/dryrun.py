@@ -1,0 +1,351 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production meshes, record memory/cost analysis and the collective schedule.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+
+The two XLA_FLAGS lines above MUST precede any other import (jax locks the
+device count at first init); smoke tests and benchmarks never import this
+module, so they see the single real CPU device.
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import numpy as np   # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, get_arch, long_ctx_supported  # noqa: E402
+from repro.launch import mesh as mesh_lib                               # noqa: E402
+from repro.launch import steps as steps_lib                             # noqa: E402
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device output-operand bytes of every collective op.
+
+    Parses post-SPMD HLO, so shapes are per-device; multiply by chip count
+    for a global-traffic estimate (done by the roofline harness).
+    """
+    out = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    # e.g.  %all-reduce.1 = f32[8,128]{1,0} all-reduce(%x), replica_groups=...
+    pat = re.compile(
+        r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+(" +
+        "|".join(_COLLECTIVES) + r")[-a-z]*\(")
+    for m in pat.finditer(hlo_text):
+        dtype, dims, op = m.groups()
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[op] += n * _DTYPE_BYTES[dtype]
+        counts[op] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": int(sum(out.values()))}
+
+
+def _mem_stats(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(ma, "generated_code_size_in_bytes", 0)),
+        }
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def _cost_stats(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and not k.startswith("utilization")}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def applicable(arch: str, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return long_ctx_supported(arch)
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Per-unit cost probes.
+#
+# XLA's cost model counts a while-loop (lax.scan) body ONCE, ignoring the
+# trip count, so the full scan program under-reports layer-stack FLOPs /
+# collective bytes by ~n_units x. We therefore also lower ONE pattern unit
+# with identical shardings and reconstruct exact totals as
+#     total = full_program + (n_units - 1) * unit_probe
+# (the remainder blocks sit outside the scan and are already counted fully).
+# ---------------------------------------------------------------------------
+
+def _probe_record(compiled) -> dict:
+    return {"cost": _cost_stats(compiled),
+            "collectives": collective_bytes(compiled.as_text()),
+            "memory": _mem_stats(compiled)}
+
+
+def probe_unit(cfg, shape, mesh, specs, *, kind: str, is_encoder: bool = False):
+    """Lower + compile one pattern-unit step; returns cost/collective stats."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models import blocks as blk
+    from repro.models import lm as lm_lib
+    from repro.sharding import rules
+
+    dt = jnp.dtype(cfg.dtype)
+    bx = rules.batch_axes(mesh)
+    import numpy as _np
+    mesh_sizes = rules.mesh_axis_sizes(mesh)
+    bx_prod = int(_np.prod([mesh_sizes[a] for a in bx])) if bx else 1
+    if shape.global_batch % max(bx_prod, 1):
+        bx = ()
+    b = shape.global_batch
+    s = shape.seq_len if not is_encoder else cfg.enc_frames
+
+    fsdp_ax = "data" if (cfg.fsdp and "data" in mesh.axis_names) else None
+    usp = {str(i): rules.block_specs(cfg, mesh, sp, fsdp_ax)
+           for i, sp in enumerate(specs)}
+    uparams = jax.eval_shape(
+        lambda k: blk.init_unit(k, cfg, specs, dt), jax.random.PRNGKey(0))
+
+    needs_enc = (not is_encoder) and cfg.is_encdec
+    enc_sds = (jax.ShapeDtypeStruct((b, cfg.enc_frames, cfg.d_model), dt)
+               if needs_enc else None)
+
+    if kind == "train":
+        x_sds = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+
+        def fn(up, x, enc=None):
+            pos = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                                   (x.shape[0], x.shape[1]))
+
+            def scalar(up, x):
+                y, aux = lm_lib._unit_fwd(up, x, pos, cfg, specs, enc)
+                return jnp.sum(y.astype(jnp.float32)) + aux
+
+            return jax.grad(scalar, argnums=(0, 1))(up, x)
+
+        args = (uparams, x_sds) + ((enc_sds,) if needs_enc else ())
+        in_sh = (usp, P(bx, None, None)) + ((P(bx, None, None),)
+                                            if needs_enc else ())
+    elif kind in ("prefill", "fwd"):
+        x_sds = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+
+        def fn(up, x, enc=None):
+            pos = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                                   (x.shape[0], x.shape[1]))
+            if kind == "fwd":
+                x, _ = lm_lib._unit_fwd(up, x, pos, cfg, specs, enc)
+                return x
+            for i, sp in enumerate(specs):
+                x, c = blk.block_prefill(up[str(i)], x, pos, cfg, sp,
+                                         shape.seq_len, enc_memory=enc)
+            return x
+
+        args = (uparams, x_sds) + ((enc_sds,) if needs_enc else ())
+        in_sh = (usp, P(bx, None, None)) + ((P(bx, None, None),)
+                                            if needs_enc else ())
+    else:  # decode
+        x_sds = jax.ShapeDtypeStruct((b, 1, cfg.d_model), dt)
+        enc_len = cfg.enc_frames if cfg.is_encdec else 0
+        ucache = jax.eval_shape(
+            lambda: blk.init_unit_cache(b, cfg, specs, shape.seq_len, dt,
+                                        enc_len))
+        unit_csp = {str(i): rules.block_cache_spec_for(cfg, mesh, sp, bx)
+                    for i, sp in enumerate(specs)}
+
+        def fn(up, cache, x, pos):
+            for i, sp in enumerate(specs):
+                x, c = blk.block_step(up[str(i)], x, cache[str(i)], pos, cfg,
+                                      sp)
+                cache = {**cache, str(i): c}
+            return x, cache
+
+        args = (uparams, ucache, x_sds, jax.ShapeDtypeStruct((), jnp.int32))
+        in_sh = (usp, unit_csp, P(bx, None, None), P())
+
+    with mesh:
+        in_shn = steps_lib.tree_shardings(mesh, in_sh)
+        lowered = jax.jit(fn, in_shardings=in_shn).lower(*args)
+        compiled = lowered.compile()
+    return _probe_record(compiled)
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
+               verbose: bool = True, lowered_hook=None,
+               unroll: bool = False, probes: bool = True,
+               overrides: dict | None = None,
+               optimized: bool = False) -> dict:
+    """``overrides``: dataclasses.replace kwargs applied to the arch config —
+    the §Perf lever hook (e.g. {"gqa_impl": "repeat", "attn_q_chunk": 2048})."""
+    import dataclasses
+    shape = SHAPES[shape_name]
+    cfg = get_arch(arch, shape_name, optimized=optimized)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "config_name": cfg.name,
+           "params": cfg.param_count(),
+           "active_params": cfg.active_param_count()}
+    t0 = time.time()
+    with mesh:
+        args, in_sh, out_sh, step = steps_lib.input_specs(cfg, shape, mesh,
+                                                          unroll=unroll)
+        in_sh = steps_lib.tree_shardings(mesh, in_sh)
+        out_sh = steps_lib.tree_shardings(mesh, out_sh)
+        lowered = jax.jit(step, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        if lowered_hook is not None:
+            lowered_hook(lowered)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+    rec["memory"] = _mem_stats(compiled)
+    rec["cost"] = _cost_stats(compiled)
+    rec["collectives"] = collective_bytes(compiled.as_text())
+    rec["n_chips"] = mesh_lib.n_chips(mesh)
+    rec["n_units"] = cfg.n_units
+    rec["enc_n_units"] = cfg.enc_n_units
+    if probes and not unroll:
+        t2 = time.time()
+        rec["probe"] = {"pattern": probe_unit(cfg, shape, mesh, cfg.pattern,
+                                              kind=shape.kind)}
+        if cfg.is_encdec and shape.kind in ("train", "prefill"):
+            rec["probe"]["enc"] = probe_unit(
+                cfg, shape, mesh, cfg.enc_pattern,
+                kind="train" if shape.kind == "train" else "fwd",
+                is_encoder=True)
+        rec["probe_s"] = round(time.time() - t2, 2)
+    if verbose:
+        mem = rec["memory"]
+        per_dev = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0))
+        print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: "
+              f"ok lower={rec['lower_s']}s compile={rec['compile_s']}s "
+              f"flops/dev={rec['cost'].get('flops', float('nan')):.3e} "
+              f"bytes/dev={per_dev:.3e} "
+              f"coll/dev={rec['collectives']['total_bytes']:.3e}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll the layer stack in HLO (exact cost_analysis "
+                         "but very slow compiles; default uses lax.scan + a "
+                         "per-unit cost probe instead)")
+    ap.add_argument("--no-probes", dest="probes", action="store_false")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip combos already present in --out")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the per-arch beyond-paper optimized settings "
+                         "(configs.OPTIMIZED_OVERRIDES, from §Perf)")
+    ap.add_argument("--set", dest="overrides", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="config override, e.g. --set gqa_impl=repeat "
+                         "--set attn_q_chunk=2048 --set moe_impl=dense")
+    args = ap.parse_args()
+    ov = {}
+    for kv in args.overrides:
+        k, v = kv.split("=", 1)
+        ov[k] = int(v) if v.lstrip("-").isdigit() else v
+
+    combos = []
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else sorted(SHAPES)
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(False)
+    if not args.single_pod_only:
+        meshes.append(True)
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    results, skips, failures = [], [], []
+    done_keys = set()
+    if args.out and os.path.exists(args.out) and args.resume:
+        with open(args.out) as f:
+            prev = json.load(f)
+        results = prev.get("results", [])
+        skips = prev.get("skips", [])
+        done_keys = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+        done_keys |= {(r["arch"], r["shape"], "-") for r in skips}
+        print(f"[dryrun] resuming: {len(results)} done, {len(skips)} skipped")
+
+    def flush():
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump({"results": results, "skips": skips,
+                           "failures": failures}, f, indent=1)
+
+    for a, s, mp in combos:
+        mesh_name = "2x16x16" if mp else "16x16"
+        if not applicable(a, s):
+            if (a, s, "-") not in done_keys:
+                skips.append({"arch": a, "shape": s,
+                              "reason": "full-attention arch; long_500k "
+                                        "requires sub-quadratic decode "
+                                        "(DESIGN.md)"})
+                done_keys.add((a, s, "-"))
+                print(f"[dryrun] SKIP {a} x {s} (full attention, noted)")
+                flush()
+            continue
+        if (a, s, mesh_name) in done_keys:
+            continue
+        try:
+            results.append(dryrun_one(a, s, multi_pod=mp, unroll=args.unroll,
+                                      probes=args.probes,
+                                      overrides=ov or None,
+                                      optimized=args.optimized))
+        except Exception as e:  # noqa: BLE001
+            failures.append({"arch": a, "shape": s, "multi_pod": mp,
+                             "error": repr(e)[:500]})
+            print(f"[dryrun] FAIL {a} x {s} mp={mp}: {e!r}")
+        flush()
+
+    print(f"\n[dryrun] done: {len(results)} ok, {len(skips)} skipped, "
+          f"{len(failures)} failed")
+    if args.out:
+        flush()
+        print(f"[dryrun] wrote {args.out}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Target: TPU v5e. Single pod = 16 x 16 = 256 chips, axes ("data", "model");
+multi-pod = 2 x 16 x 16 = 512 chips, axes ("pod", "data", "model").
+Defined as a function so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+# v5e hardware constants (per chip) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many devices exist (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def n_chips(mesh) -> int:
+    import numpy as np
+    return int(np.prod(list(dict(mesh.shape).values())))

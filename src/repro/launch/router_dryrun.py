@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Router-at-scale dry-run: the paper's technique as a first-class
+distributed feature.
+
+A production router fleet serves *batches* of routing requests on the same
+mesh that hosts the candidate models. This lowers and compiles, on both
+production meshes:
+
+  * ``route_step``  — embed-free routing hot path: dueling scores for a
+    global batch of query features against all K model embeddings under two
+    posterior samples, cost tilt, and top-1 pair selection. Batch sharded
+    over ("pod","data"); K and theta replicated (K=10 is tiny — the batch
+    axis is the scale dimension).
+  * ``update_step`` — one posterior refresh: SGLD chains (one per data-mesh
+    row, vmapped) over a sharded replay buffer, with the chain mean as the
+    new theta (a parallel-chain SGLD estimator).
+  * ``encode_route_step`` — the full service path: the in-framework text
+    encoder (batch-sharded activations, replicated weights) feeding
+    route_step.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.router_dryrun [--batch 65536]
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import ccft, fgts  # noqa: E402
+from repro.data.pool import CATEGORIES, arch_ids  # noqa: E402
+from repro.encoder.model import EncoderConfig  # noqa: E402
+from repro.launch import mesh as mesh_lib  # noqa: E402
+from repro.launch import steps as steps_lib  # noqa: E402
+from repro.launch.dryrun import _cost_stats, _mem_stats, collective_bytes  # noqa: E402
+
+K_MODELS = len(arch_ids())
+DIM = 768 + 2 * len(CATEGORIES)      # production-size embedding + metadata
+ENC_CFG = EncoderConfig(vocab_size=32_768, d_model=768, n_layers=6,
+                        n_heads=12, d_ff=3072, max_len=128,
+                        name="router-encoder-prod")
+
+
+def make_route_step(cost_tilt: float = 0.05):
+    def route_step(x, a_emb, theta1, theta2, costs):
+        s1 = jax.vmap(lambda xi: ccft.scores_all(xi, a_emb, theta1))(x)
+        s2 = jax.vmap(lambda xi: ccft.scores_all(xi, a_emb, theta2))(x)
+        s1 = s1 - cost_tilt * costs[None, :]
+        s2 = s2 - cost_tilt * costs[None, :]
+        a1 = jnp.argmax(s1, axis=-1).astype(jnp.int32)
+        a2 = jnp.argmax(s2, axis=-1).astype(jnp.int32)
+        return a1, a2
+    return route_step
+
+
+def make_update_step(cfg: fgts.FGTSConfig, n_chains: int):
+    def update_step(key, theta, state_x, state_a1, state_a2, state_y, t,
+                    a_emb):
+        st = fgts.FGTSState(x=state_x, a1=state_a1, a2=state_a2, y=state_y,
+                            t=t, theta1=theta, theta2=theta)
+        keys = jax.random.split(key, n_chains)
+        chains = jax.vmap(
+            lambda k: fgts.sgld_sample(k, theta, st, a_emb, 1, cfg))(keys)
+        return jnp.mean(chains, axis=0)
+    return update_step
+
+
+def make_encode_route_step(cost_tilt: float = 0.05):
+    from repro.encoder.model import encode
+    route = make_route_step(cost_tilt)
+
+    def step(enc_params, tokens, mask, a_emb, theta1, theta2, costs):
+        x = encode(enc_params, tokens, mask, ENC_CFG)
+        x = ccft.pad_queries(x, 2 * len(CATEGORIES))
+        return route(x, a_emb, theta1, theta2, costs)
+    return step
+
+
+def _compile(fn, args, in_sh, mesh, name):
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=steps_lib.tree_shardings(
+            mesh, in_sh)).lower(*args)
+        compiled = lowered.compile()
+    rec = {"step": name, "mesh": "x".join(str(s) for s in
+                                          dict(mesh.shape).values()),
+           "compile_s": round(time.time() - t0, 2),
+           "cost": _cost_stats(compiled), "memory": _mem_stats(compiled),
+           "collectives": collective_bytes(compiled.as_text())}
+    print(f"[router-dryrun] {name} x {rec['mesh']}: ok "
+          f"compile={rec['compile_s']}s "
+          f"flops/dev={rec['cost'].get('flops', 0):.3e} "
+          f"coll/dev={rec['collectives']['total_bytes']:.3e}")
+    return rec
+
+
+def run(global_batch: int, horizon: int = 65_536, out: str | None = None):
+    sds = jax.ShapeDtypeStruct
+    results = []
+    for multi_pod in (False, True):
+        mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+        bx = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+        # --- route_step
+        x = sds((global_batch, DIM), jnp.float32)
+        a_emb = sds((K_MODELS, DIM), jnp.float32)
+        th = sds((DIM,), jnp.float32)
+        costs = sds((K_MODELS,), jnp.float32)
+        results.append(_compile(
+            make_route_step(), (x, a_emb, th, th, costs),
+            (P(bx, None), P(None, None), P(None), P(None), P(None)),
+            mesh, "route_step"))
+
+        # --- update_step (parallel SGLD chains, sharded replay)
+        cfg = fgts.FGTSConfig(n_models=K_MODELS, dim=DIM, horizon=horizon,
+                              sgld_steps=20, sgld_minibatch=256)
+        n_chains = 16
+        upd = make_update_step(cfg, n_chains)
+        args = (sds((2,), jnp.uint32), th,
+                sds((horizon, DIM), jnp.float32),
+                sds((horizon,), jnp.int32), sds((horizon,), jnp.int32),
+                sds((horizon,), jnp.float32), sds((), jnp.int32), a_emb)
+        in_sh = (P(), P(None), P(bx, None), P(bx), P(bx), P(bx), P(),
+                 P(None, None))
+        results.append(_compile(upd, args, in_sh, mesh, "update_step"))
+
+        # --- encode + route (full service path)
+        from repro.encoder.model import init_encoder
+        enc_params = jax.eval_shape(
+            lambda k: init_encoder(k, ENC_CFG), jax.random.PRNGKey(0))
+        # The encoder is ~50M params: replicate weights, shard the batch
+        # (data-parallel serving; TP would waste ICI at this size).
+        esp = jax.tree.map(
+            lambda _: P(), enc_params,
+            is_leaf=lambda t: isinstance(t, jax.ShapeDtypeStruct))
+        toks = sds((global_batch, ENC_CFG.max_len), jnp.int32)
+        msk = sds((global_batch, ENC_CFG.max_len), jnp.float32)
+        a_emb2 = sds((K_MODELS, ENC_CFG.d_model + 2 * len(CATEGORIES)),
+                     jnp.float32)
+        th2 = sds((ENC_CFG.d_model + 2 * len(CATEGORIES),), jnp.float32)
+        results.append(_compile(
+            make_encode_route_step(),
+            (enc_params, toks, msk, a_emb2, th2, th2, costs),
+            (esp, P(bx, None), P(bx, None), P(None, None), P(None), P(None),
+             P(None)),
+            mesh, "encode_route_step"))
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[router-dryrun] wrote {out}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=65_536)
+    ap.add_argument("--out", default="results/router_dryrun.json")
+    args = ap.parse_args()
+    run(args.batch, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

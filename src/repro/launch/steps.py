@@ -1,0 +1,156 @@
+"""Step functions (train / prefill / decode) + ShapeDtypeStruct input specs
+for every (architecture x input shape), and their sharding specs.
+
+VLM note: for ``train_4k`` the 4096-token budget includes the anyres patch
+prefix (2880 stub patch embeddings + 1216 text tokens); decode shapes assume
+the image prefix is already in the KV cache. Audio note: the encoder consumes
+``cfg.enc_frames`` stub frame embeddings; decoder length = the shape's
+seq_len.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.shapes import InputShape
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init, adamw_update
+from repro.sharding import rules
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, lr: float = 3e-4, moe_impl=None,
+                    unroll: bool = False):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lm.loss_fn, has_aux=True)(params, batch, cfg, moe_impl=moe_impl,
+                                      unroll=unroll)
+        params, opt_state = adamw_update(params, grads, opt_state, lr,
+                                         weight_decay=0.1)
+        return params, opt_state, {"loss": loss, **metrics}
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int, moe_impl=None,
+                      unroll: bool = False):
+    def prefill_step(params, batch):
+        return lm.prefill(params, batch, cfg, cache_len, moe_impl=moe_impl,
+                          unroll=unroll)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, unroll: bool = False):
+    def decode_step(params, cache, tokens, pos):
+        return lm.decode_step(params, cache, tokens, pos, cfg, unroll=unroll)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct input specs (no allocation — dry-run currency)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Model-input ShapeDtypeStructs for train/prefill kinds."""
+    b = shape.global_batch
+    s = shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    out: dict[str, Any] = {}
+    text = s
+    if cfg.frontend == "vision":
+        text = s - cfg.n_frontend_tokens
+        out["patches"] = _sds((b, cfg.n_frontend_tokens, cfg.d_model), dt)
+    if cfg.is_encdec:
+        out["frames"] = _sds((b, cfg.enc_frames, cfg.d_model), dt)
+    out["tokens"] = _sds((b, text), jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = _sds((b, text), jnp.int32)
+    return out
+
+
+def params_specs(cfg: ModelConfig) -> dict:
+    return jax.eval_shape(functools.partial(lm.init_params, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+def opt_specs(params_sds) -> dict:
+    return jax.eval_shape(adamw_init, params_sds)
+
+
+def cache_sds(cfg: ModelConfig, batch: int, cache_len: int,
+              enc_len: int = 0) -> dict:
+    return jax.eval_shape(
+        functools.partial(lm.init_cache, batch, cfg=cfg, cache_len=cache_len,
+                          enc_len=enc_len))
+
+
+def tree_shardings(mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree (P leaves only)."""
+    return jax.tree.map(
+        lambda p: jax.sharding.NamedSharding(mesh, p), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh, unroll: bool = False):
+    """Returns (args, in_shardings, out_shardings, step_fn) for jit lowering.
+
+    All shardings are PartitionSpec trees; callers convert with
+    ``tree_shardings(mesh, ...)``.
+    """
+    psp = rules.param_specs(cfg, mesh)
+    params = params_specs(cfg)
+    bx = rules.batch_axes(mesh)
+    # A batch too small for the data axes (long_500k: batch 1) is replicated.
+    import numpy as _np
+    mesh_sizes = rules.mesh_axis_sizes(mesh)
+    bx_prod = int(_np.prod([mesh_sizes[a] for a in bx])) if bx else 1
+    if shape.global_batch % max(bx_prod, 1):
+        bx = ()
+
+    if shape.kind == "train":
+        batch = batch_specs(cfg, shape)
+        bsp = jax.tree.map(
+            lambda sds: P(*((bx,) + (None,) * (len(sds.shape) - 1))), batch,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        opt = opt_specs(params)
+        osp = {"mu": psp, "nu": psp, "step": P()}
+        step = make_train_step(cfg, unroll=unroll)
+        args = (params, opt, batch)
+        in_sh = (psp, osp, bsp)
+        out_sh = (psp, osp, {"loss": P(), "nll": P(), "aux": P()})
+        return args, in_sh, out_sh, step
+
+    if shape.kind == "prefill":
+        batch = batch_specs(cfg, shape)
+        bsp = jax.tree.map(
+            lambda sds: P(*((bx,) + (None,) * (len(sds.shape) - 1))), batch,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        csp = rules.cache_specs(cfg, mesh, bx=bx)
+        step = make_prefill_step(cfg, cache_len=shape.seq_len, unroll=unroll)
+        args = (params, batch)
+        in_sh = (psp, bsp)
+        out_sh = (P(bx, None), csp)
+        return args, in_sh, out_sh, step
+
+    # decode
+    enc_len = cfg.enc_frames if cfg.is_encdec else 0
+    cache = cache_sds(cfg, shape.global_batch, shape.seq_len, enc_len)
+    csp = rules.cache_specs(cfg, mesh, bx=bx)
+    tokens = _sds((shape.global_batch,), jnp.int32)
+    pos = _sds((), jnp.int32)
+    step = make_decode_step(cfg, unroll=unroll)
+    args = (params, cache, tokens, pos)
+    in_sh = (psp, csp, P(bx), P())
+    out_sh = (P(bx, None), csp)
+    return args, in_sh, out_sh, step

@@ -1,0 +1,188 @@
+"""Attention: GQA, causal / sliding-window / bidirectional / cross, with
+Gemma-2 logit soft-capping, RoPE, KV caches (full and ring-buffer window).
+
+The full-sequence path is pure-XLA einsum (GSPMD shards it); the Pallas
+flash-attention kernel in ``repro.kernels`` is the TPU drop-in for the same
+contraction and is validated against this path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_rope, softcap
+
+
+def init_attn(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, h, hd)) * d ** -0.5).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, kv, hd)) * d ** -0.5).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, kv, hd)) * d ** -0.5).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (h, hd, d)) * (h * hd) ** -0.5).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+    return p
+
+
+def _project_qkv(params, x, kv_src, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, params["wv"])
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    return q, k, v
+
+
+def _gqa_scores(q, k, cfg):
+    """q: (B,S,H,hd) k: (B,T,KV,hd) -> (B,KV,Hq,S,T) with Hq = H//KV."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    q = q.reshape(b, s, kvh, h // kvh, hd)
+    return jnp.einsum("bskgh,btkh->bkgst", q, k)
+
+
+def _gqa_out(p, v):
+    """p: (B,KV,Hq,S,T) v: (B,T,KV,hd) -> (B,S,H,hd)."""
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v)
+    b, s, kvh, g, hd = out.shape
+    return out.reshape(b, s, kvh * g, hd)
+
+
+def _mask(mode, q_pos, k_pos, window):
+    """q_pos: (B,S'), k_pos: (B,T) -> bool (B,1[,1],S',T) broadcastable."""
+    qi = q_pos[:, None, :, None]                 # (B,1,S',1)
+    kj = k_pos[:, None, None, :]                 # (B,1,1,T)
+    if mode == "causal":
+        return kj <= qi
+    if mode == "local":
+        return (kj <= qi) & (kj > qi - window)
+    return jnp.ones(jnp.broadcast_shapes(qi.shape, kj.shape), bool)
+
+
+def _attend(q, k, v, mask, cfg):
+    """Masked softmax attention for one q block.
+
+    grouped: q (B,S',H,hd), k/v (B,T,KV,hd), mask (B,1,S',T).
+    repeat : KV repeated to H heads first -> plain MHA einsum, so the head
+    axis stays cleanly sharded (no collectives inside attention).
+    """
+    if cfg.gqa_impl == "repeat" and k.shape[2] != q.shape[2]:
+        g = q.shape[2] // k.shape[2]
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    if k.shape[2] == q.shape[2]:                 # plain MHA path
+        s = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+        s = softcap(s * (cfg.hd ** -0.5), cfg.attn_softcap)
+        s = jnp.where(mask, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhst,bthd->bshd", p, v)
+    s = _gqa_scores(q, k, cfg).astype(jnp.float32) * (cfg.hd ** -0.5)
+    s = softcap(s, cfg.attn_softcap)
+    p = jax.nn.softmax(jnp.where(mask[:, :, None], s, -1e30),
+                       axis=-1).astype(v.dtype)
+    return _gqa_out(p, v)
+
+
+def full_attention(params: dict, x: jax.Array, positions: jax.Array,
+                   cfg: ModelConfig, *, mode: str, window: int = 0,
+                   kv_src: jax.Array | None = None,
+                   kv_positions: jax.Array | None = None) -> jax.Array:
+    """Full-sequence attention. mode: 'causal' | 'local' | 'bidir' | 'cross'.
+
+    With ``cfg.attn_q_chunk > 0`` the query axis is processed in static
+    blocks (unrolled), bounding the live score buffer at
+    (B, H, q_chunk, T) instead of (B, H, S, T) — the XLA-portable stand-in
+    for the Pallas flash kernel (which is the real TPU path).
+    """
+    kv_src = x if kv_src is None else kv_src
+    kv_positions = positions if kv_positions is None else kv_positions
+    q, k, v = _project_qkv(params, x, kv_src, cfg)
+    if mode != "cross":  # cross-attention keys come from encoder memory, no RoPE pairing
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+
+    s_len = q.shape[1]
+    qc = cfg.attn_q_chunk
+    if qc and s_len > qc and s_len % qc == 0:
+        outs = []
+        for i in range(s_len // qc):
+            sl = slice(i * qc, (i + 1) * qc)
+            m = _mask(mode, positions[:, sl], kv_positions, window)
+            outs.append(_attend(q[:, sl], k, v, m, cfg))
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        m = _mask(mode, positions, kv_positions, window)
+        out = _attend(q, k, v, m, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Decode path: one new token against a cache.
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, cache_len: int, cfg: ModelConfig, dtype) -> dict:
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, cache_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, kv, hd), dtype),
+        # per-slot absolute position, -1 = empty (ring-buffer validity mask)
+        "slot_pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+
+
+def decode_attention(params: dict, x: jax.Array, cache: dict, pos: jax.Array,
+                     cfg: ModelConfig, *, mode: str, window: int = 0,
+                     enc_memory: jax.Array | None = None):
+    """One-token decode. x: (B,1,d), pos: scalar int32 absolute position.
+
+    mode 'causal': cache holds the full context (cache_len >= max ctx).
+    mode 'local' : cache is a ring buffer of size `window`.
+    mode 'cross' : attend to fixed encoder memory (no cache mutation).
+    Returns (out (B,1,d), new_cache).
+    """
+    if mode == "cross":
+        b = x.shape[0]
+        t = enc_memory.shape[1]
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+        k = jnp.einsum("btd,dhk->bthk", enc_memory, params["wk"])
+        v = jnp.einsum("btd,dhk->bthk", enc_memory, params["wv"])
+        if "bq" in params:
+            q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+        scores = _gqa_scores(q, k, cfg).astype(jnp.float32) * (cfg.hd ** -0.5)
+        scores = softcap(scores, cfg.attn_softcap)
+        p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = _gqa_out(p, v)
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), cache
+
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k1 = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v1 = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if "bq" in params:
+        q, k1, v1 = q + params["bq"], k1 + params["bk"], v1 + params["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k1 = apply_rope(k1, positions, cfg.rope_theta)
+
+    cache_len = cache["k"].shape[1]
+    slot = pos % cache_len if mode == "local" else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1.astype(cache["v"].dtype), slot, axis=1)
+    slot_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], jnp.full((1,), pos, jnp.int32), slot, axis=0)
+
+    scores = _gqa_scores(q, k, cfg).astype(jnp.float32) * (cfg.hd ** -0.5)
+    scores = softcap(scores, cfg.attn_softcap)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if mode == "local":
+        valid &= slot_pos > pos - window
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = _gqa_out(p, v)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, {"k": k, "v": v, "slot_pos": slot_pos}

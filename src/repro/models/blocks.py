@@ -1,0 +1,273 @@
+"""Transformer blocks: pre-norm mixer + pre-norm FFN, dispatched by LayerSpec.
+
+A *unit* is one repetition of ``cfg.pattern`` — the forward pass scans over
+stacked unit parameters, so heterogeneous stacks (e.g. RecurrentGemma's
+(RG-LRU, RG-LRU, local-attn)) cost one unit's HLO regardless of depth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_lib
+from . import moe as moe_lib
+from . import rglru as rglru_lib
+from . import ssd as ssd_lib
+from .config import (FFN_MLP, FFN_MOE, FFN_MOE_DENSE, FFN_NONE,
+                     MIXER_BIDIR_ATTN, MIXER_CROSS_ATTN, MIXER_GLOBAL_ATTN,
+                     MIXER_LOCAL_ATTN, MIXER_RGLRU, MIXER_SSD, LayerSpec,
+                     ModelConfig)
+from .layers import init_mlp, gated_mlp, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_block(key: jax.Array, cfg: ModelConfig, spec: LayerSpec, dtype) -> dict:
+    kmix, kffn, kx = jax.random.split(key, 3)
+    d = cfg.d_model
+    p: dict = {"norm1": jnp.zeros((d,), jnp.float32)}
+    if spec.mixer in (MIXER_GLOBAL_ATTN, MIXER_LOCAL_ATTN, MIXER_BIDIR_ATTN,
+                      MIXER_CROSS_ATTN):
+        p["mixer"] = attn_lib.init_attn(kmix, cfg, dtype)
+        if spec.mixer == MIXER_CROSS_ATTN:
+            p["norm_x"] = jnp.zeros((d,), jnp.float32)
+            p["xattn"] = attn_lib.init_attn(kx, cfg, dtype)
+    elif spec.mixer == MIXER_RGLRU:
+        p["mixer"] = rglru_lib.init_rglru(kmix, cfg, dtype)
+    elif spec.mixer == MIXER_SSD:
+        p["mixer"] = ssd_lib.init_ssd(kmix, cfg, dtype)
+    if spec.ffn != FFN_NONE:
+        p["norm2"] = jnp.zeros((d,), jnp.float32)
+    if spec.ffn == FFN_MLP:
+        p["ffn"] = init_mlp(kffn, d, cfg.d_ff, dtype)
+    elif spec.ffn in (FFN_MOE, FFN_MOE_DENSE):
+        p["ffn"] = moe_lib.init_moe(kffn, cfg, dtype)
+    return p
+
+
+def init_unit(key: jax.Array, cfg: ModelConfig, specs, dtype) -> dict:
+    ks = jax.random.split(key, len(specs))
+    return {str(i): init_block(ks[i], cfg, s, dtype) for i, s in enumerate(specs)}
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _mixer_mode(mixer: str) -> str:
+    return {MIXER_GLOBAL_ATTN: "causal", MIXER_LOCAL_ATTN: "local",
+            MIXER_BIDIR_ATTN: "bidir"}[mixer]
+
+
+def block_fwd(params: dict, x: jax.Array, positions: jax.Array,
+              cfg: ModelConfig, spec: LayerSpec, *,
+              enc_memory: jax.Array | None = None,
+              moe_impl: str | None = None):
+    """Returns (x, aux_loss). moe_impl=None defers to cfg.moe_impl."""
+    moe_impl = moe_impl or cfg.moe_impl
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+    if spec.mixer in (MIXER_GLOBAL_ATTN, MIXER_LOCAL_ATTN, MIXER_BIDIR_ATTN):
+        m = attn_lib.full_attention(params["mixer"], h, positions, cfg,
+                                    mode=_mixer_mode(spec.mixer), window=cfg.window)
+    elif spec.mixer == MIXER_CROSS_ATTN:
+        m = attn_lib.full_attention(params["mixer"], h, positions, cfg,
+                                    mode="causal")
+    elif spec.mixer == MIXER_RGLRU:
+        m = rglru_lib.rglru_fwd(params["mixer"], h, cfg)
+    elif spec.mixer == MIXER_SSD:
+        m = ssd_lib.ssd_fwd(params["mixer"], h, cfg)
+    x = x + m
+    if spec.mixer == MIXER_CROSS_ATTN:
+        h = rms_norm(x, params["norm_x"], cfg.norm_eps)
+        t = enc_memory.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32),
+                                  (x.shape[0], t))
+        m = attn_lib.full_attention(params["xattn"], h, positions, cfg,
+                                    mode="cross", kv_src=enc_memory,
+                                    kv_positions=kv_pos)
+        x = x + m
+    if spec.ffn == FFN_NONE:
+        return x, aux
+    h = rms_norm(x, params["norm2"], cfg.norm_eps)
+    if spec.ffn == FFN_MLP:
+        f = gated_mlp(params["ffn"], h)
+    else:
+        f, aux = moe_lib.moe_ffn(params["ffn"], h, cfg, impl=moe_impl)
+    return x + f, aux
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def init_block_cache(batch: int, cfg: ModelConfig, spec: LayerSpec,
+                     cache_len: int, dtype, enc_len: int = 0) -> dict:
+    if spec.mixer == MIXER_GLOBAL_ATTN:
+        return {"kv": attn_lib.init_kv_cache(batch, cache_len, cfg, dtype)}
+    if spec.mixer == MIXER_LOCAL_ATTN:
+        w = min(cfg.window, cache_len)
+        return {"kv": attn_lib.init_kv_cache(batch, w, cfg, dtype)}
+    if spec.mixer == MIXER_CROSS_ATTN:
+        kv, hd = cfg.n_kv_heads, cfg.hd
+        return {"kv": attn_lib.init_kv_cache(batch, cache_len, cfg, dtype),
+                "xk": jnp.zeros((batch, enc_len, kv, hd), dtype),
+                "xv": jnp.zeros((batch, enc_len, kv, hd), dtype)}
+    if spec.mixer == MIXER_RGLRU:
+        return {"rnn": rglru_lib.init_rglru_cache(batch, cfg, dtype)}
+    if spec.mixer == MIXER_SSD:
+        return {"ssm": ssd_lib.init_ssd_cache(batch, cfg, dtype)}
+    raise ValueError(spec.mixer)
+
+
+def init_unit_cache(batch: int, cfg: ModelConfig, specs, cache_len: int,
+                    dtype, enc_len: int = 0) -> dict:
+    return {str(i): init_block_cache(batch, cfg, s, cache_len, dtype, enc_len)
+            for i, s in enumerate(specs)}
+
+
+# ---------------------------------------------------------------------------
+# One-token decode
+# ---------------------------------------------------------------------------
+
+def _cross_attn_cached(params, x, xk, xv, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+    scores = attn_lib._gqa_scores(q, xk, cfg).astype(jnp.float32) * (cfg.hd ** -0.5)
+    p = jax.nn.softmax(scores, axis=-1).astype(xv.dtype)
+    out = attn_lib._gqa_out(p, xv)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def block_step(params: dict, x: jax.Array, cache: dict, pos: jax.Array,
+               cfg: ModelConfig, spec: LayerSpec):
+    """One-token decode. x: (B,1,d). Returns (x, new_cache)."""
+    new_cache = dict(cache)
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+    if spec.mixer in (MIXER_GLOBAL_ATTN, MIXER_CROSS_ATTN):
+        m, kv = attn_lib.decode_attention(params["mixer"], h, cache["kv"], pos,
+                                          cfg, mode="causal")
+        new_cache["kv"] = kv
+    elif spec.mixer == MIXER_LOCAL_ATTN:
+        m, kv = attn_lib.decode_attention(params["mixer"], h, cache["kv"], pos,
+                                          cfg, mode="local", window=cfg.window)
+        new_cache["kv"] = kv
+    elif spec.mixer == MIXER_RGLRU:
+        m, rnn = rglru_lib.rglru_step(params["mixer"], h, cache["rnn"], cfg)
+        new_cache["rnn"] = rnn
+    elif spec.mixer == MIXER_SSD:
+        m, ssm = ssd_lib.ssd_step(params["mixer"], h, cache["ssm"], cfg)
+        new_cache["ssm"] = ssm
+    else:
+        raise ValueError(spec.mixer)
+    x = x + m
+    if spec.mixer == MIXER_CROSS_ATTN:
+        h = rms_norm(x, params["norm_x"], cfg.norm_eps)
+        x = x + _cross_attn_cached(params["xattn"], h, cache["xk"], cache["xv"], cfg)
+    if spec.ffn == FFN_NONE:
+        return x, new_cache
+    h = rms_norm(x, params["norm2"], cfg.norm_eps)
+    if spec.ffn == FFN_MLP:
+        f = gated_mlp(params["ffn"], h)
+    else:
+        # Default decode dispatch is dense (cfg.moe_decode_impl) — the
+        # recorded baseline; §Perf P2 flips it to sparse.
+        f, _ = moe_lib.moe_ffn(params["ffn"], h, cfg, impl=cfg.moe_decode_impl)
+    return x + f, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill (full sequence, also returns the filled cache)
+# ---------------------------------------------------------------------------
+
+def block_prefill(params: dict, x: jax.Array, positions: jax.Array,
+                  cfg: ModelConfig, spec: LayerSpec, cache_len: int,
+                  *, enc_memory: jax.Array | None = None,
+                  moe_impl: str | None = None):
+    """Full-sequence forward that also produces the decode cache."""
+    moe_impl = moe_impl or cfg.moe_impl
+    b, s, _ = x.shape
+    dtype = x.dtype
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+    cache: dict = {}
+    if spec.mixer in (MIXER_GLOBAL_ATTN, MIXER_LOCAL_ATTN, MIXER_CROSS_ATTN):
+        mode = "causal" if spec.mixer != MIXER_LOCAL_ATTN else "local"
+        m = attn_lib.full_attention(params["mixer"], h, positions, cfg,
+                                    mode=mode, window=cfg.window)
+        # Recompute K/V once for the cache (cheap relative to attention).
+        _, k, v = attn_lib._project_qkv(params["mixer"], h, h, cfg)
+        from .layers import apply_rope
+        k = apply_rope(k, positions, cfg.rope_theta)
+        clen = cache_len if spec.mixer != MIXER_LOCAL_ATTN else min(cfg.window, cache_len)
+        kv = attn_lib.init_kv_cache(b, clen, cfg, dtype)
+        if spec.mixer == MIXER_LOCAL_ATTN and s > clen:
+            # keep the last `window` tokens, ring-aligned
+            k_tail, v_tail = k[:, -clen:], v[:, -clen:]
+            pos_tail = positions[0, -clen:]
+            slots = pos_tail % clen
+            kv = {"k": kv["k"].at[:, slots].set(k_tail.astype(dtype)),
+                  "v": kv["v"].at[:, slots].set(v_tail.astype(dtype)),
+                  "slot_pos": kv["slot_pos"].at[slots].set(pos_tail)}
+        else:
+            kv = {"k": kv["k"].at[:, :s].set(k.astype(dtype)),
+                  "v": kv["v"].at[:, :s].set(v.astype(dtype)),
+                  "slot_pos": kv["slot_pos"].at[:s].set(positions[0])}
+        cache["kv"] = kv
+    elif spec.mixer == MIXER_RGLRU:
+        from .rglru import _causal_conv, _gates, linear_scan
+        y = jax.nn.gelu(h @ params["mixer"]["wy"])
+        u = h @ params["mixer"]["wx"]
+        u, conv_state = _causal_conv(params["mixer"], u)
+        log_a, x_in = _gates(params["mixer"], u)
+        hseq, h_last = linear_scan(log_a, x_in)
+        m = ((y.astype(jnp.float32) * hseq)
+             @ params["mixer"]["wo"].astype(jnp.float32)).astype(dtype)
+        cache["rnn"] = {"h": h_last, "conv": conv_state}
+    elif spec.mixer == MIXER_SSD:
+        m, ssm_cache = _ssd_prefill(params["mixer"], h, cfg)
+        cache["ssm"] = ssm_cache
+    x = x + m
+    if spec.mixer == MIXER_CROSS_ATTN:
+        hx = rms_norm(x, params["norm_x"], cfg.norm_eps)
+        t = enc_memory.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+        m = attn_lib.full_attention(params["xattn"], hx, positions, cfg,
+                                    mode="cross", kv_src=enc_memory,
+                                    kv_positions=kv_pos)
+        x = x + m
+        xk = jnp.einsum("btd,dhk->bthk", enc_memory, params["xattn"]["wk"])
+        xv = jnp.einsum("btd,dhk->bthk", enc_memory, params["xattn"]["wv"])
+        if "bk" in params["xattn"]:
+            xk, xv = xk + params["xattn"]["bk"], xv + params["xattn"]["bv"]
+        cache["xk"], cache["xv"] = xk.astype(dtype), xv.astype(dtype)
+    if spec.ffn != FFN_NONE:
+        h = rms_norm(x, params["norm2"], cfg.norm_eps)
+        if spec.ffn == FFN_MLP:
+            f = gated_mlp(params["ffn"], h)
+        else:
+            f, _ = moe_lib.moe_ffn(params["ffn"], h, cfg, impl=moe_impl)
+        x = x + f
+    return x, cache
+
+
+def _ssd_prefill(params, h, cfg):
+    b, s, _ = h.shape
+    di, n, nh, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt_raw = ssd_lib._split_proj(params, h, cfg)
+    xbc_c, conv_state = ssd_lib._causal_conv(params["conv"], xbc)
+    xs = xbc_c[..., :di].reshape(b, s, nh, p)
+    bt = xbc_c[..., di:di + n]
+    ct = xbc_c[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    log_a = -jnp.exp(params["a_log"]) * dt
+    y, h_last = ssd_lib.ssd_chunked(xs, bt, ct, log_a, dt, cfg.ssm_chunk)
+    y = y + params["d_skip"][:, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * (1.0 + params["norm_z"])
+    out = (y @ params["out_proj"].astype(jnp.float32)).astype(h.dtype)
+    return out, {"h": h_last, "conv": conv_state}

@@ -1,0 +1,57 @@
+"""Shared primitive layers: RMSNorm, RoPE, gated MLP, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))           # (hd//2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd//2)
+    cos = jnp.cos(ang)[..., :, None, :]                  # (..., seq, 1, hd//2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def gated_mlp(params: dict, x: jax.Array) -> jax.Array:
+    """SwiGLU: w2( silu(w1 x) * w3 x )."""
+    h = jax.nn.silu(x @ params["w1"]) * (x @ params["w3"])
+    return h @ params["w2"]
+
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_ff = d_ff ** -0.5
+    return {
+        "w1": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w3": (jax.random.normal(k3, (d_model, d_ff)) * s_in).astype(dtype),
+        "w2": (jax.random.normal(k2, (d_ff, d_model)) * s_ff).astype(dtype),
+    }
+
+
+def init_embedding(key: jax.Array, vocab: int, d_model: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d_model)) * (d_model ** -0.5)).astype(dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)

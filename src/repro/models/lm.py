@@ -1,0 +1,252 @@
+"""Top-level models: decoder-only LM (dense/MoE/SSM/hybrid/VLM) and
+encoder-decoder (audio). The decoder stack ``lax.scan``s over stacked unit
+parameters so HLO size and compile time are O(1) in depth.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks as blk
+from .config import MIXER_CROSS_ATTN, ModelConfig
+from .layers import init_embedding, rms_norm, softcap
+
+
+def _stacked_unit_init(key, cfg, specs, n_units, dtype):
+    keys = jax.random.split(key, n_units)
+    return jax.vmap(lambda k: blk.init_unit(k, cfg, specs, dtype))(keys)
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    p: dict = {
+        "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "units": _stacked_unit_init(ks[1], cfg, cfg.pattern, cfg.n_units, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if cfg.remainder:
+        p["remainder"] = blk.init_unit(ks[2], cfg, cfg.remainder, dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_embedding(ks[3], cfg.vocab_size, cfg.d_model, dtype)
+    if cfg.frontend == "vision":
+        p["vis_proj"] = (jax.random.normal(ks[4], (cfg.d_model, cfg.d_model))
+                         * cfg.d_model ** -0.5).astype(dtype)
+    if cfg.is_encdec:
+        p["enc_units"] = _stacked_unit_init(ks[5], cfg, cfg.enc_pattern,
+                                            cfg.enc_n_units, dtype)
+        p["enc_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+def _unit_fwd(uparams, x, positions, cfg, specs, enc_memory, moe_impl=None):
+    aux = jnp.zeros((), jnp.float32)
+    for i, spec in enumerate(specs):
+        x, a = blk.block_fwd(uparams[str(i)], x, positions, cfg, spec,
+                             enc_memory=enc_memory, moe_impl=moe_impl)
+        aux = aux + a
+    return x, aux
+
+
+def _stack_fwd(units, x, positions, cfg, specs, enc_memory=None,
+               moe_impl: str | None = None, remat: bool = True,
+               unroll: bool = False):
+    """Scan over stacked unit params; ``unroll=True`` emits one HLO copy per
+    unit instead (used by the dry-run so cost_analysis counts every layer —
+    XLA's cost model counts a while-loop body once, ignoring trip count)."""
+    base = functools.partial(_unit_fwd, positions=positions, cfg=cfg,
+                             specs=specs, enc_memory=enc_memory,
+                             moe_impl=moe_impl)
+    fn = jax.checkpoint(base) if remat else base
+
+    if unroll:
+        n = jax.tree.leaves(units)[0].shape[0]
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(n):
+            uparams = jax.tree.map(lambda t: t[i], units)
+            x, a = fn(uparams, x)
+            aux = aux + a
+        return x, aux
+
+    def scan_fn(carry, uparams):
+        x, aux = carry
+        x, a = fn(uparams, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)), units)
+    return x, aux
+
+
+def _embed_inputs(params, batch, cfg):
+    """Builds the decoder input sequence + positions from the input batch."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"][batch["tokens"]] * jnp.asarray(
+        cfg.d_model ** 0.5, dtype)
+    if cfg.frontend == "vision" and "patches" in batch:
+        vis = (batch["patches"].astype(dtype) @ params["vis_proj"])
+        x = jnp.concatenate([vis, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return x, positions
+
+
+def _encode(params, frames, cfg, unroll: bool = False):
+    dtype = jnp.dtype(cfg.dtype)
+    x = frames.astype(dtype)
+    b, t, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    x, _ = _stack_fwd(params["enc_units"], x, pos, cfg, cfg.enc_pattern,
+                      unroll=unroll)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(params: dict, batch: dict, cfg: ModelConfig,
+            moe_impl: str | None = None, remat: bool = True,
+            unroll: bool = False):
+    """Full-sequence logits. Returns (logits (B,S,V), aux_loss).
+
+    For VLM inputs, logits cover the full (patches + text) sequence; the
+    caller slices the text region for the loss.
+    """
+    enc_memory = None
+    if cfg.is_encdec:
+        enc_memory = _encode(params, batch["frames"], cfg, unroll=unroll)
+    x, positions = _embed_inputs(params, batch, cfg)
+    x, aux = _stack_fwd(params["units"], x, positions, cfg, cfg.pattern,
+                        enc_memory=enc_memory, moe_impl=moe_impl, remat=remat,
+                        unroll=unroll)
+    if cfg.remainder:
+        for i, spec in enumerate(cfg.remainder):
+            x, a = blk.block_fwd(params["remainder"][str(i)], x, positions,
+                                 cfg, spec, enc_memory=enc_memory,
+                                 moe_impl=moe_impl)
+            aux = aux + a
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head).astype(jnp.float32)
+    logits = softcap(logits, cfg.logit_softcap)
+    return logits, aux
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig,
+            moe_impl: str | None = None, aux_coef: float = 0.01,
+            unroll: bool = False):
+    logits, aux = forward(params, batch, cfg, moe_impl=moe_impl,
+                          unroll=unroll)
+    labels = batch["labels"]
+    if cfg.frontend == "vision" and "patches" in batch:
+        logits = logits[:, -labels.shape[1]:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + aux_coef * aux, {"nll": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(batch: int, cfg: ModelConfig, cache_len: int,
+               enc_len: int = 0) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+
+    def one_unit(_):
+        return blk.init_unit_cache(batch, cfg, cfg.pattern, cache_len, dtype,
+                                   enc_len)
+
+    cache: dict = {"units": jax.vmap(one_unit)(jnp.arange(cfg.n_units))}
+    if cfg.remainder:
+        cache["remainder"] = blk.init_unit_cache(batch, cfg, cfg.remainder,
+                                                 cache_len, dtype, enc_len)
+    return cache
+
+
+def prefill(params: dict, batch: dict, cfg: ModelConfig, cache_len: int,
+            moe_impl: str | None = None, unroll: bool = False):
+    """Full-context prefill. Returns (last_logits (B,V), cache)."""
+    enc_memory = None
+    enc_len = 0
+    if cfg.is_encdec:
+        enc_memory = _encode(params, batch["frames"], cfg, unroll=unroll)
+        enc_len = enc_memory.shape[1]
+    x, positions = _embed_inputs(params, batch, cfg)
+
+    def scan_fn(x, uparams):
+        cache = {}
+        for i, spec in enumerate(cfg.pattern):
+            x, c = blk.block_prefill(uparams[str(i)], x, positions, cfg, spec,
+                                     cache_len, enc_memory=enc_memory,
+                                     moe_impl=moe_impl)
+            cache[str(i)] = c
+        return x, cache
+
+    if unroll:
+        n = jax.tree.leaves(params["units"])[0].shape[0]
+        caches = []
+        for i in range(n):
+            x, c = scan_fn(x, jax.tree.map(lambda t: t[i], params["units"]))
+            caches.append(c)
+        unit_caches = jax.tree.map(lambda *ts: jnp.stack(ts), *caches)
+    else:
+        x, unit_caches = jax.lax.scan(scan_fn, x, params["units"])
+    cache = {"units": unit_caches}
+    if cfg.remainder:
+        rc = {}
+        for i, spec in enumerate(cfg.remainder):
+            x, c = blk.block_prefill(params["remainder"][str(i)], x, positions,
+                                     cfg, spec, cache_len,
+                                     enc_memory=enc_memory, moe_impl=moe_impl)
+            rc[str(i)] = c
+        cache["remainder"] = rc
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], head).astype(jnp.float32)
+    return softcap(logits, cfg.logit_softcap), cache
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
+                cfg: ModelConfig, unroll: bool = False):
+    """One-token decode. tokens: (B,) int32; pos: scalar int32 (absolute).
+
+    Returns (logits (B,V), new_cache).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens][:, None] * jnp.asarray(cfg.d_model ** 0.5, dtype)
+
+    def scan_fn(x, unit):
+        uparams, ucache = unit
+        new_cache = {}
+        for i, spec in enumerate(cfg.pattern):
+            x, c = blk.block_step(uparams[str(i)], x, ucache[str(i)], pos, cfg,
+                                  spec)
+            new_cache[str(i)] = c
+        return x, new_cache
+
+    if unroll:
+        n = jax.tree.leaves(params["units"])[0].shape[0]
+        caches = []
+        for i in range(n):
+            unit = jax.tree.map(lambda t: t[i],
+                                (params["units"], cache["units"]))
+            x, c = scan_fn(x, unit)
+            caches.append(c)
+        new_unit_caches = jax.tree.map(lambda *ts: jnp.stack(ts), *caches)
+    else:
+        x, new_unit_caches = jax.lax.scan(scan_fn, x, (params["units"],
+                                                       cache["units"]))
+    new_cache = {"units": new_unit_caches}
+    if cfg.remainder:
+        rc = {}
+        for i, spec in enumerate(cfg.remainder):
+            x, c = blk.block_step(params["remainder"][str(i)], x,
+                                  cache["remainder"][str(i)], pos, cfg, spec)
+            rc[str(i)] = c
+        new_cache["remainder"] = rc
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,vd->bv", x[:, 0], head).astype(jnp.float32)
+    return softcap(logits, cfg.logit_softcap), new_cache

@@ -1,0 +1,122 @@
+"""Mixture-of-Experts FFN: top-k token-choice routing.
+
+Two dispatch implementations:
+
+* ``sparse`` (default) — capacity-bucketed dispatch: assignments are sorted by
+  expert, packed into an (E, C, d) buffer, each expert runs one dense matmul
+  over its bucket, results scatter back weighted by the gate. Compute is
+  O(N·K·d·f·cf) — the real sparse-MoE cost — and with experts sharded over the
+  ``model`` mesh axis this is expert-parallel. Tokens overflowing an expert's
+  capacity are dropped (standard Switch/GShard semantics).
+* ``dense`` — every expert processes every token, combined with one-hot
+  weights. Exact (no drops); used as the numerics oracle in tests and for
+  tiny expert counts.
+
+Arctic-style ``moe_dense`` adds a parallel dense-residual MLP on top.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import gated_mlp, init_mlp
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * d ** -0.5).astype(jnp.float32),
+        "w1": (jax.random.normal(ks[1], (e, d, f)) * d ** -0.5).astype(dtype),
+        "w3": (jax.random.normal(ks[2], (e, d, f)) * d ** -0.5).astype(dtype),
+        "w2": (jax.random.normal(ks[3], (e, f, d)) * f ** -0.5).astype(dtype),
+    }
+    if cfg.dense_residual_ff:
+        p["dense"] = init_mlp(ks[4], d, cfg.dense_residual_ff, dtype)
+    return p
+
+
+def _route(params, x, cfg):
+    """Returns (gate (N,K) f32, expert_idx (N,K) i32, aux_loss)."""
+    n = x.shape[0]
+    logits = x.astype(jnp.float32) @ params["router"]            # (N,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(logits, cfg.top_k)                # (N,K)
+    gate = jax.nn.softmax(topv, axis=-1)
+    # Switch-style load-balance loss: E * sum_e frac_tokens_e * mean_prob_e.
+    counts = jnp.zeros((cfg.n_experts,), jnp.float32).at[topi.reshape(-1)].add(1.0)
+    frac_tokens = counts / (n * cfg.top_k)
+    aux = cfg.n_experts * jnp.sum(frac_tokens * jnp.mean(probs, axis=0))
+    return gate, topi, aux
+
+
+def _expert_mlp(params, xe):
+    """xe: (E, C, d) -> (E, C, d)."""
+    h = jnp.einsum("ecd,edf->ecf", xe, params["w1"])
+    g = jnp.einsum("ecd,edf->ecf", xe, params["w3"])
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * g, params["w2"])
+
+
+def capacity(n_tokens: int, cfg: ModelConfig, factor: float = 1.25) -> int:
+    c = int(math.ceil(n_tokens * cfg.top_k / cfg.n_experts * factor))
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_ffn_sparse(params: dict, x: jax.Array, cfg: ModelConfig,
+                   capacity_factor: float = 1.25):
+    b, s, d = x.shape
+    n = b * s
+    k = cfg.top_k
+    e = cfg.n_experts
+    c = capacity(n, cfg, capacity_factor)
+    xf = x.reshape(n, d)
+
+    gate, topi, aux = _route(params, xf, cfg)
+
+    flat_e = topi.reshape(-1)                                    # (N*K,)
+    sort_idx = jnp.argsort(flat_e, stable=True)                  # (N*K,)
+    sorted_e = flat_e[sort_idx]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(e))           # (E,)
+    pos_in_e = jnp.arange(n * k) - starts[sorted_e]              # (N*K,)
+    keep = pos_in_e < c
+    # Destination slot in the flattened (E*C) buffer; overflow -> sentinel E*C.
+    dest = jnp.where(keep, sorted_e * c + pos_in_e, e * c)
+
+    token_of = sort_idx // k                                     # source token per assignment
+    buf = jnp.zeros((e * c + 1, d), x.dtype).at[dest].set(xf[token_of])
+    ye = _expert_mlp(params, buf[:-1].reshape(e, c, d))          # (E,C,d)
+
+    # Scatter back: assignment i (in sorted order) reads ye at its slot.
+    y_sorted = jnp.concatenate([ye.reshape(e * c, d), jnp.zeros((1, d), x.dtype)])[dest]
+    inv = jnp.zeros((n * k,), jnp.int32).at[sort_idx].set(
+        jnp.arange(n * k, dtype=jnp.int32))
+    y_assign = y_sorted[inv].reshape(n, k, d)
+    out = jnp.einsum("nkd,nk->nd", y_assign, gate.astype(x.dtype))
+    out = out.reshape(b, s, d)
+    if "dense" in params:
+        out = out + gated_mlp(params["dense"], x)
+    return out, aux
+
+
+def moe_ffn_dense(params: dict, x: jax.Array, cfg: ModelConfig):
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    gate, topi, aux = _route(params, xf, cfg)
+    onehot = jax.nn.one_hot(topi, cfg.n_experts, dtype=jnp.float32)   # (N,K,E)
+    combine = jnp.einsum("nke,nk->ne", onehot, gate)                  # (N,E)
+    h = jnp.einsum("nd,edf->enf", xf, params["w1"])
+    g = jnp.einsum("nd,edf->enf", xf, params["w3"])
+    y = jnp.einsum("enf,efd->end", jax.nn.silu(h) * g, params["w2"])  # (E,N,d)
+    out = jnp.einsum("end,ne->nd", y, combine.astype(y.dtype)).reshape(b, s, d)
+    if "dense" in params:
+        out = out + gated_mlp(params["dense"], x)
+    return out, aux
+
+
+def moe_ffn(params: dict, x: jax.Array, cfg: ModelConfig, impl: str = "sparse"):
+    if impl == "dense":
+        return moe_ffn_dense(params, x, cfg)
+    return moe_ffn_sparse(params, x, cfg)

@@ -1,0 +1,117 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block layout (the "recurrent block" of Griffin):
+    y  = GeLU(W_y x)                              # gate branch
+    u  = causal depthwise Conv1D(W_x x)           # recurrent branch input
+    h  = RG-LRU(u)                                # gated linear recurrence
+    out = W_o (y * h)
+
+RG-LRU recurrence (per feature channel):
+    r_t = sigmoid(W_a u_t + b_a)                  # recurrence gate
+    i_t = sigmoid(W_i u_t + b_i)                  # input gate
+    log a_t = c * r_t * log sigmoid(Lambda)       # c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Training uses an associative scan (TPU-native chunked version lives in
+``repro.kernels.rglru``); decode is a single fused step with carried state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+C_GATE = 8.0
+
+
+def init_rglru(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d, dr = cfg.d_model, cfg.d_rnn
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a = sigmoid(Lambda)^c spans ~[0.9, 0.999] (Griffin).
+    u = jax.random.uniform(ks[6], (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1 / C_GATE) / (1 - u ** (1 / C_GATE)))
+    return {
+        "wy": (jax.random.normal(ks[0], (d, dr)) * d ** -0.5).astype(dtype),
+        "wx": (jax.random.normal(ks[1], (d, dr)) * d ** -0.5).astype(dtype),
+        "wo": (jax.random.normal(ks[2], (dr, d)) * dr ** -0.5).astype(dtype),
+        "conv": (jax.random.normal(ks[3], (cfg.conv_width, dr)) * 0.1).astype(dtype),
+        "wa": (jax.random.normal(ks[4], (dr, dr)) * dr ** -0.5).astype(dtype),
+        "ba": jnp.zeros((dr,), jnp.float32),
+        "wi": (jax.random.normal(ks[5], (dr, dr)) * dr ** -0.5).astype(dtype),
+        "bi": jnp.zeros((dr,), jnp.float32),
+        "lambda": lam,
+    }
+
+
+def _gates(params, u):
+    """u: (..., dr) -> (log_a, x_in) both f32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["wa"].astype(jnp.float32) + params["ba"])
+    i = jax.nn.sigmoid(uf @ params["wi"].astype(jnp.float32) + params["bi"])
+    log_a = C_GATE * r * jax.nn.log_sigmoid(params["lambda"])
+    x_in = i * uf
+    return log_a, x_in
+
+
+def _causal_conv(params, u, conv_state=None):
+    """Depthwise causal conv, width W. u: (B,S,dr)."""
+    w = params["conv"].astype(jnp.float32)            # (W, dr)
+    width = w.shape[0]
+    uf = u.astype(jnp.float32)
+    if conv_state is None:
+        pad = jnp.zeros((u.shape[0], width - 1, u.shape[2]), jnp.float32)
+    else:
+        pad = conv_state.astype(jnp.float32)
+    up = jnp.concatenate([pad, uf], axis=1)           # (B, S+W-1, dr)
+    out = sum(up[:, k:k + u.shape[1]] * w[k] for k in range(width))
+    new_state = up[:, -(width - 1):]
+    return out.astype(u.dtype), new_state.astype(u.dtype)
+
+
+def linear_scan(log_a: jax.Array, x_in: jax.Array, h0: jax.Array | None = None):
+    """h_t = a_t h_{t-1} + sqrt(1-a_t^2) x_t via associative scan over axis 1.
+
+    log_a, x_in: (B,S,dr) float32. Returns (h (B,S,dr), h_last (B,dr)).
+    """
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 0.0)) * x_in
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_fwd(params: dict, x: jax.Array, cfg: ModelConfig):
+    """Full-sequence forward. x: (B,S,d) -> (B,S,d)."""
+    y = jax.nn.gelu(x @ params["wy"])
+    u = x @ params["wx"]
+    u, _ = _causal_conv(params, u)
+    log_a, x_in = _gates(params, u)
+    h, _ = linear_scan(log_a, x_in)
+    return ((y.astype(jnp.float32) * h) @ params["wo"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_rglru_cache(batch: int, cfg: ModelConfig, dtype) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_rnn), dtype),
+    }
+
+
+def rglru_step(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig):
+    """One-token decode. x: (B,1,d) -> (out (B,1,d), new_cache)."""
+    y = jax.nn.gelu(x @ params["wy"])                 # (B,1,dr)
+    u = x @ params["wx"]
+    u, conv_state = _causal_conv(params, u, cache["conv"])
+    log_a, x_in = _gates(params, u[:, 0])             # (B,dr)
+    a = jnp.exp(log_a)
+    h = a * cache["h"] + jnp.sqrt(jnp.maximum(1 - a * a, 0.0)) * x_in
+    out = ((y[:, 0].astype(jnp.float32) * h) @ params["wo"].astype(jnp.float32))
+    return out[:, None].astype(x.dtype), {"h": h, "conv": conv_state}

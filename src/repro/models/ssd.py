@@ -1,0 +1,179 @@
+"""Mamba-2 block with the SSD (state-space duality) chunked algorithm
+(arXiv:2405.21060).
+
+Selective SSM with scalar-per-head decay:
+    dt_t = softplus(dt_raw_t + dt_bias)            # (H,)
+    a_t  = exp(-exp(A_log) * dt_t)                 # scalar decay per head
+    h_t  = a_t h_{t-1} + dt_t * (x_t  B_t^T)       # h: (H, P, N)
+    y_t  = h_t C_t + D * x_t                       # (H, P)
+
+Training uses the chunked dual form: within a chunk of length L the output is
+an attention-like (L x L) masked matmul (MXU-friendly); states are passed
+between chunks with an associative scan. The Pallas TPU kernel in
+``repro.kernels.ssd`` implements the same chunking; this module is the
+XLA/GSPMD path and the oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def init_ssd(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 5)
+    conv_dim = di + 2 * n
+    return {
+        # in_proj -> [z (di), x (di), B (n), C (n), dt (h)]
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di + 2 * n + h)) * d ** -0.5
+                    ).astype(dtype),
+        "conv": (jax.random.normal(ks[1], (cfg.conv_width, conv_dim)) * 0.1
+                 ).astype(dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jax.random.uniform(ks[2], (h,), jnp.float32, 1e-3, 0.1))),
+        "a_log": jnp.log(jax.random.uniform(ks[3], (h,), jnp.float32, 1.0, 16.0)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_z": jnp.zeros((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (di, d)) * di ** -0.5).astype(dtype),
+    }
+
+
+def _split_proj(params, x, cfg):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = x @ params["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt_raw = zxbcdt[..., di + di + 2 * n:]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(w, u, conv_state=None):
+    width = w.shape[0]
+    wf = w.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    if conv_state is None:
+        pad = jnp.zeros((u.shape[0], width - 1, u.shape[-1]), jnp.float32)
+    else:
+        pad = conv_state.astype(jnp.float32)
+    up = jnp.concatenate([pad, uf], axis=1)
+    out = sum(up[:, k:k + u.shape[1]] * wf[k] for k in range(width))
+    return jax.nn.silu(out).astype(u.dtype), up[:, -(width - 1):].astype(u.dtype)
+
+
+def ssd_chunked(xh, bt, ct, log_a, dt, chunk: int, h0=None):
+    """Chunked SSD core.
+
+    xh:    (B, S, H, P)  inputs per head
+    bt,ct: (B, S, N)     input/output state projections (shared across heads)
+    log_a: (B, S, H)     per-step log decay (negative)
+    dt:    (B, S, H)     step sizes
+    Returns (y (B,S,H,P), h_last (B,H,P,N)).
+    """
+    b, s, h, p = xh.shape
+    n = bt.shape[-1]
+    l = min(chunk, s) if s < chunk else chunk
+    if s % l:
+        # Pad the tail: dt=0 increments nothing, log_a=0 decays nothing, so
+        # h_last is exact and padded outputs are sliced off below.
+        pad = l - s % l
+        z = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        y, h_last = ssd_chunked(z(xh), z(bt), z(ct), z(log_a), z(dt), l, h0)
+        return y[:, :s], h_last
+    nc = s // l
+    f32 = jnp.float32
+    xh = xh.astype(f32).reshape(b, nc, l, h, p)
+    bt = bt.astype(f32).reshape(b, nc, l, n)
+    ct = ct.astype(f32).reshape(b, nc, l, n)
+    log_a = log_a.astype(f32).reshape(b, nc, l, h)
+    dt = dt.astype(f32).reshape(b, nc, l, h)
+
+    cum = jnp.cumsum(log_a, axis=2)                     # (b,nc,l,h)
+    # Intra-chunk: Y[i] = sum_{j<=i} exp(cum_i - cum_j) (C_i.B_j) dt_j x_j
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (b,nc,i,j,h)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    m = jnp.where(mask[None, None, :, :, None], jnp.exp(decay), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", ct, bt)                  # (b,nc,i,j)
+    w = cb[..., None] * m                                        # (b,nc,i,j,h)
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", w, dt, xh)
+
+    # Chunk-level states: S_c = sum_j exp(cum_last - cum_j) dt_j x_j B_j^T
+    dec_out = jnp.exp(cum[:, :, -1:, :] - cum)                  # (b,nc,l,h)
+    s_c = jnp.einsum("bclh,bclh,bclhp,bcln->bchpn", dec_out, dt, xh, bt)
+    a_c = jnp.exp(cum[:, :, -1, :])                             # (b,nc,h) chunk decay
+
+    # Inter-chunk recurrence H_c = a_c H_{c-1} + S_c (associative scan over nc).
+    if h0 is not None:
+        s_c = s_c.at[:, 0].add(a_c[:, 0, :, None, None] * h0.astype(f32))
+
+    def combine(left, right):
+        a1, s1 = left
+        a2, s2 = right
+        return a1 * a2, a2[:, :, :, None, None] * s1 + s2
+
+    _, h_states = jax.lax.associative_scan(combine, (a_c, s_c), axis=1)
+    # h_states[c] = state AFTER chunk c; state entering chunk c is h_states[c-1].
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h_states[:, :1]) if h0 is None
+         else h0.astype(f32)[:, None], h_states[:, :-1]], axis=1)  # (b,nc,h,p,n)
+
+    # Inter-chunk contribution: y_inter[i] = exp(cum_i) C_i . H_prev
+    dec_in = jnp.exp(cum)                                        # (b,nc,l,h)
+    y_inter = jnp.einsum("bclh,bchpn,bcln->bclhp", dec_in, h_prev, ct)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, h_states[:, -1]
+
+
+def ssd_fwd(params: dict, x: jax.Array, cfg: ModelConfig):
+    """Full-sequence Mamba-2 block. x: (B,S,d) -> (B,S,d)."""
+    b, s, _ = x.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt_raw = _split_proj(params, x, cfg)
+    xbc, _ = _causal_conv(params["conv"], xbc)
+    xs = xbc[..., :di].reshape(b, s, h, p)
+    bt = xbc[..., di:di + n]
+    ct = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    log_a = -jnp.exp(params["a_log"]) * dt
+    y, _ = ssd_chunked(xs, bt, ct, log_a, dt, cfg.ssm_chunk)
+    y = y + params["d_skip"][:, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, di)
+    # gated RMSNorm (Mamba-2 norm before out_proj)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * (1.0 + params["norm_z"])
+    return (y @ params["out_proj"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_ssd_cache(batch: int, cfg: ModelConfig, dtype) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                       jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.ssm_state),
+                          dtype),
+    }
+
+
+def ssd_step(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig):
+    """One-token decode. x: (B,1,d)."""
+    b = x.shape[0]
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt_raw = _split_proj(params, x, cfg)
+    xbc, conv_state = _causal_conv(params["conv"], xbc, cache["conv"])
+    xbc = xbc[:, 0]
+    xs = xbc[..., :di].reshape(b, h, p).astype(jnp.float32)
+    bt = xbc[..., di:di + n].astype(jnp.float32)
+    ct = xbc[..., di + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = jnp.exp(-jnp.exp(params["a_log"]) * dt)                                 # (B,H)
+    hs = a[:, :, None, None] * cache["h"] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xs, bt)
+    y = jnp.einsum("bhpn,bn->bhp", hs, ct) + params["d_skip"][:, None] * xs
+    y = y.reshape(b, di)
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * (1.0 + params["norm_z"])
+    out = (y @ params["out_proj"].astype(jnp.float32)).astype(x.dtype)
+    return out[:, None], {"h": hs, "conv": conv_state}

@@ -1,0 +1,21 @@
+"""Stochastic Gradient Langevin Dynamics (Welling & Teh 2011).
+
+theta' = theta - (eps/2) * grad U(theta) + sqrt(eps) * N(0, I)
+
+Used to sample from the FGTS.CDB pseudo-posterior
+p(theta|S) ∝ exp(-sum_i L(theta, ...)) p0(theta).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgld_step(theta, grad_u, eps: jax.Array, key: jax.Array):
+    """One SGLD step on a pytree. grad_u = ∇ of the potential (−log posterior)."""
+    leaves, treedef = jax.tree.flatten(theta)
+    keys = jax.random.split(key, len(leaves))
+    g_leaves = jax.tree.leaves(grad_u)
+    new = [t - 0.5 * eps * g + jnp.sqrt(eps) * jax.random.normal(k, t.shape, t.dtype)
+           for t, g, k in zip(leaves, g_leaves, keys)]
+    return jax.tree.unflatten(treedef, new)

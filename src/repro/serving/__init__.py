@@ -1,0 +1,1 @@
+from .router_service import PoolEntry, RouterService, RouterServiceConfig

@@ -1,0 +1,118 @@
+"""Batched routing service — the production wrapper around FGTS.CDB.
+
+A deployment keeps one ``RouterService`` per model pool. Requests arrive in
+batches; the service embeds them (encoder), Thompson-samples the two
+routing parameters once per batch (amortizing SGLD), scores every request
+against every candidate with the ``dueling_score`` kernel, dispatches, and
+folds the pairwise feedback stream back into the posterior.
+
+The pool registry carries per-model cost metadata so selection can apply a
+cost-aware utility tilt at serve time (the paper's perf-cost trade-off knob).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fgts
+from repro.encoder.model import EncoderConfig, encode
+from repro.kernels.ops import dueling_score_op
+
+
+@dataclasses.dataclass
+class PoolEntry:
+    name: str
+    arch: str                      # architecture id (repro.configs)
+    cost_per_1k_tokens: float
+    embedding: np.ndarray          # CCFT model embedding a_k
+    generate_fn: Optional[Callable] = None   # (tokens) -> response (examples)
+
+
+@dataclasses.dataclass
+class RouterServiceConfig:
+    fgts: fgts.FGTSConfig
+    cost_tilt: float = 0.0         # lambda applied at serve time
+    seed: int = 0
+
+
+class RouterService:
+    """Online routing service state (host-side orchestration, jitted math)."""
+
+    def __init__(self, pool: list[PoolEntry], enc_params, enc_cfg: EncoderConfig,
+                 cfg: RouterServiceConfig):
+        assert len(pool) == cfg.fgts.n_models
+        self.pool = pool
+        self.enc_params = enc_params
+        self.enc_cfg = enc_cfg
+        self.cfg = cfg
+        self.a_emb = jnp.asarray(np.stack([p.embedding for p in pool]))
+        self.costs = jnp.asarray([p.cost_per_1k_tokens for p in pool])
+        self._key = jax.random.PRNGKey(cfg.seed)
+        self.state = fgts.init_state(cfg.fgts, self._next_key())
+        self.n_routed = 0
+        self._sample = jax.jit(
+            lambda k, st: (fgts.sgld_sample(k, st.theta1, st, self.a_emb, 1,
+                                            cfg.fgts),
+                           fgts.sgld_sample(jax.random.fold_in(k, 1),
+                                            st.theta2, st, self.a_emb, 2,
+                                            cfg.fgts)))
+
+    def _next_key(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def embed(self, tokens: jax.Array, mask: jax.Array) -> jax.Array:
+        return encode(self.enc_params, tokens, mask, self.enc_cfg)
+
+    def route_batch(self, x: jax.Array):
+        """x: (B, d) query features. Returns (a1 (B,), a2 (B,)) arm indices.
+
+        One posterior sample pair per batch; per-request argmax via the
+        dueling_score kernel; cost tilt subtracts lambda*cost from scores.
+        """
+        theta1, theta2 = self._sample(self._next_key(), self.state)
+        self.state = self.state._replace(theta1=theta1, theta2=theta2)
+        scores = dueling_score_op(x, self.a_emb,
+                                  jnp.stack([theta1, theta2]))   # (2,B,K)
+        scores = scores - self.cfg.cost_tilt * self.costs[None, None, :]
+        a1 = jnp.argmax(scores[0], axis=-1).astype(jnp.int32)
+        s2 = scores[1]
+        a2 = jnp.argmax(s2, axis=-1).astype(jnp.int32)
+        self.n_routed += int(x.shape[0])
+        return a1, a2
+
+    def feedback_batch(self, x: jax.Array, a1: jax.Array, a2: jax.Array,
+                       y: jax.Array):
+        """Fold a batch of observed duels into the replay history."""
+        for i in range(x.shape[0]):
+            self.state = fgts.observe(self.state, x[i], a1[i], a2[i], y[i])
+
+    def spend(self, arms: jax.Array, tokens_out: int = 1000) -> float:
+        """Cost accounting for a batch of dispatches."""
+        return float(jnp.sum(self.costs[arms]) * tokens_out / 1000.0)
+
+    # -- persistence (posterior + replay survive restarts) ------------------
+
+    def save(self, path: str, step: int | None = None) -> str:
+        from repro.checkpoint import save_checkpoint
+        payload = {"state": self.state._asdict(),
+                   "key": self._key,
+                   "n_routed": jnp.asarray(self.n_routed)}
+        return save_checkpoint(path, step if step is not None
+                               else self.n_routed, payload)
+
+    def restore(self, path: str, step: int | None = None) -> int:
+        from repro.checkpoint import latest_step, restore_checkpoint
+        from repro.core.fgts import FGTSState
+        step = latest_step(path) if step is None else step
+        like = {"state": self.state._asdict(), "key": self._key,
+                "n_routed": jnp.asarray(self.n_routed)}
+        payload = restore_checkpoint(path, step, like)
+        self.state = FGTSState(**payload["state"])
+        self._key = payload["key"]
+        self.n_routed = int(payload["n_routed"])
+        return step

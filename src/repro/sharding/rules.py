@@ -1,0 +1,224 @@
+"""Sharding rules: PartitionSpecs for params, optimizer state, batches, caches.
+
+Policy (v5e mesh, axes ("data","model") or ("pod","data","model")):
+
+* tensor parallel over ``model``: attention heads (when divisible, else
+  head_dim), MLP d_ff, experts (when divisible, else expert d_ff), RG-LRU
+  width, SSD inner width, vocab (when divisible, else d_model).
+* batch over ("pod","data") for activations and inputs.
+* ``fsdp`` archs (arctic, mistral-large, llava-34b) additionally shard the
+  non-TP param dim over ``data`` — ZeRO-3-style; GSPMD inserts the
+  all-gathers.
+* optimizer state is sharded exactly like its param.
+* KV caches: batch over data, head_dim over model (works for every kv-head
+  count); recurrent/SSM states: width over model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import (FFN_NONE, MIXER_CROSS_ATTN, MIXER_RGLRU,
+                                 MIXER_SSD, ModelConfig)
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes that shard the batch dimension."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _div(n: int, k: int) -> bool:
+    return n % k == 0
+
+
+def _msize(mesh, name: str) -> int:
+    return dict(mesh.shape)[name]
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(mesh.shape)
+
+
+def attn_specs(cfg: ModelConfig, mesh, fsdp_ax) -> dict:
+    m = _msize(mesh, "model")
+    heads_ok = _div(cfg.n_heads, m) and _div(cfg.n_kv_heads, m)
+    # wq: (d, H, hd)   wk/wv: (d, KV, hd)   wo: (H, hd, d)
+    if cfg.gqa_impl == "repeat" and _div(cfg.n_heads, m):
+        # §Perf "repeat-KV" layout: Q/O sharded on heads, small KV replicated
+        # — after the in-attention repeat, every attention tensor carries the
+        # head axis, so attention needs NO collectives at all.
+        sp = {"wq": P(fsdp_ax, "model", None), "wk": P(fsdp_ax, None, None),
+              "wv": P(fsdp_ax, None, None), "wo": P("model", None, fsdp_ax)}
+        if cfg.qkv_bias:
+            sp.update({"bq": P("model", None), "bk": P(None, None),
+                       "bv": P(None, None)})
+        return sp
+    if heads_ok:
+        sp = {"wq": P(fsdp_ax, "model", None), "wk": P(fsdp_ax, "model", None),
+              "wv": P(fsdp_ax, "model", None), "wo": P("model", None, fsdp_ax)}
+    else:
+        sp = {"wq": P(fsdp_ax, None, "model"), "wk": P(fsdp_ax, None, "model"),
+              "wv": P(fsdp_ax, None, "model"), "wo": P(None, "model", fsdp_ax)}
+    if cfg.qkv_bias:
+        last = "model" if not heads_ok else None
+        first = "model" if heads_ok else None
+        sp.update({"bq": P(first, last), "bk": P(first, last), "bv": P(first, last)})
+    return sp
+
+
+def mlp_specs(fsdp_ax) -> dict:
+    return {"w1": P(fsdp_ax, "model"), "w3": P(fsdp_ax, "model"),
+            "w2": P("model", fsdp_ax)}
+
+
+def moe_specs(cfg: ModelConfig, mesh, fsdp_ax) -> dict:
+    m = _msize(mesh, "model")
+    if _div(cfg.n_experts, m):  # expert-parallel
+        sp = {"router": P(None, None),
+              "w1": P("model", fsdp_ax, None), "w3": P("model", fsdp_ax, None),
+              "w2": P("model", None, fsdp_ax)}
+    else:  # shard the expert FFN width instead
+        sp = {"router": P(None, None),
+              "w1": P(None, fsdp_ax, "model"), "w3": P(None, fsdp_ax, "model"),
+              "w2": P(None, "model", fsdp_ax)}
+    if cfg.dense_residual_ff:
+        sp["dense"] = mlp_specs(fsdp_ax)
+    return sp
+
+
+def rglru_specs(fsdp_ax) -> dict:
+    return {"wy": P(fsdp_ax, "model"), "wx": P(fsdp_ax, "model"),
+            "wo": P("model", fsdp_ax), "conv": P(None, "model"),
+            "wa": P(None, "model"), "ba": P("model"),
+            "wi": P(None, "model"), "bi": P("model"), "lambda": P("model")}
+
+
+def ssd_specs(fsdp_ax) -> dict:
+    # in_proj output dim mixes [z,x,B,C,dt] — leave it replicated on the
+    # output axis (perf lever: split the proj per component and shard).
+    return {"in_proj": P(fsdp_ax, None), "conv": P(None, None),
+            "dt_bias": P(None), "a_log": P(None), "d_skip": P(None),
+            "norm_z": P(None), "out_proj": P("model", fsdp_ax)}
+
+
+def block_specs(cfg: ModelConfig, mesh, spec, fsdp_ax) -> dict:
+    out: dict = {"norm1": P(None)}
+    if spec.mixer == MIXER_RGLRU:
+        out["mixer"] = rglru_specs(fsdp_ax)
+    elif spec.mixer == MIXER_SSD:
+        out["mixer"] = ssd_specs(fsdp_ax)
+    else:
+        out["mixer"] = attn_specs(cfg, mesh, fsdp_ax)
+        if spec.mixer == MIXER_CROSS_ATTN:
+            out["norm_x"] = P(None)
+            out["xattn"] = attn_specs(cfg, mesh, fsdp_ax)
+    if spec.ffn != FFN_NONE:
+        out["norm2"] = P(None)
+        if spec.ffn == "mlp":
+            out["ffn"] = mlp_specs(fsdp_ax)
+        else:
+            out["ffn"] = moe_specs(cfg, mesh, fsdp_ax)
+    return out
+
+
+def _unit_specs(cfg, mesh, specs, fsdp_ax, stacked: bool):
+    unit = {str(i): block_specs(cfg, mesh, s, fsdp_ax)
+            for i, s in enumerate(specs)}
+    if stacked:  # leading n_units axis from the scan stack
+        unit = jax.tree.map(lambda p: P(*((None,) + tuple(p))), unit,
+                            is_leaf=lambda x: isinstance(x, P))
+    return unit
+
+
+def embed_spec(cfg: ModelConfig, mesh, fsdp_ax) -> P:
+    m = _msize(mesh, "model")
+    if _div(cfg.vocab_size, m):
+        return P("model", fsdp_ax)
+    return P(None, "model")
+
+
+def param_specs(cfg: ModelConfig, mesh) -> dict:
+    fsdp_ax = "data" if (cfg.fsdp and "data" in mesh.axis_names) else None
+    sp: dict = {
+        "embed": embed_spec(cfg, mesh, fsdp_ax),
+        "units": _unit_specs(cfg, mesh, cfg.pattern, fsdp_ax, stacked=True),
+        "final_norm": P(None),
+    }
+    if cfg.remainder:
+        sp["remainder"] = _unit_specs(cfg, mesh, cfg.remainder, fsdp_ax,
+                                      stacked=False)
+    if not cfg.tie_embeddings:
+        sp["lm_head"] = embed_spec(cfg, mesh, fsdp_ax)
+    if cfg.frontend == "vision":
+        sp["vis_proj"] = P(fsdp_ax, "model")
+    if cfg.is_encdec:
+        sp["enc_units"] = _unit_specs(cfg, mesh, cfg.enc_pattern, fsdp_ax,
+                                      stacked=True)
+        sp["enc_norm"] = P(None)
+    return sp
+
+
+def batch_specs(cfg: ModelConfig, mesh, kind: str) -> dict:
+    b = P(batch_axes(mesh))
+    bs = P(batch_axes(mesh), None)
+    sp = {"tokens": bs}
+    if kind == "train":
+        sp["labels"] = bs
+    if cfg.frontend == "vision":
+        sp["patches"] = P(batch_axes(mesh), None, None)
+    if cfg.is_encdec:
+        sp["frames"] = P(batch_axes(mesh), None, None)
+    del b
+    return sp
+
+
+def _kv_cache_spec(mesh) -> dict:
+    bx = batch_axes(mesh)
+    return {"k": P(bx, None, None, "model"), "v": P(bx, None, None, "model"),
+            "slot_pos": P(None)}
+
+
+def block_cache_spec_for(cfg: ModelConfig, mesh, spec, bx=None) -> dict:
+    """PartitionSpec for a single block's cache (init_block_cache layout)."""
+    bx = batch_axes(mesh) if bx is None else bx
+    if spec.mixer == MIXER_RGLRU:
+        return {"rnn": {"h": P(bx, "model"), "conv": P(bx, None, "model")}}
+    if spec.mixer == MIXER_SSD:
+        return {"ssm": {"h": P(bx, "model", None, None),
+                        "conv": P(bx, None, None)}}
+    out = {"kv": {"k": P(bx, None, None, "model"),
+                  "v": P(bx, None, None, "model"), "slot_pos": P(None)}}
+    if spec.mixer == MIXER_CROSS_ATTN:
+        out["xk"] = P(bx, None, None, "model")
+        out["xv"] = P(bx, None, None, "model")
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh, stacked: bool = True,
+                bx: tuple | None = None) -> dict:
+    """PartitionSpecs matching lm.init_cache output."""
+    bx = batch_axes(mesh) if bx is None else bx
+
+    def block_cache_spec(spec) -> dict:
+        return block_cache_spec_for(cfg, mesh, spec, bx)
+
+    unit = {str(i): block_cache_spec(s) for i, s in enumerate(cfg.pattern)}
+    if stacked:
+        unit = jax.tree.map(lambda p: P(*((None,) + tuple(p))), unit,
+                            is_leaf=lambda x: isinstance(x, P))
+    out = {"units": unit}
+    if cfg.remainder:
+        out["remainder"] = {str(i): block_cache_spec(s)
+                            for i, s in enumerate(cfg.remainder)}
+    return out
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(param_sp: dict) -> dict:
+    """AdamW state = {mu, nu, step}; mu/nu shard like the param."""
+    return {"mu": param_sp, "nu": param_sp, "step": P()}

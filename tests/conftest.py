@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests see the single real CPU device (dry-run device forcing is confined to
+# repro.launch.dryrun, which tests never import at module scope).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

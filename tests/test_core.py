@@ -1,0 +1,235 @@
+"""Unit + property tests for the paper's core: BTL, CCFT, FGTS, regret,
+baselines. Hypothesis drives the invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines, btl, ccft, env, fgts, regret
+
+KEY = jax.random.PRNGKey(7)
+
+
+# ---------------------------------------------------------------------------
+# BTL
+# ---------------------------------------------------------------------------
+
+@given(st.floats(-10, 10), st.floats(-10, 10))
+@settings(deadline=None, max_examples=30)
+def test_btl_prob_symmetry(r1, r2):
+    p12 = float(btl.preference_prob(jnp.float32(r1), jnp.float32(r2)))
+    p21 = float(btl.preference_prob(jnp.float32(r2), jnp.float32(r1)))
+    assert abs(p12 + p21 - 1.0) < 1e-5
+    if r1 > r2:
+        assert p12 >= 0.5
+
+
+def test_btl_paper_identity():
+    """exp(-sigma(z)) == sigmoid(z): the paper's eq. vs the standard form."""
+    z = jnp.linspace(-8, 8, 101)
+    lhs = jnp.exp(-btl.logistic_loss(z))
+    rhs = jax.nn.sigmoid(z)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-6)
+
+
+def test_btl_sampling_rate():
+    k = jax.random.split(KEY, 4000)
+    y = jax.vmap(lambda kk: btl.sample_preference(kk, 1.0, 0.0))(k)
+    rate = float(jnp.mean(y == 1.0))
+    assert abs(rate - float(jax.nn.sigmoid(1.0))) < 0.03
+
+
+# ---------------------------------------------------------------------------
+# CCFT
+# ---------------------------------------------------------------------------
+
+def test_top_tau_and_mask_per_column():
+    s = jnp.asarray([[0.9, 0.1], [0.5, 0.8], [0.2, 0.7], [0.7, 0.3]])
+    t = ccft.top_tau(s, 2)
+    # col 0: top-2 = 0.9, 0.7 ; col 1: 0.8, 0.7
+    np.testing.assert_allclose(
+        t, [[0.9, 0.0], [0.0, 0.8], [0.0, 0.7], [0.7, 0.0]])
+    m = ccft.mask_tau(s, 2)
+    assert float(m.sum(axis=0)[0]) == 2.0
+
+
+@given(st.integers(2, 6), st.integers(2, 5), st.integers(1, 3))
+@settings(deadline=None, max_examples=20)
+def test_weighting_rows_are_convex_combos(k, m, tau):
+    """perf/excel_perf_cost weights are a softmax => each a_k lies in the
+    affine hull of the xi columns with weights summing to 1."""
+    tau = min(tau, k)
+    key1, key2 = jax.random.split(jax.random.PRNGKey(k * 100 + m * 10 + tau))
+    xi = jax.random.normal(key1, (8, m))
+    s = jax.random.normal(key2, (k, m))
+    for w in ("perf", "excel_perf_cost"):
+        a = ccft.model_embeddings(xi, s, w, tau)
+        assert a.shape == (k, 8)
+        # reconstruct weights by least squares and check they sum to ~1
+        wts, *_ = jnp.linalg.lstsq(xi, a.T)
+        np.testing.assert_allclose(np.asarray(wts.sum(axis=0)), 1.0,
+                                   atol=1e-3)
+
+
+def test_phi_is_unit_norm():
+    x = jax.random.normal(KEY, (5, 16))
+    a = jax.random.normal(jax.random.fold_in(KEY, 1), (5, 16))
+    p = ccft.phi(x, a)
+    np.testing.assert_allclose(jnp.linalg.norm(p, axis=-1), 1.0, rtol=1e-5)
+
+
+def test_scores_all_matches_direct():
+    x = jax.random.normal(KEY, (16,))
+    a = jax.random.normal(jax.random.fold_in(KEY, 1), (7, 16))
+    th = jax.random.normal(jax.random.fold_in(KEY, 2), (16,))
+    s = ccft.scores_all(x, a, th)
+    direct = ccft.phi_all(x, a) @ th
+    np.testing.assert_allclose(s, direct, rtol=1e-5, atol=1e-6)
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 1000))
+def test_prop1_unbiasedness(seed):
+    """Proposition 1: eq. 6 estimates sum_m f_km/(sum_j f_kj) E[Q_m].
+
+    Build a synthetic generator with known category means and label
+    proportions; the empirical mean over many draws must converge to the
+    weighted category-mean combination.
+    """
+    rng = np.random.RandomState(seed)
+    m_cats, k_models, d, n = 3, 2, 6, 4000
+    mu = rng.randn(m_cats, d).astype(np.float32)          # E[Q_m]
+    f = rng.dirichlet(np.ones(m_cats), size=k_models)     # label props per k
+    cats = rng.randint(0, m_cats, size=n)
+    labels = np.array([rng.choice(k_models,
+                                  p=f[:, c] / f[:, c].sum()) for c in cats])
+    q = mu[cats] + 0.1 * rng.randn(n, d).astype(np.float32)
+    est = ccft.label_proportion_embeddings(jnp.asarray(q),
+                                           jnp.asarray(labels), k_models)
+    # expected weights: P(cat=m | label=k) ∝ f[k,m] (uniform cats)
+    w = (f[:, :] / f.sum(axis=0, keepdims=True))          # P(label k | m)
+    post = w / w.sum(axis=1, keepdims=True)               # (K, M)
+    want = post @ mu
+    err = np.abs(np.asarray(est) - want).max()
+    assert err < 0.15, err
+
+
+# ---------------------------------------------------------------------------
+# FGTS mechanics
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg(**kw):
+    d = dict(n_models=4, dim=16, horizon=64, sgld_steps=5, sgld_minibatch=16)
+    d.update(kw)
+    return fgts.FGTSConfig(**d)
+
+
+def test_observe_appends_and_wraps():
+    cfg = _tiny_cfg(horizon=4)
+    st_ = fgts.init_state(cfg, KEY)
+    x = jnp.ones((16,))
+    for i in range(6):
+        st_ = fgts.observe(st_, x * i, jnp.int32(i % 4), jnp.int32(0),
+                           jnp.float32(1.0))
+    assert int(st_.t) == 6
+    # ring buffer wrapped: slot 0 holds round 4, slot 1 round 5
+    np.testing.assert_allclose(st_.x[0], np.ones(16) * 4)
+    np.testing.assert_allclose(st_.x[1], np.ones(16) * 5)
+
+
+def test_select_arms_force_distinct():
+    a_emb = jax.random.normal(KEY, (4, 16))
+    th = jax.random.normal(jax.random.fold_in(KEY, 3), (16,))
+    a1, a2 = fgts.select_arms(th, th, jnp.ones((16,)), a_emb,
+                              force_distinct=True)
+    assert int(a1) != int(a2)
+    a1, a2 = fgts.select_arms(th, th, jnp.ones((16,)), a_emb)
+    assert int(a1) == int(a2)     # same theta, no forcing => same argmax
+
+
+def test_likelihood_gradient_direction():
+    """More preference-consistent theta => lower likelihood loss term."""
+    cfg = _tiny_cfg(mu=0.0)
+    a_emb = jnp.eye(4, 16)
+    x = jnp.ones((1, 16))
+    a1 = jnp.asarray([0], jnp.int32)
+    a2 = jnp.asarray([1], jnp.int32)
+    y = jnp.asarray([1.0])
+    phi1 = ccft.phi(x, a_emb[a1])
+    phi2 = ccft.phi(x, a_emb[a2])
+    good = (phi1 - phi2)[0]
+    l_good = fgts.likelihood_batch(3.0 * good, x, a1, a2, y, a_emb, 1, cfg)
+    l_bad = fgts.likelihood_batch(-3.0 * good, x, a1, a2, y, a_emb, 1, cfg)
+    assert float(l_good[0]) < float(l_bad[0])
+
+
+def test_sgld_sample_moves_and_finite():
+    cfg = _tiny_cfg()
+    st_ = fgts.init_state(cfg, KEY)
+    a_emb = jax.random.normal(KEY, (4, 16))
+    th = fgts.sgld_sample(jax.random.fold_in(KEY, 9), st_.theta1, st_, a_emb,
+                          1, cfg)
+    assert np.isfinite(np.asarray(th)).all()
+    assert not np.allclose(np.asarray(th), np.asarray(st_.theta1))
+
+
+# ---------------------------------------------------------------------------
+# Regret + end-to-end learning
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000))
+@settings(deadline=None, max_examples=20)
+def test_instant_regret_nonnegative(seed):
+    rng = np.random.RandomState(seed)
+    u = jnp.asarray(rng.rand(6).astype(np.float32))
+    a1, a2 = rng.randint(0, 6), rng.randint(0, 6)
+    r = float(regret.instant_regret(u, a1, a2))
+    assert r >= -1e-6
+    best = int(np.argmax(np.asarray(u)))
+    assert float(regret.instant_regret(u, best, best)) < 1e-6
+
+
+def _toy_env(t=150, m=4, dim=32, key=KEY):
+    ks = jax.random.split(key, 4)
+    protos = jax.random.normal(ks[0], (m, dim))
+    protos = protos / jnp.linalg.norm(protos, axis=-1, keepdims=True)
+    cats = jax.random.randint(ks[1], (t,), 0, m)
+    x = protos[cats] + 0.3 * jax.random.normal(ks[2], (t, dim))
+    utils = (0.3 + 0.6 * jnp.eye(m))[cats]
+    return env.EnvData(x=x, utils=utils, feedback_scale=jnp.asarray(8.0)), \
+        protos, m
+
+
+@pytest.mark.slow
+def test_fgts_beats_uniform_and_converges():
+    e, protos, m = _toy_env()
+    cfg = fgts.FGTSConfig(n_models=m, dim=protos.shape[1], horizon=150,
+                          eta=4.0, mu=0.2, sgld_steps=15, sgld_eps=3e-4,
+                          sgld_minibatch=32)
+    cum, _ = jax.jit(lambda k: env.run_fgts(k, e, protos, cfg))(KEY)
+    cum_u, _ = env.run_policy(KEY, e, baselines.uniform_policy(m))
+    assert float(cum[-1]) < 0.85 * float(cum_u[-1])
+    assert regret.slope_ratio(np.asarray(cum)) < 0.9
+
+
+@pytest.mark.slow
+def test_baselines_run_and_rank_sanely():
+    e, protos, m = _toy_env()
+    dim = protos.shape[1]
+    runs = {}
+    runs["uniform"], _ = env.run_policy(KEY, e, baselines.uniform_policy(m))
+    runs["best_fixed"], _ = env.run_policy(
+        KEY, e, baselines.best_fixed_policy(e.utils.mean(axis=0)))
+    runs["eps"], _ = env.run_policy(
+        KEY, e, baselines.eps_greedy_policy(
+            protos, baselines.EpsGreedyConfig(n_models=m, dim=dim)))
+    runs["linucb"], _ = env.run_policy(
+        KEY, e, baselines.linucb_duel_policy(
+            protos, baselines.LinUCBConfig(n_models=m, dim=dim)))
+    for k, v in runs.items():
+        assert np.isfinite(float(v[-1])), k
+    assert float(runs["best_fixed"][-1]) < float(runs["uniform"][-1])
+    assert float(runs["linucb"][-1]) < float(runs["uniform"][-1])

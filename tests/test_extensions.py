@@ -1,0 +1,134 @@
+"""Tests for the beyond-paper extensions: Plackett-Luce listwise feedback
+and pointwise/mixed-stream posterior updates."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import extensions as ext
+from repro.core.fgts import FGTSConfig
+
+KEY = jax.random.PRNGKey(13)
+
+
+# ---------------------------------------------------------------------------
+# Plackett-Luce
+# ---------------------------------------------------------------------------
+
+def test_pl_reduces_to_btl_for_pairs():
+    """m=2 PL log-likelihood == log sigmoid(s_winner - s_loser)."""
+    s = jnp.asarray([1.3, -0.4])
+    ll = ext.pl_log_likelihood(s, jnp.asarray([0, 1], jnp.int32))
+    want = jnp.log(jax.nn.sigmoid(s[0] - s[1]))
+    np.testing.assert_allclose(ll, want, rtol=1e-6)
+
+
+@given(st.integers(2, 6), st.integers(0, 100))
+@settings(deadline=None, max_examples=20)
+def test_pl_likelihood_normalized(m, seed):
+    """Sum of P(ranking) over all m! rankings == 1."""
+    import itertools
+    rng = np.random.RandomState(seed)
+    s = jnp.asarray(rng.randn(m).astype(np.float32))
+    total = sum(float(jnp.exp(ext.pl_log_likelihood(
+        s, jnp.asarray(p, jnp.int32))))
+        for p in itertools.permutations(range(m)))
+    assert abs(total - 1.0) < 1e-4
+
+
+def test_pl_sampler_prefers_high_scores():
+    s = jnp.asarray([3.0, 0.0, -3.0])
+    keys = jax.random.split(KEY, 500)
+    winners = jax.vmap(lambda k: ext.sample_pl_ranking(k, s)[0])(keys)
+    frac = float(jnp.mean(winners == 0))
+    want = float(jnp.exp(s[0]) / jnp.sum(jnp.exp(s)))
+    assert abs(frac - want) < 0.07
+
+
+def test_select_top_m_orders_by_score():
+    a_emb = jnp.eye(5, 16)
+    theta = jnp.arange(16.0)
+    x = jnp.ones((16,))
+    top = ext.select_top_m(theta, x, a_emb, 3)
+    s = jnp.asarray([float(jnp.dot(
+        ext.phi(x[None], a_emb[k:k+1])[0], theta)) for k in range(5)])
+    want = np.argsort(-np.asarray(s))[:3]
+    np.testing.assert_array_equal(np.asarray(top), want)
+
+
+def test_pl_likelihood_term_prefers_consistent_theta():
+    a_emb = jax.random.normal(KEY, (5, 16))
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (16,))
+    theta = jax.random.normal(jax.random.fold_in(KEY, 2), (16,))
+    arms = jnp.asarray([0, 1, 2], jnp.int32)
+    feats = ext.phi(x[None, :], a_emb[arms])
+    s = feats @ theta
+    best = jnp.argsort(-s).astype(jnp.int32)
+    worst = best[::-1]
+    l_good = ext.pl_likelihood_term(theta, x, arms, best, a_emb, 1.0)
+    l_bad = ext.pl_likelihood_term(theta, x, arms, worst, a_emb, 1.0)
+    assert float(l_good) < float(l_bad)
+
+
+# ---------------------------------------------------------------------------
+# Mixed duel + click stream
+# ---------------------------------------------------------------------------
+
+def _cfg():
+    return FGTSConfig(n_models=4, dim=16, horizon=64, sgld_steps=20,
+                      sgld_minibatch=16, sgld_eps=2e-3, eta=2.0)
+
+
+def test_mixed_stream_learns_from_both_signals():
+    """Posterior from duels+clicks should rank the true-best arm first."""
+    cfg = _cfg()
+    a_emb = jnp.eye(4, 16)
+    true_theta = jnp.zeros((16,)).at[0].set(3.0)   # arm 0 is best
+    h = ext.init_mixed(cfg)
+    key = KEY
+    for i in range(48):
+        key, kx, kf = jax.random.split(key, 3)
+        x = jnp.abs(jax.random.normal(kx, (16,))) + 0.1
+        if i % 2 == 0:  # duel arm0 vs arm (1..3)
+            a1, a2 = jnp.int32(0), jnp.int32(1 + i % 3)
+            s1 = ext.phi(x[None], a_emb[a1][None])[0] @ true_theta
+            s2 = ext.phi(x[None], a_emb[a2][None])[0] @ true_theta
+            y = jnp.where(jax.random.uniform(kf) < jax.nn.sigmoid(
+                4 * (s1 - s2)), 1.0, -1.0)
+            h = ext.observe_mixed(h, x, a1, a2, y, True)
+        else:           # click on a random arm
+            a = jnp.int32(i % 4)
+            s = ext.phi(x[None], a_emb[a][None])[0] @ true_theta
+            y = (jax.random.uniform(kf) < jax.nn.sigmoid(4 * s)).astype(
+                jnp.float32)
+            h = ext.observe_mixed(h, x, a, a, y, False)
+    theta = jnp.zeros((16,))
+    for r in range(10):
+        theta = ext.mixed_sgld_sample(jax.random.fold_in(KEY, 100 + r),
+                                      theta, h, a_emb, cfg)
+    x_test = jnp.ones((16,))
+    from repro.core.ccft import scores_all
+    s = scores_all(x_test, a_emb, theta)
+    assert int(jnp.argmax(s)) == 0, np.asarray(s)
+
+
+def test_mixed_buffer_wraps():
+    cfg = _cfg()
+    h = ext.init_mixed(cfg)
+    for i in range(70):
+        h = ext.observe_mixed(h, jnp.ones((16,)) * i, jnp.int32(0),
+                              jnp.int32(1), jnp.float32(1.0), True)
+    assert int(h.t) == 70
+    np.testing.assert_allclose(h.x[70 % 64 - 1][0], 69.0)
+
+
+def test_pointwise_likelihood_direction():
+    a_emb = jnp.eye(4, 16)
+    x = jnp.ones((16,))
+    theta_pos = jnp.ones((16,))
+    l_like = ext.pointwise_likelihood_term(theta_pos, x, jnp.int32(0),
+                                           jnp.float32(1.0), a_emb, 1.0)
+    l_dislike = ext.pointwise_likelihood_term(theta_pos, x, jnp.int32(0),
+                                              jnp.float32(0.0), a_emb, 1.0)
+    assert float(l_like) < float(l_dislike)

@@ -1,0 +1,129 @@
+"""Per-kernel shape/dtype sweeps vs. the pure-jnp oracles in kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.dueling_score import dueling_score
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.ssd_scan import ssd_scan
+
+KEY = jax.random.PRNGKey(42)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,kv,s,t,d,causal,window,cap",
+    [
+        (2, 4, 2, 256, 256, 64, True, 0, 0.0),     # causal GQA
+        (1, 4, 1, 200, 200, 64, True, 64, 0.0),    # sliding window + ragged
+        (2, 2, 2, 128, 384, 128, False, 0, 50.0),  # bidir + softcap + long kv
+        (1, 8, 8, 64, 64, 128, True, 0, 30.0),     # MHA + softcap
+        (1, 2, 1, 384, 130, 64, True, 0, 0.0),     # ragged kv
+    ])
+def test_flash_attention(b, h, kv, s, t, d, causal, window, cap, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, kv, t, d), dtype)
+    v = jax.random.normal(ks[2], (b, kv, t, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, softcap=cap)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=cap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("b,s,d,with_h0", [
+    (2, 200, 512, True), (1, 128, 512, False), (3, 65, 1024, True),
+])
+def test_rglru_scan(b, s, d, with_h0):
+    ks = jax.random.split(KEY, 3)
+    log_a = -jnp.abs(jax.random.normal(ks[0], (b, s, d))) * 0.1
+    x_in = jax.random.normal(ks[1], (b, s, d))
+    h0 = jax.random.normal(ks[2], (b, d)) if with_h0 else None
+    h, hl = rglru_scan(log_a, x_in, h0)
+    hr, hlr = ref.rglru_ref(log_a, x_in, h0)
+    np.testing.assert_allclose(h, hr, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(hl, hlr, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk,with_h0", [
+    (2, 200, 4, 64, 32, 64, True),
+    (1, 256, 2, 32, 64, 128, False),
+    (2, 96, 8, 64, 128, 32, True),
+])
+def test_ssd_scan(b, s, h, p, n, chunk, with_h0):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    bt = jax.random.normal(ks[1], (b, s, n))
+    ct = jax.random.normal(ks[2], (b, s, n))
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, s, h)))
+    log_a = -0.1 * dt
+    h0 = jax.random.normal(ks[4], (b, h, p, n)) if with_h0 else None
+    y, hl = ssd_scan(x, bt, ct, log_a, dt, h0, chunk=chunk)
+    yr, hlr = ref.ssd_ref(x, bt, ct, log_a, dt, h0)
+    np.testing.assert_allclose(y, yr, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(hl, hlr, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_model_chunked_matches_ref():
+    from repro.models.ssd import ssd_chunked
+    ks = jax.random.split(KEY, 5)
+    b, s, h, p, n = 2, 130, 4, 32, 64          # non-multiple of chunk
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    bt = jax.random.normal(ks[1], (b, s, n))
+    ct = jax.random.normal(ks[2], (b, s, n))
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, s, h)))
+    log_a = -0.1 * dt
+    h0 = jax.random.normal(ks[4], (b, h, p, n))
+    y, hl = ssd_chunked(x, bt, ct, log_a, dt, 64, h0)
+    yr, hlr = ref.ssd_ref(x, bt, ct, log_a, dt, h0)
+    np.testing.assert_allclose(y, yr, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(hl, hlr, rtol=2e-4, atol=2e-4)
+
+
+def test_model_linear_scan_matches_ref():
+    from repro.models.rglru import linear_scan
+    ks = jax.random.split(KEY, 3)
+    b, s, d = 2, 77, 96
+    log_a = -jnp.abs(jax.random.normal(ks[0], (b, s, d))) * 0.2
+    x_in = jax.random.normal(ks[1], (b, s, d))
+    h, hl = linear_scan(log_a, x_in)
+    hr, hlr = ref.rglru_ref(log_a, x_in)
+    np.testing.assert_allclose(h, hr, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(hl, hlr, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,k,d", [(100, 11, 384), (7, 3, 64), (130, 40, 256)])
+def test_dueling_score(b, k, d):
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (b, d))
+    a = jax.random.normal(ks[1], (k, d))
+    th = jax.random.normal(ks[2], (2, d))
+    s = dueling_score(x, a, th)
+    want = ref.dueling_score_ref(x, a, th[0], th[1])
+    np.testing.assert_allclose(s, want, rtol=1e-5, atol=1e-5)
+
+
+def test_ops_wrappers_jit():
+    from repro.kernels import (dueling_score_op, flash_attention_op,
+                               rglru_scan_op, ssd_scan_op)
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64))
+    k = jax.random.normal(ks[1], (1, 1, 128, 64))
+    out = flash_attention_op(q, k, k, causal=True)
+    assert out.shape == q.shape
+    la = -jnp.abs(jax.random.normal(ks[2], (1, 128, 512))) * 0.1
+    h, hl = rglru_scan_op(la, la)
+    assert h.shape == la.shape
+    s = dueling_score_op(jax.random.normal(ks[3], (8, 64)),
+                         jax.random.normal(ks[3], (5, 64)),
+                         jax.random.normal(ks[3], (2, 64)))
+    assert s.shape == (2, 8, 5)

@@ -1,0 +1,77 @@
+"""§Perf levers must be numerically equivalent to the baseline:
+repeat-KV GQA, blockwise (q-chunked) attention, sparse-vs-dense MoE."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import lm
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _batch(cfg, b=2, s=32, key=KEY):
+    kt, kp = jax.random.split(key)
+    out = {"tokens": jax.random.randint(kt, (b, s), 0, cfg.vocab_size)}
+    if cfg.frontend == "vision":
+        out["patches"] = jax.random.normal(
+            kp, (b, cfg.n_frontend_tokens, cfg.d_model))
+    if cfg.is_encdec:
+        out["frames"] = jax.random.normal(kp, (b, cfg.enc_frames, cfg.d_model))
+    return out
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "gemma2-9b", "mistral-large-123b",
+                                  "seamless-m4t-medium"])
+def test_repeat_gqa_matches_grouped(arch):
+    cfg = ARCHS[arch].reduced()
+    params = lm.init_params(KEY, cfg)
+    batch = _batch(cfg)
+    base, _ = lm.forward(params, batch, cfg, remat=False)
+    cfg_r = dataclasses.replace(cfg, gqa_impl="repeat")
+    rep, _ = lm.forward(params, batch, cfg_r, remat=False)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(rep),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "gemma2-9b", "llava-next-34b"])
+@pytest.mark.parametrize("qc", [8, 16])
+def test_chunked_attention_matches_full(arch, qc):
+    cfg = dataclasses.replace(ARCHS[arch].reduced(), attn_q_chunk=qc)
+    base_cfg = ARCHS[arch].reduced()
+    params = lm.init_params(KEY, base_cfg)
+    batch = _batch(base_cfg)
+    base, _ = lm.forward(params, batch, base_cfg, remat=False)
+    chunked, _ = lm.forward(params, batch, cfg, remat=False)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(chunked),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_plus_repeat_compose():
+    cfg0 = ARCHS["mistral-large-123b"].reduced()
+    cfg = dataclasses.replace(cfg0, attn_q_chunk=8, gqa_impl="repeat")
+    params = lm.init_params(KEY, cfg0)
+    batch = _batch(cfg0)
+    base, _ = lm.forward(params, batch, cfg0, remat=False)
+    opt, _ = lm.forward(params, batch, cfg, remat=False)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(opt),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_cfg_moe_impl_dense_matches_sparse():
+    cfg_s = ARCHS["granite-moe-3b-a800m"].reduced()
+    cfg_d = dataclasses.replace(cfg_s, moe_impl="dense")
+    params = lm.init_params(KEY, cfg_s)
+    batch = _batch(cfg_s)
+    a, _ = lm.forward(params, batch, cfg_s, remat=False)
+    b, _ = lm.forward(params, batch, cfg_d, remat=False)
+    # Sparse dispatch drops tokens past expert capacity (GShard semantics):
+    # with random init routing a few positions may differ — require >=90%
+    # of logit rows to match closely; exact equality is covered by the
+    # high-capacity check in test_kernels/moe.
+    close = np.isclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+    frac_rows = close.all(axis=-1).mean()
+    assert frac_rows >= 0.9, frac_rows

@@ -1,0 +1,92 @@
+"""Pool registry + router-service persistence + router-dryrun step fns."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import pool
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_pool_covers_all_assigned_archs():
+    from repro.configs import ARCHS
+    assert set(pool.SKILLS) == set(ARCHS)
+    s = pool.skill_matrix()
+    assert s.shape == (10, len(pool.CATEGORIES))
+    assert (s >= 0).all() and (s <= 1).all()
+
+
+def test_pool_costs_scale_with_active_params():
+    costs = pool.serving_cost_per_1k()
+    ids = pool.arch_ids()
+    assert costs[ids.index("mistral-large-123b")] > \
+        costs[ids.index("mamba2-1.3b")]
+    # MoE cost tracks ACTIVE params: arctic (17B active) << mistral (123B)
+    assert costs[ids.index("arctic-480b")] < \
+        costs[ids.index("mistral-large-123b")]
+
+
+def test_pool_utilities_contextual():
+    cats = np.asarray([pool.CATEGORIES.index("multimodal"),
+                       pool.CATEGORIES.index("code")])
+    u = pool.utilities(cats)
+    ids = pool.arch_ids()
+    assert ids[int(np.argmax(u[0]))] == "llava-next-34b"
+    assert ids[int(np.argmax(u[1]))] in ("arctic-480b", "mistral-large-123b")
+
+
+def test_router_service_save_restore(tmp_path):
+    from repro.core import fgts
+    from repro.encoder import EncoderConfig, init_encoder
+    from repro.serving import PoolEntry, RouterService, RouterServiceConfig
+    enc_cfg = EncoderConfig(d_model=32, n_layers=1, n_heads=2, d_ff=64,
+                            max_len=8)
+    enc = init_encoder(KEY, enc_cfg)
+    entries = [PoolEntry(name=f"m{i}", arch="granite-3-2b",
+                         cost_per_1k_tokens=0.1,
+                         embedding=np.random.RandomState(i).randn(32)
+                         .astype(np.float32)) for i in range(3)]
+    fcfg = fgts.FGTSConfig(n_models=3, dim=32, horizon=16, sgld_steps=2,
+                           sgld_minibatch=4)
+    svc = RouterService(entries, enc, enc_cfg, RouterServiceConfig(fgts=fcfg))
+    x = jax.random.normal(KEY, (4, 32))
+    a1, a2 = svc.route_batch(x)
+    svc.feedback_batch(x, a1, a2, jnp.ones((4,)))
+    svc.save(str(tmp_path))
+
+    svc2 = RouterService(entries, enc, enc_cfg,
+                         RouterServiceConfig(fgts=fcfg))
+    svc2.restore(str(tmp_path))
+    assert int(svc2.state.t) == int(svc.state.t) == 4
+    np.testing.assert_allclose(np.asarray(svc2.state.theta1),
+                               np.asarray(svc.state.theta1))
+    assert svc2.n_routed == svc.n_routed
+
+
+def test_router_dryrun_steps_run_on_cpu():
+    """The route/update step functions execute correctly at toy scale
+    (the 512-device lowering is `python -m repro.launch.router_dryrun`)."""
+    import importlib
+    rd = importlib.import_module("repro.launch.router_dryrun")
+    from repro.core import fgts
+    k, d, b = 10, 20, 8
+    x = jax.random.normal(KEY, (b, d))
+    a = jax.random.normal(jax.random.fold_in(KEY, 1), (k, d))
+    th = jax.random.normal(jax.random.fold_in(KEY, 2), (d,))
+    costs = jnp.linspace(0.0, 1.0, k)
+    route = rd.make_route_step(cost_tilt=0.0)
+    a1, a2 = route(x, a, th, th, costs)
+    assert a1.shape == (b,) and (a1 == a2).all()   # same theta, same pick
+    # heavy cost tilt forces the cheapest arm
+    route_t = rd.make_route_step(cost_tilt=1e6)
+    a1t, _ = route_t(x, a, th, th, costs)
+    assert (np.asarray(a1t) == 0).all()
+
+    cfg = fgts.FGTSConfig(n_models=k, dim=d, horizon=16, sgld_steps=3,
+                          sgld_minibatch=4)
+    upd = rd.make_update_step(cfg, n_chains=2)
+    th2 = upd(jax.random.PRNGKey(1), th, jnp.zeros((16, d)),
+              jnp.zeros((16,), jnp.int32), jnp.zeros((16,), jnp.int32),
+              jnp.zeros((16,)), jnp.asarray(4, jnp.int32), a)
+    assert th2.shape == (d,) and np.isfinite(np.asarray(th2)).all()

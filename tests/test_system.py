@@ -1,0 +1,163 @@
+"""End-to-end behaviour tests for the routing system: the full paper
+pipeline (pretrain -> CCFT fine-tune -> embeddings -> online FGTS), the
+batched router service, checkpointing, and the optimizer."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.contrastive import finetune_categorical, pretrain_generic
+from repro.core import ccft, env, fgts, regret
+from repro.data import pipeline
+from repro.data import routerbench as rb
+from repro.data.synth import CorpusConfig, make_split
+from repro.encoder import EncoderConfig, encode, init_encoder
+
+KEY = jax.random.PRNGKey(3)
+ENC_CFG = EncoderConfig(d_model=64, n_layers=1, n_heads=2, d_ff=128,
+                        max_len=16)
+CC = CorpusConfig(seq_len=16)
+
+
+@pytest.fixture(scope="module")
+def tiny_world():
+    ks = jax.random.split(KEY, 6)
+    split = rb.make_split(ks[0], CC, n_offline_per_cat=5, t_online=60)
+    params = init_encoder(ks[1], ENC_CFG)
+    params, _ = finetune_categorical(ks[2], params, split.offline_tokens,
+                                     split.offline_mask, split.offline_cats,
+                                     ENC_CFG, epochs=1, steps_per_epoch=8,
+                                     batch=32)
+    return split, params
+
+
+def test_contrastive_finetune_reduces_loss():
+    ks = jax.random.split(KEY, 3)
+    toks, mask, cats = make_split(ks[0], 10, CC)
+    params = init_encoder(ks[1], ENC_CFG)
+    params, losses = finetune_categorical(ks[2], params, toks, mask, cats,
+                                          ENC_CFG, epochs=2,
+                                          steps_per_epoch=10, batch=32)
+    assert losses[-1] < losses[0]
+
+
+def test_finetuned_embeddings_cluster_by_category(tiny_world):
+    split, params = tiny_world
+    emb = encode(params, split.offline_tokens, split.offline_mask, ENC_CFG)
+    emb = np.asarray(emb)
+    cats = np.asarray(split.offline_cats)
+    same = [float(emb[i] @ emb[j]) for i in range(len(cats))
+            for j in range(i + 1, len(cats)) if cats[i] == cats[j]]
+    diff = [float(emb[i] @ emb[j]) for i in range(len(cats))
+            for j in range(i + 1, len(cats)) if cats[i] != cats[j]]
+    assert np.mean(same) > np.mean(diff) + 0.2
+
+
+def test_model_embeddings_all_weightings(tiny_world):
+    split, params = tiny_world
+    for w in ccft.WEIGHTINGS:
+        a = pipeline.routerbench_model_embeddings(params, ENC_CFG, split, w)
+        assert a.shape == (rb.N_MODELS,
+                           ENC_CFG.d_model + 2 * len(split.benchmarks))
+        assert np.isfinite(np.asarray(a)).all()
+
+
+def test_online_fgts_on_pipeline_env(tiny_world):
+    split, params = tiny_world
+    e = pipeline.routerbench_env(params, ENC_CFG, split)
+    a = pipeline.routerbench_model_embeddings(params, ENC_CFG, split,
+                                              "excel_mask")
+    cfg = fgts.FGTSConfig(n_models=rb.N_MODELS, dim=e.x.shape[1],
+                          horizon=e.x.shape[0], sgld_steps=5,
+                          sgld_minibatch=16)
+    cum, state = jax.jit(lambda k: env.run_fgts(k, e, a, cfg))(KEY)
+    assert cum.shape == (60,)
+    assert np.isfinite(np.asarray(cum)).all()
+    assert int(state.t) == 60
+    # cumulative regret is nondecreasing
+    assert (np.diff(np.asarray(cum)) >= -1e-6).all()
+
+
+def test_router_service_routes_and_learns(tiny_world):
+    from repro.serving import PoolEntry, RouterService, RouterServiceConfig
+    split, params = tiny_world
+    a = pipeline.routerbench_model_embeddings(params, ENC_CFG, split, "perf",
+                                              with_metadata=False)
+    pool = [PoolEntry(name=n, arch="granite-3-2b",
+                      cost_per_1k_tokens=float(split.cost[i].mean()),
+                      embedding=np.asarray(a[i]))
+            for i, n in enumerate(rb.LLMS)]
+    fcfg = fgts.FGTSConfig(n_models=len(pool), dim=a.shape[1], horizon=128,
+                           sgld_steps=4, sgld_minibatch=16)
+    svc = RouterService(pool, params, ENC_CFG, RouterServiceConfig(fgts=fcfg))
+    x = encode(params, split.online_tokens[:8], split.online_mask[:8], ENC_CFG)
+    a1, a2 = svc.route_batch(x)
+    assert a1.shape == (8,) and a2.shape == (8,)
+    svc.feedback_batch(x, a1, a2, jnp.ones((8,)))
+    assert int(svc.state.t) == 8
+    assert svc.spend(a1) > 0
+
+
+def test_cost_tilt_prefers_cheap_models(tiny_world):
+    from repro.serving import PoolEntry, RouterService, RouterServiceConfig
+    split, params = tiny_world
+    a = pipeline.routerbench_model_embeddings(params, ENC_CFG, split, "perf",
+                                              with_metadata=False)
+    costs = np.linspace(0.1, 10.0, rb.N_MODELS)
+    pool = [PoolEntry(name=n, arch="granite-3-2b", cost_per_1k_tokens=c,
+                      embedding=np.asarray(a[i]))
+            for i, (n, c) in enumerate(zip(rb.LLMS, costs))]
+    fcfg = fgts.FGTSConfig(n_models=len(pool), dim=a.shape[1], horizon=64,
+                           sgld_steps=2, sgld_minibatch=8)
+    x = encode(params, split.online_tokens[:16], split.online_mask[:16],
+               ENC_CFG)
+    svc0 = RouterService(pool, params, ENC_CFG,
+                         RouterServiceConfig(fgts=fcfg, cost_tilt=0.0))
+    svc1 = RouterService(pool, params, ENC_CFG,
+                         RouterServiceConfig(fgts=fcfg, cost_tilt=100.0))
+    a1_0, _ = svc0.route_batch(x)
+    a1_1, _ = svc1.route_batch(x)
+    assert float(np.mean(costs[np.asarray(a1_1)])) <= \
+        float(np.mean(costs[np.asarray(a1_0)]))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import (latest_step, restore_checkpoint,
+                                  save_checkpoint)
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.int32)}}
+    save_checkpoint(str(tmp_path), 7, tree)
+    assert latest_step(str(tmp_path)) == 7
+    back = restore_checkpoint(str(tmp_path), 7, tree)
+    np.testing.assert_allclose(back["a"], tree["a"])
+    np.testing.assert_allclose(back["b"]["c"], tree["b"]["c"])
+
+
+def test_adamw_reduces_quadratic():
+    from repro.optim import adamw_init, adamw_update
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adamw_init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, opt = adamw_update(params, grads, opt, 0.1)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_sgld_samples_gaussian_posterior():
+    """SGLD on U = ||x||^2/2 must sample ~N(0, I)."""
+    from repro.optim import sgld_step
+
+    @jax.jit
+    def chain(key):
+        def step(x, k):
+            x = sgld_step(x, x, jnp.float32(0.05), k)
+            return x, x
+        _, xs = jax.lax.scan(step, jnp.zeros((2,)),
+                             jax.random.split(key, 3000))
+        return xs[500:]
+
+    xs = np.asarray(chain(KEY))
+    assert abs(xs.mean()) < 0.15
+    assert abs(xs.var() - 1.0) < 0.3
