@@ -88,16 +88,20 @@ def default_fgts_cfg(dim: int, horizon: int, **kw) -> fgts.FGTSConfig:
 
 import functools
 
+from repro.core import policy as policy_lib
+
 
 @functools.lru_cache(maxsize=None)
 def _fgts_runner(cfg: fgts.FGTSConfig):
-    """One compiled program per FGTSConfig — env/a_emb arrays are arguments,
-    so every curve with the same shapes reuses the XLA executable."""
+    """One compiled program per FGTSConfig — env/a_emb arrays are arguments
+    (the RoutingPolicy closes over the *traced* a_emb), so every curve with
+    the same shapes reuses the XLA executable."""
 
     @jax.jit
     def run(keys, x, utils, fb, a_emb):
         e = env_lib.EnvData(x=x, utils=utils, feedback_scale=fb)
-        return jax.vmap(lambda k: env_lib.run_fgts(k, e, a_emb, cfg)[0])(keys)
+        pol = policy_lib.fgts_policy(a_emb, cfg)
+        return jax.vmap(lambda k: env_lib.run(k, e, pol)[0])(keys)
 
     return run
 
@@ -111,10 +115,13 @@ def run_fgts_curves(e: env_lib.EnvData, a_emb, cfg: fgts.FGTSConfig,
     return curves.mean(axis=0), curves
 
 
-def run_policy_curves(e: env_lib.EnvData, policy, n_runs: int = N_RUNS,
-                      seed: int = SEED):
+def run_policy_curves(e: env_lib.EnvData, policy: policy_lib.RoutingPolicy,
+                      n_runs: int = N_RUNS, seed: int = SEED,
+                      batch: int = 1):
+    """Average cumulative regret of any RoutingPolicy (vmapped seeds)."""
     keys = jax.random.split(jax.random.PRNGKey(seed), n_runs)
-    run = jax.jit(jax.vmap(lambda k: env_lib.run_policy(k, e, policy)[0]))
+    run = jax.jit(jax.vmap(
+        lambda k: env_lib.run(k, e, policy, batch=batch)[0]))
     curves = np.asarray(run(keys))
     return curves.mean(axis=0), curves
 

@@ -14,7 +14,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
-from repro.core import env, fgts, regret
+from repro.core import env, fgts, policy, regret
 from repro.data import mixinstruct as mi, pipeline
 from repro.data.synth import CorpusConfig
 from repro.encoder import EncoderConfig, init_encoder
@@ -51,7 +51,8 @@ def main():
     cfg = fgts.FGTSConfig(n_models=mi.N_MODELS, dim=e.x.shape[1],
                           horizon=e.x.shape[0], sgld_steps=10,
                           sgld_minibatch=64)
-    cum, _ = jax.jit(lambda k: env.run_fgts(k, e, a_emb, cfg))(ks[3])
+    pol = policy.fgts_policy(a_emb, cfg)
+    cum, _ = jax.jit(lambda k: env.run(k, e, pol))(ks[3])
     cum = np.asarray(cum)
     print(f"\nonline: {len(cum)} rounds, regret {cum[-1]:.1f}, "
           f"slope ratio {regret.slope_ratio(cum):.3f}")

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.contrastive import finetune_categorical
-from repro.core import env, fgts, regret
+from repro.core import env, fgts, policy, regret
 from repro.data import pipeline, routerbench as rb
 from repro.data.synth import CorpusConfig
 from repro.encoder import EncoderConfig, init_encoder
@@ -50,16 +50,18 @@ def main():
     cfg = fgts.FGTSConfig(n_models=rb.N_MODELS, dim=e.x.shape[1],
                           horizon=300, eta=8.0, mu=0.2, sgld_steps=20,
                           sgld_eps=5e-4, sgld_minibatch=64)
-    cum, state = jax.jit(lambda k: env.run_fgts(k, e, a_emb, cfg))(ks[3])
+    pol = policy.fgts_policy(a_emb, cfg)     # the unified RoutingPolicy API
+    cum, state = jax.jit(lambda k: env.run(k, e, pol))(ks[3])
     cum = np.asarray(cum)
     print(f"online routing: {len(cum)} rounds, "
           f"cumulative regret {cum[-1]:.1f}, "
           f"slope ratio {regret.slope_ratio(cum):.3f} "
           f"(<1 means converging — paper Fig. 1's success criterion)")
 
-    # Which models does the converged router favour?
+    # Which models does the converged router favour? (chain-mean theta)
     from repro.core.ccft import scores_all
-    picks = [int(jnp.argmax(scores_all(e.x[i], a_emb, state.theta1)))
+    theta = state.theta1.mean(axis=0)
+    picks = [int(jnp.argmax(scores_all(e.x[i], a_emb, theta)))
              for i in range(290, 300)]
     print("last-10-round picks:", [rb.LLMS[p] for p in picks])
 

@@ -1,3 +1,4 @@
-from . import baselines, btl, ccft, env, extensions, fgts, regret
+from . import baselines, btl, ccft, env, extensions, fgts, policy, regret
 
-__all__ = ["baselines", "btl", "ccft", "env", "extensions", "fgts", "regret"]
+__all__ = ["baselines", "btl", "ccft", "env", "extensions", "fgts", "policy",
+           "regret"]

@@ -3,7 +3,8 @@
 * ``uniform``        — random pair each round.
 * ``best_fixed``     — oracle best single arm in hindsight (plays (k*,k*));
                        Tab. 2's "any fixed-LLM strategy" reference.
-* ``vanilla_ts``     — FGTS.CDB with mu = 0: ablates the feel-good term.
+* ``vanilla_ts``     — FGTS.CDB with mu = 0: ablates the feel-good term
+                       (policy.vanilla_ts_policy).
 * ``eps_greedy``     — MAP theta by SGD on the preference loss + epsilon
                        exploration over arms.
 * ``linucb_duel``    — MixLLM-style LinUCB (Wang et al. 2025) adapted to the
@@ -11,8 +12,9 @@
                        and (1-y)/2 for a2 on phi features, UCB selection of
                        the top-2 arms.
 
-Each exposes (init_fn, round_fn) compatible with ``env.run_policy``; FGTS
-variants reuse ``env.run_fgts``.
+Every baseline is a batched ``RoutingPolicy`` (init/act/update over B
+queries) and runs through the same generic ``env.run`` loop and
+``RouterService`` as FGTS.CDB.
 """
 from __future__ import annotations
 
@@ -21,32 +23,42 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from .btl import logistic_loss, sample_preference
-from .ccft import phi, phi_all, scores_all
+from .ccft import phi_all
+from .policy import RoutingPolicy, preference_loss, select_pair
 
 
-def uniform_policy(n_models: int):
-    def init_fn(key):
+def uniform_policy(n_models: int) -> RoutingPolicy:
+    def init(key):
         return jnp.zeros(())
 
-    def round_fn(key, state, x_t, u_t, fb_scale):
-        a = jax.random.choice(key, n_models, (2,), replace=False)
-        return state, a[0], a[1]
+    def act(key, state, x):
+        b = x.shape[0]
+        pairs = jax.vmap(lambda k: jax.random.choice(
+            k, n_models, (2,), replace=False))(jax.random.split(key, b))
+        return state, pairs[:, 0].astype(jnp.int32), \
+            pairs[:, 1].astype(jnp.int32)
 
-    return init_fn, round_fn
+    def update(state, x, a1, a2, y):
+        return state
+
+    return RoutingPolicy(init, act, update, name="uniform")
 
 
-def best_fixed_policy(utils_mean: jax.Array):
+def best_fixed_policy(utils_mean: jax.Array) -> RoutingPolicy:
     """utils_mean: (K,) average utility per arm over the stream (hindsight)."""
     k_star = jnp.argmax(utils_mean).astype(jnp.int32)
 
-    def init_fn(key):
+    def init(key):
         return jnp.zeros(())
 
-    def round_fn(key, state, x_t, u_t, fb_scale):
-        return state, k_star, k_star
+    def act(key, state, x):
+        a = jnp.broadcast_to(k_star, (x.shape[0],))
+        return state, a, a
 
-    return init_fn, round_fn
+    def update(state, x, a1, a2, y):
+        return state
+
+    return RoutingPolicy(init, act, update, name="best_fixed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,31 +69,35 @@ class EpsGreedyConfig:
     lr: float = 0.05
 
 
-def eps_greedy_policy(a_emb: jax.Array, cfg: EpsGreedyConfig):
-    """SGD-MAP on the preference loss; epsilon-uniform exploration."""
+def eps_greedy_policy(a_emb: jax.Array, cfg: EpsGreedyConfig, *,
+                      tilt: jax.Array | None = None,
+                      use_kernel: bool = True) -> RoutingPolicy:
+    """SGD-MAP on the preference loss; epsilon-uniform exploration.
 
-    def init_fn(key):
+    ``tilt``: optional (K,) serve-time score penalty (cost_tilt * cost_k).
+    """
+
+    def init(key):
         return {"theta": jax.random.normal(key, (cfg.dim,)) * 0.1}
 
-    def round_fn(key, state, x_t, u_t, fb_scale):
-        k_e, k_a, k_fb = jax.random.split(key, 3)
-        s = scores_all(x_t, a_emb, state["theta"])
-        a1_greedy = jnp.argmax(s)
-        a2_greedy = jnp.argmax(s.at[a1_greedy].set(-jnp.inf))
-        explore = jax.random.uniform(k_e) < cfg.eps
-        a_rand = jax.random.choice(k_a, cfg.n_models, (2,), replace=False)
-        a1 = jnp.where(explore, a_rand[0], a1_greedy).astype(jnp.int32)
-        a2 = jnp.where(explore, a_rand[1], a2_greedy).astype(jnp.int32)
-        y = sample_preference(k_fb, fb_scale * u_t[a1], fb_scale * u_t[a2])
+    def act(key, state, x):
+        b = x.shape[0]
+        k_e, k_a = jax.random.split(key)
+        a1_g, a2_g = select_pair(x, a_emb, state["theta"], state["theta"],
+                                 tilt=tilt, distinct=True,
+                                 use_kernel=use_kernel)
+        explore = jax.random.uniform(k_e, (b,)) < cfg.eps
+        rand = jax.vmap(lambda k: jax.random.choice(
+            k, cfg.n_models, (2,), replace=False))(jax.random.split(k_a, b))
+        a1 = jnp.where(explore, rand[:, 0], a1_g).astype(jnp.int32)
+        a2 = jnp.where(explore, rand[:, 1], a2_g).astype(jnp.int32)
+        return state, a1, a2
 
-        def loss(theta):
-            z = y * ((phi(x_t, a_emb[a1]) - phi(x_t, a_emb[a2])) @ theta)
-            return logistic_loss(z)
+    def update(state, x, a1, a2, y):
+        g = jax.grad(preference_loss)(state["theta"], x, a1, a2, y, a_emb)
+        return {"theta": state["theta"] - cfg.lr * g}
 
-        g = jax.grad(loss)(state["theta"])
-        return {"theta": state["theta"] - cfg.lr * g}, a1, a2
-
-    return init_fn, round_fn
+    return RoutingPolicy(init, act, update, name="eps_greedy")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,35 +108,50 @@ class LinUCBConfig:
     lam: float = 1.0         # ridge prior
 
 
-def linucb_duel_policy(a_emb: jax.Array, cfg: LinUCBConfig):
+def linucb_duel_policy(a_emb: jax.Array, cfg: LinUCBConfig, *,
+                       tilt: jax.Array | None = None) -> RoutingPolicy:
     """MixLLM-style per-arm LinUCB with pointwise pseudo-feedback.
 
     Per arm k: ridge statistics A_k = lam*I + sum phi phi^T, b_k = sum r*phi,
     UCB_k = theta_k . phi + alpha * sqrt(phi^T A_k^{-1} phi). The duel y is
     converted to pointwise rewards r(a1) = (y+1)/2, r(a2) = (1-y)/2 — the
     pointwise-signal assumption MixLLM makes (App. B.3 discussion).
+
+    Selection uses per-arm ridge matrices (not a shared theta), so it cannot
+    ride the dueling_score kernel; the batched update is two scatter-adds
+    (XLA accumulates duplicate arm indices within the batch).
     """
     d = cfg.dim
 
-    def init_fn(key):
+    def init(key):
         eye = jnp.broadcast_to(jnp.eye(d) * cfg.lam, (cfg.n_models, d, d))
         return {"A": eye, "b": jnp.zeros((cfg.n_models, d))}
 
-    def round_fn(key, state, x_t, u_t, fb_scale):
-        feats = phi_all(x_t, a_emb)                        # (K, d)
-        a_inv = jnp.linalg.inv(state["A"])                 # (K, d, d)
-        theta = jnp.einsum("kij,kj->ki", a_inv, state["b"])
-        mean = jnp.sum(theta * feats, axis=-1)
-        var = jnp.einsum("ki,kij,kj->k", feats, a_inv, feats)
-        ucb = mean + cfg.alpha * jnp.sqrt(jnp.maximum(var, 0.0))
-        a1 = jnp.argmax(ucb).astype(jnp.int32)
-        a2 = jnp.argmax(ucb.at[a1].set(-jnp.inf)).astype(jnp.int32)
-        y = sample_preference(key, fb_scale * u_t[a1], fb_scale * u_t[a2])
-        r1, r2 = (y + 1) / 2, (1 - y) / 2
-        f1, f2 = feats[a1], feats[a2]
-        new_a = state["A"].at[a1].add(jnp.outer(f1, f1)).at[a2].add(
-            jnp.outer(f2, f2))
-        new_b = state["b"].at[a1].add(r1 * f1).at[a2].add(r2 * f2)
-        return {"A": new_a, "b": new_b}, a1, a2
+    def act(key, state, x):
+        feats = jax.vmap(lambda xi: phi_all(xi, a_emb))(x)     # (B, K, d)
+        a_inv = jnp.linalg.inv(state["A"])                     # (K, d, d)
+        theta = jnp.einsum("kij,kj->ki", a_inv, state["b"])    # (K, d)
+        mean = jnp.einsum("bki,ki->bk", feats, theta)
+        var = jnp.einsum("bki,kij,bkj->bk", feats, a_inv, feats)
+        ucb = mean + cfg.alpha * jnp.sqrt(jnp.maximum(var, 0.0))   # (B, K)
+        if tilt is not None:
+            ucb = ucb - tilt[None, :]
+        a1 = jnp.argmax(ucb, axis=-1).astype(jnp.int32)
+        masked = jnp.where(jnp.arange(cfg.n_models)[None, :] == a1[:, None],
+                           -jnp.inf, ucb)
+        a2 = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+        return state, a1, a2
 
-    return init_fn, round_fn
+    def update(state, x, a1, a2, y):
+        feats = jax.vmap(lambda xi: phi_all(xi, a_emb))(x)     # (B, K, d)
+        rows = jnp.arange(x.shape[0])
+        f1, f2 = feats[rows, a1], feats[rows, a2]              # (B, d)
+        r1, r2 = (y + 1) / 2, (1 - y) / 2                      # (B,)
+        outer1 = jnp.einsum("bi,bj->bij", f1, f1)
+        outer2 = jnp.einsum("bi,bj->bij", f2, f2)
+        new_a = state["A"].at[a1].add(outer1).at[a2].add(outer2)
+        new_b = state["b"].at[a1].add(r1[:, None] * f1).at[a2].add(
+            r2[:, None] * f2)
+        return {"A": new_a, "b": new_b}
+
+    return RoutingPolicy(init, act, update, name="linucb_duel")

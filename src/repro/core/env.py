@@ -3,9 +3,13 @@
 The environment is a (pre-generated) stream of query features x_t and true
 per-model utilities u_t; preference feedback is drawn from the BTL model on
 the *utility* scale (the paper generates feedback "via the BTL protocol"
-using performance metadata as the utility function). The whole T-round loop
-is a single ``lax.scan`` so one benchmark run is one XLA program, and seeds
-are a ``vmap`` axis.
+using performance metadata as the utility function).
+
+One generic ``lax.scan`` loop (``run``) drives ANY ``RoutingPolicy`` —
+FGTS.CDB, every baseline, the extension variants — so one benchmark run is
+one XLA program and seeds are a ``vmap`` axis. The loop itself is batched:
+``batch=B`` consumes the stream B queries at a time through the policy's
+batched act/update, exactly like the serving path.
 """
 from __future__ import annotations
 
@@ -14,8 +18,8 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import fgts
 from .btl import sample_preference
+from .policy import RoutingPolicy
 from .regret import instant_regret
 
 
@@ -25,53 +29,56 @@ class EnvData(NamedTuple):
     feedback_scale: jax.Array = jnp.asarray(5.0)  # BTL sharpness
 
 
-def run_fgts(key: jax.Array, env: EnvData, a_emb: jax.Array,
-             cfg: fgts.FGTSConfig):
-    """Run FGTS.CDB for T rounds. Returns (cum_regret (T,), final_state)."""
-    t_total = env.x.shape[0]
-    k_init, k_loop = jax.random.split(key)
-    state0 = fgts.init_state(cfg, k_init)
+def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
+        batch: int = 1):
+    """Run any RoutingPolicy over the stream. Returns (cum_regret (T,), state).
 
-    def round_fn(state, inp):
-        k, x_t, u_t = inp
-        k_alg, k_fb = jax.random.split(k)
-        state, a1, a2 = fgts.fgts_round(k_alg, state, x_t, a_emb, cfg)
-        y = sample_preference(k_fb, env.feedback_scale * u_t[a1],
-                              env.feedback_scale * u_t[a2])
-        state = fgts.observe(state, x_t, a1, a2, y)
-        return state, instant_regret(u_t, a1, a2)
-
-    keys = jax.random.split(k_loop, t_total)
-    state, regrets = jax.lax.scan(round_fn, state0, (keys, env.x, env.utils))
-    return jnp.cumsum(regrets), state
-
-
-def run_policy(key: jax.Array, env: EnvData, select_update):
-    """Generic loop for baseline policies.
-
-    ``select_update`` = (init_fn, round_fn) where
-        round_fn(key, state, x_t) -> (state, a1, a2, update_fn)
-        update_fn(state, y) -> state
-    is expressed as a single function round(key, state, x_t, u_t) -> (state, r).
+    Rounds are consumed ``batch`` at a time (trailing remainder dropped when
+    T is not a multiple): each scan step is one batched act -> BTL feedback
+    -> one batched update, the same shape as a serving tick. The returned
+    curve is the per-query cumulative regret over all T' = T - T%batch
+    queries, so batch=1 reproduces the paper's per-round curves.
     """
-    init_fn, round_fn = select_update
-    t_total = env.x.shape[0]
+    t_total = env.x.shape[0] - env.x.shape[0] % batch
+    if t_total == 0:
+        raise ValueError(
+            f"batch={batch} exceeds the stream length {env.x.shape[0]}: "
+            f"no full batch can be formed")
+    n_steps = t_total // batch
+    x = env.x[:t_total].reshape(n_steps, batch, -1)
+    utils = env.utils[:t_total].reshape(n_steps, batch, -1)
+
     k_init, k_loop = jax.random.split(key)
-    state0 = init_fn(k_init)
+    state0 = policy.init(k_init)
+    rows = jnp.arange(batch)
 
     def step(state, inp):
-        k, x_t, u_t = inp
-        state, a1, a2 = round_fn(k, state, x_t, u_t, env.feedback_scale)
-        return state, instant_regret(u_t, a1, a2)
+        k, x_b, u_b = inp
+        k_act, k_fb = jax.random.split(k)
+        state, a1, a2 = policy.act(k_act, state, x_b)
+        y = sample_preference(k_fb, env.feedback_scale * u_b[rows, a1],
+                              env.feedback_scale * u_b[rows, a2])
+        state = policy.update(state, x_b, a1, a2, y)
+        return state, jax.vmap(instant_regret)(u_b, a1, a2)
 
-    keys = jax.random.split(k_loop, t_total)
-    state, regrets = jax.lax.scan(step, state0, (keys, env.x, env.utils))
-    return jnp.cumsum(regrets), state
+    keys = jax.random.split(k_loop, n_steps)
+    state, regrets = jax.lax.scan(step, state0, (keys, x, utils))
+    return jnp.cumsum(regrets.reshape(-1)), state
 
 
 def averaged_runs(run_fn: Callable, key: jax.Array, n_runs: int = 5):
-    """The paper's 'average of 5 runs': vmap over seeds, mean the curves."""
+    """The paper's 'average of 5 runs': vmap over seeds, mean the curves.
+
+    ``run_fn(key)`` may return either the bare regret curve (T,) or an
+    ``(curves, state)``-style tuple/list whose FIRST element is the curve —
+    both shapes are handled explicitly. Returns (mean (T,), curves (n,T)).
+    """
     keys = jax.random.split(key, n_runs)
-    curves = jax.vmap(run_fn)(keys)
-    curves = curves[0] if isinstance(curves, tuple) else curves
+    out = jax.vmap(run_fn)(keys)
+    curves = out[0] if isinstance(out, (tuple, list)) else out
+    curves = jnp.asarray(curves)
+    if curves.ndim != 2 or curves.shape[0] != n_runs:
+        raise ValueError(
+            f"run_fn must return a (T,) curve or a tuple starting with one; "
+            f"got vmapped shape {curves.shape} for n_runs={n_runs}")
     return jnp.mean(curves, axis=0), curves

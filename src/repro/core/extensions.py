@@ -109,6 +109,20 @@ def observe_mixed(h: MixedHistory, x, a1, a2, y, is_duel) -> MixedHistory:
                       is_duel=h.is_duel.at[i].set(is_duel), t=h.t + 1)
 
 
+def observe_mixed_batch(h: MixedHistory, x, a1, a2, y,
+                        is_duel) -> MixedHistory:
+    """Single-scatter batched write into the mixed ring (cf. fgts.observe_batch)."""
+    from .fgts import ring_slots
+    b = x.shape[0]
+    drop, idx = ring_slots(h.t, h.x.shape[0], b)
+    return h._replace(x=h.x.at[idx].set(x[drop:]),
+                      a1=h.a1.at[idx].set(a1[drop:]),
+                      a2=h.a2.at[idx].set(a2[drop:]),
+                      y=h.y.at[idx].set(y[drop:]),
+                      is_duel=h.is_duel.at[idx].set(is_duel[drop:]),
+                      t=h.t + b)
+
+
 def mixed_potential(theta: jax.Array, idx: jax.Array, h: MixedHistory,
                     a_emb: jax.Array, cfg: FGTSConfig) -> jax.Array:
     """U(theta) over a minibatch of mixed observations + Gaussian prior.
@@ -135,17 +149,115 @@ def mixed_potential(theta: jax.Array, idx: jax.Array, h: MixedHistory,
 
 def mixed_sgld_sample(key: jax.Array, theta0: jax.Array, h: MixedHistory,
                       a_emb: jax.Array, cfg: FGTSConfig) -> jax.Array:
+    from .fgts import sgld_loop
     grad_fn = jax.grad(mixed_potential)
+    return sgld_loop(key, theta0,
+                     lambda th, idx: grad_fn(th, idx, h, a_emb, cfg),
+                     h.t, h.x.shape[0], cfg)
 
-    def step(theta, k):
-        k_idx, k_noise = jax.random.split(k)
-        idx = jax.random.randint(k_idx, (cfg.sgld_minibatch,), 0,
-                                 jnp.maximum(h.t, 1))
-        g = grad_fn(theta, idx, h, a_emb, cfg)
-        noise = jax.random.normal(k_noise, theta.shape)
-        return theta - 0.5 * cfg.sgld_eps * g + jnp.sqrt(
-            cfg.sgld_eps) * noise, None
 
-    theta, _ = jax.lax.scan(step, theta0,
-                            jax.random.split(key, cfg.sgld_steps))
-    return theta
+# ---------------------------------------------------------------------------
+# RoutingPolicy adapters — both extensions on the unified batched protocol
+# ---------------------------------------------------------------------------
+
+def mixed_feedback_policy(a_emb: jax.Array, cfg: FGTSConfig, *,
+                          use_kernel: bool = True):
+    """The mixed duel+click estimator as a batched ``RoutingPolicy``.
+
+    Protocol updates enter the MixedHistory as duel rows (one scatter);
+    click streams are injected out-of-band with ``inject_clicks`` on the
+    policy state — both feed the same single-theta pseudo-posterior.
+    State: (MixedHistory, thetas (n_chains, dim)) warm-started chains.
+    """
+    from .policy import RoutingPolicy, select_pair
+
+    def init(key):
+        k_th = jax.random.fold_in(key, 1)
+        theta = jax.random.normal(k_th, (cfg.n_chains, cfg.dim)) \
+            * cfg.prior_var ** 0.5
+        return (init_mixed(cfg), theta)
+
+    def act(key, state, x):
+        h, theta0 = state
+        ks = jax.random.split(key, cfg.n_chains)
+        theta = jax.vmap(lambda k, t0: mixed_sgld_sample(
+            k, t0, h, a_emb, cfg))(ks, theta0)
+        th = theta.mean(axis=0)
+        a1, a2 = select_pair(x, a_emb, th, th, distinct=True,
+                             use_kernel=use_kernel)
+        return (h, theta), a1, a2
+
+    def update(state, x, a1, a2, y):
+        h, theta = state
+        duel = jnp.ones(x.shape[0], bool)
+        return (observe_mixed_batch(h, x, a1, a2, y, duel), theta)
+
+    return RoutingPolicy(init, act, update, name="mixed_feedback")
+
+
+def inject_clicks(state, x, arms, y):
+    """Fold a batch of pointwise like/dislike signals (y in {0,1}) into a
+    ``mixed_feedback_policy`` state, outside the duel protocol."""
+    h, theta = state
+    return (observe_mixed_batch(h, x, arms, arms, y,
+                                jnp.zeros(x.shape[0], bool)), theta)
+
+
+def _pl_pair_potential(theta, idx, state, a_emb, cfg: FGTSConfig):
+    """U(theta) with the Plackett-Luce likelihood on observed pair rankings.
+
+    For m=2 PL coincides with BTL, but the potential runs through the
+    listwise machinery so larger presentation sets are a config change.
+    """
+    xb = state.x[idx]
+    a1b, a2b, yb = state.a1[idx], state.a2[idx], state.y[idx]
+    s = jnp.stack([jnp.sum(phi(xb, a_emb[a1b]) * theta[None, :], axis=-1),
+                   jnp.sum(phi(xb, a_emb[a2b]) * theta[None, :], axis=-1)],
+                  axis=-1)                                     # (m, 2)
+    won = (yb > 0).astype(jnp.int32)
+    ranking = jnp.stack([1 - won, won], axis=-1)               # winner first
+    ll = jax.vmap(pl_log_likelihood)(s, ranking)
+    valid = (idx < state.t).astype(jnp.float32)
+    n_valid = jnp.maximum(valid.sum(), 1.0)
+    scale = state.t.astype(jnp.float32) / n_valid
+    prior = jnp.sum(theta * theta) / (2.0 * cfg.prior_var)
+    return scale * jnp.sum(-cfg.eta * ll * valid) + prior
+
+
+def pl_pair_policy(a_emb: jax.Array, cfg: FGTSConfig, *,
+                   use_kernel: bool = True):
+    """Listwise-likelihood router on the batched protocol (pairs presented).
+
+    SGLD chains sample one theta from the PL pseudo-posterior; selection is
+    the kernel's top-2 (distinct) argmax; updates reuse the FGTS replay ring
+    (single scatter)."""
+    from . import fgts as fgts_lib
+    from .policy import RoutingPolicy, init_fgts_state, select_pair
+
+    grad_fn = jax.grad(_pl_pair_potential)
+
+    def sgld(key, theta0, state):
+        return fgts_lib.sgld_loop(
+            key, theta0,
+            lambda th, idx: grad_fn(th, idx, state, a_emb, cfg),
+            state.t, state.x.shape[0], cfg)
+
+    def init(key):
+        # single-theta policy: theta2 is not part of the PL sampler, keep a
+        # minimal placeholder instead of dead warm-start chains
+        return init_fgts_state(cfg, key)._replace(
+            theta2=jnp.zeros((1, cfg.dim)))
+
+    def act(key, state, x):
+        ks = jax.random.split(key, cfg.n_chains)
+        th1 = jax.vmap(lambda k, t0: sgld(k, t0, state))(ks, state.theta1)
+        state = state._replace(theta1=th1)
+        th = th1.mean(axis=0)
+        a1, a2 = select_pair(x, a_emb, th, th, distinct=True,
+                             use_kernel=use_kernel)
+        return state, a1, a2
+
+    def update(state, x, a1, a2, y):
+        return fgts_lib.observe_batch(state, x, a1, a2, y)
+
+    return RoutingPolicy(init, act, update, name="pl_pair")

@@ -47,6 +47,8 @@ class FGTSConfig:
     sgld_temp: float = 1.0          # posterior temperature: noise *= sqrt(T);
                                     # T<1 tempers (sharpens) the posterior
     force_distinct: bool = False     # force a2 != a1 at selection
+    n_chains: int = 1                # parallel SGLD chains per theta sample
+                                     # (vmapped; warm-started across rounds)
 
 
 class FGTSState(NamedTuple):
@@ -101,6 +103,33 @@ def _potential(theta, idx, state: FGTSState, a_emb, j, cfg: FGTSConfig):
     return data_term + prior
 
 
+def sgld_loop(key: jax.Array, theta0: jax.Array, grad_fn, n_obs: jax.Array,
+              capacity: int, cfg: FGTSConfig,
+              eps: jax.Array | float | None = None) -> jax.Array:
+    """Generic SGLD chain over a ring-buffered history.
+
+    Minibatch indices are drawn over the *valid slots* min(n_obs, capacity):
+    once the ring has wrapped, sampling in [0, n_obs) would make gathers
+    clamp out-of-range rows to the last slot and bias the posterior.
+    ``grad_fn(theta, idx) -> dU/dtheta``. Shared by FGTS, the mixed-stream
+    estimator, and the PL-pair policy.
+    """
+    eps = cfg.sgld_eps if eps is None else eps
+    hi = jnp.maximum(jnp.minimum(n_obs, capacity), 1)
+
+    def step(theta, k):
+        k_idx, k_noise = jax.random.split(k)
+        idx = jax.random.randint(k_idx, (cfg.sgld_minibatch,), 0, hi)
+        g = grad_fn(theta, idx)
+        noise = jax.random.normal(k_noise, theta.shape)
+        theta = theta - 0.5 * eps * g + jnp.sqrt(eps * cfg.sgld_temp) * noise
+        return theta, None
+
+    keys = jax.random.split(key, cfg.sgld_steps)
+    theta, _ = jax.lax.scan(step, theta0, keys)
+    return theta
+
+
 def sgld_sample(key: jax.Array, theta0: jax.Array, state: FGTSState,
                 a_emb: jax.Array, j: int, cfg: FGTSConfig) -> jax.Array:
     """Run cfg.sgld_steps of SGLD from theta0 on the pseudo-posterior,
@@ -109,19 +138,9 @@ def sgld_sample(key: jax.Array, theta0: jax.Array, state: FGTSState,
     t = state.t.astype(jnp.float32)
     eps = cfg.sgld_eps * (cfg.sgld_decay_t0
                           / (cfg.sgld_decay_t0 + t)) ** cfg.sgld_decay_pow
-
-    def step(theta, k):
-        k_idx, k_noise = jax.random.split(k)
-        hi = jnp.maximum(state.t, 1)
-        idx = jax.random.randint(k_idx, (cfg.sgld_minibatch,), 0, hi)
-        g = grad_fn(theta, idx, state, a_emb, j, cfg)
-        noise = jax.random.normal(k_noise, theta.shape)
-        theta = theta - 0.5 * eps * g + jnp.sqrt(eps * cfg.sgld_temp) * noise
-        return theta, None
-
-    keys = jax.random.split(key, cfg.sgld_steps)
-    theta, _ = jax.lax.scan(step, theta0, keys)
-    return theta
+    return sgld_loop(key, theta0,
+                     lambda th, idx: grad_fn(th, idx, state, a_emb, j, cfg),
+                     state.t, state.x.shape[0], cfg, eps=eps)
 
 
 def select_arms(theta1: jax.Array, theta2: jax.Array, x_t: jax.Array,
@@ -146,6 +165,37 @@ def observe(state: FGTSState, x_t: jax.Array, a1: jax.Array, a2: jax.Array,
         a2=state.a2.at[i].set(a2),
         y=state.y.at[i].set(y),
         t=state.t + 1,
+    )
+
+
+def ring_slots(t: jax.Array, capacity: int, b: int):
+    """Write slots for a B-item sequential append to a ring at count t.
+
+    Returns (drop, idx): drop the first ``drop`` batch items (when B exceeds
+    the capacity only the last ``capacity`` can survive a sequential replay
+    — and dropping keeps the scatter indices unique, since duplicate-index
+    scatter order is undefined in XLA), then scatter the rest at ``idx``.
+    """
+    drop = max(0, b - capacity)
+    idx = (t + drop + jnp.arange(b - drop, dtype=t.dtype)) % capacity
+    return drop, idx
+
+
+def observe_batch(state: FGTSState, x_b: jax.Array, a1: jax.Array,
+                  a2: jax.Array, y: jax.Array) -> FGTSState:
+    """Fold B duels into the replay ring with ONE scatter per buffer.
+
+    Equivalent to B sequential ``observe`` calls, including wraparound past
+    the horizon: write slots are (t, t+1, ..., t+B-1) mod H.
+    """
+    b = x_b.shape[0]
+    drop, idx = ring_slots(state.t, state.x.shape[0], b)
+    return state._replace(
+        x=state.x.at[idx].set(x_b[drop:]),
+        a1=state.a1.at[idx].set(a1[drop:]),
+        a2=state.a2.at[idx].set(a2[drop:]),
+        y=state.y.at[idx].set(y[drop:]),
+        t=state.t + b,
     )
 
 

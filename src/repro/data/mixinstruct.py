@@ -49,8 +49,11 @@ def latent_skills(key: jax.Array, cfg: MixInstructConfig) -> jax.Array:
     deviations so different categories prefer different models.
     """
     base = jnp.asarray(np.log(FIRST_RANK_PCT / FIRST_RANK_PCT.sum()))
-    base = 0.55 + 0.12 * (base - base.mean()) / base.std()
+    base = 0.55 + 0.22 * (base - base.mean()) / base.std()
     dev = 0.18 * jax.random.normal(key, (N_MODELS, cfg.n_latent_cats))
+    # center per model so category structure never drifts a model's overall
+    # skill off its calibrated first-rank share (the head must stay the head)
+    dev = dev - dev.mean(axis=1, keepdims=True)
     return base[:, None] + dev
 
 

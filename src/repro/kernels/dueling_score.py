@@ -12,10 +12,22 @@ Key identity that makes this MXU work instead of a (B,K,d) elementwise blow-up:
 
 so each (B,K) tile is two matmuls: (x*theta_j) @ A^T and x^2 @ (A^2)^T.
 Tiling: grid (B/BB, K/BK); d is kept whole in VMEM (router dims are <= 1k).
+
+Interpret-mode selection: ``interpret=None`` (the default everywhere) picks
+the compiled Mosaic path automatically when an accelerator backend is
+present and falls back to interpret mode on host-only platforms. Override
+with the ``REPRO_PALLAS_INTERPRET`` env var ("1"/"0").
+
+``dueling_select`` is the batched argmax epilogue: same score math, but the
+kernel reduces each (BB, K) tile directly to the routed pair (a1, a2) per
+query — K stays whole in VMEM, so no (J,B,K) score tensor ever reaches HBM.
+It also applies the serve-time cost tilt and the paper's force-distinct
+selection inside the kernel.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +35,29 @@ from jax.experimental import pallas as pl
 
 DEFAULT_BB = 128
 DEFAULT_BK = 128
+# K above this no longer fits one VMEM tile for the argmax epilogue; fall
+# back to scores + XLA argmax (router pools are K <= ~100 in practice).
+MAX_K_FUSED = 1024
+
+_ACCEL_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def default_interpret() -> bool:
+    """interpret=True only when no compiled Pallas backend is available.
+
+    ``REPRO_PALLAS_INTERPRET=1`` forces interpret mode (debugging);
+    ``REPRO_PALLAS_INTERPRET=0`` forces the compiled path. Set it before
+    the first kernel call: jitted wrappers read it at trace time, so a
+    mid-process change does not invalidate already-compiled programs.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+    if env:                         # empty/unset falls through to the default
+        return env not in ("0", "false")
+    return jax.default_backend() not in _ACCEL_BACKENDS
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    return default_interpret() if interpret is None else interpret
 
 
 def _dueling_kernel(x_ref, a_ref, th_ref, s_ref, *, n_theta: int):
@@ -41,11 +76,12 @@ def _dueling_kernel(x_ref, a_ref, th_ref, s_ref, *, n_theta: int):
 
 def dueling_score(x: jax.Array, a: jax.Array, thetas: jax.Array, *,
                   bb: int = DEFAULT_BB, bk: int = DEFAULT_BK,
-                  interpret: bool = True) -> jax.Array:
+                  interpret: bool | None = None) -> jax.Array:
     """x: (B,d) queries; a: (K,d) model embeddings; thetas: (J,d).
 
     Returns scores (J,B,K) float32.
     """
+    interpret = _resolve_interpret(interpret)
     b, d = x.shape
     k = a.shape[0]
     j = thetas.shape[0]
@@ -72,3 +108,87 @@ def dueling_score(x: jax.Array, a: jax.Array, thetas: jax.Array, *,
         interpret=interpret,
     )(x, a, thetas)
     return out[:, :b, :k]
+
+
+def _select_kernel(x_ref, a_ref, th_ref, tilt_ref, a1_ref, a2_ref, *,
+                   k_valid: int, distinct: bool):
+    """Score + argmax epilogue for one (BB,) block of queries.
+
+    K lives whole in VMEM; padded arms are masked to -inf so they can never
+    win the argmax. ``tilt`` is the pre-multiplied cost penalty
+    (cost_tilt * cost_k), subtracted from both samples' scores.
+    """
+    x = x_ref[...].astype(jnp.float32)              # (BB, d)
+    a = a_ref[...].astype(jnp.float32)              # (K_pad, d)
+    th = th_ref[...].astype(jnp.float32)            # (2, d)
+    tilt = tilt_ref[...].astype(jnp.float32)        # (K_pad,)
+    den = jax.lax.dot_general(x * x, a * a, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    den = jnp.sqrt(jnp.maximum(den, 1e-24))         # (BB, K_pad)
+    cols = jax.lax.broadcasted_iota(jnp.int32, den.shape, 1)
+    valid = cols < k_valid
+
+    def scores(j):
+        num = jax.lax.dot_general(x * th[j][None, :], a,
+                                  (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        return jnp.where(valid, num / den - tilt[None, :], -jnp.inf)
+
+    a1 = jnp.argmax(scores(0), axis=-1).astype(jnp.int32)       # (BB,)
+    s2 = scores(1)
+    if distinct:
+        s2 = jnp.where(cols == a1[:, None], -jnp.inf, s2)
+    a1_ref[...] = a1
+    a2_ref[...] = jnp.argmax(s2, axis=-1).astype(jnp.int32)
+
+
+def dueling_select(x: jax.Array, a: jax.Array, thetas: jax.Array, *,
+                   tilt: jax.Array | None = None, distinct: bool = False,
+                   bb: int = DEFAULT_BB,
+                   interpret: bool | None = None):
+    """Route a batch: argmax_k of both samples' (cost-tilted) scores.
+
+    x: (B,d); a: (K,d); thetas: (2,d); tilt: (K,) score penalty or None.
+    Returns (a1, a2) int32 arrays of shape (B,).
+    """
+    interpret = _resolve_interpret(interpret)
+    b, d = x.shape
+    k = a.shape[0]
+    assert thetas.shape[0] == 2, "dueling_select pairs exactly two thetas"
+    if tilt is None:
+        tilt = jnp.zeros((k,), jnp.float32)
+    if k > MAX_K_FUSED:
+        s = dueling_score(x, a, thetas, interpret=interpret)
+        s = s - tilt[None, None, :]
+        a1 = jnp.argmax(s[0], axis=-1).astype(jnp.int32)
+        s2 = s[1]
+        if distinct:
+            s2 = jnp.where(jnp.arange(k)[None, :] == a1[:, None],
+                           -jnp.inf, s2)
+        return a1, jnp.argmax(s2, axis=-1).astype(jnp.int32)
+
+    bb = min(bb, max(8, b))
+    b_pad = -(-b // bb) * bb
+    k_pad = max(8, k)
+    if b_pad != b:
+        x = jnp.pad(x, ((0, b_pad - b), (0, 0)))
+    if k_pad != k:
+        a = jnp.pad(a, ((0, k_pad - k), (0, 0)))
+        tilt = jnp.pad(tilt, (0, k_pad - k))
+
+    a1, a2 = pl.pallas_call(
+        functools.partial(_select_kernel, k_valid=k, distinct=distinct),
+        grid=(b_pad // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda bi: (bi, 0)),
+            pl.BlockSpec((k_pad, d), lambda bi: (0, 0)),
+            pl.BlockSpec((2, d), lambda bi: (0, 0)),
+            pl.BlockSpec((k_pad,), lambda bi: (0,)),
+        ],
+        out_specs=[pl.BlockSpec((bb,), lambda bi: (bi,)),
+                   pl.BlockSpec((bb,), lambda bi: (bi,))],
+        out_shape=[jax.ShapeDtypeStruct((b_pad,), jnp.int32),
+                   jax.ShapeDtypeStruct((b_pad,), jnp.int32)],
+        interpret=interpret,
+    )(x, a, thetas, tilt)
+    return a1[:b], a2[:b]

@@ -1,8 +1,10 @@
 """Jitted public wrappers for the Pallas kernels.
 
-On CPU (this container) the kernels run in interpret mode; on TPU they lower
-to Mosaic. ``use_kernels()`` toggles whether the model substrate routes its
-hot paths through Pallas or the XLA reference path.
+Interpret-vs-compiled selection is automatic (``default_interpret``):
+compiled Mosaic on TPU/GPU backends, interpret mode on host-only platforms,
+overridable via ``REPRO_PALLAS_INTERPRET``. ``use_kernels()`` toggles whether
+the model substrate routes its hot paths through Pallas or the XLA reference
+path.
 """
 from __future__ import annotations
 
@@ -10,32 +12,34 @@ import functools
 
 import jax
 
-from .dueling_score import dueling_score
+from .dueling_score import default_interpret, dueling_score, dueling_select
 from .flash_attention import flash_attention
 from .rglru_scan import rglru_scan
 from .ssd_scan import ssd_scan
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap"))
 def flash_attention_op(q, k, v, *, causal=True, window=0, softcap=0.0):
     return flash_attention(q, k, v, causal=causal, window=window,
-                           softcap=softcap, interpret=not _on_tpu())
+                           softcap=softcap, interpret=default_interpret())
 
 
 @jax.jit
 def rglru_scan_op(log_a, x_in, h0=None):
-    return rglru_scan(log_a, x_in, h0, interpret=not _on_tpu())
+    return rglru_scan(log_a, x_in, h0, interpret=default_interpret())
 
 
 @jax.jit
 def ssd_scan_op(x, bt, ct, log_a, dt, h0=None):
-    return ssd_scan(x, bt, ct, log_a, dt, h0, interpret=not _on_tpu())
+    return ssd_scan(x, bt, ct, log_a, dt, h0, interpret=default_interpret())
 
 
 @jax.jit
 def dueling_score_op(x, a, thetas):
-    return dueling_score(x, a, thetas, interpret=not _on_tpu())
+    return dueling_score(x, a, thetas)
+
+
+@functools.partial(jax.jit, static_argnames=("distinct",))
+def dueling_select_op(x, a, thetas, tilt=None, *, distinct=False):
+    """Batched route selection: (a1, a2) = argmax pair of tilted scores."""
+    return dueling_select(x, a, thetas, tilt=tilt, distinct=distinct)

@@ -32,6 +32,7 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.core import ccft, fgts  # noqa: E402
+from repro.core import policy as policy_lib  # noqa: E402
 from repro.data.pool import CATEGORIES, arch_ids  # noqa: E402
 from repro.encoder.model import EncoderConfig  # noqa: E402
 from repro.launch import mesh as mesh_lib  # noqa: E402
@@ -46,18 +47,20 @@ ENC_CFG = EncoderConfig(vocab_size=32_768, d_model=768, n_layers=6,
 
 
 def make_route_step(cost_tilt: float = 0.05):
+    """The policy layer's batched pair selection, XLA path — identical math
+    to the dueling_score kernel but partitionable over the mesh batch axis
+    (a Pallas call cannot be sharded in this AOT lowering)."""
     def route_step(x, a_emb, theta1, theta2, costs):
-        s1 = jax.vmap(lambda xi: ccft.scores_all(xi, a_emb, theta1))(x)
-        s2 = jax.vmap(lambda xi: ccft.scores_all(xi, a_emb, theta2))(x)
-        s1 = s1 - cost_tilt * costs[None, :]
-        s2 = s2 - cost_tilt * costs[None, :]
-        a1 = jnp.argmax(s1, axis=-1).astype(jnp.int32)
-        a2 = jnp.argmax(s2, axis=-1).astype(jnp.int32)
-        return a1, a2
+        return policy_lib.select_pair(
+            x, a_emb, theta1, theta2,
+            tilt=policy_lib.cost_tilt_vector(costs, cost_tilt),
+            use_kernel=False)
     return route_step
 
 
 def make_update_step(cfg: fgts.FGTSConfig, n_chains: int):
+    """One posterior refresh: the fgts_policy's vmapped multi-chain SGLD
+    (chain mean estimator) over a sharded replay buffer."""
     def update_step(key, theta, state_x, state_a1, state_a2, state_y, t,
                     a_emb):
         st = fgts.FGTSState(x=state_x, a1=state_a1, a2=state_a2, y=state_y,

@@ -18,13 +18,34 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS
-from repro.core import fgts
+from repro.core import baselines, fgts
 from repro.core.btl import sample_preference
+from repro.core.policy import fgts_policy
 from repro.data.synth import CorpusConfig, make_split
 from repro.encoder.model import EncoderConfig, init_encoder
 from repro.models import lm
 from repro.serving.router_service import (PoolEntry, RouterService,
                                           RouterServiceConfig)
+
+# Any RoutingPolicy can serve — the service just drives act/update. Every
+# scoring policy honours the config's serve-time cost tilt.
+from repro.core.policy import cost_tilt_vector
+
+
+POLICIES = {
+    "fgts": lambda a_emb, costs, cfg: fgts_policy(
+        a_emb, cfg.fgts, costs=costs, cost_tilt=cfg.cost_tilt),
+    "eps_greedy": lambda a_emb, costs, cfg: baselines.eps_greedy_policy(
+        a_emb, baselines.EpsGreedyConfig(n_models=cfg.fgts.n_models,
+                                         dim=cfg.fgts.dim),
+        tilt=cost_tilt_vector(costs, cfg.cost_tilt)),
+    "linucb": lambda a_emb, costs, cfg: baselines.linucb_duel_policy(
+        a_emb, baselines.LinUCBConfig(n_models=cfg.fgts.n_models,
+                                      dim=cfg.fgts.dim),
+        tilt=cost_tilt_vector(costs, cfg.cost_tilt)),
+    "uniform": lambda a_emb, costs, cfg: baselines.uniform_policy(
+        cfg.fgts.n_models),
+}
 
 # Reduced pool members used for CPU serving runs (arch ids from the assigned
 # set; each entry's latent skill vector drives synthetic preferences).
@@ -55,6 +76,8 @@ def main():
     ap.add_argument("--gen-tokens", type=int, default=8)
     ap.add_argument("--with-generation", action="store_true",
                     help="actually decode from the two routed models")
+    ap.add_argument("--policy", choices=sorted(POLICIES), default="fgts",
+                    help="RoutingPolicy serving the pool")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -71,7 +94,9 @@ def main():
                            horizon=args.rounds * args.batch, eta=2.0, mu=0.2,
                            sgld_steps=10, sgld_eps=2e-4, sgld_minibatch=32)
     svc = RouterService(pool, enc_params, enc_cfg,
-                        RouterServiceConfig(fgts=fcfg, cost_tilt=0.0))
+                        RouterServiceConfig(fgts=fcfg, cost_tilt=0.0,
+                                            policy_factory=POLICIES[
+                                                args.policy]))
 
     # reduced candidate models (actual generation path)
     gen_models = {}

@@ -1,13 +1,17 @@
-"""Batched routing service — the production wrapper around FGTS.CDB.
+"""Batched routing service — the production wrapper around a RoutingPolicy.
 
 A deployment keeps one ``RouterService`` per model pool. Requests arrive in
-batches; the service embeds them (encoder), Thompson-samples the two
-routing parameters once per batch (amortizing SGLD), scores every request
-against every candidate with the ``dueling_score`` kernel, dispatches, and
-folds the pairwise feedback stream back into the posterior.
+batches; the service embeds them (encoder), then drives a batched
+``RoutingPolicy``: one jitted ``act`` per batch (for FGTS.CDB that is one
+amortized multi-chain SGLD refresh + the dueling_score kernel's argmax
+epilogue) and one jitted ``update`` per feedback batch (a single scatter
+into the replay ring — no Python per-item loop).
 
 The pool registry carries per-model cost metadata so selection can apply a
-cost-aware utility tilt at serve time (the paper's perf-cost trade-off knob).
+cost-aware utility tilt at serve time (the paper's perf-cost trade-off
+knob). Any policy that speaks the protocol can serve: pass a
+``policy_factory`` in the config, or leave it None for the paper's
+FGTS.CDB default.
 """
 from __future__ import annotations
 
@@ -19,8 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fgts
+from repro.core.policy import RoutingPolicy, fgts_policy
 from repro.encoder.model import EncoderConfig, encode
-from repro.kernels.ops import dueling_score_op
 
 
 @dataclasses.dataclass
@@ -37,6 +41,8 @@ class RouterServiceConfig:
     fgts: fgts.FGTSConfig
     cost_tilt: float = 0.0         # lambda applied at serve time
     seed: int = 0
+    # (a_emb, costs, cfg) -> RoutingPolicy; None = FGTS.CDB with cost tilt.
+    policy_factory: Optional[Callable] = None
 
 
 class RouterService:
@@ -51,15 +57,17 @@ class RouterService:
         self.cfg = cfg
         self.a_emb = jnp.asarray(np.stack([p.embedding for p in pool]))
         self.costs = jnp.asarray([p.cost_per_1k_tokens for p in pool])
+        if cfg.policy_factory is not None:
+            self.policy: RoutingPolicy = cfg.policy_factory(
+                self.a_emb, self.costs, cfg)
+        else:
+            self.policy = fgts_policy(self.a_emb, cfg.fgts, costs=self.costs,
+                                      cost_tilt=cfg.cost_tilt)
         self._key = jax.random.PRNGKey(cfg.seed)
-        self.state = fgts.init_state(cfg.fgts, self._next_key())
+        self.state = self.policy.init(self._next_key())
         self.n_routed = 0
-        self._sample = jax.jit(
-            lambda k, st: (fgts.sgld_sample(k, st.theta1, st, self.a_emb, 1,
-                                            cfg.fgts),
-                           fgts.sgld_sample(jax.random.fold_in(k, 1),
-                                            st.theta2, st, self.a_emb, 2,
-                                            cfg.fgts)))
+        self._act = jax.jit(self.policy.act)
+        self._update = jax.jit(self.policy.update)
 
     def _next_key(self):
         self._key, k = jax.random.split(self._key)
@@ -71,25 +79,20 @@ class RouterService:
     def route_batch(self, x: jax.Array):
         """x: (B, d) query features. Returns (a1 (B,), a2 (B,)) arm indices.
 
-        One posterior sample pair per batch; per-request argmax via the
-        dueling_score kernel; cost tilt subtracts lambda*cost from scores.
+        One policy.act per batch: for FGTS.CDB that amortizes the SGLD
+        posterior refresh over the whole batch and selects every pair in the
+        dueling_score kernel (cost tilt included).
         """
-        theta1, theta2 = self._sample(self._next_key(), self.state)
-        self.state = self.state._replace(theta1=theta1, theta2=theta2)
-        scores = dueling_score_op(x, self.a_emb,
-                                  jnp.stack([theta1, theta2]))   # (2,B,K)
-        scores = scores - self.cfg.cost_tilt * self.costs[None, None, :]
-        a1 = jnp.argmax(scores[0], axis=-1).astype(jnp.int32)
-        s2 = scores[1]
-        a2 = jnp.argmax(s2, axis=-1).astype(jnp.int32)
+        self.state, a1, a2 = self._act(self._next_key(), self.state, x)
         self.n_routed += int(x.shape[0])
         return a1, a2
 
     def feedback_batch(self, x: jax.Array, a1: jax.Array, a2: jax.Array,
                        y: jax.Array):
-        """Fold a batch of observed duels into the replay history."""
-        for i in range(x.shape[0]):
-            self.state = fgts.observe(self.state, x[i], a1[i], a2[i], y[i])
+        """Fold a batch of observed duels into the policy state — one
+        jitted batched update (single replay-ring scatter for FGTS)."""
+        self.state = self._update(self.state, x, jnp.asarray(a1),
+                                  jnp.asarray(a2), jnp.asarray(y))
 
     def spend(self, arms: jax.Array, tokens_out: int = 1000) -> float:
         """Cost accounting for a batch of dispatches."""
@@ -99,7 +102,7 @@ class RouterService:
 
     def save(self, path: str, step: int | None = None) -> str:
         from repro.checkpoint import save_checkpoint
-        payload = {"state": self.state._asdict(),
+        payload = {"state": self.state,
                    "key": self._key,
                    "n_routed": jnp.asarray(self.n_routed)}
         return save_checkpoint(path, step if step is not None
@@ -107,12 +110,19 @@ class RouterService:
 
     def restore(self, path: str, step: int | None = None) -> int:
         from repro.checkpoint import latest_step, restore_checkpoint
-        from repro.core.fgts import FGTSState
         step = latest_step(path) if step is None else step
-        like = {"state": self.state._asdict(), "key": self._key,
+        like = {"state": self.state, "key": self._key,
                 "n_routed": jnp.asarray(self.n_routed)}
-        payload = restore_checkpoint(path, step, like)
-        self.state = FGTSState(**payload["state"])
+        try:
+            payload = restore_checkpoint(path, step, like)
+        except AssertionError as e:
+            raise RuntimeError(
+                f"incompatible router checkpoint at {path} step {step}: "
+                f"structure/shape mismatch with policy "
+                f"'{self.policy.name}' (pre-RoutingPolicy checkpoints carry "
+                f"(dim,) thetas; current state holds (n_chains, dim)) — "
+                f"{e}") from e
+        self.state = payload["state"]
         self._key = payload["key"]
         self.n_routed = int(payload["n_routed"])
         return step

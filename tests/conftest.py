@@ -8,3 +8,63 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fallback: property tests still run (deterministic sampling) when
+# the real package is absent. Install requirements-dev.txt for the full
+# shrinking/fuzzing behaviour.
+# ---------------------------------------------------------------------------
+
+def pytest_configure(config):
+    config.addinivalue_line("markers",
+                            "slow: long-running end-to-end test")
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import random as _random
+    import types
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    def _floats(lo, hi):
+        return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+    def _integers(lo, hi):
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    def _given(*strats):
+        def deco(fn):
+            # NB: no functools.wraps — pytest must see the zero-arg
+            # signature of the wrapper, not fn's strategy parameters.
+            def wrapper(**kw):
+                rng = _random.Random(1234)
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples", 20))
+                for _ in range(n):
+                    fn(*(s.sample(rng) for s in strats), **kw)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def _settings(**kw):
+        def deco(fn):
+            fn._max_examples = kw.get("max_examples", 20)
+            return fn
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.floats = _floats
+    _st.integers = _integers
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.__fallback__ = True
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -1,5 +1,6 @@
 """Unit + property tests for the paper's core: BTL, CCFT, FGTS, regret,
-baselines. Hypothesis drives the invariants."""
+baselines. Hypothesis drives the invariants (tests/conftest.py provides a
+deterministic fallback shim when the package is not installed)."""
 import dataclasses
 
 import jax
@@ -8,7 +9,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import baselines, btl, ccft, env, fgts, regret
+from repro.core import baselines, btl, ccft, env, fgts, policy, regret
 
 KEY = jax.random.PRNGKey(7)
 
@@ -209,8 +210,9 @@ def test_fgts_beats_uniform_and_converges():
     cfg = fgts.FGTSConfig(n_models=m, dim=protos.shape[1], horizon=150,
                           eta=4.0, mu=0.2, sgld_steps=15, sgld_eps=3e-4,
                           sgld_minibatch=32)
-    cum, _ = jax.jit(lambda k: env.run_fgts(k, e, protos, cfg))(KEY)
-    cum_u, _ = env.run_policy(KEY, e, baselines.uniform_policy(m))
+    pol = policy.fgts_policy(protos, cfg)
+    cum, _ = jax.jit(lambda k: env.run(k, e, pol))(KEY)
+    cum_u, _ = env.run(KEY, e, baselines.uniform_policy(m))
     assert float(cum[-1]) < 0.85 * float(cum_u[-1])
     assert regret.slope_ratio(np.asarray(cum)) < 0.9
 
@@ -220,16 +222,42 @@ def test_baselines_run_and_rank_sanely():
     e, protos, m = _toy_env()
     dim = protos.shape[1]
     runs = {}
-    runs["uniform"], _ = env.run_policy(KEY, e, baselines.uniform_policy(m))
-    runs["best_fixed"], _ = env.run_policy(
+    runs["uniform"], _ = env.run(KEY, e, baselines.uniform_policy(m))
+    runs["best_fixed"], _ = env.run(
         KEY, e, baselines.best_fixed_policy(e.utils.mean(axis=0)))
-    runs["eps"], _ = env.run_policy(
+    runs["eps"], _ = env.run(
         KEY, e, baselines.eps_greedy_policy(
             protos, baselines.EpsGreedyConfig(n_models=m, dim=dim)))
-    runs["linucb"], _ = env.run_policy(
+    runs["linucb"], _ = env.run(
         KEY, e, baselines.linucb_duel_policy(
             protos, baselines.LinUCBConfig(n_models=m, dim=dim)))
     for k, v in runs.items():
         assert np.isfinite(float(v[-1])), k
     assert float(runs["best_fixed"][-1]) < float(runs["uniform"][-1])
     assert float(runs["linucb"][-1]) < float(runs["uniform"][-1])
+
+
+def test_generic_loop_batched_matches_shapes():
+    """env.run consumes the stream batch-at-a-time through any policy."""
+    e, protos, m = _toy_env(t=40)
+    cum, state = env.run(KEY, e, baselines.uniform_policy(m), batch=8)
+    assert cum.shape == (40,)
+    cum2, _ = env.run(KEY, e, baselines.uniform_policy(m), batch=7)
+    assert cum2.shape == (35,)      # trailing remainder dropped
+
+
+def test_averaged_runs_handles_both_run_fn_shapes():
+    """Regression: run_fn returning (curves, state) vs bare curves."""
+    def bare(k):
+        return jnp.cumsum(jax.random.uniform(k, (12,)))
+
+    def with_state(k):
+        return jnp.cumsum(jax.random.uniform(k, (12,))), jnp.zeros(())
+
+    mean_b, curves_b = env.averaged_runs(bare, KEY, n_runs=4)
+    mean_t, curves_t = env.averaged_runs(with_state, KEY, n_runs=4)
+    assert curves_b.shape == curves_t.shape == (4, 12)
+    np.testing.assert_allclose(np.asarray(mean_b), np.asarray(mean_t))
+
+    with pytest.raises(ValueError):
+        env.averaged_runs(lambda k: jnp.zeros(()), KEY, n_runs=4)

@@ -112,9 +112,69 @@ def test_dueling_score(b, k, d):
     np.testing.assert_allclose(s, want, rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("b,k,d,distinct", [
+    (100, 11, 384, False), (7, 3, 64, True), (130, 40, 256, True),
+    (9, 5, 32, False),
+])
+def test_dueling_select_argmax_epilogue(b, k, d, distinct):
+    """The fused argmax epilogue == scores + XLA argmax (incl. padded arms,
+    cost tilt, and force-distinct masking)."""
+    from repro.kernels.dueling_score import dueling_select
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (b, d))
+    a = jax.random.normal(ks[1], (k, d))
+    th = jax.random.normal(ks[2], (2, d))
+    tilt = 0.1 * jax.random.uniform(ks[3], (k,))
+    a1, a2 = dueling_select(x, a, th, tilt=tilt, distinct=distinct)
+    s = ref.dueling_score_ref(x, a, th[0], th[1]) - tilt[None, None, :]
+    want1 = jnp.argmax(s[0], axis=-1)
+    s2 = s[1]
+    if distinct:
+        s2 = jnp.where(jnp.arange(k)[None, :] == want1[:, None], -jnp.inf,
+                       s2)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(want1))
+    np.testing.assert_array_equal(np.asarray(a2),
+                                  np.asarray(jnp.argmax(s2, axis=-1)))
+    if distinct:
+        assert (np.asarray(a1) != np.asarray(a2)).all()
+
+
+def test_interpret_defaults_to_backend(monkeypatch):
+    """interpret=None resolves off the backend; env var overrides both ways."""
+    from repro.kernels import dueling_score as ds
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    on_host = jax.default_backend() not in ds._ACCEL_BACKENDS
+    assert ds.default_interpret() == on_host
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert ds.default_interpret() is True
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert ds.default_interpret() is False
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "")
+    assert ds.default_interpret() == on_host    # empty string == unset
+
+
+@pytest.mark.skipif(jax.default_backend() == "cpu",
+                    reason="compiled Pallas path needs a TPU/GPU backend")
+def test_dueling_score_compiled_interpret_parity():
+    """On an accelerator the Mosaic lowering must agree with interpret mode."""
+    from repro.kernels.dueling_score import dueling_select
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (64, 128))
+    a = jax.random.normal(ks[1], (11, 128))
+    th = jax.random.normal(ks[2], (2, 128))
+    s_c = dueling_score(x, a, th, interpret=False)
+    s_i = dueling_score(x, a, th, interpret=True)
+    np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_i),
+                               rtol=1e-5, atol=1e-5)
+    a1_c, a2_c = dueling_select(x, a, th, interpret=False, distinct=True)
+    a1_i, a2_i = dueling_select(x, a, th, interpret=True, distinct=True)
+    np.testing.assert_array_equal(np.asarray(a1_c), np.asarray(a1_i))
+    np.testing.assert_array_equal(np.asarray(a2_c), np.asarray(a2_i))
+
+
 def test_ops_wrappers_jit():
-    from repro.kernels import (dueling_score_op, flash_attention_op,
-                               rglru_scan_op, ssd_scan_op)
+    from repro.kernels import (dueling_score_op, dueling_select_op,
+                               flash_attention_op, rglru_scan_op, ssd_scan_op)
     ks = jax.random.split(KEY, 4)
     q = jax.random.normal(ks[0], (1, 2, 128, 64))
     k = jax.random.normal(ks[1], (1, 1, 128, 64))
@@ -127,3 +187,9 @@ def test_ops_wrappers_jit():
                          jax.random.normal(ks[3], (5, 64)),
                          jax.random.normal(ks[3], (2, 64)))
     assert s.shape == (2, 8, 5)
+    a1, a2 = dueling_select_op(jax.random.normal(ks[3], (8, 64)),
+                               jax.random.normal(ks[3], (5, 64)),
+                               jax.random.normal(ks[3], (2, 64)),
+                               distinct=True)
+    assert a1.shape == a2.shape == (8,)
+    assert (np.asarray(a1) != np.asarray(a2)).all()

@@ -1,0 +1,206 @@
+"""Tests for the unified batched RoutingPolicy protocol (core/policy.py):
+single-scatter ring-buffer updates, batched selection, and the generic env
+loop driving every policy implementation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, env, extensions as ext, fgts, policy
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _cfg(**kw):
+    d = dict(n_models=5, dim=16, horizon=32, sgld_steps=3, sgld_minibatch=8)
+    d.update(kw)
+    return fgts.FGTSConfig(**d)
+
+
+def _batch(b, dim=16, k=5, key=KEY):
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (b, dim))
+    a1 = jax.random.randint(ks[1], (b,), 0, k)
+    a2 = jax.random.randint(ks[2], (b,), 0, k)
+    y = jnp.where(jax.random.uniform(ks[3], (b,)) < 0.5, 1.0, -1.0)
+    return x, a1, a2, y
+
+
+# ---------------------------------------------------------------------------
+# Batched update == B sequential observes (the single-scatter contract)
+# ---------------------------------------------------------------------------
+
+def _assert_states_equal(sa: fgts.FGTSState, sb: fgts.FGTSState):
+    np.testing.assert_allclose(np.asarray(sa.x), np.asarray(sb.x))
+    np.testing.assert_array_equal(np.asarray(sa.a1), np.asarray(sb.a1))
+    np.testing.assert_array_equal(np.asarray(sa.a2), np.asarray(sb.a2))
+    np.testing.assert_allclose(np.asarray(sa.y), np.asarray(sb.y))
+    assert int(sa.t) == int(sb.t)
+
+
+@pytest.mark.parametrize("t0,b", [
+    (0, 8),            # empty buffer, no wrap
+    (28, 8),           # wraps past horizon=32 mid-batch
+    (30, 32),          # B == H, t not aligned: every slot rewritten
+    (5, 40),           # B > H: only the last H survive
+    (65, 3),           # t already wrapped twice
+])
+def test_observe_batch_equals_sequential(t0, b):
+    cfg = _cfg()
+    st0 = fgts.init_state(cfg, KEY)
+    # advance to t0 with sequential writes
+    for i in range(t0):
+        st0 = fgts.observe(st0, jnp.full((cfg.dim,), float(i)),
+                           jnp.int32(i % cfg.n_models), jnp.int32(0),
+                           jnp.float32(1.0))
+    x, a1, a2, y = _batch(b, cfg.dim, cfg.n_models)
+    seq = st0
+    for i in range(b):
+        seq = fgts.observe(seq, x[i], a1[i], a2[i], y[i])
+    bat = fgts.observe_batch(st0, x, a1, a2, y)
+    _assert_states_equal(seq, bat)
+
+
+def test_observe_batch_jits_and_scatters_once():
+    """The batched write is one fused XLA program (no Python loop)."""
+    cfg = _cfg()
+    st0 = fgts.init_state(cfg, KEY)
+    x, a1, a2, y = _batch(12, cfg.dim, cfg.n_models)
+    out = jax.jit(fgts.observe_batch)(st0, x, a1, a2, y)
+    assert int(out.t) == 12
+    hlo = jax.jit(fgts.observe_batch).lower(st0, x, a1, a2, y).as_text()
+    assert "while" not in hlo     # single scatter, not a scanned loop
+
+
+def test_mixed_observe_batch_equals_sequential():
+    cfg = _cfg()
+    h0 = ext.init_mixed(cfg)
+    x, a1, a2, y = _batch(10, cfg.dim, cfg.n_models)
+    duel = jnp.asarray([i % 2 == 0 for i in range(10)])
+    seq = h0
+    for i in range(10):
+        seq = ext.observe_mixed(seq, x[i], a1[i], a2[i], y[i], duel[i])
+    bat = ext.observe_mixed_batch(h0, x, a1, a2, y, duel)
+    np.testing.assert_allclose(np.asarray(seq.x), np.asarray(bat.x))
+    np.testing.assert_array_equal(np.asarray(seq.is_duel),
+                                  np.asarray(bat.is_duel))
+    assert int(seq.t) == int(bat.t)
+
+
+def test_sgld_loop_samples_only_valid_slots_after_wraparound():
+    """Regression: once t > horizon, minibatch indices must stay inside the
+    ring ([0, H)) — sampling in [0, t) would clamp gathers to slot H-1 and
+    bias the posterior."""
+    cfg = _cfg(horizon=8, sgld_steps=12, sgld_minibatch=64, sgld_temp=0.0,
+               sgld_eps=1.0)
+    # zero-temperature chain whose gradient fires only on an OOB index
+    grad = lambda th, idx: jnp.full_like(
+        th, jnp.any(idx >= 8).astype(jnp.float32))
+    theta = fgts.sgld_loop(KEY, jnp.zeros((4,)), grad,
+                           n_obs=jnp.int32(100), capacity=8, cfg=cfg)
+    np.testing.assert_allclose(np.asarray(theta), 0.0)
+    # and below capacity the bound is t, not H: idx >= t must never fire
+    grad2 = lambda th, idx: jnp.full_like(
+        th, jnp.any(idx >= 3).astype(jnp.float32))
+    theta2 = fgts.sgld_loop(KEY, jnp.zeros((4,)), grad2,
+                            n_obs=jnp.int32(3), capacity=8, cfg=cfg)
+    np.testing.assert_allclose(np.asarray(theta2), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Protocol conformance: every policy acts/updates over a batch
+# ---------------------------------------------------------------------------
+
+def _all_policies(a_emb, cfg):
+    m, d = cfg.n_models, cfg.dim
+    return [
+        policy.fgts_policy(a_emb, cfg),
+        policy.fgts_policy(a_emb, dataclasses.replace(cfg, n_chains=3)),
+        policy.vanilla_ts_policy(a_emb, cfg),
+        baselines.uniform_policy(m),
+        baselines.best_fixed_policy(jnp.linspace(0, 1, m)),
+        baselines.eps_greedy_policy(
+            a_emb, baselines.EpsGreedyConfig(n_models=m, dim=d)),
+        baselines.linucb_duel_policy(
+            a_emb, baselines.LinUCBConfig(n_models=m, dim=d)),
+        ext.mixed_feedback_policy(a_emb, cfg),
+        ext.pl_pair_policy(a_emb, cfg),
+    ]
+
+
+def test_all_policies_speak_the_batched_protocol():
+    cfg = _cfg()
+    a_emb = jax.random.normal(KEY, (cfg.n_models, cfg.dim))
+    x, _, _, y = _batch(6, cfg.dim, cfg.n_models)
+    for pol in _all_policies(a_emb, cfg):
+        state = pol.init(KEY)
+        state, a1, a2 = jax.jit(pol.act)(jax.random.fold_in(KEY, 1), state, x)
+        assert a1.shape == a2.shape == (6,), pol.name
+        assert a1.dtype == jnp.int32, pol.name
+        assert (np.asarray(a1) >= 0).all() and \
+            (np.asarray(a1) < cfg.n_models).all(), pol.name
+        state = jax.jit(pol.update)(state, x, a1, a2, y)
+        # state stays a valid pytree for checkpointing
+        assert len(jax.tree.leaves(state)) >= 1, pol.name
+
+
+def test_fgts_policy_warm_starts_chains():
+    cfg = _cfg(n_chains=2)
+    a_emb = jax.random.normal(KEY, (cfg.n_models, cfg.dim))
+    pol = policy.fgts_policy(a_emb, cfg)
+    state = pol.init(KEY)
+    assert state.theta1.shape == (2, cfg.dim)
+    x, _, _, _ = _batch(4, cfg.dim, cfg.n_models)
+    st1, _, _ = pol.act(KEY, state, x)
+    st2, _, _ = pol.act(jax.random.fold_in(KEY, 1), st1, x)
+    # chains moved both rounds (warm start, not reinit)
+    assert not np.allclose(np.asarray(st1.theta1), np.asarray(state.theta1))
+    assert not np.allclose(np.asarray(st2.theta1), np.asarray(st1.theta1))
+
+
+def test_select_pair_kernel_matches_ref():
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (17, 24))
+    a = jax.random.normal(ks[1], (6, 24))
+    th1 = jax.random.normal(ks[2], (24,))
+    th2 = jax.random.normal(ks[3], (24,))
+    tilt = jnp.linspace(0, 0.5, 6)
+    for distinct in (False, True):
+        k1, k2 = policy.select_pair(x, a, th1, th2, tilt=tilt,
+                                    distinct=distinct, use_kernel=True)
+        r1, r2 = policy.select_pair(x, a, th1, th2, tilt=tilt,
+                                    distinct=distinct, use_kernel=False)
+        np.testing.assert_array_equal(np.asarray(k1), np.asarray(r1))
+        np.testing.assert_array_equal(np.asarray(k2), np.asarray(r2))
+        if distinct:
+            assert (np.asarray(k1) != np.asarray(k2)).all()
+
+
+def test_cost_tilt_shifts_selection():
+    ks = jax.random.split(KEY, 3)
+    x = jnp.abs(jax.random.normal(ks[0], (32, 16))) + 0.1
+    a = jnp.abs(jax.random.normal(ks[1], (4, 16))) + 0.1
+    th = jnp.abs(jax.random.normal(ks[2], (16,))) + 0.1
+    costs = jnp.asarray([0.0, 1.0, 2.0, 3.0])
+    a1_free, _ = policy.select_pair(x, a, th, th)
+    a1_tilt, _ = policy.select_pair(
+        x, a, th, th, tilt=policy.cost_tilt_vector(costs, 100.0))
+    assert float(costs[a1_tilt].mean()) <= float(costs[a1_free].mean())
+    assert (np.asarray(a1_tilt) == 0).all()    # huge tilt => cheapest arm
+
+
+# ---------------------------------------------------------------------------
+# Env loop equivalences
+# ---------------------------------------------------------------------------
+
+def test_env_run_batched_update_matches_observe_count():
+    cfg = _cfg(horizon=16)          # horizon < T: ring wraps inside the scan
+    a_emb = jax.random.normal(KEY, (cfg.n_models, cfg.dim))
+    e = env.EnvData(x=jax.random.normal(KEY, (24, cfg.dim)),
+                    utils=jax.random.uniform(KEY, (24, cfg.n_models)))
+    cum, state = env.run(KEY, e, policy.fgts_policy(a_emb, cfg), batch=4)
+    assert cum.shape == (24,)
+    assert int(state.t) == 24
+    assert (np.diff(np.asarray(cum)) >= -1e-6).all()

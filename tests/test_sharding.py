@@ -19,7 +19,7 @@ from repro.sharding import rules
 
 def fake_mesh(shape=(16, 16), axes=("data", "model")):
     """Abstract mesh for spec construction (no devices needed)."""
-    return jax.sharding.AbstractMesh(shape, axes)
+    return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
 
 
 @pytest.mark.parametrize("arch", sorted(ARCHS))

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.contrastive import finetune_categorical, pretrain_generic
-from repro.core import ccft, env, fgts, regret
+from repro.core import ccft, env, fgts, policy, regret
 from repro.data import pipeline
 from repro.data import routerbench as rb
 from repro.data.synth import CorpusConfig, make_split
@@ -72,7 +72,8 @@ def test_online_fgts_on_pipeline_env(tiny_world):
     cfg = fgts.FGTSConfig(n_models=rb.N_MODELS, dim=e.x.shape[1],
                           horizon=e.x.shape[0], sgld_steps=5,
                           sgld_minibatch=16)
-    cum, state = jax.jit(lambda k: env.run_fgts(k, e, a, cfg))(KEY)
+    pol = policy.fgts_policy(a, cfg)
+    cum, state = jax.jit(lambda k: env.run(k, e, pol))(KEY)
     assert cum.shape == (60,)
     assert np.isfinite(np.asarray(cum)).all()
     assert int(state.t) == 60
