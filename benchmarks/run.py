@@ -11,6 +11,8 @@ results/bench.csv). Mapping to the paper:
     fig2cd    bench_generalization  Fig. 2c/2d + Fig. 7 (unseen benchmark)
     fig3      bench_mixinstruct     Fig. 3 + Fig. 8 (MixInstruct)
     b3        bench_baselines       App. B.3 (MixLLM) + ablations
+    delayed   bench_delayed         regret vs feedback delay (async, beyond
+                                    the paper's synchronous protocol)
     kernels   bench_kernels         Pallas-vs-oracle numerics + timing
     roofline  roofline              EXPERIMENTS.md §Roofline source
 """
@@ -32,9 +34,9 @@ def main() -> None:
     if args.fast:
         os.environ["REPRO_RUNS"] = "2"
 
-    from . import (bench_baselines, bench_generalization, bench_kernels,
-                   bench_mixinstruct, bench_mmlu_naive, bench_routerbench,
-                   bench_scores_table, roofline)
+    from . import (bench_baselines, bench_delayed, bench_generalization,
+                   bench_kernels, bench_mixinstruct, bench_mmlu_naive,
+                   bench_routerbench, bench_scores_table, roofline)
     benches = {
         "tab1": bench_scores_table.run,
         "kernels": bench_kernels.run,
@@ -43,6 +45,7 @@ def main() -> None:
         "fig2cd": bench_generalization.run,
         "fig3": bench_mixinstruct.run,
         "b3": bench_baselines.run,
+        "delayed": bench_delayed.run,
         "roofline": roofline.run,
     }
     wanted = (args.only.split(",") if args.only else list(benches))

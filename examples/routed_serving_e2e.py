@@ -102,7 +102,7 @@ def main():
         cats = jax.random.randint(kc, (args.batch,), 0, n_cats)
         toks, mask = sample_queries(kq, cats, corpus)
         x = svc.embed(toks, mask)
-        a1, a2 = svc.route_batch(x)
+        a1, a2, tickets = svc.route_batch(x)
         spend += svc.spend(a1) + svc.spend(a2)
 
         if r % args.decode_every == 0:            # real generation path
@@ -116,7 +116,7 @@ def main():
         rows = jnp.arange(args.batch)
         y = sample_preference(kf, 8.0 * utils[rows, a1],
                               8.0 * utils[rows, a2])
-        svc.feedback_batch(x, a1, a2, y)
+        svc.feedback_batch(tickets, y)
         best = jnp.max(utils, axis=-1)
         regrets.append(float(jnp.mean(
             best - 0.5 * (utils[rows, a1] + utils[rows, a2]))))

@@ -13,6 +13,7 @@ batched act/update, exactly like the serving path.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, NamedTuple
 
 import jax
@@ -29,8 +30,52 @@ class EnvData(NamedTuple):
     feedback_scale: jax.Array = jnp.asarray(5.0)  # BTL sharpness
 
 
+@dataclasses.dataclass(frozen=True)
+class DelaySpec:
+    """Feedback-lag scenario for ``run``: when does a tick's feedback land?
+
+    A batch acted at tick s resolves at tick s + L with
+    ``L = clip(delay + Geometric(geom_p), 1, max_lag)`` (the geometric part
+    is 0 when ``geom_p`` is 0, i.e. a deterministic lag). The pending
+    batches live in a lag ring of ``max_lag + 1`` slots addressed by
+    resolve tick, so two batches scheduled onto the same slot overwrite —
+    the older one's feedback expires unseen, exactly like an over-capacity
+    ``PendingDuels`` buffer. ``delay=0, geom_p=0`` is the synchronous
+    act->update tick (the paper's loop) and bypasses the ring entirely.
+
+    When ``max_lag`` is None it defaults to ``delay`` for deterministic
+    lags and to ``delay + 16`` for geometric ones — note the truncation:
+    with small ``geom_p`` a sizeable tail of Geometric(p) draws exceeds 16
+    and is clipped to the cap, so set ``max_lag`` explicitly (e.g. a few
+    multiples of 1/p) when the tail matters.
+    """
+    delay: int = 0              # deterministic lag component (ticks)
+    geom_p: float = 0.0         # >0: extra Geometric(p) lag per tick
+    max_lag: int | None = None  # lag cap; ring holds max_lag + 1 slots
+                                # (default: delay, or delay+16 if geom)
+
+    @property
+    def trivial(self) -> bool:
+        return self.delay == 0 and self.geom_p == 0.0
+
+    @property
+    def cap(self) -> int:
+        if self.max_lag is not None:
+            return max(self.max_lag, 1)
+        return max(self.delay, 1) if self.geom_p == 0.0 \
+            else self.delay + 16
+
+
+def _as_delay(delay) -> DelaySpec:
+    if delay is None:
+        return DelaySpec()
+    if isinstance(delay, DelaySpec):
+        return delay
+    return DelaySpec(delay=int(delay))
+
+
 def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
-        batch: int = 1):
+        batch: int = 1, delay: DelaySpec | int | None = 0):
     """Run any RoutingPolicy over the stream. Returns (cum_regret (T,), state).
 
     Rounds are consumed ``batch`` at a time (trailing remainder dropped when
@@ -38,7 +83,16 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
     -> one batched update, the same shape as a serving tick. The returned
     curve is the per-query cumulative regret over all T' = T - T%batch
     queries, so batch=1 reproduces the paper's per-round curves.
+
+    ``delay`` decouples the update tick from the act tick: an int D (or a
+    ``DelaySpec``) holds each tick's feedback in a lag ring inside the same
+    ``lax.scan`` and folds it in D ticks later (stochastic lags via
+    ``DelaySpec.geom_p``). Regret is charged at act time, so curves across
+    delays are directly comparable. ``delay=0`` takes the original
+    synchronous path — bit-identical to the pre-delay loop. Policies with an
+    ``update_delayed`` (staleness-aware) path receive the batch age.
     """
+    spec = _as_delay(delay)
     t_total = env.x.shape[0] - env.x.shape[0] % batch
     if t_total == 0:
         raise ValueError(
@@ -51,18 +105,80 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
     k_init, k_loop = jax.random.split(key)
     state0 = policy.init(k_init)
     rows = jnp.arange(batch)
+    keys = jax.random.split(k_loop, n_steps)
 
-    def step(state, inp):
-        k, x_b, u_b = inp
-        k_act, k_fb = jax.random.split(k)
+    if spec.trivial:
+        def step(state, inp):
+            k, x_b, u_b = inp
+            k_act, k_fb = jax.random.split(k)
+            state, a1, a2 = policy.act(k_act, state, x_b)
+            y = sample_preference(k_fb, env.feedback_scale * u_b[rows, a1],
+                                  env.feedback_scale * u_b[rows, a2])
+            state = policy.update(state, x_b, a1, a2, y)
+            return state, jax.vmap(instant_regret)(u_b, a1, a2)
+
+        state, regrets = jax.lax.scan(step, state0, (keys, x, utils))
+        return jnp.cumsum(regrets.reshape(-1)), state
+
+    # -- delayed path: resolve(ring head) -> act -> schedule, one scan ------
+    r = spec.cap + 1                       # ring slots, addressed by due tick
+    dim = env.x.shape[-1]
+    ring0 = dict(
+        x=jnp.zeros((r, batch, dim), x.dtype),
+        a1=jnp.zeros((r, batch), jnp.int32),
+        a2=jnp.zeros((r, batch), jnp.int32),
+        y=jnp.zeros((r, batch), jnp.float32),
+        issued=jnp.zeros((r,), jnp.int32),
+        valid=jnp.zeros((r,), bool),
+    )
+
+    def delayed_step(carry, inp):
+        state, ring = carry
+        s, k, x_b, u_b = inp
+        k_act, k_fb, k_lag = jax.random.split(k, 3)
+
+        # 1. resolve: the slot due at tick s (lag <= cap < r guarantees any
+        #    valid entry here was scheduled for exactly this tick)
+        slot = s % r
+
+        def fold(st):
+            args = (st, ring["x"][slot], ring["a1"][slot], ring["a2"][slot],
+                    ring["y"][slot])
+            if policy.update_delayed is not None:
+                age = jnp.full((batch,), s - ring["issued"][slot], jnp.int32)
+                return policy.update_delayed(*args, age)
+            return policy.update(*args)
+
+        state = jax.lax.cond(ring["valid"][slot], fold, lambda st: st, state)
+        ring = dict(ring, valid=ring["valid"].at[slot].set(False))
+
+        # 2. act (regret charged now, whenever the feedback lands)
         state, a1, a2 = policy.act(k_act, state, x_b)
         y = sample_preference(k_fb, env.feedback_scale * u_b[rows, a1],
                               env.feedback_scale * u_b[rows, a2])
-        state = policy.update(state, x_b, a1, a2, y)
-        return state, jax.vmap(instant_regret)(u_b, a1, a2)
 
-    keys = jax.random.split(k_loop, n_steps)
-    state, regrets = jax.lax.scan(step, state0, (keys, x, utils))
+        # 3. schedule at s + L; an occupied slot is overwritten (the older
+        #    batch's feedback expires — capacity pressure, as in serving)
+        lag = jnp.asarray(spec.delay, jnp.int32)
+        if spec.geom_p > 0.0:
+            u = jax.random.uniform(k_lag, ())
+            lag = lag + jnp.floor(jnp.log1p(-u)
+                                  / jnp.log1p(-spec.geom_p)).astype(jnp.int32)
+        lag = jnp.clip(lag, 1, spec.cap)
+        w = (s + lag) % r
+        ring = dict(
+            x=ring["x"].at[w].set(x_b),
+            a1=ring["a1"].at[w].set(a1),
+            a2=ring["a2"].at[w].set(a2),
+            y=ring["y"].at[w].set(y),
+            issued=ring["issued"].at[w].set(s),
+            valid=ring["valid"].at[w].set(True),
+        )
+        return (state, ring), jax.vmap(instant_regret)(u_b, a1, a2)
+
+    steps = jnp.arange(n_steps, dtype=jnp.int32)
+    (state, _), regrets = jax.lax.scan(delayed_step, (state0, ring0),
+                                       (steps, keys, x, utils))
     return jnp.cumsum(regrets.reshape(-1)), state
 
 

@@ -35,11 +35,39 @@ from .ccft import phi
 
 
 class RoutingPolicy(NamedTuple):
-    """Batched policy protocol: pure functions, pytree state."""
+    """Batched policy protocol: pure functions, pytree state.
+
+    ``update_delayed`` is the optional staleness-aware update path for
+    async feedback: same contract as ``update`` plus a per-duel ``age``
+    (ticks between issue and resolution). Policies that leave it None get
+    plain ``update`` from every delayed-feedback driver (env lag ring,
+    ``RouterService`` pending-queue resolution) — age is simply ignored.
+    """
     init: Callable[[jax.Array], Any]
     act: Callable[[jax.Array, Any, jax.Array], tuple]
     update: Callable[[Any, jax.Array, jax.Array, jax.Array, jax.Array], Any]
     name: str = "policy"
+    update_delayed: Callable[..., Any] | None = None
+
+
+def staleness_weight(age: jax.Array, half_life: float) -> jax.Array:
+    """Exponential discount 2^(-age / half_life) for stale feedback."""
+    return jnp.exp2(-age.astype(jnp.float32) / half_life)
+
+
+def with_staleness(pol: "RoutingPolicy", half_life: float) -> "RoutingPolicy":
+    """Equip any policy with an age-discounted ``update_delayed``.
+
+    The duel label is shrunk toward 0 (soft label): y_eff = y * 2^(-age/hl).
+    Every policy in this repo consumes y through a BTL-style likelihood (or
+    LinUCB's (y±1)/2 pseudo-rewards), so a shrunk label uniformly means "a
+    weaker preference signal" — at age 0 the update is bit-identical to the
+    plain path, and ancient feedback degrades to uninformative.
+    """
+    def update_delayed(state, x, a1, a2, y, age):
+        return pol.update(state, x, a1, a2, y * staleness_weight(age,
+                                                                 half_life))
+    return pol._replace(update_delayed=update_delayed)
 
 
 # ---------------------------------------------------------------------------

@@ -72,6 +72,23 @@ def make_update_step(cfg: fgts.FGTSConfig, n_chains: int):
     return update_step
 
 
+def make_resolve_step(expiry: int | None = None):
+    """The async-feedback hot path: resolve a global batch of vote tickets
+    against the ``PendingDuels`` ring (one gather + one clearing scatter)
+    and hand back the surviving duel batch. The ring is replicated (it is a
+    lookup table addressed by ticket); the ticket/vote batch is the sharded
+    axis, like the routing batch it mirrors."""
+    from repro.serving import feedback_queue as fq
+
+    def resolve_step(qx, qa1, qa2, qticket, qissued, qvalid, next_ticket,
+                     tickets, y, now):
+        q = fq.PendingDuels(qx, qa1, qa2, qticket, qissued, qvalid,
+                            next_ticket)
+        q2, res = fq.resolve(q, tickets, y, now, max_age=expiry)
+        return q2.valid, res.x, res.a1, res.a2, res.y, res.age, res.ok
+    return resolve_step
+
+
 def make_encode_route_step(cost_tilt: float = 0.05):
     from repro.encoder.model import encode
     route = make_route_step(cost_tilt)
@@ -101,7 +118,8 @@ def _compile(fn, args, in_sh, mesh, name):
     return rec
 
 
-def run(global_batch: int, horizon: int = 65_536, out: str | None = None):
+def run(global_batch: int, horizon: int = 65_536, out: str | None = None,
+        feedback_delay: int = 0):
     sds = jax.ShapeDtypeStruct
     results = []
     for multi_pod in (False, True):
@@ -130,6 +148,20 @@ def run(global_batch: int, horizon: int = 65_536, out: str | None = None):
         in_sh = (P(), P(None), P(bx, None), P(bx), P(bx), P(bx), P(),
                  P(None, None))
         results.append(_compile(upd, args, in_sh, mesh, "update_step"))
+
+        # --- resolve_step (async feedback: tickets -> duel batch)
+        if feedback_delay > 0:
+            cap = min(global_batch * (feedback_delay + 1), 1 << 18)
+            qargs = (sds((cap, DIM), jnp.float32),
+                     sds((cap,), jnp.int32), sds((cap,), jnp.int32),
+                     sds((cap,), jnp.int32), sds((cap,), jnp.int32),
+                     sds((cap,), jnp.bool_), sds((), jnp.int32),
+                     sds((global_batch,), jnp.int32),
+                     sds((global_batch,), jnp.float32), sds((), jnp.int32))
+            q_sh = (P(None, None), P(None), P(None), P(None), P(None),
+                    P(None), P(), P(bx), P(bx), P())
+            results.append(_compile(make_resolve_step(), qargs, q_sh, mesh,
+                                    "resolve_step"))
 
         # --- encode + route (full service path)
         from repro.encoder.model import init_encoder
@@ -163,8 +195,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=65_536)
     ap.add_argument("--out", default="results/router_dryrun.json")
+    ap.add_argument("--feedback-delay", type=int, default=1,
+                    help="also lower the ticket-resolution step sized for "
+                         "this many rounds of in-flight duels (0 = skip)")
     args = ap.parse_args()
-    run(args.batch, out=args.out)
+    run(args.batch, out=args.out, feedback_delay=args.feedback_delay)
 
 
 if __name__ == "__main__":

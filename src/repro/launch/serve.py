@@ -78,6 +78,13 @@ def main():
                     help="actually decode from the two routed models")
     ap.add_argument("--policy", choices=sorted(POLICIES), default="fgts",
                     help="RoutingPolicy serving the pool")
+    ap.add_argument("--feedback-delay", type=int, default=0,
+                    help="rounds between a duel being issued and its vote "
+                         "arriving (0 = synchronous act->update ticks)")
+    ap.add_argument("--feedback-expiry", type=int, default=None,
+                    help="drop votes older than this many rounds")
+    ap.add_argument("--stale-half-life", type=float, default=None,
+                    help="age-discount half-life (rounds) for stale votes")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -96,7 +103,9 @@ def main():
     svc = RouterService(pool, enc_params, enc_cfg,
                         RouterServiceConfig(fgts=fcfg, cost_tilt=0.0,
                                             policy_factory=POLICIES[
-                                                args.policy]))
+                                                args.policy],
+                                            feedback_expiry=args.feedback_expiry,
+                                            stale_half_life=args.stale_half_life))
 
     # reduced candidate models (actual generation path)
     gen_models = {}
@@ -107,6 +116,7 @@ def main():
 
     cc = CorpusConfig(n_categories=n_cats, seq_len=32)
     regrets = []
+    in_flight = []            # (due_round, tickets, y) — votes on their way
     t0 = time.time()
     for r in range(args.rounds):
         kq, kc, kf = jax.random.split(jax.random.fold_in(ks[3], r), 3)
@@ -114,7 +124,7 @@ def main():
         from repro.data.synth import sample_queries
         toks, mask = sample_queries(kq, cats, cc)
         x = svc.embed(toks, mask)
-        a1, a2 = svc.route_batch(x)
+        a1, a2, tickets = svc.route_batch(x)
         if args.with_generation:
             for b in range(min(args.batch, 2)):   # decode a couple per round
                 for arm in (int(a1[b]), int(a2[b])):
@@ -125,17 +135,32 @@ def main():
         utils = skills[:, cats].T                  # (B, K)
         y = sample_preference(kf, 8.0 * utils[jnp.arange(args.batch), a1],
                               8.0 * utils[jnp.arange(args.batch), a2])
-        svc.feedback_batch(x, a1, a2, y)
+        if args.feedback_delay == 0:
+            svc.feedback_batch(tickets, y)
+        else:
+            in_flight.append((r + args.feedback_delay, tickets, y))
+        # votes issued --feedback-delay rounds ago land at the end of this
+        # round (so a D-round lag resolves at service age exactly D, the
+        # same bookkeeping as env.run's lag ring; the env loop folds the
+        # due batch in just *before* its round's act instead — one round of
+        # scheduling skew, identical ages)
+        due = [f for f in in_flight if f[0] <= r]
+        in_flight = [f for f in in_flight if f[0] > r]
+        for _, due_tickets, due_y in due:
+            svc.feedback_batch(due_tickets, due_y)
+        svc.expire_pending()
         best = jnp.max(utils, axis=-1)
         reg = jnp.mean(best - 0.5 * (utils[jnp.arange(args.batch), a1]
                                      + utils[jnp.arange(args.batch), a2]))
         regrets.append(float(reg))
         print(f"[serve] round {r}: batch-regret={regrets[-1]:.4f} "
-              f"cost=${svc.spend(a1):.3f} ({time.time()-t0:.1f}s)")
+              f"cost=${svc.spend(a1):.3f} pending={svc.pending_count()} "
+              f"({time.time()-t0:.1f}s)")
     early = np.mean(regrets[:max(args.rounds // 4, 1)])
     late = np.mean(regrets[-max(args.rounds // 4, 1):])
     print(f"[serve] regret early={early:.4f} late={late:.4f} "
-          f"(adaptive: {'yes' if late < early else 'no'})")
+          f"(adaptive: {'yes' if late < early else 'no'}) "
+          f"unresolved={svc.pending_count()}")
 
 
 if __name__ == "__main__":

@@ -1,1 +1,3 @@
+from .feedback_queue import (PendingDuels, ResolvedDuels, enqueue, expire,
+                             init_pending, pending_count, resolve)
 from .router_service import PoolEntry, RouterService, RouterServiceConfig

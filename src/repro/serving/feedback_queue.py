@@ -1,0 +1,136 @@
+"""Fixed-capacity pending-duels buffer — the async-feedback subsystem.
+
+In production, preference feedback never arrives in lockstep with routing
+decisions: users vote seconds-to-hours after the two candidates answered.
+``PendingDuels`` decouples the act tick from the update tick. ``route_batch``
+*issues* duels (one scatter into the buffer, one monotonically increasing
+int32 ticket per duel); whenever votes come back — out of order, partially,
+or never — ``resolve`` looks the tickets up (one gather), validates them
+against the live slots, and hands the (x, a1, a2, y, age) batch to the
+policy's update. Slots are addressed ``ticket % capacity``, so the buffer is
+a ring: when more than ``capacity`` duels are in flight the oldest
+unresolved ones are overwritten and their tickets simply stop validating —
+expiry by overwrite, no garbage collection pass needed. ``expire`` adds
+explicit age-based expiry for deployments with a feedback SLA.
+
+Everything here is shape-static pure pytree code: it jits, shards, vmaps,
+and checkpoints exactly like the policy state it sits next to.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fgts import ring_slots
+
+
+class PendingDuels(NamedTuple):
+    """Ring buffer of issued-but-unresolved duels (slot = ticket % C)."""
+    x: jax.Array            # (C, d) float32 — query features at issue time
+    a1: jax.Array           # (C,)  int32   — routed pair
+    a2: jax.Array           # (C,)  int32
+    ticket: jax.Array       # (C,)  int32   — full ticket id holding the slot
+    issued_at: jax.Array    # (C,)  int32   — service tick at issue
+    valid: jax.Array        # (C,)  bool    — slot holds an unresolved duel
+    next_ticket: jax.Array  # ()    int32   — tickets issued so far
+
+
+class ResolvedDuels(NamedTuple):
+    """Gathered feedback batch: rows where ``ok`` is False are stale/unknown
+    tickets (already resolved, expired, or overwritten) and must be dropped
+    before the policy update."""
+    x: jax.Array            # (B, d)
+    a1: jax.Array           # (B,)
+    a2: jax.Array           # (B,)
+    y: jax.Array            # (B,)  caller's votes, passed through
+    age: jax.Array          # (B,)  int32 — now - issued_at
+    ok: jax.Array           # (B,)  bool
+
+
+def init_pending(capacity: int, dim: int) -> PendingDuels:
+    z = jnp.zeros
+    return PendingDuels(
+        x=z((capacity, dim), jnp.float32),
+        a1=z((capacity,), jnp.int32),
+        a2=z((capacity,), jnp.int32),
+        ticket=jnp.full((capacity,), -1, jnp.int32),
+        issued_at=z((capacity,), jnp.int32),
+        valid=z((capacity,), bool),
+        next_ticket=z((), jnp.int32),
+    )
+
+
+def enqueue(q: PendingDuels, x: jax.Array, a1: jax.Array, a2: jax.Array,
+            now: jax.Array) -> tuple[PendingDuels, jax.Array]:
+    """Issue a batch of B duels: one scatter per field, tickets returned.
+
+    Slots are ``ticket % capacity`` so a full buffer silently overwrites the
+    oldest in-flight duels (their tickets stop validating — expiry by
+    overwrite). When B itself exceeds the capacity only the last C of the
+    batch can survive; the earlier tickets are issued already-expired
+    (mirrors ``fgts.ring_slots``, which also keeps the scatter indices
+    unique).
+    """
+    b = x.shape[0]
+    cap = q.x.shape[0]
+    tickets = q.next_ticket + jnp.arange(b, dtype=jnp.int32)
+    drop, idx = ring_slots(q.next_ticket, cap, b)
+    now = jnp.asarray(now, jnp.int32)
+    return q._replace(
+        x=q.x.at[idx].set(x[drop:]),
+        a1=q.a1.at[idx].set(a1[drop:].astype(jnp.int32)),
+        a2=q.a2.at[idx].set(a2[drop:].astype(jnp.int32)),
+        ticket=q.ticket.at[idx].set(tickets[drop:]),
+        issued_at=q.issued_at.at[idx].set(jnp.full((b - drop,), now,
+                                                   jnp.int32)),
+        valid=q.valid.at[idx].set(True),
+        next_ticket=q.next_ticket + b,
+    ), tickets
+
+
+def resolve(q: PendingDuels, tickets: jax.Array, y: jax.Array,
+            now: jax.Array, max_age: int | None = None
+            ) -> tuple[PendingDuels, ResolvedDuels]:
+    """Look up a batch of tickets and clear the slots that validate.
+
+    A ticket validates iff its slot still holds it (``valid`` and the stored
+    ticket id matches — an overwritten or double-resolved ticket fails), and,
+    when ``max_age`` is set, the duel has not aged out. Any *matched* ticket
+    is consumed — a vote that arrives too late clears its slot (discarded,
+    ``ok`` False) rather than leaving a permanently unredeemable duel
+    counted as pending. One gather for the lookup, one scatter to clear;
+    tickets within one call are assumed unique (they come from ``enqueue``,
+    which never repeats ids).
+    """
+    cap = q.x.shape[0]
+    tickets = jnp.asarray(tickets, jnp.int32)
+    now = jnp.asarray(now, jnp.int32)
+    slots = tickets % cap
+    age = now - q.issued_at[slots]
+    matched = q.valid[slots] & (q.ticket[slots] == tickets)
+    ok = matched if max_age is None else matched & (age <= max_age)
+    # Commutative scatter-max marks consumed slots (duplicate-slot writes —
+    # an old ticket colliding with the live one — stay order-independent).
+    hit = jnp.zeros((cap,), jnp.int32).at[slots].max(
+        matched.astype(jnp.int32))
+    batch = ResolvedDuels(x=q.x[slots], a1=q.a1[slots], a2=q.a2[slots],
+                          y=jnp.asarray(y), age=age, ok=ok)
+    return q._replace(valid=q.valid & (hit == 0)), batch
+
+
+def expire(q: PendingDuels, now: jax.Array,
+           max_age: int) -> tuple[PendingDuels, jax.Array]:
+    """Drop every pending duel older than ``max_age`` ticks; returns the
+    count dropped (deployments with a feedback SLA run this periodically —
+    overwrite-expiry alone only kicks in at capacity pressure)."""
+    now = jnp.asarray(now, jnp.int32)
+    keep = (now - q.issued_at) <= max_age
+    dropped = jnp.sum(q.valid & ~keep)
+    return q._replace(valid=q.valid & keep), dropped
+
+
+def pending_count(q: PendingDuels) -> jax.Array:
+    """Number of in-flight (issued, unresolved, unexpired) duels."""
+    return jnp.sum(q.valid)

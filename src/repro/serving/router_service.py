@@ -7,6 +7,14 @@ amortized multi-chain SGLD refresh + the dueling_score kernel's argmax
 epilogue) and one jitted ``update`` per feedback batch (a single scatter
 into the replay ring — no Python per-item loop).
 
+Act and update run at independent cadences: ``route_batch`` issues every
+duel into a fixed-capacity ``PendingDuels`` ring (one scatter) and returns
+one int32 ticket per query; feedback arrives whenever users vote —
+``feedback_batch(tickets, y)`` resolves the tickets (one gather + one
+scatter to clear), drops stale/expired ones, and folds the rest into the
+policy. The pending buffer checkpoints alongside the posterior, so a
+restart never strands in-flight duels.
+
 The pool registry carries per-model cost metadata so selection can apply a
 cost-aware utility tilt at serve time (the paper's perf-cost trade-off
 knob). Any policy that speaks the protocol can serve: pass a
@@ -16,6 +24,7 @@ FGTS.CDB default.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Optional
 
 import jax
@@ -23,8 +32,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fgts
-from repro.core.policy import RoutingPolicy, fgts_policy
+from repro.core.policy import RoutingPolicy, fgts_policy, with_staleness
 from repro.encoder.model import EncoderConfig, encode
+from . import feedback_queue as fq
 
 
 @dataclasses.dataclass
@@ -43,6 +53,10 @@ class RouterServiceConfig:
     seed: int = 0
     # (a_emb, costs, cfg) -> RoutingPolicy; None = FGTS.CDB with cost tilt.
     policy_factory: Optional[Callable] = None
+    # -- async feedback -----------------------------------------------------
+    feedback_capacity: int = 1024  # max in-flight duels (ring: oldest expire)
+    feedback_expiry: Optional[int] = None   # max age in ticks; None = never
+    stale_half_life: Optional[float] = None  # age-discount stale votes
 
 
 class RouterService:
@@ -63,11 +77,23 @@ class RouterService:
         else:
             self.policy = fgts_policy(self.a_emb, cfg.fgts, costs=self.costs,
                                       cost_tilt=cfg.cost_tilt)
+        if cfg.stale_half_life is not None \
+                and self.policy.update_delayed is None:
+            self.policy = with_staleness(self.policy, cfg.stale_half_life)
         self._key = jax.random.PRNGKey(cfg.seed)
         self.state = self.policy.init(self._next_key())
+        self.pending = fq.init_pending(cfg.feedback_capacity,
+                                       self.a_emb.shape[1])
+        self.tick = 0                  # route_batch calls (the service clock)
         self.n_routed = 0
         self._act = jax.jit(self.policy.act)
         self._update = jax.jit(self.policy.update)
+        self._update_delayed = (jax.jit(self.policy.update_delayed)
+                                if self.policy.update_delayed is not None
+                                else None)
+        self._enqueue = jax.jit(fq.enqueue)
+        self._resolve = jax.jit(functools.partial(
+            fq.resolve, max_age=cfg.feedback_expiry))
 
     def _next_key(self):
         self._key, k = jax.random.split(self._key)
@@ -77,33 +103,111 @@ class RouterService:
         return encode(self.enc_params, tokens, mask, self.enc_cfg)
 
     def route_batch(self, x: jax.Array):
-        """x: (B, d) query features. Returns (a1 (B,), a2 (B,)) arm indices.
+        """x: (B, d) query features. Returns (a1 (B,), a2 (B,), tickets (B,)).
 
         One policy.act per batch: for FGTS.CDB that amortizes the SGLD
         posterior refresh over the whole batch and selects every pair in the
-        dueling_score kernel (cost tilt included).
+        dueling_score kernel (cost tilt included). Every issued duel enters
+        the ``PendingDuels`` ring (one scatter); hand each query's ticket
+        back with its responses and redeem it in ``feedback_batch`` whenever
+        the vote lands.
         """
         self.state, a1, a2 = self._act(self._next_key(), self.state, x)
+        # clock first, then issue at the new tick: feedback redeemed before
+        # the next routing round reports age 0 (so feedback_expiry=N means
+        # "survives N further rounds", matching env.run's lag-D => age-D)
+        self.tick += 1
+        self.pending, tickets = self._enqueue(
+            self.pending, x, a1, a2, jnp.asarray(self.tick, jnp.int32))
         self.n_routed += int(x.shape[0])
-        return a1, a2
+        return a1, a2, tickets
 
-    def feedback_batch(self, x: jax.Array, a1: jax.Array, a2: jax.Array,
-                       y: jax.Array):
-        """Fold a batch of observed duels into the policy state — one
-        jitted batched update (single replay-ring scatter for FGTS)."""
+    def feedback_batch(self, tickets: jax.Array, y: jax.Array) -> int:
+        """Resolve a batch of votes by ticket id and fold them in.
+
+        Out-of-order, partial, and duplicate deliveries are all fine:
+        resolution is one gather + one clearing scatter against the pending
+        ring, stale tickets (already resolved, expired, or overwritten under
+        capacity pressure) are dropped, and the surviving duels enter the
+        policy with one jitted batched update (the staleness-aware
+        ``update_delayed`` path when the policy has one). Returns the number
+        of duels actually folded in.
+        """
+        tickets = np.asarray(tickets, np.int32)
+        y = np.asarray(y, np.float32)
+        # a retried vote aggregated into one batch must not double-fold:
+        # keep each ticket's first delivery only (later duplicates would
+        # validate too — resolve's ok mask is computed against the pre-call
+        # buffer for every row)
+        _, first = np.unique(tickets, return_index=True)
+        if first.size != tickets.size:
+            first.sort()
+            tickets, y = tickets[first], y[first]
+        self.pending, res = self._resolve(
+            self.pending, jnp.asarray(tickets), jnp.asarray(y),
+            jnp.asarray(self.tick, jnp.int32))
+        ok = np.asarray(res.ok)
+        if not ok.any():
+            return 0
+        if ok.all():
+            x, a1, a2, yv, age = res.x, res.a1, res.a2, res.y, res.age
+        else:
+            # Compact away rejected rows (vectorized, host-side). Each new
+            # surviving count retraces the jitted update once — bounded by B
+            # shapes of a cheap program (the update is the ring scatter; the
+            # SGLD refresh lives in act). Padding instead would scatter junk
+            # rows into the replay ring, so compaction stays.
+            keep = np.flatnonzero(ok)
+            x, a1, a2, yv, age = (res.x[keep], res.a1[keep], res.a2[keep],
+                                  res.y[keep], res.age[keep])
+        if self._update_delayed is not None:
+            self.state = self._update_delayed(self.state, x, a1, a2, yv, age)
+        else:
+            self.state = self._update(self.state, x, a1, a2, yv)
+        return int(ok.sum())
+
+    def feedback_direct(self, x: jax.Array, a1: jax.Array, a2: jax.Array,
+                        y: jax.Array, tickets: jax.Array | None = None):
+        """Synchronous escape hatch: fold a feedback batch in directly,
+        bypassing the pending ring (callers that kept the duel data and
+        never let feedback lag — e.g. offline replay). Pass the batch's
+        ``tickets`` to also clear its ring slots; otherwise the issued
+        entries linger until overwritten, inflating ``pending_count`` and
+        the checkpointed buffer."""
+        if tickets is not None:
+            self.pending, _ = self._resolve(
+                self.pending, jnp.asarray(tickets, jnp.int32),
+                jnp.asarray(y, jnp.float32),
+                jnp.asarray(self.tick, jnp.int32))
         self.state = self._update(self.state, x, jnp.asarray(a1),
                                   jnp.asarray(a2), jnp.asarray(y))
+
+    def pending_count(self) -> int:
+        """In-flight duels (issued, unresolved, unexpired)."""
+        return int(fq.pending_count(self.pending))
+
+    def expire_pending(self) -> int:
+        """Age out pending duels past ``cfg.feedback_expiry`` (no-op when
+        unset). Returns the number dropped."""
+        if self.cfg.feedback_expiry is None:
+            return 0
+        self.pending, dropped = fq.expire(
+            self.pending, jnp.asarray(self.tick, jnp.int32),
+            self.cfg.feedback_expiry)
+        return int(dropped)
 
     def spend(self, arms: jax.Array, tokens_out: int = 1000) -> float:
         """Cost accounting for a batch of dispatches."""
         return float(jnp.sum(self.costs[arms]) * tokens_out / 1000.0)
 
-    # -- persistence (posterior + replay survive restarts) ------------------
+    # -- persistence (posterior + replay + in-flight duels survive restarts) -
 
     def save(self, path: str, step: int | None = None) -> str:
         from repro.checkpoint import save_checkpoint
         payload = {"state": self.state,
                    "key": self._key,
+                   "pending": self.pending,
+                   "tick": jnp.asarray(self.tick),
                    "n_routed": jnp.asarray(self.n_routed)}
         return save_checkpoint(path, step if step is not None
                                else self.n_routed, payload)
@@ -112,6 +216,7 @@ class RouterService:
         from repro.checkpoint import latest_step, restore_checkpoint
         step = latest_step(path) if step is None else step
         like = {"state": self.state, "key": self._key,
+                "pending": self.pending, "tick": jnp.asarray(self.tick),
                 "n_routed": jnp.asarray(self.n_routed)}
         try:
             payload = restore_checkpoint(path, step, like)
@@ -119,10 +224,12 @@ class RouterService:
             raise RuntimeError(
                 f"incompatible router checkpoint at {path} step {step}: "
                 f"structure/shape mismatch with policy "
-                f"'{self.policy.name}' (pre-RoutingPolicy checkpoints carry "
-                f"(dim,) thetas; current state holds (n_chains, dim)) — "
-                f"{e}") from e
+                f"'{self.policy.name}' (pre-async checkpoints lack the "
+                f"pending-duels buffer; pre-RoutingPolicy ones carry (dim,) "
+                f"thetas instead of (n_chains, dim)) — {e}") from e
         self.state = payload["state"]
         self._key = payload["key"]
+        self.pending = payload["pending"]
+        self.tick = int(payload["tick"])
         self.n_routed = int(payload["n_routed"])
         return step

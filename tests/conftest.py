@@ -23,6 +23,16 @@ def pytest_configure(config):
 
 try:
     import hypothesis  # noqa: F401
+
+    # CI profile: deterministic (derandomized) examples, no deadline — the
+    # interpret-forced tier-1 job runs every property test reproducibly.
+    # Activate with HYPOTHESIS_PROFILE=ci (or automatically under CI=).
+    hypothesis.settings.register_profile(
+        "ci", deadline=None, derandomize=True, max_examples=20,
+        print_blob=True)
+    if os.environ.get("HYPOTHESIS_PROFILE", "ci" if os.environ.get("CI")
+                      else "") == "ci":
+        hypothesis.settings.load_profile("ci")
 except ImportError:
     import random as _random
     import types

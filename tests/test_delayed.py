@@ -1,0 +1,336 @@
+"""Async/delayed feedback subsystem tests: the env lag ring, the
+PendingDuels ticket buffer, and the mid-flight serving checkpoint.
+
+Contracts pinned here:
+  * ``env.run(delay=0)`` is bit-identical to the synchronous loop;
+  * ``env.run`` with a fixed lag D matches a sequential Python reference
+    that applies each tick's feedback D ticks later;
+  * out-of-order resolution through ``PendingDuels`` reaches the same FGTS
+    replay-ring end state (as a multiset of rows) as in-order delivery;
+  * stale tickets — double-resolved, expired, or overwritten under
+    capacity pressure — are rejected and never touch the policy;
+  * a ``RouterService`` checkpointed mid-flight (unresolved duels pending)
+    resumes bit-identically to an uninterrupted service.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import env, fgts, policy
+from repro.core.btl import sample_preference
+from repro.serving import feedback_queue as fq
+
+KEY = jax.random.PRNGKey(5)
+
+
+def _cfg(**kw):
+    d = dict(n_models=4, dim=8, horizon=32, sgld_steps=2, sgld_minibatch=4)
+    d.update(kw)
+    return fgts.FGTSConfig(**d)
+
+
+def _world(t=24, cfg=None, key=KEY):
+    cfg = cfg or _cfg()
+    ks = jax.random.split(key, 3)
+    a_emb = jax.random.normal(ks[0], (cfg.n_models, cfg.dim))
+    e = env.EnvData(x=jax.random.normal(ks[1], (t, cfg.dim)),
+                    utils=jax.random.uniform(ks[2], (t, cfg.n_models)))
+    return e, a_emb, cfg
+
+
+def _state_leaves_equal(sa, sb):
+    for a, b in zip(jax.tree.leaves(sa), jax.tree.leaves(sb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# env.run delay knob
+# ---------------------------------------------------------------------------
+
+def test_env_run_delay_zero_bit_identical():
+    """delay=0 (int, None, or trivial DelaySpec) must reproduce the
+    synchronous loop bit-for-bit — the PR 2 acceptance criterion."""
+    e, a_emb, cfg = _world()
+    pol = policy.fgts_policy(a_emb, cfg)
+    cum0, st0 = env.run(KEY, e, pol, batch=2)
+    for delay in (0, None, env.DelaySpec()):
+        cum, st = env.run(KEY, e, pol, batch=2, delay=delay)
+        np.testing.assert_array_equal(np.asarray(cum0), np.asarray(cum))
+        _state_leaves_equal(st0, st)
+
+
+def test_env_run_fixed_delay_matches_sequential_reference():
+    """The lag ring inside the scan == a Python loop that resolves each
+    tick's feedback exactly D ticks later (same key-split schedule)."""
+    d_lag, batch = 2, 2
+    e, a_emb, cfg = _world(t=16)
+    pol = policy.fgts_policy(a_emb, cfg)
+    cum, st = jax.jit(
+        lambda k: env.run(k, e, pol, batch=batch, delay=d_lag))(KEY)
+
+    n_steps = e.x.shape[0] // batch
+    x = e.x.reshape(n_steps, batch, -1)
+    utils = e.utils.reshape(n_steps, batch, -1)
+    k_init, k_loop = jax.random.split(KEY)
+    state = pol.init(k_init)
+    keys = jax.random.split(k_loop, n_steps)
+    rows = jnp.arange(batch)
+    pending, regrets = {}, []
+    from repro.core.regret import instant_regret
+    for s in range(n_steps):
+        k_act, k_fb, _ = jax.random.split(keys[s], 3)
+        if s in pending:
+            state = pol.update(state, *pending.pop(s))
+        state, a1, a2 = pol.act(k_act, state, x[s])
+        y = sample_preference(k_fb, e.feedback_scale * utils[s][rows, a1],
+                              e.feedback_scale * utils[s][rows, a2])
+        pending[s + d_lag] = (x[s], a1, a2, y)
+        regrets.append(jax.vmap(instant_regret)(utils[s], a1, a2))
+    ref = np.cumsum(np.stack([np.asarray(r) for r in regrets]).reshape(-1))
+
+    np.testing.assert_allclose(np.asarray(cum), ref, rtol=1e-5, atol=1e-5)
+    assert int(st.t) == e.x.shape[0] - d_lag * batch  # tail never resolved
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_env_run_delay_works_for_all_policy_kinds():
+    """Delay is a scenario knob on the generic loop: every policy family
+    runs under it without a new code path (one lax.scan, cond'd update)."""
+    from repro.core import baselines, extensions as ext
+    e, a_emb, cfg = _world()
+    pols = [policy.fgts_policy(a_emb, cfg),
+            baselines.uniform_policy(cfg.n_models),
+            baselines.eps_greedy_policy(a_emb, baselines.EpsGreedyConfig(
+                n_models=cfg.n_models, dim=cfg.dim)),
+            baselines.linucb_duel_policy(a_emb, baselines.LinUCBConfig(
+                n_models=cfg.n_models, dim=cfg.dim)),
+            ext.pl_pair_policy(a_emb, cfg)]
+    spec = env.DelaySpec(delay=1, geom_p=0.3, max_lag=6)
+    for pol in pols:
+        for delay in (3, spec):
+            cum, _ = jax.jit(
+                lambda k, p=pol, d=delay: env.run(k, e, p, batch=2,
+                                                  delay=d))(KEY)
+            c = np.asarray(cum)
+            assert c.shape == (24,) and np.isfinite(c).all(), pol.name
+            assert (np.diff(c) >= -1e-6).all(), pol.name
+
+
+def test_env_run_delayed_uses_staleness_path():
+    """A policy with update_delayed gets ages through the lag ring: a tiny
+    half-life makes stale labels ~0, so the posterior stays prior-like
+    (update still runs — t advances — but the folded labels are shrunk)."""
+    e, a_emb, cfg = _world()
+    pol = policy.fgts_policy(a_emb, cfg)
+    stale = policy.with_staleness(pol, half_life=0.25)
+    _, st_plain = env.run(KEY, e, pol, batch=2, delay=4)
+    _, st_stale = env.run(KEY, e, stale, batch=2, delay=4)
+    assert int(st_plain.t) == int(st_stale.t)
+    y_plain = np.asarray(st_plain.y)[:int(st_plain.t)]
+    y_stale = np.asarray(st_stale.y)[:int(st_stale.t)]
+    assert np.abs(y_plain).min() == 1.0             # raw +-1 labels
+    assert np.abs(y_stale).max() < 1e-4             # age 4 @ hl 0.25 => ~0
+
+
+# ---------------------------------------------------------------------------
+# PendingDuels: out-of-order resolution == in-order (FGTS ring end state)
+# ---------------------------------------------------------------------------
+
+def _issue(q, cfg, n_batches, b, key=KEY):
+    xs, arms, tickets = [], [], []
+    for i in range(n_batches):
+        ks = jax.random.split(jax.random.fold_in(key, i), 3)
+        x = jax.random.normal(ks[0], (b, cfg.dim))
+        a1 = jax.random.randint(ks[1], (b,), 0, cfg.n_models)
+        a2 = (a1 + 1) % cfg.n_models
+        q, t = fq.enqueue(q, x, a1, a2, i)
+        xs.append(x)
+        arms.append((a1, a2))
+        tickets.append(t)
+    return q, xs, arms, tickets
+
+
+def _ring_multiset(st, n):
+    mat = np.concatenate(
+        [np.asarray(st.x)[:n], np.asarray(st.a1)[:n, None].astype(np.float32),
+         np.asarray(st.a2)[:n, None].astype(np.float32),
+         np.asarray(st.y)[:n, None]], axis=1)
+    return mat[np.lexsort(mat.T[::-1])]
+
+
+def test_out_of_order_resolution_matches_in_order_fgts_ring():
+    cfg = _cfg()
+    b, n_batches = 4, 3
+    orders = [(0, 1, 2), (2, 0, 1), (1, 2, 0)]
+    finals = []
+    for order in orders:
+        q = fq.init_pending(32, cfg.dim)
+        q, xs, arms, tickets = _issue(q, cfg, n_batches, b)
+        st = fgts.init_state(cfg, KEY)
+        for i in order:
+            y = jnp.full((b,), 1.0 if i % 2 == 0 else -1.0)
+            q, res = fq.resolve(q, tickets[i], y, n_batches)
+            assert np.asarray(res.ok).all()
+            np.testing.assert_array_equal(np.asarray(res.x),
+                                          np.asarray(xs[i]))
+            st = fgts.observe_batch(st, res.x, res.a1, res.a2, res.y)
+        assert int(st.t) == n_batches * b
+        assert int(fq.pending_count(q)) == 0
+        finals.append(_ring_multiset(st, n_batches * b))
+    np.testing.assert_array_equal(finals[0], finals[1])
+    np.testing.assert_array_equal(finals[0], finals[2])
+
+
+def test_stale_tickets_rejected_double_expired_overwritten():
+    cfg = _cfg()
+    q = fq.init_pending(8, cfg.dim)
+    q, xs, arms, tickets = _issue(q, cfg, 2, 4)    # fills capacity exactly
+    # double resolve
+    q, res = fq.resolve(q, tickets[0], jnp.ones(4), 2)
+    assert np.asarray(res.ok).all()
+    q, res = fq.resolve(q, tickets[0], jnp.ones(4), 2)
+    assert not np.asarray(res.ok).any()
+    # age-based expiry (max_age=3, issued at tick 1, resolved at tick 9):
+    # the late vote is discarded AND consumes the ticket — no dead slots
+    q, res = fq.resolve(q, tickets[1], jnp.ones(4), 9, max_age=3)
+    assert not np.asarray(res.ok).any()
+    assert int(fq.pending_count(q)) == 0           # matched => consumed
+    q, res = fq.resolve(q, tickets[1], jnp.ones(4), 9)
+    assert not np.asarray(res.ok).any()            # gone for good
+    # proactive expire() for never-redeemed duels
+    x4 = jnp.zeros((4, cfg.dim))
+    a4 = jnp.zeros((4,), jnp.int32)
+    q, t_aged = fq.enqueue(q, x4, a4, a4, 10)
+    q2, dropped = fq.expire(q, 20, 3)
+    assert int(dropped) == 4 and int(fq.pending_count(q2)) == 0
+    # capacity-pressure overwrite: 8 fresh duels evict the 4 still pending
+    x = jnp.zeros((8, cfg.dim))
+    a = jnp.zeros((8,), jnp.int32)
+    q, t_new = fq.enqueue(q, x, a, a, 21)
+    q, res = fq.resolve(q, t_aged, jnp.ones(4), 22)
+    assert not np.asarray(res.ok).any()            # overwritten => expired
+    q, res = fq.resolve(q, t_new, jnp.ones(8), 22)
+    assert np.asarray(res.ok).all()
+
+
+def test_enqueue_batch_larger_than_capacity_keeps_tail():
+    cfg = _cfg()
+    q = fq.init_pending(8, cfg.dim)
+    x = jnp.arange(12, dtype=jnp.float32)[:, None] * jnp.ones((12, cfg.dim))
+    a = jnp.zeros((12,), jnp.int32)
+    q, t = fq.enqueue(q, x, a, a, 0)
+    assert t.shape == (12,)
+    q, res = fq.resolve(q, t, jnp.ones(12), 1)
+    ok = np.asarray(res.ok)
+    assert (~ok[:4]).all() and ok[4:].all()        # first 4 issued-expired
+
+
+# ---------------------------------------------------------------------------
+# Mid-flight serving checkpoint: pending duels survive restarts
+# ---------------------------------------------------------------------------
+
+def _make_service(entries, enc, enc_cfg, fcfg):
+    from repro.serving import RouterService, RouterServiceConfig
+    return RouterService(entries, enc, enc_cfg,
+                         RouterServiceConfig(fgts=fcfg, feedback_capacity=32))
+
+
+def test_mid_flight_checkpoint_roundtrip_continues_identically(tmp_path):
+    from repro.encoder import EncoderConfig, init_encoder
+    from repro.serving import PoolEntry
+    enc_cfg = EncoderConfig(d_model=16, n_layers=1, n_heads=2, d_ff=32,
+                            max_len=8)
+    enc = init_encoder(KEY, enc_cfg)
+    entries = [PoolEntry(name=f"m{i}", arch="granite-3-2b",
+                         cost_per_1k_tokens=0.1,
+                         embedding=np.random.RandomState(i).randn(16)
+                         .astype(np.float32)) for i in range(3)]
+    fcfg = _cfg(n_models=3, dim=16, horizon=16)
+
+    svc = _make_service(entries, enc, enc_cfg, fcfg)
+    ks = jax.random.split(KEY, 4)
+    x0, x1, x2 = (jax.random.normal(k, (4, 16)) for k in ks[:3])
+    _, _, t0 = svc.route_batch(x0)
+    _, _, t1 = svc.route_batch(x1)                 # two batches in flight
+    assert svc.feedback_batch(t0, jnp.ones(4)) == 4
+    assert svc.pending_count() == 4                # t1 still unresolved
+    svc.save(str(tmp_path))
+
+    svc2 = _make_service(entries, enc, enc_cfg, fcfg)
+    svc2.restore(str(tmp_path))
+    assert svc2.pending_count() == 4 and svc2.tick == svc.tick
+
+    # both services continue with the identical sequence: late vote for the
+    # in-flight batch, then a fresh routing round
+    outs = []
+    for s in (svc, svc2):
+        assert s.feedback_batch(t1, -jnp.ones(4)) == 4
+        a1, a2, t2 = s.route_batch(x2)
+        outs.append((np.asarray(a1), np.asarray(a2), np.asarray(t2),
+                     s.state))
+    np.testing.assert_array_equal(outs[0][0], outs[1][0])
+    np.testing.assert_array_equal(outs[0][1], outs[1][1])
+    np.testing.assert_array_equal(outs[0][2], outs[1][2])
+    _state_leaves_equal(outs[0][3], outs[1][3])
+    assert int(outs[0][3].t) == 8
+
+
+def test_service_age_zero_duplicates_and_direct_path(tmp_path):
+    """Same-round redemption has age 0 (feedback_expiry=0 keeps it);
+    duplicate tickets within one vote batch fold exactly once; the
+    synchronous feedback_direct path clears ring slots when given tickets."""
+    from repro.encoder import EncoderConfig, init_encoder
+    from repro.serving import PoolEntry, RouterService, RouterServiceConfig
+    enc_cfg = EncoderConfig(d_model=16, n_layers=1, n_heads=2, d_ff=32,
+                            max_len=8)
+    enc = init_encoder(KEY, enc_cfg)
+    entries = [PoolEntry(name=f"m{i}", arch="granite-3-2b",
+                         cost_per_1k_tokens=0.1,
+                         embedding=np.random.RandomState(i).randn(16)
+                         .astype(np.float32)) for i in range(3)]
+    fcfg = _cfg(n_models=3, dim=16, horizon=16)
+    svc = RouterService(entries, enc, enc_cfg,
+                        RouterServiceConfig(fgts=fcfg, feedback_capacity=32,
+                                            feedback_expiry=0))
+    x = jax.random.normal(KEY, (4, 16))
+    _, _, t0 = svc.route_batch(x)
+    assert svc.feedback_batch(t0, jnp.ones(4)) == 4     # age 0 <= expiry 0
+    _, _, t1 = svc.route_batch(x)
+    svc.route_batch(x)                                  # t1 now age 1 > 0
+    assert svc.feedback_batch(t1, jnp.ones(4)) == 0
+
+    svc2 = RouterService(entries, enc, enc_cfg,
+                         RouterServiceConfig(fgts=fcfg, feedback_capacity=32))
+    a1, a2, t = svc2.route_batch(x)
+    dup = jnp.concatenate([t[:2], t[:2], t[2:]])        # retried votes
+    yd = jnp.ones((8,))
+    assert svc2.feedback_batch(dup, yd) == 4            # first delivery wins
+    assert int(svc2.state.t) == 4
+
+    b1, b2, t2 = svc2.route_batch(x)
+    svc2.feedback_direct(x, b1, b2, jnp.ones(4), tickets=t2)
+    assert int(svc2.state.t) == 8
+    assert svc2.pending_count() == 0                    # slots cleared
+
+
+def test_restore_rejects_pre_async_checkpoint(tmp_path):
+    """A checkpoint without the pending buffer must fail loudly, not load
+    garbage into the new serving state."""
+    from repro.checkpoint import save_checkpoint
+    from repro.encoder import EncoderConfig, init_encoder
+    from repro.serving import PoolEntry
+    enc_cfg = EncoderConfig(d_model=16, n_layers=1, n_heads=2, d_ff=32,
+                            max_len=8)
+    enc = init_encoder(KEY, enc_cfg)
+    entries = [PoolEntry(name=f"m{i}", arch="granite-3-2b",
+                         cost_per_1k_tokens=0.1,
+                         embedding=np.random.RandomState(i).randn(16)
+                         .astype(np.float32)) for i in range(3)]
+    svc = _make_service(entries, enc, enc_cfg, _cfg(n_models=3, dim=16))
+    save_checkpoint(str(tmp_path), 0, {"state": svc.state, "key": svc._key,
+                                       "n_routed": jnp.asarray(0)})
+    with pytest.raises(RuntimeError, match="pending"):
+        svc.restore(str(tmp_path), 0)

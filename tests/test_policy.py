@@ -160,22 +160,31 @@ def test_fgts_policy_warm_starts_chains():
     assert not np.allclose(np.asarray(st2.theta1), np.asarray(st1.theta1))
 
 
-def test_select_pair_kernel_matches_ref():
-    ks = jax.random.split(KEY, 4)
-    x = jax.random.normal(ks[0], (17, 24))
-    a = jax.random.normal(ks[1], (6, 24))
+# select_pair serves two backends: the Pallas kernel epilogue and the
+# matmul-identity XLA path used for sharded AOT compiles. Any drift between
+# them silently changes routing depending on which path a deployment takes —
+# pin argmax parity across the full option matrix, including the shapes that
+# exercise kernel padding (B > K, K > B, K below the 8-lane pad floor).
+@pytest.mark.parametrize("b,k", [(17, 6), (4, 12), (3, 2), (32, 8)])
+@pytest.mark.parametrize("with_tilt", [False, True])
+@pytest.mark.parametrize("distinct", [False, True])
+def test_select_pair_kernel_xla_parity(b, k, with_tilt, distinct):
+    ks = jax.random.split(jax.random.fold_in(KEY, 13 * b + k), 4)
+    x = jax.random.normal(ks[0], (b, 24))
+    a = jax.random.normal(ks[1], (k, 24))
     th1 = jax.random.normal(ks[2], (24,))
     th2 = jax.random.normal(ks[3], (24,))
-    tilt = jnp.linspace(0, 0.5, 6)
-    for distinct in (False, True):
-        k1, k2 = policy.select_pair(x, a, th1, th2, tilt=tilt,
-                                    distinct=distinct, use_kernel=True)
-        r1, r2 = policy.select_pair(x, a, th1, th2, tilt=tilt,
-                                    distinct=distinct, use_kernel=False)
-        np.testing.assert_array_equal(np.asarray(k1), np.asarray(r1))
-        np.testing.assert_array_equal(np.asarray(k2), np.asarray(r2))
-        if distinct:
-            assert (np.asarray(k1) != np.asarray(k2)).all()
+    tilt = jnp.linspace(0, 0.5, k) if with_tilt else None
+    k1, k2 = policy.select_pair(x, a, th1, th2, tilt=tilt,
+                                distinct=distinct, use_kernel=True)
+    r1, r2 = policy.select_pair(x, a, th1, th2, tilt=tilt,
+                                distinct=distinct, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(r1))
+    np.testing.assert_array_equal(np.asarray(k2), np.asarray(r2))
+    assert k1.dtype == k2.dtype == jnp.int32
+    assert (np.asarray(k1) < k).all() and (np.asarray(k2) < k).all()
+    if distinct:
+        assert (np.asarray(k1) != np.asarray(k2)).all()
 
 
 def test_cost_tilt_shifts_selection():

@@ -1,0 +1,211 @@
+"""Property-based conformance suite for the batched RoutingPolicy protocol.
+
+Every registered policy must honour the protocol's contracts, whatever its
+internals:
+
+  * ``act`` and ``update`` are pure: same key + state + inputs => bitwise
+    identical outputs (the env scan, vmapped seeds, and checkpoint resume
+    all silently assume this);
+  * the state pytree keeps a stable treedef and stable leaf shapes/dtypes
+    across rounds (``lax.scan`` carry and msgpack checkpoints both require
+    it);
+  * returned arms are int32, in [0, K), and distinct when the policy
+    guarantees distinct duels;
+  * ``update`` is permutation-invariant within a batch — feedback is a
+    *set* of duels, so delivery order inside one batch must not change the
+    learned state (exactly for aggregate-state policies, as a multiset of
+    replay rows for ring-buffered ones, whose posterior is an order-free
+    sum over the ring).
+
+Runs under real ``hypothesis`` when installed, or the deterministic
+fallback shim in conftest.py (which cannot combine ``@given`` with
+``pytest.mark.parametrize`` — hence the in-test loops over the registry).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import baselines, extensions as ext, fgts, policy
+
+KEY = jax.random.PRNGKey(7)
+N_MODELS, DIM, HORIZON = 4, 8, 16
+
+CFG = fgts.FGTSConfig(n_models=N_MODELS, dim=DIM, horizon=HORIZON,
+                      sgld_steps=2, sgld_minibatch=4)
+A_EMB = jax.random.normal(KEY, (N_MODELS, DIM))
+
+
+def _fgts_rows(state):
+    return state.x, state.a1, state.a2, state.y, state.t
+
+
+def _mixed_rows(state):
+    h = state[0]
+    return h.x, h.a1, h.a2, h.y, h.t
+
+
+# name -> (policy, distinct_guaranteed, perm_mode, ring_accessor)
+# perm_mode: how `update` commutes with a batch permutation —
+#   "exact": state bitwise equal; "close": equal up to fp reduction order;
+#   "ring": replay rows written this batch form the same multiset.
+POLICIES = {
+    "fgts": (policy.fgts_policy(A_EMB, CFG), False, "ring", _fgts_rows),
+    "fgts_distinct": (policy.fgts_policy(
+        A_EMB, dataclasses.replace(CFG, force_distinct=True, n_chains=2)),
+        True, "ring", _fgts_rows),
+    "vanilla_ts": (policy.vanilla_ts_policy(A_EMB, CFG), False, "ring",
+                   _fgts_rows),
+    "uniform": (baselines.uniform_policy(N_MODELS), True, "exact", None),
+    "best_fixed": (baselines.best_fixed_policy(
+        jnp.linspace(0.0, 1.0, N_MODELS)), False, "exact", None),
+    "eps_greedy": (baselines.eps_greedy_policy(
+        A_EMB, baselines.EpsGreedyConfig(n_models=N_MODELS, dim=DIM)),
+        True, "close", None),
+    "linucb_duel": (baselines.linucb_duel_policy(
+        A_EMB, baselines.LinUCBConfig(n_models=N_MODELS, dim=DIM)),
+        True, "close", None),
+    "mixed_feedback": (ext.mixed_feedback_policy(A_EMB, CFG), True, "ring",
+                       _mixed_rows),
+    "pl_pair": (ext.pl_pair_policy(A_EMB, CFG), True, "ring", _fgts_rows),
+}
+
+# One jitted act/update per policy, shared by every property below: the
+# protocol is consumed jitted everywhere (env scan, RouterService), and the
+# shared executable cache keeps the suite fast across examples.
+JITTED = {name: (jax.jit(p.act), jax.jit(p.update))
+          for name, (p, _, _, _) in POLICIES.items()}
+
+
+def _batch(b, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (b, DIM))
+    a1 = jax.random.randint(ks[1], (b,), 0, N_MODELS)
+    a2 = (a1 + 1 + jax.random.randint(ks[2], (b,), 0, N_MODELS - 1)) \
+        % N_MODELS
+    y = jnp.where(jax.random.uniform(ks[3], (b,)) < 0.5, 1.0, -1.0)
+    return x, a1, a2, y
+
+
+def _leaves_equal(ta, tb, exact=True, msg=""):
+    la, lb = jax.tree.leaves(ta), jax.tree.leaves(tb)
+    assert len(la) == len(lb), msg
+    for a, b in zip(la, lb):
+        if exact:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=msg)
+        else:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6, err_msg=msg)
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(1, 4), st.integers(0, 10_000))
+def test_act_and_update_are_pure(b, seed):
+    x, a1, a2, y = _batch(b, seed)
+    for name, (pol, _, _, _) in POLICIES.items():
+        act, update = JITTED[name]
+        state = pol.init(KEY)
+        k = jax.random.fold_in(KEY, seed)
+        s1, p1, q1 = act(k, state, x)
+        s2, p2, q2 = act(k, state, x)
+        _leaves_equal((s1, p1, q1), (s2, p2, q2), msg=f"{name}.act")
+        u1 = update(state, x, a1, a2, y)
+        u2 = update(state, x, a1, a2, y)
+        _leaves_equal(u1, u2, msg=f"{name}.update")
+
+
+@settings(max_examples=2, deadline=None)
+@given(st.integers(0, 10_000))
+def test_state_pytree_structure_is_stable(seed):
+    """treedef + leaf shapes/dtypes must survive act/update rounds — the
+    lax.scan carry contract and the checkpoint restore contract."""
+    for name, (pol, _, _, _) in POLICIES.items():
+        act, update = JITTED[name]
+        state = pol.init(KEY)
+        ref_def = jax.tree.structure(state)
+        ref_leaves = [(l.shape, l.dtype) for l in jax.tree.leaves(state)]
+        for r in range(3):
+            x, a1, a2, y = _batch(4, seed + r)
+            state, p, q = act(jax.random.fold_in(KEY, r), state, x)
+            state = update(state, x, p, q, y)
+            assert jax.tree.structure(state) == ref_def, name
+            assert [(l.shape, l.dtype) for l in jax.tree.leaves(state)] \
+                == ref_leaves, name
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(1, 4), st.integers(0, 10_000))
+def test_arms_in_range_int32_and_distinct(b, seed):
+    x, _, _, _ = _batch(b, seed)
+    for name, (pol, distinct, _, _) in POLICIES.items():
+        state = pol.init(KEY)
+        _, a1, a2 = JITTED[name][0](jax.random.fold_in(KEY, seed), state, x)
+        for a in (a1, a2):
+            assert a.shape == (b,) and a.dtype == jnp.int32, name
+            an = np.asarray(a)
+            assert (an >= 0).all() and (an < N_MODELS).all(), name
+        if distinct:
+            assert (np.asarray(a1) != np.asarray(a2)).all(), name
+
+
+def _ring_multiset(rows, lo, hi):
+    """Canonical sorted view of replay rows [lo, hi) for multiset equality."""
+    x, a1, a2, y, _ = rows
+    mat = np.concatenate([np.asarray(x)[lo:hi],
+                          np.asarray(a1)[lo:hi, None].astype(np.float32),
+                          np.asarray(a2)[lo:hi, None].astype(np.float32),
+                          np.asarray(y)[lo:hi, None]], axis=1)
+    return mat[np.lexsort(mat.T[::-1])]
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 10_000))
+def test_update_is_permutation_invariant_within_batch(b, seed):
+    """A feedback batch is a set: permuting it must not change what was
+    learned. Aggregate-state policies match (bitwise / up to fp reduction
+    order); ring policies keep the same multiset of written replay rows and
+    identical non-ring leaves (the posterior is an order-free sum over the
+    ring, cf. fgts._potential)."""
+    perm = np.random.RandomState(seed).permutation(b)
+    for name, (pol, _, mode, rows_of) in POLICIES.items():
+        x, a1, a2, y = _batch(b, seed)
+        update = JITTED[name][1]
+        state = pol.init(KEY)
+        s_fwd = update(state, x, a1, a2, y)
+        s_perm = update(state, x[perm], a1[perm], a2[perm], y[perm])
+        if mode == "exact":
+            _leaves_equal(s_fwd, s_perm, msg=name)
+        elif mode == "close":
+            _leaves_equal(s_fwd, s_perm, exact=False, msg=name)
+        else:
+            rows_f, rows_p = rows_of(s_fwd), rows_of(s_perm)
+            assert int(rows_f[-1]) == int(rows_p[-1]) == b, name
+            np.testing.assert_array_equal(_ring_multiset(rows_f, 0, b),
+                                          _ring_multiset(rows_p, 0, b),
+                                          err_msg=name)
+
+
+def test_update_delayed_at_age_zero_matches_plain_update():
+    """The staleness-aware path is a strict extension: age 0 => the plain
+    update, bitwise, for every policy wrapped with with_staleness."""
+    b = 5
+    x, a1, a2, y = _batch(b, 3)
+    for name, (pol, _, _, _) in POLICIES.items():
+        wrapped = policy.with_staleness(pol, half_life=8.0)
+        state = pol.init(KEY)
+        zero = jnp.zeros((b,), jnp.int32)
+        _leaves_equal(wrapped.update_delayed(state, x, a1, a2, y, zero),
+                      pol.update(state, x, a1, a2, y), msg=name)
+
+
+def test_staleness_weight_discounts_towards_uninformative():
+    ages = jnp.asarray([0, 4, 8, 64], jnp.int32)
+    w = np.asarray(policy.staleness_weight(ages, half_life=8.0))
+    assert w[0] == 1.0
+    assert np.all(np.diff(w) < 0)
+    np.testing.assert_allclose(w[2], 0.5, rtol=1e-6)
+    assert w[3] < 0.01

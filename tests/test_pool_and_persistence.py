@@ -51,8 +51,8 @@ def test_router_service_save_restore(tmp_path):
                            sgld_minibatch=4)
     svc = RouterService(entries, enc, enc_cfg, RouterServiceConfig(fgts=fcfg))
     x = jax.random.normal(KEY, (4, 32))
-    a1, a2 = svc.route_batch(x)
-    svc.feedback_batch(x, a1, a2, jnp.ones((4,)))
+    a1, a2, tickets = svc.route_batch(x)
+    svc.feedback_batch(tickets, jnp.ones((4,)))
     svc.save(str(tmp_path))
 
     svc2 = RouterService(entries, enc, enc_cfg,
@@ -90,3 +90,14 @@ def test_router_dryrun_steps_run_on_cpu():
               jnp.zeros((16,), jnp.int32), jnp.zeros((16,), jnp.int32),
               jnp.zeros((16,)), jnp.asarray(4, jnp.int32), a)
     assert th2.shape == (d,) and np.isfinite(np.asarray(th2)).all()
+
+    # async-feedback resolution step (the --feedback-delay lowering)
+    from repro.serving import feedback_queue as fq
+    q = fq.init_pending(16, d)
+    q, tickets = fq.enqueue(q, x, a1, a2, 0)
+    resolve = rd.make_resolve_step(expiry=8)
+    valid, rx, ra1, ra2, ry, age, ok = resolve(*q, tickets,
+                                               jnp.ones((b,)), 3)
+    assert np.asarray(ok).all() and not np.asarray(valid).any()
+    np.testing.assert_allclose(np.asarray(rx), np.asarray(x))
+    assert (np.asarray(age) == 3).all()

@@ -94,10 +94,12 @@ def test_router_service_routes_and_learns(tiny_world):
                            sgld_steps=4, sgld_minibatch=16)
     svc = RouterService(pool, params, ENC_CFG, RouterServiceConfig(fgts=fcfg))
     x = encode(params, split.online_tokens[:8], split.online_mask[:8], ENC_CFG)
-    a1, a2 = svc.route_batch(x)
+    a1, a2, tickets = svc.route_batch(x)
     assert a1.shape == (8,) and a2.shape == (8,)
-    svc.feedback_batch(x, a1, a2, jnp.ones((8,)))
+    assert tickets.shape == (8,) and svc.pending_count() == 8
+    assert svc.feedback_batch(tickets, jnp.ones((8,))) == 8
     assert int(svc.state.t) == 8
+    assert svc.pending_count() == 0
     assert svc.spend(a1) > 0
 
 
@@ -118,8 +120,8 @@ def test_cost_tilt_prefers_cheap_models(tiny_world):
                          RouterServiceConfig(fgts=fcfg, cost_tilt=0.0))
     svc1 = RouterService(pool, params, ENC_CFG,
                          RouterServiceConfig(fgts=fcfg, cost_tilt=100.0))
-    a1_0, _ = svc0.route_batch(x)
-    a1_1, _ = svc1.route_batch(x)
+    a1_0, _, _ = svc0.route_batch(x)
+    a1_1, _, _ = svc1.route_batch(x)
     assert float(np.mean(costs[np.asarray(a1_1)])) <= \
         float(np.mean(costs[np.asarray(a1_0)]))
 
