@@ -67,8 +67,13 @@ def run(seed: int = 0):
                          secs / T_ONLINE, f"final={mean[-1]:.1f}"))
 
     cols = [f"d{d}" for d in DELAYS] + ["geom"]
+    # surface the lag ring's effective cap: DelaySpec silently truncates
+    # geometric tails there (at delay+16 when max_lag is unset — a one-time
+    # warning fires in env.run for that default)
     print("\nfinal cumulative regret vs feedback delay "
-          f"(T={T_ONLINE}, batch={BATCH}, geom: lag~1+Geo(0.15) cap 32)")
+          f"(T={T_ONLINE}, batch={BATCH}, geom: lag~{GEOM.delay}"
+          f"+Geo({GEOM.geom_p}), effective lag cap {GEOM.cap}"
+          f"{' [default — tail truncated]' if GEOM.max_lag is None else ''})")
     print(f"{'policy':<12}" + "".join(f"{c:>9}" for c in cols))
     for name in pols:
         print(f"{name:<12}"

@@ -13,6 +13,8 @@ results/bench.csv). Mapping to the paper:
     b3        bench_baselines       App. B.3 (MixLLM) + ablations
     delayed   bench_delayed         regret vs feedback delay (async, beyond
                                     the paper's synchronous protocol)
+    sharded   bench_sharded_serving mesh-sharded serving queries/sec vs
+                                    devices vs batch
     kernels   bench_kernels         Pallas-vs-oracle numerics + timing
     roofline  roofline              EXPERIMENTS.md §Roofline source
 """
@@ -36,7 +38,8 @@ def main() -> None:
 
     from . import (bench_baselines, bench_delayed, bench_generalization,
                    bench_kernels, bench_mixinstruct, bench_mmlu_naive,
-                   bench_routerbench, bench_scores_table, roofline)
+                   bench_routerbench, bench_scores_table,
+                   bench_sharded_serving, roofline)
     benches = {
         "tab1": bench_scores_table.run,
         "kernels": bench_kernels.run,
@@ -46,6 +49,7 @@ def main() -> None:
         "fig3": bench_mixinstruct.run,
         "b3": bench_baselines.run,
         "delayed": bench_delayed.run,
+        "sharded": bench_sharded_serving.run,
         "roofline": roofline.run,
     }
     wanted = (args.only.split(",") if args.only else list(benches))

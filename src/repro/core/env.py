@@ -14,6 +14,7 @@ batched act/update, exactly like the serving path.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, NamedTuple
 
 import jax
@@ -66,10 +67,28 @@ class DelaySpec:
             else self.delay + 16
 
 
+def _warn_default_geom_cap(spec: DelaySpec) -> None:
+    """One-time warning when a geometric lag silently truncates at the
+    default cap: with small geom_p a sizeable tail of draws exceeds
+    delay + 16 and is clipped (never wrapped) — the scenario is then a
+    censored geometric, which may not be what the sweep intended."""
+    if spec.geom_p > 0.0 and spec.max_lag is None:
+        # a draw clips when delay + G > cap, i.e. G >= cap - delay + 1;
+        # P(G >= k) = (1-p)^k for G = floor(log1p(-u)/log1p(-p))
+        tail = (1.0 - spec.geom_p) ** max(spec.cap - spec.delay + 1, 0)
+        warnings.warn(
+            f"DelaySpec(geom_p={spec.geom_p}, max_lag=None): geometric lag "
+            f"is truncated at the default cap delay+16 = {spec.cap} ticks "
+            f"(~{100.0 * tail:.1f}% of draws clip to it); set max_lag "
+            f"explicitly (e.g. a few multiples of 1/geom_p) when the tail "
+            f"matters", stacklevel=3)
+
+
 def _as_delay(delay) -> DelaySpec:
     if delay is None:
         return DelaySpec()
     if isinstance(delay, DelaySpec):
+        _warn_default_geom_cap(delay)
         return delay
     return DelaySpec(delay=int(delay))
 

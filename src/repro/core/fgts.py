@@ -182,20 +182,46 @@ def ring_slots(t: jax.Array, capacity: int, b: int):
 
 
 def observe_batch(state: FGTSState, x_b: jax.Array, a1: jax.Array,
-                  a2: jax.Array, y: jax.Array) -> FGTSState:
+                  a2: jax.Array, y: jax.Array,
+                  mask: jax.Array | None = None) -> FGTSState:
     """Fold B duels into the replay ring with ONE scatter per buffer.
 
     Equivalent to B sequential ``observe`` calls, including wraparound past
     the horizon: write slots are (t, t+1, ..., t+B-1) mod H.
+
+    With ``mask`` (B,) bool, only rows where the mask is True are folded in —
+    bit-identical to compacting the kept rows first and calling the unmasked
+    path: kept row i lands at slot (t + rank_i) mod H (rank counted over kept
+    rows only), masked rows scatter out of bounds (mode="drop"), and t
+    advances by the kept count. When more rows are kept than the ring holds,
+    only the last H survive a sequential replay — earlier kept rows are
+    dropped too, which also keeps the scatter indices unique. This keeps the
+    update's compiled shape fixed at B whatever the survivor count — the
+    serving feedback path pads with masked rows instead of recompiling per
+    count.
     """
     b = x_b.shape[0]
-    drop, idx = ring_slots(state.t, state.x.shape[0], b)
+    cap = state.x.shape[0]
+    if mask is None:
+        drop, idx = ring_slots(state.t, cap, b)
+        return state._replace(
+            x=state.x.at[idx].set(x_b[drop:]),
+            a1=state.a1.at[idx].set(a1[drop:]),
+            a2=state.a2.at[idx].set(a2[drop:]),
+            y=state.y.at[idx].set(y[drop:]),
+            t=state.t + b,
+        )
+    mask = mask.astype(bool)
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    n = jnp.sum(mask, dtype=state.t.dtype)
+    write = mask & (rank >= n - cap)      # last `cap` kept rows only
+    idx = jnp.where(write, (state.t + rank) % cap, cap)  # cap = OOB, dropped
     return state._replace(
-        x=state.x.at[idx].set(x_b[drop:]),
-        a1=state.a1.at[idx].set(a1[drop:]),
-        a2=state.a2.at[idx].set(a2[drop:]),
-        y=state.y.at[idx].set(y[drop:]),
-        t=state.t + b,
+        x=state.x.at[idx].set(x_b, mode="drop"),
+        a1=state.a1.at[idx].set(a1.astype(state.a1.dtype), mode="drop"),
+        a2=state.a2.at[idx].set(a2.astype(state.a2.dtype), mode="drop"),
+        y=state.y.at[idx].set(y, mode="drop"),
+        t=state.t + n,
     )
 
 

@@ -42,12 +42,22 @@ class RoutingPolicy(NamedTuple):
     (ticks between issue and resolution). Policies that leave it None get
     plain ``update`` from every delayed-feedback driver (env lag ring,
     ``RouterService`` pending-queue resolution) — age is simply ignored.
+
+    ``update_masked`` is the optional shape-stable update path: same
+    contract as ``update`` plus a (B,) bool ``mask``; rows where the mask is
+    False must leave the state bit-identical to their absence (not merely
+    zero-gradient — replay rings must not store them). Policies that
+    provide it let the serving feedback path keep one compiled shape per
+    batch size whatever the stale-vote count (pad + mask instead of
+    compact + retrace), and let the mesh-sharded service fold feedback
+    without ever gathering the batch to one device.
     """
     init: Callable[[jax.Array], Any]
     act: Callable[[jax.Array, Any, jax.Array], tuple]
     update: Callable[[Any, jax.Array, jax.Array, jax.Array, jax.Array], Any]
     name: str = "policy"
     update_delayed: Callable[..., Any] | None = None
+    update_masked: Callable[..., Any] | None = None
 
 
 def staleness_weight(age: jax.Array, half_life: float) -> jax.Array:
@@ -157,7 +167,11 @@ def fgts_policy(a_emb: jax.Array, cfg: fgts.FGTSConfig, *,
     def update(state, x, a1, a2, y):
         return fgts.observe_batch(state, x, a1, a2, y)
 
-    return RoutingPolicy(init, act, update, name="fgts_cdb")
+    def update_masked(state, x, a1, a2, y, mask):
+        return fgts.observe_batch(state, x, a1, a2, y, mask=mask)
+
+    return RoutingPolicy(init, act, update, name="fgts_cdb",
+                         update_masked=update_masked)
 
 
 def vanilla_ts_policy(a_emb: jax.Array, cfg: fgts.FGTSConfig,

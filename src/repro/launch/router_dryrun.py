@@ -38,6 +38,7 @@ from repro.encoder.model import EncoderConfig  # noqa: E402
 from repro.launch import mesh as mesh_lib  # noqa: E402
 from repro.launch import steps as steps_lib  # noqa: E402
 from repro.launch.dryrun import _cost_stats, _mem_stats, collective_bytes  # noqa: E402
+from repro.sharding import routing_rules as rr  # noqa: E402
 
 K_MODELS = len(arch_ids())
 DIM = 768 + 2 * len(CATEGORIES)      # production-size embedding + metadata
@@ -75,9 +76,11 @@ def make_update_step(cfg: fgts.FGTSConfig, n_chains: int):
 def make_resolve_step(expiry: int | None = None):
     """The async-feedback hot path: resolve a global batch of vote tickets
     against the ``PendingDuels`` ring (one gather + one clearing scatter)
-    and hand back the surviving duel batch. The ring is replicated (it is a
-    lookup table addressed by ticket); the ticket/vote batch is the sharded
-    axis, like the routing batch it mirrors."""
+    and hand back the surviving duel batch. The ring shards over its
+    capacity axis (slot = ticket % C stripes consecutive tickets across
+    devices) and the ticket/vote batch over the batch axes — the same
+    ``routing_rules`` specs the live mesh-mode service uses, so votes never
+    gather to one device."""
     from repro.serving import feedback_queue as fq
 
     def resolve_step(qx, qa1, qa2, qticket, qissued, qvalid, next_ticket,
@@ -124,17 +127,17 @@ def run(global_batch: int, horizon: int = 65_536, out: str | None = None,
     results = []
     for multi_pod in (False, True):
         mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
-        bx = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        bx = rr.batch_axes(mesh)
 
-        # --- route_step
+        # --- route_step (specs shared with the live RouterService mesh mode
+        # via sharding/routing_rules — one sharding story for both paths)
         x = sds((global_batch, DIM), jnp.float32)
         a_emb = sds((K_MODELS, DIM), jnp.float32)
         th = sds((DIM,), jnp.float32)
         costs = sds((K_MODELS,), jnp.float32)
         results.append(_compile(
             make_route_step(), (x, a_emb, th, th, costs),
-            (P(bx, None), P(None, None), P(None), P(None), P(None)),
-            mesh, "route_step"))
+            rr.route_step_specs(mesh), mesh, "route_step"))
 
         # --- update_step (parallel SGLD chains, sharded replay)
         cfg = fgts.FGTSConfig(n_models=K_MODELS, dim=DIM, horizon=horizon,
@@ -145,22 +148,22 @@ def run(global_batch: int, horizon: int = 65_536, out: str | None = None,
                 sds((horizon, DIM), jnp.float32),
                 sds((horizon,), jnp.int32), sds((horizon,), jnp.int32),
                 sds((horizon,), jnp.float32), sds((), jnp.int32), a_emb)
-        in_sh = (P(), P(None), P(bx, None), P(bx), P(bx), P(bx), P(),
-                 P(None, None))
-        results.append(_compile(upd, args, in_sh, mesh, "update_step"))
+        results.append(_compile(upd, args, rr.update_step_specs(mesh), mesh,
+                                "update_step"))
 
-        # --- resolve_step (async feedback: tickets -> duel batch)
+        # --- resolve_step (async feedback: tickets -> duel batch, ring
+        # sharded over capacity like the live service's pending buffer)
         if feedback_delay > 0:
-            cap = min(global_batch * (feedback_delay + 1), 1 << 18)
+            cap = rr.round_capacity(
+                min(global_batch * (feedback_delay + 1), 1 << 18), mesh)
             qargs = (sds((cap, DIM), jnp.float32),
                      sds((cap,), jnp.int32), sds((cap,), jnp.int32),
                      sds((cap,), jnp.int32), sds((cap,), jnp.int32),
                      sds((cap,), jnp.bool_), sds((), jnp.int32),
                      sds((global_batch,), jnp.int32),
                      sds((global_batch,), jnp.float32), sds((), jnp.int32))
-            q_sh = (P(None, None), P(None), P(None), P(None), P(None),
-                    P(None), P(), P(bx), P(bx), P())
-            results.append(_compile(make_resolve_step(), qargs, q_sh, mesh,
+            results.append(_compile(make_resolve_step(), qargs,
+                                    rr.resolve_step_specs(mesh), mesh,
                                     "resolve_step"))
 
         # --- encode + route (full service path)

@@ -7,8 +7,49 @@ latent skill profile, and the posterior adapts online.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --rounds 40 --batch 8
+    PYTHONPATH=src python -m repro.launch.serve --mesh 4,2 --batch 8
+
+``--mesh data,model`` serves through the mesh-sharded RouterService: act is
+shard_map-partitioned over the batch, the pending ring and replay update
+are batch-sharded jitted programs. On a CPU-only host the requested device
+count is forced automatically (--xla_force_host_platform_device_count).
 """
 from __future__ import annotations
+
+# --mesh on a CPU-only host needs the device count forced BEFORE jax
+# initializes; peek at argv ahead of the imports (no-op when XLA_FLAGS
+# already forces a count, and harmless on real accelerator platforms).
+import os as _os
+import sys as _sys
+
+def _mesh_devices_from_argv() -> int:
+    val = None
+    for i, arg in enumerate(_sys.argv):
+        if arg == "--mesh" and i + 1 < len(_sys.argv):
+            val = _sys.argv[i + 1]
+        elif arg.startswith("--mesh="):
+            val = arg.split("=", 1)[1]
+    if val is None:
+        return 0
+    parts = val.split(",")
+    if len(parts) != 2:        # main() rejects it with a usage error later
+        return 0
+    try:
+        return int(parts[0]) * int(parts[1])
+    except ValueError:
+        return 0
+
+
+# Only as the CLI entry point: importers of this module (e.g. for the
+# POLICIES registry) must not have their process's device topology mutated
+# by whatever happens to be in their argv.
+if __name__ == "__main__":
+    _n = _mesh_devices_from_argv()
+    if _n > 1 and "host_platform_device_count" \
+            not in _os.environ.get("XLA_FLAGS", ""):
+        _os.environ["XLA_FLAGS"] = (
+            _os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={_n}")
 
 import argparse
 import time
@@ -23,6 +64,7 @@ from repro.core.btl import sample_preference
 from repro.core.policy import fgts_policy
 from repro.data.synth import CorpusConfig, make_split
 from repro.encoder.model import EncoderConfig, init_encoder
+from repro.launch import mesh as mesh_lib
 from repro.models import lm
 from repro.serving.router_service import (PoolEntry, RouterService,
                                           RouterServiceConfig)
@@ -33,12 +75,16 @@ from repro.core.policy import cost_tilt_vector
 
 
 POLICIES = {
+    # cfg.use_kernel arrives resolved from the service (False under a mesh,
+    # where the Pallas call cannot be partitioned over the batch axes).
     "fgts": lambda a_emb, costs, cfg: fgts_policy(
-        a_emb, cfg.fgts, costs=costs, cost_tilt=cfg.cost_tilt),
+        a_emb, cfg.fgts, costs=costs, cost_tilt=cfg.cost_tilt,
+        use_kernel=cfg.use_kernel if cfg.use_kernel is not None else True),
     "eps_greedy": lambda a_emb, costs, cfg: baselines.eps_greedy_policy(
         a_emb, baselines.EpsGreedyConfig(n_models=cfg.fgts.n_models,
                                          dim=cfg.fgts.dim),
-        tilt=cost_tilt_vector(costs, cfg.cost_tilt)),
+        tilt=cost_tilt_vector(costs, cfg.cost_tilt),
+        use_kernel=cfg.use_kernel if cfg.use_kernel is not None else True),
     "linucb": lambda a_emb, costs, cfg: baselines.linucb_duel_policy(
         a_emb, baselines.LinUCBConfig(n_models=cfg.fgts.n_models,
                                       dim=cfg.fgts.dim),
@@ -85,7 +131,26 @@ def main():
                     help="drop votes older than this many rounds")
     ap.add_argument("--stale-half-life", type=float, default=None,
                     help="age-discount half-life (rounds) for stale votes")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="serve mesh-sharded over a (data, model) debug mesh"
+                         " — e.g. 4,2; --batch must divide the data size")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh:
+        parts = args.mesh.split(",")
+        try:
+            data, model = (int(v) for v in parts)
+        except ValueError:
+            raise SystemExit(
+                f"--mesh expects two comma-separated sizes DATA,MODEL "
+                f"(e.g. 4,2), got {args.mesh!r}") from None
+        if args.batch % data:
+            raise SystemExit(f"--batch {args.batch} must divide over the "
+                             f"mesh's data axis ({data})")
+        mesh = mesh_lib.make_debug_mesh(data, model)
+        print(f"[serve] mesh {dict(mesh.shape)} over "
+              f"{len(jax.devices())} devices")
 
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 8)
@@ -105,7 +170,8 @@ def main():
                                             policy_factory=POLICIES[
                                                 args.policy],
                                             feedback_expiry=args.feedback_expiry,
-                                            stale_half_life=args.stale_half_life))
+                                            stale_half_life=args.stale_half_life),
+                        mesh=mesh)
 
     # reduced candidate models (actual generation path)
     gen_models = {}

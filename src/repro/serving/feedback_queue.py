@@ -100,9 +100,15 @@ def resolve(q: PendingDuels, tickets: jax.Array, y: jax.Array,
     when ``max_age`` is set, the duel has not aged out. Any *matched* ticket
     is consumed — a vote that arrives too late clears its slot (discarded,
     ``ok`` False) rather than leaving a permanently unredeemable duel
-    counted as pending. One gather for the lookup, one scatter to clear;
-    tickets within one call are assumed unique (they come from ``enqueue``,
-    which never repeats ids).
+    counted as pending. One gather for the lookup, one scatter to clear.
+
+    Duplicate tickets inside one call (a retried vote aggregated into the
+    same batch) fold in at most once: a segment-style first-wins pass over
+    slot collisions keeps only the earliest matching row per slot, so every
+    caller — host service, delayed serve loop, sharded AOT resolve step —
+    gets the dedup for free inside the jitted program. (Two *different*
+    tickets can collide on a slot too, but at most one of them can match the
+    stored id, so first-wins-per-slot is exactly first-wins-per-ticket.)
     """
     cap = q.x.shape[0]
     tickets = jnp.asarray(tickets, jnp.int32)
@@ -110,6 +116,11 @@ def resolve(q: PendingDuels, tickets: jax.Array, y: jax.Array,
     slots = tickets % cap
     age = now - q.issued_at[slots]
     matched = q.valid[slots] & (q.ticket[slots] == tickets)
+    rows = jnp.arange(tickets.shape[0], dtype=jnp.int32)
+    sentinel = jnp.int32(tickets.shape[0])
+    first = jnp.full((cap,), sentinel, jnp.int32).at[slots].min(
+        jnp.where(matched, rows, sentinel))
+    matched = matched & (first[slots] == rows)
     ok = matched if max_age is None else matched & (age <= max_age)
     # Commutative scatter-max marks consumed slots (duplicate-slot writes —
     # an old ticket colliding with the live one — stay order-independent).

@@ -20,6 +20,14 @@ cost-aware utility tilt at serve time (the paper's perf-cost trade-off
 knob). Any policy that speaks the protocol can serve: pass a
 ``policy_factory`` in the config, or leave it None for the paper's
 FGTS.CDB default.
+
+Passing ``mesh=`` makes the live path mesh-parallel end to end: ``act``
+runs under ``shard_map`` with the query batch partitioned over the
+("pod","data") axes and the policy state replicated (selection takes the
+XLA scoring path — a Pallas call cannot be partitioned here); the pending
+ring and the replay update run as batch-sharded jitted programs with
+explicit ``NamedSharding``s (``sharding/routing_rules.py``), so tickets and
+votes never gather to one device.
 """
 from __future__ import annotations
 
@@ -30,11 +38,19 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import fgts
-from repro.core.policy import RoutingPolicy, fgts_policy, with_staleness
+from repro.core.policy import (RoutingPolicy, fgts_policy, staleness_weight,
+                               with_staleness)
 from repro.encoder.model import EncoderConfig, encode
+from repro.sharding import routing_rules as rr
 from . import feedback_queue as fq
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
 
 
 @dataclasses.dataclass
@@ -53,6 +69,21 @@ class RouterServiceConfig:
     seed: int = 0
     # (a_emb, costs, cfg) -> RoutingPolicy; None = FGTS.CDB with cost tilt.
     policy_factory: Optional[Callable] = None
+    # Pallas selection kernel vs XLA reference scoring. None = auto: kernel
+    # on a single device, XLA path under a mesh (a Pallas call cannot be
+    # partitioned over the batch axes). Factories receive the resolved bool.
+    use_kernel: Optional[bool] = None
+    # Mesh mode act mechanism. shard_map hands each device its local batch
+    # shard with the key replicated — zero collectives, but a policy whose
+    # act draws *per-row* randomness (uniform, eps-greedy exploration)
+    # would sample identically on every shard. None = auto: shard_map for
+    # the built-in FGTS default (its act randomness is batch-independent —
+    # the posterior refresh — so every shard recomputes it identically),
+    # GSPMD in_shardings traced under partitionable threefry for
+    # factory-built policies (per-row draws decorrelated across shards and
+    # invariant to the mesh size, though on a different stream than the
+    # single-device default threefry).
+    act_shard_map: Optional[bool] = None
     # -- async feedback -----------------------------------------------------
     feedback_capacity: int = 1024  # max in-flight duels (ring: oldest expire)
     feedback_expiry: Optional[int] = None   # max age in ticks; None = never
@@ -63,11 +94,15 @@ class RouterService:
     """Online routing service state (host-side orchestration, jitted math)."""
 
     def __init__(self, pool: list[PoolEntry], enc_params, enc_cfg: EncoderConfig,
-                 cfg: RouterServiceConfig):
+                 cfg: RouterServiceConfig, *, mesh=None):
         assert len(pool) == cfg.fgts.n_models
         self.pool = pool
         self.enc_params = enc_params
         self.enc_cfg = enc_cfg
+        self.mesh = mesh
+        use_kernel = cfg.use_kernel if cfg.use_kernel is not None \
+            else mesh is None
+        cfg = dataclasses.replace(cfg, use_kernel=use_kernel)
         self.cfg = cfg
         self.a_emb = jnp.asarray(np.stack([p.embedding for p in pool]))
         self.costs = jnp.asarray([p.cost_per_1k_tokens for p in pool])
@@ -76,24 +111,136 @@ class RouterService:
                 self.a_emb, self.costs, cfg)
         else:
             self.policy = fgts_policy(self.a_emb, cfg.fgts, costs=self.costs,
-                                      cost_tilt=cfg.cost_tilt)
-        if cfg.stale_half_life is not None \
-                and self.policy.update_delayed is None:
+                                      cost_tilt=cfg.cost_tilt,
+                                      use_kernel=use_kernel)
+        self._staleness_wrapped = (cfg.stale_half_life is not None
+                                   and self.policy.update_delayed is None)
+        if self._staleness_wrapped:
             self.policy = with_staleness(self.policy, cfg.stale_half_life)
         self._key = jax.random.PRNGKey(cfg.seed)
         self.state = self.policy.init(self._next_key())
-        self.pending = fq.init_pending(cfg.feedback_capacity,
-                                       self.a_emb.shape[1])
+        capacity = cfg.feedback_capacity if mesh is None \
+            else rr.round_capacity(cfg.feedback_capacity, mesh)
+        self.pending = fq.init_pending(capacity, self.a_emb.shape[1])
         self.tick = 0                  # route_batch calls (the service clock)
         self.n_routed = 0
-        self._act = jax.jit(self.policy.act)
-        self._update = jax.jit(self.policy.update)
-        self._update_delayed = (jax.jit(self.policy.update_delayed)
-                                if self.policy.update_delayed is not None
-                                else None)
-        self._enqueue = jax.jit(fq.enqueue)
-        self._resolve = jax.jit(functools.partial(
-            fq.resolve, max_age=cfg.feedback_expiry))
+        self._build_programs()
+
+    def _build_programs(self):
+        """Jit (and, under a mesh, shard) the service's four programs: act,
+        enqueue, resolve, update. Single-device mode is the plain jit path;
+        mesh mode partitions the batch and the pending ring per
+        ``sharding/routing_rules`` and replicates the policy state."""
+        cfg, mesh = self.cfg, self.mesh
+        resolve = functools.partial(fq.resolve, max_age=cfg.feedback_expiry)
+
+        half_life = cfg.stale_half_life if self._staleness_wrapped else None
+        masked = self.policy.update_masked
+        # The masked path subsumes update_delayed only when the staleness
+        # semantics are the generic label shrink (with_staleness); a policy
+        # with its own delayed path keeps the compaction route.
+        if masked is not None and (self.policy.update_delayed is None
+                                   or self._staleness_wrapped):
+            def masked_update(state, x, a1, a2, y, age, ok):
+                if half_life is not None:
+                    y = y * staleness_weight(age, half_life)
+                return masked(state, x, a1, a2, y, ok)
+        else:
+            masked_update = None
+
+        if mesh is None:
+            self._n_shards = 1
+            self._act = jax.jit(self.policy.act)
+            self._update = jax.jit(self.policy.update)
+            self._update_delayed = (jax.jit(self.policy.update_delayed)
+                                    if self.policy.update_delayed is not None
+                                    else None)
+            self._update_masked = (jax.jit(masked_update)
+                                   if masked_update is not None else None)
+            self._update_compact = self._update
+            self._update_delayed_compact = self._update_delayed
+            self._enqueue = jax.jit(fq.enqueue)
+            self._resolve = jax.jit(resolve)
+            return
+
+        self._n_shards = rr.n_batch_shards(mesh)
+        bx = rr.batch_axes(mesh)
+        sh = functools.partial(NamedSharding, mesh)
+        rep, row, qry = sh(P()), sh(rr.per_query_spec(mesh)), \
+            sh(rr.query_batch_spec(mesh))
+        pend = rr.to_shardings(mesh, rr.pending_specs(mesh))
+        res_sh = rr.to_shardings(mesh, rr.resolved_specs(mesh))
+        self._x_sh, self._row_sh, self._rep_sh = qry, row, rep
+
+        # act: batch partitioned, state + key replicated. shard_map hands
+        # each device its local shard — every device recomputes the
+        # identical posterior refresh (same key, same replicated state) and
+        # scores only its rows; check_rep is off because the rep-rule
+        # system cannot prove the refresh is replicated through random ops.
+        # Factory-built policies default to GSPMD in_shardings traced under
+        # partitionable threefry instead: per-row randomness then comes out
+        # decorrelated across shards and invariant to the mesh size (the
+        # default threefry lowering is NOT sharding-invariant).
+        use_sm = cfg.act_shard_map if cfg.act_shard_map is not None \
+            else cfg.policy_factory is None
+        if use_sm:
+            act = shard_map(self.policy.act, mesh=mesh,
+                            in_specs=(P(), P(), rr.query_batch_spec(mesh)),
+                            out_specs=(P(), P(bx), P(bx)),
+                            check_rep=False)
+        else:
+            def act(key, state, x, _act=self.policy.act):
+                with jax.threefry_partitionable(True):
+                    return _act(key, state, x)
+        self._act = jax.jit(act, in_shardings=(rep, rep, qry),
+                            out_shardings=(rep, row, row))
+        self._update = jax.jit(
+            self.policy.update,
+            in_shardings=(rep, qry, row, row, row),
+            out_shardings=rep)
+        self._update_delayed = (jax.jit(
+            self.policy.update_delayed,
+            in_shardings=(rep, qry, row, row, row, row),
+            out_shardings=rep)
+            if self.policy.update_delayed is not None else None)
+        self._update_masked = (jax.jit(
+            masked_update,
+            in_shardings=(rep, qry, row, row, row, row, row),
+            out_shardings=rep)
+            if masked_update is not None else None)
+        # compaction fallback (policies without update_masked): the
+        # survivor count is arbitrary, so the compacted batch is replicated
+        # — no divisibility constraint — and only the state stays meshed
+        self._update_compact = jax.jit(
+            self.policy.update, in_shardings=(rep, rep, rep, rep, rep),
+            out_shardings=rep)
+        self._update_delayed_compact = (jax.jit(
+            self.policy.update_delayed,
+            in_shardings=(rep, rep, rep, rep, rep, rep),
+            out_shardings=rep)
+            if self.policy.update_delayed is not None else None)
+        self._enqueue = jax.jit(
+            fq.enqueue, in_shardings=(pend, qry, row, row, rep),
+            out_shardings=(pend, row))
+        self._resolve = jax.jit(
+            resolve, in_shardings=(pend, row, row, rep),
+            out_shardings=(pend, res_sh))
+        # replicate / shard the live buffers onto the mesh
+        self.state = jax.device_put(self.state, rep)
+        self.pending = jax.device_put(self.pending, pend)
+
+    def _shard_batch(self, x: jax.Array, what: str = "batch") -> jax.Array:
+        """Mesh mode: place a (B, ...) array batch-sharded (no-op on a
+        single device); B must divide over the batch-shard count."""
+        if self.mesh is None:
+            return jnp.asarray(x)
+        if x.shape[0] % self._n_shards:
+            raise ValueError(
+                f"{what} size {x.shape[0]} does not divide over the mesh's "
+                f"{self._n_shards} batch shards "
+                f"({dict(self.mesh.shape)}) — pad or rebatch")
+        sh = self._x_sh if x.ndim > 1 else self._row_sh
+        return jax.device_put(jnp.asarray(x), sh)
 
     def _next_key(self):
         self._key, k = jax.random.split(self._key)
@@ -112,6 +259,7 @@ class RouterService:
         back with its responses and redeem it in ``feedback_batch`` whenever
         the vote lands.
         """
+        x = self._shard_batch(x, "route_batch")
         self.state, a1, a2 = self._act(self._next_key(), self.state, x)
         # clock first, then issue at the new tick: feedback redeemed before
         # the next routing round reports age 0 (so feedback_expiry=N means
@@ -127,44 +275,63 @@ class RouterService:
 
         Out-of-order, partial, and duplicate deliveries are all fine:
         resolution is one gather + one clearing scatter against the pending
-        ring, stale tickets (already resolved, expired, or overwritten under
-        capacity pressure) are dropped, and the surviving duels enter the
-        policy with one jitted batched update (the staleness-aware
-        ``update_delayed`` path when the policy has one). Returns the number
-        of duels actually folded in.
+        ring (duplicate tickets within the batch dedupe *inside* the jitted
+        resolve — first delivery wins), stale tickets (already resolved,
+        expired, or overwritten under capacity pressure) are dropped, and
+        the surviving duels enter the policy with one jitted batched update
+        (the staleness-aware ``update_delayed`` path when the policy has
+        one). Returns the number of duels actually folded in.
+
+        Recompilation is bounded: policies with an ``update_masked`` fold
+        rejects through a shape-stable masked update — the full batch shape
+        under a mesh (nothing gathered to one device), or the kept rows
+        padded up to the next power of two on a single device, so distinct
+        survivor counts cost O(log B) retraces instead of O(B). Policies
+        without one keep the host-side compaction path.
         """
-        tickets = np.asarray(tickets, np.int32)
-        y = np.asarray(y, np.float32)
-        # a retried vote aggregated into one batch must not double-fold:
-        # keep each ticket's first delivery only (later duplicates would
-        # validate too — resolve's ok mask is computed against the pre-call
-        # buffer for every row)
-        _, first = np.unique(tickets, return_index=True)
-        if first.size != tickets.size:
-            first.sort()
-            tickets, y = tickets[first], y[first]
+        tickets = self._shard_batch(jnp.asarray(tickets, jnp.int32),
+                                    "feedback_batch")
+        y = self._shard_batch(jnp.asarray(y, jnp.float32), "feedback_batch")
         self.pending, res = self._resolve(
-            self.pending, jnp.asarray(tickets), jnp.asarray(y),
-            jnp.asarray(self.tick, jnp.int32))
+            self.pending, tickets, y, jnp.asarray(self.tick, jnp.int32))
         ok = np.asarray(res.ok)
-        if not ok.any():
+        n_ok = int(ok.sum())
+        if n_ok == 0:
             return 0
-        if ok.all():
+        if self._update_masked is not None:
+            if self.mesh is not None or n_ok == ok.size:
+                self.state = self._update_masked(
+                    self.state, res.x, res.a1, res.a2, res.y, res.age,
+                    res.ok)
+            else:
+                # kept rows to the front (stable, preserving fold order),
+                # padded with masked reject rows up to the next power of two
+                n_pad = min(_next_pow2(n_ok), ok.size)
+                sel = jnp.argsort(res.ok, descending=True, stable=True)
+                sel = sel[:n_pad]
+                self.state = self._update_masked(
+                    self.state, res.x[sel], res.a1[sel], res.a2[sel],
+                    res.y[sel], res.age[sel], res.ok[sel])
+            return n_ok
+        # host-side compaction fallback: each new surviving count retraces
+        # the jitted update once (the update is the ring scatter; the SGLD
+        # refresh lives in act)
+        if n_ok == ok.size:
             x, a1, a2, yv, age = res.x, res.a1, res.a2, res.y, res.age
         else:
-            # Compact away rejected rows (vectorized, host-side). Each new
-            # surviving count retraces the jitted update once — bounded by B
-            # shapes of a cheap program (the update is the ring scatter; the
-            # SGLD refresh lives in act). Padding instead would scatter junk
-            # rows into the replay ring, so compaction stays.
             keep = np.flatnonzero(ok)
             x, a1, a2, yv, age = (res.x[keep], res.a1[keep], res.a2[keep],
                                   res.y[keep], res.age[keep])
-        if self._update_delayed is not None:
-            self.state = self._update_delayed(self.state, x, a1, a2, yv, age)
+        if self.mesh is not None:
+            # compacted batches have arbitrary lengths: replicate them
+            x, a1, a2, yv, age = (jax.device_put(v, self._rep_sh)
+                                  for v in (x, a1, a2, yv, age))
+        if self._update_delayed_compact is not None:
+            self.state = self._update_delayed_compact(self.state, x, a1, a2,
+                                                      yv, age)
         else:
-            self.state = self._update(self.state, x, a1, a2, yv)
-        return int(ok.sum())
+            self.state = self._update_compact(self.state, x, a1, a2, yv)
+        return n_ok
 
     def feedback_direct(self, x: jax.Array, a1: jax.Array, a2: jax.Array,
                         y: jax.Array, tickets: jax.Array | None = None):
@@ -174,13 +341,17 @@ class RouterService:
         ``tickets`` to also clear its ring slots; otherwise the issued
         entries linger until overwritten, inflating ``pending_count`` and
         the checkpointed buffer."""
+        y = self._shard_batch(jnp.asarray(y, jnp.float32), "feedback_direct")
         if tickets is not None:
             self.pending, _ = self._resolve(
-                self.pending, jnp.asarray(tickets, jnp.int32),
-                jnp.asarray(y, jnp.float32),
-                jnp.asarray(self.tick, jnp.int32))
-        self.state = self._update(self.state, x, jnp.asarray(a1),
-                                  jnp.asarray(a2), jnp.asarray(y))
+                self.pending,
+                self._shard_batch(jnp.asarray(tickets, jnp.int32),
+                                  "feedback_direct"),
+                y, jnp.asarray(self.tick, jnp.int32))
+        self.state = self._update(
+            self.state, self._shard_batch(x, "feedback_direct"),
+            self._shard_batch(jnp.asarray(a1), "feedback_direct"),
+            self._shard_batch(jnp.asarray(a2), "feedback_direct"), y)
 
     def pending_count(self) -> int:
         """In-flight duels (issued, unresolved, unexpired)."""
@@ -232,4 +403,9 @@ class RouterService:
         self.pending = payload["pending"]
         self.tick = int(payload["tick"])
         self.n_routed = int(payload["n_routed"])
+        if self.mesh is not None:     # re-place restored buffers on the mesh
+            self.state = jax.device_put(self.state, self._rep_sh)
+            self.pending = jax.device_put(
+                self.pending, rr.to_shardings(self.mesh,
+                                              rr.pending_specs(self.mesh)))
         return step

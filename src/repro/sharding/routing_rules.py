@@ -1,0 +1,117 @@
+"""Sharding rules for the routing/serving layer — one home for every
+PartitionSpec the live router and its AOT lowerings use.
+
+Policy (mesh axes ("data","model") or ("pod","data","model"), same meshes as
+the model-serving rules in ``sharding/rules.py``):
+
+* the **query batch** is the scale dimension: (B, d) features, (B,) arms,
+  tickets and votes all shard over the batch axes ("pod","data"). The
+  "model" axis idles for routing math (K ~ 10 candidates is tiny) so one
+  mesh serves both the candidate models and the router.
+* the **pending ring** (``serving.feedback_queue.PendingDuels``) shards its
+  capacity axis over the batch axes: tickets are issued and resolved as
+  batch-sharded scatters/gathers, so in-flight duels never gather to one
+  device. Capacity must divide the batch-shard count — ``round_capacity``.
+* **policy state is replicated**: posterior chains (n_chains, dim), the
+  replay ring and the tick counter are small next to the query stream, and
+  every device needs the full posterior to score its batch shard. The SGLD
+  refresh is recomputed identically on every device (same key, same state)
+  rather than communicated.
+
+``RouterService(mesh=...)`` consumes these for the live path;
+``launch/router_dryrun`` reuses the same functions for its AOT compiles so
+the served program and the dry-run stay one story.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.serving.feedback_queue import PendingDuels, ResolvedDuels
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes that shard the routing batch dimension."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def n_batch_shards(mesh) -> int:
+    """Number of shards the batch (and the pending ring) is split into."""
+    sizes = dict(mesh.shape)
+    n = 1
+    for a in batch_axes(mesh):
+        n *= sizes[a]
+    return n
+
+
+def round_capacity(capacity: int, mesh) -> int:
+    """Smallest pending-ring capacity >= requested that the mesh divides."""
+    n = n_batch_shards(mesh)
+    return ((max(capacity, 1) + n - 1) // n) * n
+
+
+# ---------------------------------------------------------------------------
+# Spec trees
+# ---------------------------------------------------------------------------
+
+def query_batch_spec(mesh) -> P:
+    """(B, d) query features."""
+    return P(batch_axes(mesh), None)
+
+
+def per_query_spec(mesh) -> P:
+    """(B,) per-query vectors: arms, tickets, votes, ages, ok masks."""
+    return P(batch_axes(mesh))
+
+
+def policy_state_spec(mesh) -> P:
+    """Replicated policy state (posterior chains, replay ring, counters) —
+    used as a pytree *prefix* over whatever state tree the policy carries."""
+    return P()
+
+
+def pending_specs(mesh) -> PendingDuels:
+    """PendingDuels ring sharded over its capacity axis (slot = ticket % C,
+    so consecutive tickets stripe across devices)."""
+    bx = batch_axes(mesh)
+    return PendingDuels(x=P(bx, None), a1=P(bx), a2=P(bx), ticket=P(bx),
+                        issued_at=P(bx), valid=P(bx), next_ticket=P())
+
+
+def resolved_specs(mesh) -> ResolvedDuels:
+    """The gathered feedback batch stays batch-sharded end to end."""
+    bx = batch_axes(mesh)
+    return ResolvedDuels(x=P(bx, None), a1=P(bx), a2=P(bx), y=P(bx),
+                         age=P(bx), ok=P(bx))
+
+
+# ---------------------------------------------------------------------------
+# Step-level in_sharding tuples (AOT dry-run + service jits)
+# ---------------------------------------------------------------------------
+
+def route_step_specs(mesh) -> tuple:
+    """(x, a_emb, theta1, theta2, costs) — batch sharded, the rest
+    replicated (K and dim are tiny; the batch axis is the scale axis)."""
+    return (query_batch_spec(mesh), P(None, None), P(None), P(None), P(None))
+
+
+def update_step_specs(mesh) -> tuple:
+    """(key, theta, replay x/a1/a2/y, t, a_emb) for the dry-run posterior
+    refresh: the replay buffer rows shard over the batch axes, the chains'
+    estimate is replicated."""
+    bx = batch_axes(mesh)
+    return (P(), P(None), P(bx, None), P(bx), P(bx), P(bx), P(),
+            P(None, None))
+
+
+def resolve_step_specs(mesh) -> tuple:
+    """(pending-ring fields..., tickets, y, now) for the ticket-resolution
+    step: ring capacity AND the vote batch shard over the batch axes."""
+    bx = batch_axes(mesh)
+    return tuple(pending_specs(mesh)) + (P(bx), P(bx), P())
+
+
+def to_shardings(mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree (P leaves only)."""
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

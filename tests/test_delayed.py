@@ -135,6 +135,29 @@ def test_env_run_delayed_uses_staleness_path():
     assert np.abs(y_stale).max() < 1e-4             # age 4 @ hl 0.25 => ~0
 
 
+def test_geom_lag_default_cap_warns_and_clips():
+    """max_lag=None with a geometric component silently truncates at
+    delay + 16: the run must warn once, and the tail must *clip* to the cap
+    (identical to a deterministic lag of delay+16 when essentially every
+    draw exceeds it) rather than wrapping the lag ring."""
+    e, a_emb, cfg = _world()
+    pol = policy.fgts_policy(a_emb, cfg)
+    spec = env.DelaySpec(delay=2, geom_p=1e-5)   # tail ~always > 16
+    with pytest.warns(UserWarning, match="truncated at the default cap"):
+        cum_g, st_g = env.run(KEY, e, pol, batch=2, delay=spec)
+    assert spec.cap == 18
+    cum_d, st_d = env.run(KEY, e, pol, batch=2,
+                          delay=env.DelaySpec(delay=18))
+    np.testing.assert_array_equal(np.asarray(cum_g), np.asarray(cum_d))
+    _state_leaves_equal(st_g, st_d)
+    # an explicit max_lag is the documented fix: no warning then
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        env.run(KEY, e, pol, batch=2,
+                delay=env.DelaySpec(delay=2, geom_p=1e-5, max_lag=18))
+
+
 # ---------------------------------------------------------------------------
 # PendingDuels: out-of-order resolution == in-order (FGTS ring end state)
 # ---------------------------------------------------------------------------
@@ -214,6 +237,109 @@ def test_stale_tickets_rejected_double_expired_overwritten():
     assert not np.asarray(res.ok).any()            # overwritten => expired
     q, res = fq.resolve(q, t_new, jnp.ones(8), 22)
     assert np.asarray(res.ok).all()
+
+
+def test_resolve_dedups_duplicate_tickets_in_one_call():
+    """First delivery wins *inside* the jitted resolve: a duplicated ticket
+    in one batch validates exactly one row, for every caller — no host-side
+    dedup required."""
+    cfg = _cfg()
+    q = fq.init_pending(16, cfg.dim)
+    q, xs, arms, tickets = _issue(q, cfg, 1, 6)
+    t = tickets[0]
+    dup = jnp.concatenate([t[:3], t[:3], t[3:], t[:1]])      # (10,)
+    y = jnp.arange(10, dtype=jnp.float32) + 1.0
+    q, res = jax.jit(fq.resolve)(q, dup, y, 1)
+    ok = np.asarray(res.ok)
+    assert ok[:6].tolist() == [True] * 3 + [False] * 3       # dups rejected
+    assert ok[6:9].all() and not ok[9]
+    assert int(fq.pending_count(q)) == 0                     # all consumed
+    # the surviving rows carry the FIRST delivery's votes
+    np.testing.assert_array_equal(np.asarray(res.y)[ok],
+                                  np.asarray(y)[[0, 1, 2, 6, 7, 8]])
+    q, res = fq.resolve(q, t, jnp.ones(6), 1)                # retry: gone
+    assert not np.asarray(res.ok).any()
+
+
+def test_observe_batch_masked_bit_identical_to_compaction():
+    """fgts.observe_batch(mask=...) == compact-then-observe, including ring
+    wraparound and the t counter — the contract the padded feedback path
+    relies on."""
+    cfg = _cfg(horizon=8)
+    ks = jax.random.split(KEY, 4)
+    st = fgts.init_state(cfg, ks[0])._replace(t=jnp.asarray(5, jnp.int32))
+    x = jax.random.normal(ks[1], (6, cfg.dim))
+    a1 = jax.random.randint(ks[2], (6,), 0, cfg.n_models)
+    a2 = (a1 + 1) % cfg.n_models
+    y = jnp.where(jax.random.uniform(ks[3], (6,)) < 0.5, -1.0, 1.0)
+    mask = jnp.asarray([True, False, True, True, False, True])
+    masked = jax.jit(fgts.observe_batch)(st, x, a1, a2, y, mask=mask)
+    keep = np.flatnonzero(np.asarray(mask))
+    ref = fgts.observe_batch(st, x[keep], a1[keep], a2[keep], y[keep])
+    _state_leaves_equal(masked, ref)
+    assert int(masked.t) == 9                                # wrapped past 8
+
+    # kept count exceeding the ring: only the last H kept rows survive a
+    # sequential replay (unmasked path drops them via ring_slots)
+    xb = jnp.tile(x, (2, 1))
+    a1b, a2b, yb = (jnp.tile(v, (2,)) for v in (a1, a2, y))
+    mb = jnp.asarray([True] * 11 + [False])                  # 11 kept > 8
+    masked = jax.jit(fgts.observe_batch)(st, xb, a1b, a2b, yb, mask=mb)
+    keep = np.flatnonzero(np.asarray(mb))
+    ref = fgts.observe_batch(st, xb[keep], a1b[keep], a2b[keep], yb[keep])
+    _state_leaves_equal(masked, ref)
+    assert int(masked.t) == 16
+
+
+def test_feedback_padded_update_bit_identical_and_bounded_retrace():
+    """The power-of-two padded masked update == host compaction bit for bit,
+    and distinct survivor counts cost O(log B) compilations (the legacy
+    compaction path pays one per count)."""
+    from repro.encoder import EncoderConfig, init_encoder
+    from repro.serving import PoolEntry, RouterService, RouterServiceConfig
+    enc_cfg = EncoderConfig(d_model=16, n_layers=1, n_heads=2, d_ff=32,
+                            max_len=8)
+    enc = init_encoder(KEY, enc_cfg)
+    entries = [PoolEntry(name=f"m{i}", arch="granite-3-2b",
+                         cost_per_1k_tokens=0.1,
+                         embedding=np.random.RandomState(i).randn(16)
+                         .astype(np.float32)) for i in range(3)]
+    fcfg = _cfg(n_models=3, dim=16, horizon=256)
+
+    def legacy_factory(a_emb, costs, cfg):
+        return policy.fgts_policy(
+            a_emb, cfg.fgts,
+            use_kernel=cfg.use_kernel if cfg.use_kernel is not None
+            else True)._replace(update_masked=None)
+
+    svc_pad = RouterService(entries, enc, enc_cfg,
+                            RouterServiceConfig(fgts=fcfg,
+                                                feedback_capacity=256))
+    svc_leg = RouterService(entries, enc, enc_cfg,
+                            RouterServiceConfig(fgts=fcfg,
+                                                feedback_capacity=256,
+                                                policy_factory=legacy_factory))
+    assert svc_pad._update_masked is not None
+    assert svc_leg._update_masked is None
+
+    b = 16
+    survivors = (16, 9, 5, 3, 2, 1)
+    for i, n in enumerate(survivors):
+        x = jax.random.normal(jax.random.fold_in(KEY, i), (b, 16))
+        y = jnp.where(jax.random.uniform(jax.random.fold_in(KEY, 50 + i),
+                                         (b,)) < 0.5, -1.0, 1.0)
+        for svc in (svc_pad, svc_leg):
+            _, _, t = svc.route_batch(x)
+            # n unique tickets + (b - n) duplicates of the first => exactly
+            # n survivors after the in-resolve dedup
+            dup = jnp.concatenate([t[:n], jnp.broadcast_to(t[:1], (b - n,))])
+            assert svc.feedback_batch(dup, y) == n
+        _state_leaves_equal(svc_pad.state, svc_leg.state)   # bit-identical
+
+    cache = getattr(svc_pad._update_masked, "_cache_size", None)
+    if cache is not None:
+        import math
+        assert cache() <= math.ceil(math.log2(b)) + 1, cache()
 
 
 def test_enqueue_batch_larger_than_capacity_keeps_tail():

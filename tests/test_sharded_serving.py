@@ -1,0 +1,236 @@
+"""Sharded-vs-single-device parity for the live serving path.
+
+These tests need a multi-device host: run with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the sharded CI lane
+does; on one device everything here skips). Contracts pinned:
+
+  * ``route_batch`` on a (4, 2) debug mesh reproduces the unsharded
+    service's routed pairs and tickets, and the posterior state to float
+    tolerance (sharded act = shard_map-partitioned batch, replicated state,
+    XLA scoring path);
+  * ``feedback_batch`` with duplicate and stale tickets folds the same
+    duels and reaches the same posterior — without gathering the pending
+    ring to one device (its shards stay on the batch axes);
+  * a 512-query end-to-end serve loop (16 rounds x 32, feedback lagged one
+    round) matches the unsharded service round for round;
+  * a duplicate ticket inside a single jitted sharded resolve folds at most
+    once (the regression the host-side dedup used to paper over);
+  * checkpoints round-trip across the sharded/unsharded boundary.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fgts
+from repro.serving import feedback_queue as fq
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+KEY = jax.random.PRNGKey(7)
+DIM = 16
+K = 4
+BATCH = 32
+
+
+def _cfg(**kw):
+    d = dict(n_models=K, dim=DIM, horizon=512, sgld_steps=2,
+             sgld_minibatch=4)
+    d.update(kw)
+    return fgts.FGTSConfig(**d)
+
+
+def _service(mesh=None, **cfg_kw):
+    from repro.encoder import EncoderConfig, init_encoder
+    from repro.serving import PoolEntry, RouterService, RouterServiceConfig
+    enc_cfg = EncoderConfig(d_model=DIM, n_layers=1, n_heads=2, d_ff=32,
+                            max_len=8)
+    enc = init_encoder(KEY, enc_cfg)
+    entries = [PoolEntry(name=f"m{i}", arch="granite-3-2b",
+                         cost_per_1k_tokens=0.1 * (i + 1),
+                         embedding=np.random.RandomState(i).randn(DIM)
+                         .astype(np.float32)) for i in range(K)]
+    cfg = RouterServiceConfig(fgts=_cfg(), feedback_capacity=128, **cfg_kw)
+    return RouterService(entries, enc, enc_cfg, cfg, mesh=mesh)
+
+
+def _mesh():
+    from repro.launch import mesh as mesh_lib
+    return mesh_lib.make_debug_mesh(4, 2)
+
+
+def _assert_state_close(sa, sb, rtol=1e-5, atol=1e-5):
+    for a, b in zip(jax.tree.leaves(sa), jax.tree.leaves(sb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol,
+                                   atol=atol)
+
+
+def test_route_batch_parity():
+    svc_s, svc_m = _service(), _service(mesh=_mesh())
+    x = jax.random.normal(KEY, (BATCH, DIM))
+    for _ in range(3):
+        a1s, a2s, ts = svc_s.route_batch(x)
+        a1m, a2m, tm = svc_m.route_batch(x)
+        np.testing.assert_array_equal(np.asarray(a1s), np.asarray(a1m))
+        np.testing.assert_array_equal(np.asarray(a2s), np.asarray(a2m))
+        np.testing.assert_array_equal(np.asarray(ts), np.asarray(tm))
+    _assert_state_close(svc_s.state, svc_m.state)
+
+
+def test_pending_ring_stays_sharded():
+    """Tickets and votes never gather to one device: the ring's shards live
+    on the mesh's batch ('data') axis through enqueue AND resolve."""
+    svc = _service(mesh=_mesh())
+    x = jax.random.normal(KEY, (BATCH, DIM))
+    _, _, t = svc.route_batch(x)
+
+    def sharded_on_data(arr):
+        spec = arr.sharding.spec
+        return len(spec) > 0 and spec[0] is not None and "data" in spec[0]
+
+    assert sharded_on_data(svc.pending.x) and sharded_on_data(svc.pending.valid)
+    svc.feedback_batch(t, jnp.ones((BATCH,)))
+    assert sharded_on_data(svc.pending.x) and sharded_on_data(svc.pending.valid)
+    assert svc.pending_count() == 0
+
+
+def test_feedback_batch_parity_with_rejects_and_duplicates():
+    svc_s, svc_m = _service(), _service(mesh=_mesh())
+    x = jax.random.normal(KEY, (BATCH, DIM))
+    votes = jax.random.choice(jax.random.fold_in(KEY, 1),
+                              jnp.asarray([-1.0, 1.0]), (BATCH,))
+    for svc in (svc_s, svc_m):
+        _, _, t0 = svc.route_batch(x)
+        _, _, t1 = svc.route_batch(x)
+        # duplicate half of t0, include the already-consumed t0 again later
+        dup = jnp.concatenate([t0[:16], t0[:16]])
+        assert svc.feedback_batch(dup, votes) == 16
+        # stale (already resolved) + fresh in one batch: only fresh fold
+        mixed = jnp.concatenate([t0[:16], t1[:16]])
+        assert svc.feedback_batch(mixed, votes) == 16
+    assert int(svc_s.state.t) == int(svc_m.state.t) == 32
+    _assert_state_close(svc_s.state, svc_m.state)
+    assert svc_s.pending_count() == svc_m.pending_count()
+
+
+def test_serve_loop_512_query_parity():
+    """16 rounds x 32 queries with one-round feedback lag: the sharded
+    service reproduces the unsharded routed pairs and posterior."""
+    svc_s, svc_m = _service(), _service(mesh=_mesh())
+    lagged = {0: None, 1: None}
+    for r in range(16):
+        kx, kv = jax.random.split(jax.random.fold_in(KEY, 100 + r))
+        x = jax.random.normal(kx, (BATCH, DIM))
+        y = jax.random.choice(kv, jnp.asarray([-1.0, 1.0]), (BATCH,))
+        outs = []
+        for i, svc in enumerate((svc_s, svc_m)):
+            a1, a2, t = svc.route_batch(x)
+            if lagged[i] is not None:
+                t_old, y_old = lagged[i]
+                assert svc.feedback_batch(t_old, y_old) == BATCH
+            lagged[i] = (t, y)
+            svc.expire_pending()
+            outs.append((np.asarray(a1), np.asarray(a2)))
+        np.testing.assert_array_equal(outs[0][0], outs[1][0])
+        np.testing.assert_array_equal(outs[0][1], outs[1][1])
+    assert svc_s.n_routed == svc_m.n_routed == 512
+    assert int(svc_s.state.t) == int(svc_m.state.t) == 480  # last batch lags
+    _assert_state_close(svc_s.state, svc_m.state, rtol=1e-4, atol=1e-4)
+
+
+def test_duplicate_ticket_single_sharded_resolve_folds_once():
+    """The dedup lives inside the jitted resolve, sharded included: one
+    duplicated ticket in one call validates exactly one row."""
+    from repro.sharding import routing_rules as rr
+    mesh = _mesh()
+    pend_sh = rr.to_shardings(mesh, rr.pending_specs(mesh))
+    row = rr.to_shardings(mesh, rr.per_query_spec(mesh))
+    qry = rr.to_shardings(mesh, rr.query_batch_spec(mesh))
+    res_sh = rr.to_shardings(mesh, rr.resolved_specs(mesh))
+    rep = rr.to_shardings(mesh, jax.sharding.PartitionSpec())
+
+    q = jax.device_put(fq.init_pending(64, DIM), pend_sh)
+    x = jax.random.normal(KEY, (BATCH, DIM))
+    a = jnp.zeros((BATCH,), jnp.int32)
+    enq = jax.jit(fq.enqueue, in_shardings=(pend_sh, qry, row, row, rep),
+                  out_shardings=(pend_sh, row))
+    res = jax.jit(fq.resolve, in_shardings=(pend_sh, row, row, rep),
+                  out_shardings=(pend_sh, res_sh))
+    q, t = enq(q, x, a, a, jnp.asarray(1, jnp.int32))
+    dup = jax.device_put(
+        jnp.concatenate([t[:4], t[:4], t[:4], t[:4], t[16:]]), row)  # (32,)
+    q, out = res(q, dup, jnp.ones((BATCH,)), jnp.asarray(1, jnp.int32))
+    ok = np.asarray(out.ok)
+    assert ok[:4].all() and not ok[4:16].any() and ok[16:].all()
+    # and the consumed slots are gone: a retry validates nothing
+    q, out = res(q, dup, jnp.ones((BATCH,)), jnp.asarray(1, jnp.int32))
+    assert not np.asarray(out.ok).any()
+
+
+def test_sharded_checkpoint_roundtrip(tmp_path):
+    """Mid-flight checkpoint taken by the sharded service restores into a
+    fresh sharded service and continues identically."""
+    mesh = _mesh()
+    svc, svc2 = _service(mesh=mesh), _service(mesh=mesh)
+    x0 = jax.random.normal(KEY, (BATCH, DIM))
+    x1 = jax.random.normal(jax.random.fold_in(KEY, 9), (BATCH, DIM))
+    _, _, t0 = svc.route_batch(x0)
+    svc.save(str(tmp_path))
+    svc2.restore(str(tmp_path))
+    assert svc2.pending_count() == BATCH and svc2.tick == svc.tick
+    outs = []
+    for s in (svc, svc2):
+        assert s.feedback_batch(t0, jnp.ones((BATCH,))) == BATCH
+        a1, a2, _ = s.route_batch(x1)
+        outs.append((np.asarray(a1), np.asarray(a2), s.state))
+    np.testing.assert_array_equal(outs[0][0], outs[1][0])
+    np.testing.assert_array_equal(outs[0][1], outs[1][1])
+    for a, b in zip(jax.tree.leaves(outs[0][2]), jax.tree.leaves(outs[1][2])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_factory_policy_mesh_parity_and_compaction_fallback():
+    """Factory-built policies (no update_masked) serve under a mesh too:
+    act runs as a GSPMD-sharded global program under partitionable
+    threefry, so per-row randomness is invariant to the mesh size (a (1,1)
+    mesh reproduces the (4,2) mesh exactly, and shards draw distinct
+    values), and the host-compaction fallback must survive arbitrary
+    survivor counts — 13 of 32 divides over no mesh axis."""
+    from repro.core import baselines
+    from repro.launch import mesh as mesh_lib
+
+    def factory(a_emb, costs, cfg):
+        return baselines.uniform_policy(cfg.fgts.n_models)
+
+    svc_s = _service(mesh=mesh_lib.make_debug_mesh(1, 1),
+                     policy_factory=factory)
+    svc_m = _service(mesh=_mesh(), policy_factory=factory)
+    x = jax.random.normal(KEY, (BATCH, DIM))
+    for svc in (svc_s, svc_m):
+        assert svc.policy.update_masked is None
+    ts = tm = None
+    for _ in range(2):
+        a1s, a2s, ts = svc_s.route_batch(x)
+        a1m, a2m, tm = svc_m.route_batch(x)
+        np.testing.assert_array_equal(np.asarray(a1s), np.asarray(a1m))
+        np.testing.assert_array_equal(np.asarray(a2s), np.asarray(a2m))
+        np.testing.assert_array_equal(np.asarray(ts), np.asarray(tm))
+    # per-row draws must not repeat identically shard to shard (8 rows per
+    # data shard on the (4,2) mesh)
+    pairs = np.stack([np.asarray(a1m), np.asarray(a2m)], axis=1)
+    assert not all(np.array_equal(pairs[:8], pairs[8 * i:8 * (i + 1)])
+                   for i in range(1, 4))
+    y = jnp.ones((BATCH,))
+    for svc, t in ((svc_s, ts), (svc_m, tm)):
+        dup = jnp.concatenate([t[:13],
+                               jnp.broadcast_to(t[:1], (BATCH - 13,))])
+        assert svc.feedback_batch(dup, y) == 13
+    assert svc_s.pending_count() == svc_m.pending_count()
+
+
+def test_route_batch_rejects_indivisible_batch():
+    svc = _service(mesh=_mesh())
+    with pytest.raises(ValueError, match="divide"):
+        svc.route_batch(jax.random.normal(KEY, (BATCH + 1, DIM)))
