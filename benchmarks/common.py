@@ -117,15 +117,18 @@ def run_fgts_curves(e: env_lib.EnvData, a_emb, cfg: fgts.FGTSConfig,
 
 def run_policy_curves(e: env_lib.EnvData, policy: policy_lib.RoutingPolicy,
                       n_runs: int = N_RUNS, seed: int = SEED,
-                      batch: int = 1, delay=0):
+                      batch: int = 1, delay=0, pool_schedule=None):
     """Average cumulative regret of any RoutingPolicy (vmapped seeds).
 
     ``delay`` (int rounds or an ``env.DelaySpec``) benchmarks the policy
-    under delayed feedback — still one lax.scan per run, vmapped over seeds.
+    under delayed feedback — still one lax.scan per run, vmapped over
+    seeds. ``pool_schedule`` (a ``model_pool.PoolSchedule``) replays arm
+    arrivals/retirements inside the scan for pool-backed policies.
     """
     keys = jax.random.split(jax.random.PRNGKey(seed), n_runs)
     run = jax.jit(jax.vmap(
-        lambda k: env_lib.run(k, e, policy, batch=batch, delay=delay)[0]))
+        lambda k: env_lib.run(k, e, policy, batch=batch, delay=delay,
+                              pool_schedule=pool_schedule)[0]))
     curves = np.asarray(run(keys))
     return curves.mean(axis=0), curves
 

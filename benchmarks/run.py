@@ -15,6 +15,8 @@ results/bench.csv). Mapping to the paper:
                                     the paper's synchronous protocol)
     sharded   bench_sharded_serving mesh-sharded serving queries/sec vs
                                     devices vs batch
+    dynamic_pool bench_dynamic_pool regret recovery after a mid-stream
+                                    model arrival (warm vs cold hot-add)
     kernels   bench_kernels         Pallas-vs-oracle numerics + timing
     roofline  roofline              EXPERIMENTS.md §Roofline source
 """
@@ -36,9 +38,9 @@ def main() -> None:
     if args.fast:
         os.environ["REPRO_RUNS"] = "2"
 
-    from . import (bench_baselines, bench_delayed, bench_generalization,
-                   bench_kernels, bench_mixinstruct, bench_mmlu_naive,
-                   bench_routerbench, bench_scores_table,
+    from . import (bench_baselines, bench_delayed, bench_dynamic_pool,
+                   bench_generalization, bench_kernels, bench_mixinstruct,
+                   bench_mmlu_naive, bench_routerbench, bench_scores_table,
                    bench_sharded_serving, roofline)
     benches = {
         "tab1": bench_scores_table.run,
@@ -50,6 +52,7 @@ def main() -> None:
         "b3": bench_baselines.run,
         "delayed": bench_delayed.run,
         "sharded": bench_sharded_serving.run,
+        "dynamic_pool": bench_dynamic_pool.run,
         "roofline": roofline.run,
     }
     wanted = (args.only.split(",") if args.only else list(benches))

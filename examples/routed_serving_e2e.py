@@ -24,10 +24,11 @@ from repro.configs import ARCHS
 from repro.contrastive import finetune_categorical
 from repro.core import fgts
 from repro.core.btl import sample_preference
+from repro.data.pool import build_entries
 from repro.data.synth import CorpusConfig, make_split, sample_queries
 from repro.encoder import EncoderConfig, init_encoder
 from repro.models import lm
-from repro.serving import PoolEntry, RouterService, RouterServiceConfig
+from repro.serving import RouterService, RouterServiceConfig
 
 POOL_ARCHS = ["granite-3-2b", "qwen2-7b", "mamba2-1.3b", "recurrentgemma-9b",
               "gemma2-9b"]
@@ -88,8 +89,8 @@ def main():
                              off_cats, n_cats)    # (d, M)
     a_emb = np.asarray((skills @ xi.T))           # eq. 3 with perf weights
 
-    pool = [PoolEntry(name=n, arch=n, cost_per_1k_tokens=0.05 * (i + 1),
-                      embedding=a_emb[i]) for i, n in enumerate(POOL_ARCHS)]
+    pool = build_entries(POOL_ARCHS, a_emb,
+                         [0.05 * (i + 1) for i in range(len(POOL_ARCHS))])
     fcfg = fgts.FGTSConfig(n_models=len(pool), dim=emb_dim,
                            horizon=args.rounds * args.batch, eta=2.0, mu=0.2,
                            sgld_steps=10, sgld_eps=2e-4, sgld_minibatch=32)

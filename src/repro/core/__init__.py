@@ -1,4 +1,5 @@
-from . import baselines, btl, ccft, env, extensions, fgts, policy, regret
+from . import (baselines, btl, ccft, env, extensions, fgts, model_pool,
+               policy, regret)
 
-__all__ = ["baselines", "btl", "ccft", "env", "extensions", "fgts", "policy",
-           "regret"]
+__all__ = ["baselines", "btl", "ccft", "env", "extensions", "fgts",
+           "model_pool", "policy", "regret"]

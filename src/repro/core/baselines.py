@@ -23,16 +23,28 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dueling_score import mask_fallback_pair
+
 from .ccft import phi_all
+from .model_pool import ModelPool, PooledState, masked_pair_choice
 from .policy import RoutingPolicy, preference_loss, select_pair
 
 
-def uniform_policy(n_models: int) -> RoutingPolicy:
+def uniform_policy(n_models: int | ModelPool) -> RoutingPolicy:
+    """Random pair each round. Pass a ``ModelPool`` instead of a count to
+    sample uniformly over the *active* arms only (pool in the state)."""
+    pooled = isinstance(n_models, ModelPool)
+    pool0 = n_models if pooled else None
+
     def init(key):
-        return jnp.zeros(())
+        return PooledState(jnp.zeros(()), pool0) if pooled else \
+            jnp.zeros(())
 
     def act(key, state, x):
         b = x.shape[0]
+        if pooled:
+            a1, a2 = masked_pair_choice(key, state.pool.active, b)
+            return state, a1, a2
         pairs = jax.vmap(lambda k: jax.random.choice(
             k, n_models, (2,), replace=False))(jax.random.split(key, b))
         return state, pairs[:, 0].astype(jnp.int32), \
@@ -44,15 +56,29 @@ def uniform_policy(n_models: int) -> RoutingPolicy:
     return RoutingPolicy(init, act, update, name="uniform")
 
 
-def best_fixed_policy(utils_mean: jax.Array) -> RoutingPolicy:
-    """utils_mean: (K,) average utility per arm over the stream (hindsight)."""
+def best_fixed_policy(utils_mean: jax.Array,
+                      pool: ModelPool | None = None) -> RoutingPolicy:
+    """utils_mean: (K,) average utility per arm over the stream (hindsight).
+
+    With a ``pool``, plays the best *active* arm — after a retirement it
+    shifts to the next-best surviving arm at the very next act.
+    """
+    utils_mean = jnp.asarray(utils_mean)
+    if pool is not None and utils_mean.shape[0] != pool.active.shape[0]:
+        raise ValueError(
+            f"utils_mean has {utils_mean.shape[0]} arms but the pool's "
+            f"capacity is {pool.active.shape[0]} — pad it to K_max")
     k_star = jnp.argmax(utils_mean).astype(jnp.int32)
 
     def init(key):
-        return jnp.zeros(())
+        return PooledState(jnp.zeros(()), pool) if pool is not None else \
+            jnp.zeros(())
 
     def act(key, state, x):
-        a = jnp.broadcast_to(k_star, (x.shape[0],))
+        k = k_star if pool is None else jnp.argmax(
+            jnp.where(state.pool.active, utils_mean,
+                      -jnp.inf)).astype(jnp.int32)
+        a = jnp.broadcast_to(k, (x.shape[0],))
         return state, a, a
 
     def update(state, x, a1, a2, y):
@@ -69,33 +95,59 @@ class EpsGreedyConfig:
     lr: float = 0.05
 
 
-def eps_greedy_policy(a_emb: jax.Array, cfg: EpsGreedyConfig, *,
-                      tilt: jax.Array | None = None,
+def eps_greedy_policy(a_emb: jax.Array | ModelPool, cfg: EpsGreedyConfig, *,
+                      tilt: jax.Array | None = None, cost_tilt: float = 0.0,
                       use_kernel: bool = True) -> RoutingPolicy:
     """SGD-MAP on the preference loss; epsilon-uniform exploration.
 
     ``tilt``: optional (K,) serve-time score penalty (cost_tilt * cost_k).
+    With a ``ModelPool`` first argument the greedy argmax AND the
+    epsilon-exploration draw range over active arms only (``cfg.n_models``
+    is then the pool capacity); pass ``cost_tilt`` instead of a static
+    ``tilt`` there, so hot-added/swapped models are penalized by their
+    *live* pool cost, not a construction-time snapshot.
     """
+    pooled = isinstance(a_emb, ModelPool)
+    pool0 = a_emb if pooled else None
+    if cost_tilt != 0.0 and not pooled:
+        raise ValueError(
+            "cost_tilt reads live per-arm costs from a ModelPool — for a "
+            "static embedding table pass the precomputed tilt= vector")
 
     def init(key):
-        return {"theta": jax.random.normal(key, (cfg.dim,)) * 0.1}
+        s = {"theta": jax.random.normal(key, (cfg.dim,)) * 0.1}
+        return PooledState(s, pool0) if pooled else s
 
     def act(key, state, x):
         b = x.shape[0]
         k_e, k_a = jax.random.split(key)
-        a1_g, a2_g = select_pair(x, a_emb, state["theta"], state["theta"],
-                                 tilt=tilt, distinct=True,
+        inner = state.inner if pooled else state
+        emb = state.pool.a_emb if pooled else a_emb
+        mask = state.pool.active if pooled else None
+        eff_tilt = tilt
+        if pooled and tilt is None and cost_tilt != 0.0:
+            eff_tilt = cost_tilt * state.pool.costs
+        a1_g, a2_g = select_pair(x, emb, inner["theta"], inner["theta"],
+                                 tilt=eff_tilt, mask=mask, distinct=True,
                                  use_kernel=use_kernel)
         explore = jax.random.uniform(k_e, (b,)) < cfg.eps
-        rand = jax.vmap(lambda k: jax.random.choice(
-            k, cfg.n_models, (2,), replace=False))(jax.random.split(k_a, b))
-        a1 = jnp.where(explore, rand[:, 0], a1_g).astype(jnp.int32)
-        a2 = jnp.where(explore, rand[:, 1], a2_g).astype(jnp.int32)
+        if pooled:
+            r1, r2 = masked_pair_choice(k_a, state.pool.active, b)
+        else:
+            rand = jax.vmap(lambda k: jax.random.choice(
+                k, cfg.n_models, (2,),
+                replace=False))(jax.random.split(k_a, b))
+            r1, r2 = rand[:, 0], rand[:, 1]
+        a1 = jnp.where(explore, r1, a1_g).astype(jnp.int32)
+        a2 = jnp.where(explore, r2, a2_g).astype(jnp.int32)
         return state, a1, a2
 
     def update(state, x, a1, a2, y):
-        g = jax.grad(preference_loss)(state["theta"], x, a1, a2, y, a_emb)
-        return {"theta": state["theta"] - cfg.lr * g}
+        inner = state.inner if pooled else state
+        emb = state.pool.a_emb if pooled else a_emb
+        g = jax.grad(preference_loss)(inner["theta"], x, a1, a2, y, emb)
+        out = {"theta": inner["theta"] - cfg.lr * g}
+        return state._replace(inner=out) if pooled else out
 
     return RoutingPolicy(init, act, update, name="eps_greedy")
 
@@ -108,8 +160,9 @@ class LinUCBConfig:
     lam: float = 1.0         # ridge prior
 
 
-def linucb_duel_policy(a_emb: jax.Array, cfg: LinUCBConfig, *,
-                       tilt: jax.Array | None = None) -> RoutingPolicy:
+def linucb_duel_policy(a_emb: jax.Array | ModelPool, cfg: LinUCBConfig, *,
+                       tilt: jax.Array | None = None,
+                       cost_tilt: float = 0.0) -> RoutingPolicy:
     """MixLLM-style per-arm LinUCB with pointwise pseudo-feedback.
 
     Per arm k: ridge statistics A_k = lam*I + sum phi phi^T, b_k = sum r*phi,
@@ -120,38 +173,68 @@ def linucb_duel_policy(a_emb: jax.Array, cfg: LinUCBConfig, *,
     Selection uses per-arm ridge matrices (not a shared theta), so it cannot
     ride the dueling_score kernel; the batched update is two scatter-adds
     (XLA accumulates duplicate arm indices within the batch).
+
+    With a ``ModelPool`` first argument the UCB argmax sees only active
+    arms; per-arm ridge stats are sized to the pool capacity, so an arm
+    hot-added into a never-used slot starts from the fresh lam*I prior —
+    a *reused* slot (``swap_model``, or an add forced into a retired slot
+    under capacity pressure, which warns) inherits that slot's stats.
+    Pass ``cost_tilt`` instead of a static ``tilt`` there, so
+    hot-added/swapped models are penalized by their *live* pool cost.
     """
     d = cfg.dim
+    pooled = isinstance(a_emb, ModelPool)
+    pool0 = a_emb if pooled else None
+    if cost_tilt != 0.0 and not pooled:
+        raise ValueError(
+            "cost_tilt reads live per-arm costs from a ModelPool — for a "
+            "static embedding table pass the precomputed tilt= vector")
 
-    def init(key):
+    def fresh(key):
         eye = jnp.broadcast_to(jnp.eye(d) * cfg.lam, (cfg.n_models, d, d))
         return {"A": eye, "b": jnp.zeros((cfg.n_models, d))}
 
+    def init(key):
+        s = fresh(key)
+        return PooledState(s, pool0) if pooled else s
+
     def act(key, state, x):
-        feats = jax.vmap(lambda xi: phi_all(xi, a_emb))(x)     # (B, K, d)
-        a_inv = jnp.linalg.inv(state["A"])                     # (K, d, d)
-        theta = jnp.einsum("kij,kj->ki", a_inv, state["b"])    # (K, d)
+        inner = state.inner if pooled else state
+        emb = state.pool.a_emb if pooled else a_emb
+        feats = jax.vmap(lambda xi: phi_all(xi, emb))(x)       # (B, K, d)
+        a_inv = jnp.linalg.inv(inner["A"])                     # (K, d, d)
+        theta = jnp.einsum("kij,kj->ki", a_inv, inner["b"])    # (K, d)
         mean = jnp.einsum("bki,ki->bk", feats, theta)
         var = jnp.einsum("bki,kij,bkj->bk", feats, a_inv, feats)
         ucb = mean + cfg.alpha * jnp.sqrt(jnp.maximum(var, 0.0))   # (B, K)
-        if tilt is not None:
-            ucb = ucb - tilt[None, :]
+        eff_tilt = tilt
+        if pooled and tilt is None and cost_tilt != 0.0:
+            eff_tilt = cost_tilt * state.pool.costs
+        if eff_tilt is not None:
+            ucb = ucb - eff_tilt[None, :]
+        if pooled:
+            ucb = jnp.where(state.pool.active[None, :], ucb, -jnp.inf)
         a1 = jnp.argmax(ucb, axis=-1).astype(jnp.int32)
         masked = jnp.where(jnp.arange(cfg.n_models)[None, :] == a1[:, None],
                            -jnp.inf, ucb)
         a2 = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+        if pooled:
+            a2 = mask_fallback_pair(masked, a1, a2)
         return state, a1, a2
 
     def update(state, x, a1, a2, y):
-        feats = jax.vmap(lambda xi: phi_all(xi, a_emb))(x)     # (B, K, d)
+        inner = state.inner if pooled else state
+        emb = state.pool.a_emb if pooled else a_emb
+        feats = jax.vmap(lambda xi: phi_all(xi, emb))(x)       # (B, K, d)
         rows = jnp.arange(x.shape[0])
         f1, f2 = feats[rows, a1], feats[rows, a2]              # (B, d)
         r1, r2 = (y + 1) / 2, (1 - y) / 2                      # (B,)
         outer1 = jnp.einsum("bi,bj->bij", f1, f1)
         outer2 = jnp.einsum("bi,bj->bij", f2, f2)
-        new_a = state["A"].at[a1].add(outer1).at[a2].add(outer2)
-        new_b = state["b"].at[a1].add(r1[:, None] * f1).at[a2].add(
+        new_a = inner["A"].at[a1].add(outer1).at[a2].add(outer2)
+        new_b = inner["b"].at[a1].add(r1[:, None] * f1).at[a2].add(
             r2[:, None] * f2)
-        return {"A": new_a, "b": new_b}
+        out = {"A": new_a, "b": new_b}
+        return state._replace(inner=out) if pooled else out
 
     return RoutingPolicy(init, act, update, name="linucb_duel")

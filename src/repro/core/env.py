@@ -20,6 +20,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from . import model_pool as mp
 from .btl import sample_preference
 from .policy import RoutingPolicy
 from .regret import instant_regret
@@ -94,7 +95,8 @@ def _as_delay(delay) -> DelaySpec:
 
 
 def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
-        batch: int = 1, delay: DelaySpec | int | None = 0):
+        batch: int = 1, delay: DelaySpec | int | None = 0,
+        pool_schedule: "mp.PoolSchedule | None" = None):
     """Run any RoutingPolicy over the stream. Returns (cum_regret (T,), state).
 
     Rounds are consumed ``batch`` at a time (trailing remainder dropped when
@@ -110,6 +112,13 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
     delays are directly comparable. ``delay=0`` takes the original
     synchronous path — bit-identical to the pre-delay loop. Policies with an
     ``update_delayed`` (staleness-aware) path receive the batch age.
+
+    ``pool_schedule`` (a ``model_pool.PoolSchedule``) replays arm
+    arrivals/retirements inside the same scan: events due at scan step s
+    are folded into the policy's pool *before* that step's act, and regret
+    is measured against the best **active** arm per tick. Requires a
+    pool-backed policy (state is a ``PooledState``); None leaves the loop
+    bit-identical to the static path.
     """
     spec = _as_delay(delay)
     t_total = env.x.shape[0] - env.x.shape[0] % batch
@@ -125,18 +134,40 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
     state0 = policy.init(k_init)
     rows = jnp.arange(batch)
     keys = jax.random.split(k_loop, n_steps)
+    steps = jnp.arange(n_steps, dtype=jnp.int32)
+    if pool_schedule is not None:
+        mp.get_pool(state0)        # fail fast on a non-pooled policy
 
     if spec.trivial:
-        def step(state, inp):
-            k, x_b, u_b = inp
+        if pool_schedule is None:
+            def step(state, inp):
+                k, x_b, u_b = inp
+                k_act, k_fb = jax.random.split(k)
+                state, a1, a2 = policy.act(k_act, state, x_b)
+                y = sample_preference(k_fb,
+                                      env.feedback_scale * u_b[rows, a1],
+                                      env.feedback_scale * u_b[rows, a2])
+                state = policy.update(state, x_b, a1, a2, y)
+                return state, jax.vmap(instant_regret)(u_b, a1, a2)
+
+            state, regrets = jax.lax.scan(step, state0, (keys, x, utils))
+            return jnp.cumsum(regrets.reshape(-1)), state
+
+        def sched_step(state, inp):
+            s, k, x_b, u_b = inp
+            pool = mp.apply_events(mp.get_pool(state), pool_schedule, s)
+            state = mp.set_pool(state, pool)
             k_act, k_fb = jax.random.split(k)
             state, a1, a2 = policy.act(k_act, state, x_b)
             y = sample_preference(k_fb, env.feedback_scale * u_b[rows, a1],
                                   env.feedback_scale * u_b[rows, a2])
             state = policy.update(state, x_b, a1, a2, y)
-            return state, jax.vmap(instant_regret)(u_b, a1, a2)
+            reg = jax.vmap(lambda u, i, j: instant_regret(
+                u, i, j, active=pool.active))(u_b, a1, a2)
+            return state, reg
 
-        state, regrets = jax.lax.scan(step, state0, (keys, x, utils))
+        state, regrets = jax.lax.scan(sched_step, state0,
+                                      (steps, keys, x, utils))
         return jnp.cumsum(regrets.reshape(-1)), state
 
     # -- delayed path: resolve(ring head) -> act -> schedule, one scan ------
@@ -155,6 +186,13 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
         state, ring = carry
         s, k, x_b, u_b = inp
         k_act, k_fb, k_lag = jax.random.split(k, 3)
+
+        # 0. pool membership events due this tick land before anything else
+        active = None
+        if pool_schedule is not None:
+            pool = mp.apply_events(mp.get_pool(state), pool_schedule, s)
+            state = mp.set_pool(state, pool)
+            active = pool.active
 
         # 1. resolve: the slot due at tick s (lag <= cap < r guarantees any
         #    valid entry here was scheduled for exactly this tick)
@@ -193,9 +231,10 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
             issued=ring["issued"].at[w].set(s),
             valid=ring["valid"].at[w].set(True),
         )
-        return (state, ring), jax.vmap(instant_regret)(u_b, a1, a2)
+        reg = jax.vmap(lambda u, i, j: instant_regret(
+            u, i, j, active=active))(u_b, a1, a2)
+        return (state, ring), reg
 
-    steps = jnp.arange(n_steps, dtype=jnp.int32)
     (state, _), regrets = jax.lax.scan(delayed_step, (state0, ring0),
                                        (steps, keys, x, utils))
     return jnp.cumsum(regrets.reshape(-1)), state

@@ -160,7 +160,7 @@ def mixed_sgld_sample(key: jax.Array, theta0: jax.Array, h: MixedHistory,
 # RoutingPolicy adapters — both extensions on the unified batched protocol
 # ---------------------------------------------------------------------------
 
-def mixed_feedback_policy(a_emb: jax.Array, cfg: FGTSConfig, *,
+def mixed_feedback_policy(a_emb, cfg: FGTSConfig, *,
                           use_kernel: bool = True):
     """The mixed duel+click estimator as a batched ``RoutingPolicy``.
 
@@ -168,29 +168,40 @@ def mixed_feedback_policy(a_emb: jax.Array, cfg: FGTSConfig, *,
     click streams are injected out-of-band with ``inject_clicks`` on the
     policy state — both feed the same single-theta pseudo-posterior.
     State: (MixedHistory, thetas (n_chains, dim)) warm-started chains.
+    A ``ModelPool`` first argument makes the arm set dynamic (pool carried
+    in the state, selection masked to active arms).
     """
+    from .model_pool import ModelPool, PooledState
     from .policy import RoutingPolicy, select_pair
+
+    pooled = isinstance(a_emb, ModelPool)
+    pool0 = a_emb if pooled else None
 
     def init(key):
         k_th = jax.random.fold_in(key, 1)
         theta = jax.random.normal(k_th, (cfg.n_chains, cfg.dim)) \
             * cfg.prior_var ** 0.5
-        return (init_mixed(cfg), theta)
+        s = (init_mixed(cfg), theta)
+        return PooledState(s, pool0) if pooled else s
 
     def act(key, state, x):
-        h, theta0 = state
+        h, theta0 = state.inner if pooled else state
+        emb = state.pool.a_emb if pooled else a_emb
+        mask = state.pool.active if pooled else None
         ks = jax.random.split(key, cfg.n_chains)
         theta = jax.vmap(lambda k, t0: mixed_sgld_sample(
-            k, t0, h, a_emb, cfg))(ks, theta0)
+            k, t0, h, emb, cfg))(ks, theta0)
         th = theta.mean(axis=0)
-        a1, a2 = select_pair(x, a_emb, th, th, distinct=True,
+        a1, a2 = select_pair(x, emb, th, th, mask=mask, distinct=True,
                              use_kernel=use_kernel)
-        return (h, theta), a1, a2
+        out = (h, theta)
+        return (state._replace(inner=out) if pooled else out), a1, a2
 
     def update(state, x, a1, a2, y):
-        h, theta = state
+        h, theta = state.inner if pooled else state
         duel = jnp.ones(x.shape[0], bool)
-        return (observe_mixed_batch(h, x, a1, a2, y, duel), theta)
+        out = (observe_mixed_batch(h, x, a1, a2, y, duel), theta)
+        return state._replace(inner=out) if pooled else out
 
     return RoutingPolicy(init, act, update, name="mixed_feedback")
 
@@ -224,40 +235,52 @@ def _pl_pair_potential(theta, idx, state, a_emb, cfg: FGTSConfig):
     return scale * jnp.sum(-cfg.eta * ll * valid) + prior
 
 
-def pl_pair_policy(a_emb: jax.Array, cfg: FGTSConfig, *,
+def pl_pair_policy(a_emb, cfg: FGTSConfig, *,
                    use_kernel: bool = True):
     """Listwise-likelihood router on the batched protocol (pairs presented).
 
     SGLD chains sample one theta from the PL pseudo-posterior; selection is
     the kernel's top-2 (distinct) argmax; updates reuse the FGTS replay ring
-    (single scatter)."""
+    (single scatter). A ``ModelPool`` first argument makes the arm set
+    dynamic (pool carried in the state, selection masked to active arms)."""
     from . import fgts as fgts_lib
+    from .model_pool import ModelPool, PooledState
     from .policy import RoutingPolicy, init_fgts_state, select_pair
 
     grad_fn = jax.grad(_pl_pair_potential)
+    pooled = isinstance(a_emb, ModelPool)
+    pool0 = a_emb if pooled else None
 
-    def sgld(key, theta0, state):
+    def sgld(key, theta0, state, emb):
         return fgts_lib.sgld_loop(
             key, theta0,
-            lambda th, idx: grad_fn(th, idx, state, a_emb, cfg),
+            lambda th, idx: grad_fn(th, idx, state, emb, cfg),
             state.t, state.x.shape[0], cfg)
 
     def init(key):
         # single-theta policy: theta2 is not part of the PL sampler, keep a
         # minimal placeholder instead of dead warm-start chains
-        return init_fgts_state(cfg, key)._replace(
+        s = init_fgts_state(cfg, key)._replace(
             theta2=jnp.zeros((1, cfg.dim)))
+        return PooledState(s, pool0) if pooled else s
 
     def act(key, state, x):
+        inner = state.inner if pooled else state
+        emb = state.pool.a_emb if pooled else a_emb
+        mask = state.pool.active if pooled else None
         ks = jax.random.split(key, cfg.n_chains)
-        th1 = jax.vmap(lambda k, t0: sgld(k, t0, state))(ks, state.theta1)
-        state = state._replace(theta1=th1)
+        th1 = jax.vmap(lambda k, t0: sgld(k, t0, inner, emb))(ks,
+                                                              inner.theta1)
+        inner = inner._replace(theta1=th1)
         th = th1.mean(axis=0)
-        a1, a2 = select_pair(x, a_emb, th, th, distinct=True,
+        a1, a2 = select_pair(x, emb, th, th, mask=mask, distinct=True,
                              use_kernel=use_kernel)
-        return state, a1, a2
+        return (state._replace(inner=inner) if pooled else inner), a1, a2
 
     def update(state, x, a1, a2, y):
+        if pooled:
+            return state._replace(
+                inner=fgts_lib.observe_batch(state.inner, x, a1, a2, y))
         return fgts_lib.observe_batch(state, x, a1, a2, y)
 
     return RoutingPolicy(init, act, update, name="pl_pair")

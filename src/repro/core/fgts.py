@@ -24,6 +24,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dueling_score import mask_fallback_pair
+
 from .btl import logistic_loss
 from .ccft import phi, scores_all
 
@@ -77,24 +79,34 @@ def init_state(cfg: FGTSConfig, key: jax.Array) -> FGTSState:
 
 def likelihood_batch(theta: jax.Array, x: jax.Array, a1: jax.Array,
                      a2: jax.Array, y: jax.Array, a_emb: jax.Array,
-                     j: int, cfg: FGTSConfig) -> jax.Array:
-    """Sum of L^j over a (masked) minibatch. x: (m,dim), a_emb: (K,dim)."""
+                     j: int, cfg: FGTSConfig,
+                     arm_mask: jax.Array | None = None) -> jax.Array:
+    """Sum of L^j over a (masked) minibatch. x: (m,dim), a_emb: (K,dim).
+
+    ``arm_mask`` (K,) bool restricts the feel-good max to *active* arms
+    (dynamic pools: the optimism target is the best arm available now, not
+    a retired one); None keeps the static all-arms max.
+    """
     phi1 = phi(x, a_emb[a1])                             # (m, dim)
     phi2 = phi(x, a_emb[a2])
     z = y * ((phi1 - phi2) @ theta)
     pref = cfg.eta * logistic_loss(z)                    # (m,)
     s_all = jax.vmap(lambda xi: scores_all(xi, a_emb, theta))(x)   # (m, K)
+    if arm_mask is not None:
+        s_all = jnp.where(arm_mask[None, :], s_all, -jnp.inf)
     opp = phi2 if j == 1 else phi1                       # a^{3-j} features
     s_opp = opp @ theta                                  # (m,)
     feelgood = jnp.max(s_all, axis=-1) - s_opp
     return pref - cfg.mu * feelgood                      # (m,)
 
 
-def _potential(theta, idx, state: FGTSState, a_emb, j, cfg: FGTSConfig):
+def _potential(theta, idx, state: FGTSState, a_emb, j, cfg: FGTSConfig,
+               arm_mask=None):
     """U(theta) = (T/m) * sum_minibatch L^j + ||theta||^2 / (2 prior_var)."""
     m = idx.shape[0]
     terms = likelihood_batch(theta, state.x[idx], state.a1[idx],
-                             state.a2[idx], state.y[idx], a_emb, j, cfg)
+                             state.a2[idx], state.y[idx], a_emb, j, cfg,
+                             arm_mask=arm_mask)
     valid = (idx < state.t).astype(jnp.float32)
     n_valid = jnp.maximum(jnp.sum(valid), 1.0)
     scale = state.t.astype(jnp.float32) / n_valid
@@ -131,27 +143,38 @@ def sgld_loop(key: jax.Array, theta0: jax.Array, grad_fn, n_obs: jax.Array,
 
 
 def sgld_sample(key: jax.Array, theta0: jax.Array, state: FGTSState,
-                a_emb: jax.Array, j: int, cfg: FGTSConfig) -> jax.Array:
+                a_emb: jax.Array, j: int, cfg: FGTSConfig,
+                arm_mask: jax.Array | None = None) -> jax.Array:
     """Run cfg.sgld_steps of SGLD from theta0 on the pseudo-posterior,
-    with the Welling & Teh decaying step size in the round count t."""
+    with the Welling & Teh decaying step size in the round count t.
+    ``arm_mask`` restricts the feel-good max to active arms."""
     grad_fn = jax.grad(_potential)
     t = state.t.astype(jnp.float32)
     eps = cfg.sgld_eps * (cfg.sgld_decay_t0
                           / (cfg.sgld_decay_t0 + t)) ** cfg.sgld_decay_pow
     return sgld_loop(key, theta0,
-                     lambda th, idx: grad_fn(th, idx, state, a_emb, j, cfg),
+                     lambda th, idx: grad_fn(th, idx, state, a_emb, j, cfg,
+                                             arm_mask),
                      state.t, state.x.shape[0], cfg, eps=eps)
 
 
 def select_arms(theta1: jax.Array, theta2: jax.Array, x_t: jax.Array,
-                a_emb: jax.Array, force_distinct: bool = False):
-    """Alg. 1 line 6: a^j = argmax_k <theta^j, phi(x_t, a_k)>."""
+                a_emb: jax.Array, force_distinct: bool = False,
+                arm_mask: jax.Array | None = None):
+    """Alg. 1 line 6: a^j = argmax_k <theta^j, phi(x_t, a_k)> — over the
+    *active* arms only when ``arm_mask`` is given (single survivor: the
+    distinct pair degenerates to (k, k))."""
     s1 = scores_all(x_t, a_emb, theta1)
     s2 = scores_all(x_t, a_emb, theta2)
+    if arm_mask is not None:
+        s1 = jnp.where(arm_mask, s1, -jnp.inf)
+        s2 = jnp.where(arm_mask, s2, -jnp.inf)
     a1 = jnp.argmax(s1)
     if force_distinct:
         s2 = s2.at[a1].set(-jnp.inf)
     a2 = jnp.argmax(s2)
+    if arm_mask is not None:
+        a2 = mask_fallback_pair(s2, a1, a2)
     return a1.astype(jnp.int32), a2.astype(jnp.int32)
 
 

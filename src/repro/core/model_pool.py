@@ -1,0 +1,217 @@
+"""Dynamic model pools — first-class arms that arrive, retire, and swap.
+
+The paper's promise is *dynamic adaptation*: dueling feedback tracks a
+changing model landscape, and CCFT gives every model an embedding derivable
+offline, so a router should never need a cold restart when the fleet
+changes. ``ModelPool`` makes the candidate set a pytree *value* instead of
+a construction-time constant:
+
+    a_emb       (K_max, d)  padded embedding table (rows live in slots)
+    costs       (K_max,)    per-arm serving cost ($ / 1k tokens)
+    active      (K_max,)    bool arm mask — the single source of truth for
+                            "which arms may be duelled right now"
+    generation  ()          int32, bumped on every add / retire / swap
+
+Policies built on a pool carry it inside their state (``PooledState``), so
+a membership change is a *data* update — one masked row scatter plus a mask
+flip, same shapes, same treedef — and never retraces a compiled program.
+Selection masks inactive arms to -inf (`policy.select_pair(mask=...)`, the
+``dueling_select`` kernel's masked argmax epilogue), the FGTS feel-good
+term maxes over active arms only, and `env.run(pool_schedule=...)` replays
+arrival/retirement schedules inside the same ``lax.scan``.
+
+Hot-add is warm-started, not cold: the new arm's embedding comes from
+``ccft.model_embeddings`` on its offline skill scores, and
+``warm_start_duels`` synthesizes an offline→online replay batch (the new
+arm vs random active incumbents under BTL) that pre-shapes the posterior
+through ``update_masked`` before the arm takes live traffic — the
+OrcaRouter-style hybrid of offline learning with online updates.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .btl import sample_preference
+
+
+class ModelPool(NamedTuple):
+    """Padded K_max-capacity arm registry — a pure pytree value."""
+    a_emb: jax.Array       # (K_max, d) float32
+    costs: jax.Array       # (K_max,)  float32
+    active: jax.Array      # (K_max,)  bool
+    generation: jax.Array  # ()        int32 — membership-change counter
+
+
+class PooledState(NamedTuple):
+    """Policy state carrying its pool: ``inner`` is the policy's own state
+    (posterior, replay ring, ridge stats, ...), ``pool`` the live arm set.
+    Same treedef/shapes across membership changes — the lax.scan carry,
+    checkpoint, and zero-retrace contracts all ride on that."""
+    inner: Any
+    pool: ModelPool
+
+
+def init_pool(a_emb, costs=None, k_max: int | None = None) -> ModelPool:
+    """Pool from (K, d) embeddings (+ optional (K,) costs), padded to
+    ``k_max`` capacity; the first K slots are active, the padding inactive."""
+    a_emb = jnp.asarray(a_emb, jnp.float32)
+    k, d = a_emb.shape
+    k_max = k if k_max is None else k_max
+    if k_max < k:
+        raise ValueError(f"k_max={k_max} below initial pool size {k}")
+    costs = jnp.zeros((k,), jnp.float32) if costs is None \
+        else jnp.asarray(costs, jnp.float32)
+    pad = k_max - k
+    return ModelPool(
+        a_emb=jnp.pad(a_emb, ((0, pad), (0, 0))),
+        costs=jnp.pad(costs, (0, pad)),
+        active=jnp.pad(jnp.ones((k,), bool), (0, pad)),
+        generation=jnp.zeros((), jnp.int32),
+    )
+
+
+def get_pool(state) -> ModelPool:
+    if not isinstance(state, PooledState):
+        raise TypeError(
+            "expected a PooledState (a policy built on a ModelPool); got "
+            f"{type(state).__name__} — construct the policy with a "
+            "ModelPool first argument to make its arm set dynamic")
+    return state.pool
+
+
+def set_pool(state, pool: ModelPool):
+    get_pool(state)            # type check
+    return state._replace(pool=pool)
+
+
+def set_arm(pool: ModelPool, slot, emb, cost) -> ModelPool:
+    """Install (or replace) an arm: row scatter + activate + bump. ``slot``
+    may be traced — one compiled program serves every slot."""
+    slot = jnp.asarray(slot, jnp.int32)
+    return ModelPool(
+        a_emb=pool.a_emb.at[slot].set(jnp.asarray(emb, jnp.float32)),
+        costs=pool.costs.at[slot].set(jnp.asarray(cost, jnp.float32)),
+        active=pool.active.at[slot].set(True),
+        generation=pool.generation + 1,
+    )
+
+
+def retire_arm(pool: ModelPool, slot) -> ModelPool:
+    """Mask flip only: the embedding row (and every replay-ring duel that
+    references it) is retained so the posterior keeps learning from the
+    arm's history — it just can never be selected again."""
+    slot = jnp.asarray(slot, jnp.int32)
+    return pool._replace(active=pool.active.at[slot].set(False),
+                         generation=pool.generation + 1)
+
+
+def masked_pair_choice(key: jax.Array, active: jax.Array, b: int):
+    """Uniform random *distinct* pair among active arms for B rows, via
+    Gumbel-top-2 (equal scores => a uniform ordered pair without
+    replacement). With a single surviving arm the pair degenerates to
+    (k, k) — a distinct duel is impossible there."""
+    g = jax.random.gumbel(key, (b, active.shape[0]))
+    g = jnp.where(active[None, :], g, -jnp.inf)
+    _, top2 = jax.lax.top_k(g, 2)
+    a1 = top2[:, 0].astype(jnp.int32)
+    a2 = jnp.where(n_active_mask(active) > 1, top2[:, 1].astype(jnp.int32),
+                   a1)
+    return a1, a2
+
+
+def n_active_mask(active: jax.Array) -> jax.Array:
+    return jnp.sum(active.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Arrival / retirement schedules for the env loop
+# ---------------------------------------------------------------------------
+
+class PoolSchedule(NamedTuple):
+    """E membership events replayed inside ``env.run``'s lax.scan: at scan
+    step ``step[e]``, slot ``slot[e]`` is activated with row ``emb[e]`` /
+    ``cost[e]`` (``activate[e]`` True) or retired (False). Multiple events
+    may share a step; all arrays are shape-static so the scan never
+    retraces."""
+    step: jax.Array      # (E,) int32
+    slot: jax.Array      # (E,) int32
+    activate: jax.Array  # (E,) bool
+    emb: jax.Array       # (E, d) float32
+    cost: jax.Array      # (E,) float32
+
+
+def schedule(events, dim: int) -> PoolSchedule:
+    """Build a PoolSchedule from host tuples ``(step, slot, emb|None,
+    cost)`` — emb None means a retirement."""
+    steps, slots, acts, embs, costs = [], [], [], [], []
+    for ev in events:
+        step, slot, emb, cost = ev
+        steps.append(step)
+        slots.append(slot)
+        acts.append(emb is not None)
+        embs.append(jnp.zeros((dim,), jnp.float32) if emb is None
+                    else jnp.asarray(emb, jnp.float32))
+        costs.append(0.0 if cost is None else float(cost))
+    return PoolSchedule(step=jnp.asarray(steps, jnp.int32),
+                        slot=jnp.asarray(slots, jnp.int32),
+                        activate=jnp.asarray(acts, bool),
+                        emb=jnp.stack(embs),
+                        cost=jnp.asarray(costs, jnp.float32))
+
+
+def apply_events(pool: ModelPool, sched: PoolSchedule, s) -> ModelPool:
+    """Fold every event due at scan step ``s`` into the pool (shape-static:
+    misses scatter out of bounds with mode="drop")."""
+    k_max = pool.a_emb.shape[0]
+    hit = sched.step == jnp.asarray(s, sched.step.dtype)          # (E,)
+    on = jnp.where(hit & sched.activate, sched.slot, k_max)
+    off = jnp.where(hit & ~sched.activate, sched.slot, k_max)
+    return ModelPool(
+        a_emb=pool.a_emb.at[on].set(sched.emb, mode="drop"),
+        costs=pool.costs.at[on].set(sched.cost, mode="drop"),
+        active=pool.active.at[on].set(True, mode="drop")
+                          .at[off].set(False, mode="drop"),
+        generation=pool.generation + jnp.sum(hit, dtype=jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Offline -> online warm-start seeding
+# ---------------------------------------------------------------------------
+
+def warm_start_duels(key: jax.Array, x_off: jax.Array, utils_off: jax.Array,
+                     new_arm: int, active: jax.Array,
+                     feedback_scale: float = 5.0):
+    """Synthesize a historical-duel replay batch for a hot-added arm.
+
+    Pairs the new arm against a random *active* incumbent per offline query
+    and draws BTL preferences on the utility scale — exactly the feedback
+    the arm would have generated had it been live (OrcaRouter-style hybrid:
+    offline evaluations seed the online posterior). Feed the result to
+    ``RouterService.add_model(entry, replay=...)`` (folded through the
+    policy's shape-stable ``update_masked``) or any policy's ``update``.
+
+    x_off: (N, d) offline query features; utils_off: (N, K_max) utilities
+    (only the new arm's and active incumbents' columns are consulted).
+    Returns (x, a1, a2, y) with a1 == new_arm everywhere.
+    """
+    k_opp, k_y = jax.random.split(key)
+    n = x_off.shape[0]
+    opp_ok = active & (jnp.arange(active.shape[0]) != new_arm)
+    g = jax.random.gumbel(k_opp, (n, active.shape[0]))
+    opp = jnp.argmax(jnp.where(opp_ok[None, :], g, -jnp.inf),
+                     axis=-1).astype(jnp.int32)
+    a1 = jnp.full((n,), new_arm, jnp.int32)
+    rows = jnp.arange(n)
+    y = sample_preference(k_y, feedback_scale * utils_off[rows, a1],
+                          feedback_scale * utils_off[rows, opp])
+    # no active incumbent to duel (a one-arm pool): degrade to an
+    # uninformative self-duel instead of fabricating votes against
+    # whichever inactive arm argmax-over--inf happens to return
+    has_opp = jnp.any(opp_ok)
+    opp = jnp.where(has_opp, opp, new_arm)
+    y = jnp.where(has_opp, y, 0.0)
+    return x_off, a1, opp, y

@@ -27,11 +27,12 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.dueling_score import dueling_select
+from repro.kernels.dueling_score import dueling_select, mask_fallback_pair
 
 from . import fgts
 from .btl import logistic_loss
 from .ccft import phi
+from .model_pool import ModelPool, PooledState
 
 
 class RoutingPolicy(NamedTuple):
@@ -86,27 +87,38 @@ def with_staleness(pol: "RoutingPolicy", half_life: float) -> "RoutingPolicy":
 
 def select_pair(x: jax.Array, a_emb: jax.Array, theta1: jax.Array,
                 theta2: jax.Array, *, tilt: jax.Array | None = None,
+                mask: jax.Array | None = None,
                 distinct: bool = False, use_kernel: bool = True):
     """argmax_k of both samples' (cost-tilted) scores for a (B,d) batch.
 
     use_kernel=True routes through the dueling_score Pallas kernel (compiled
     off-host, interpret on CPU); use_kernel=False is the matmul-identity XLA
     path that shards cleanly across a mesh batch axis.
+
+    ``mask`` is the (K,) bool arm-activity mask (dynamic model pools):
+    inactive arms score -inf on both paths, so they can never be duelled;
+    with a single surviving arm a ``distinct`` pair degenerates to (k, k).
+    None (the static default) is bit-identical to the unmasked selection.
     """
     if use_kernel:
         return dueling_select(x, a_emb, jnp.stack([theta1, theta2]),
-                              tilt=tilt, distinct=distinct)
+                              tilt=tilt, mask=mask, distinct=distinct)
     den = jnp.sqrt(jnp.maximum((x * x) @ (a_emb * a_emb).T, 1e-24))  # (B,K)
     s1 = ((x * theta1[None, :]) @ a_emb.T) / den
     s2 = ((x * theta2[None, :]) @ a_emb.T) / den
     if tilt is not None:
         s1 = s1 - tilt[None, :]
         s2 = s2 - tilt[None, :]
+    if mask is not None:
+        s1 = jnp.where(mask[None, :], s1, -jnp.inf)
+        s2 = jnp.where(mask[None, :], s2, -jnp.inf)
     a1 = jnp.argmax(s1, axis=-1).astype(jnp.int32)
     if distinct:
         k = a_emb.shape[0]
         s2 = jnp.where(jnp.arange(k)[None, :] == a1[:, None], -jnp.inf, s2)
     a2 = jnp.argmax(s2, axis=-1).astype(jnp.int32)
+    if mask is not None:
+        a2 = mask_fallback_pair(s2, a1, a2)
     return a1, a2
 
 
@@ -132,7 +144,7 @@ def init_fgts_state(cfg: fgts.FGTSConfig, key: jax.Array) -> fgts.FGTSState:
         theta2=jax.random.normal(k2, shape) * cfg.prior_var ** 0.5)
 
 
-def fgts_policy(a_emb: jax.Array, cfg: fgts.FGTSConfig, *,
+def fgts_policy(a_emb: jax.Array | ModelPool, cfg: fgts.FGTSConfig, *,
                 costs: jax.Array | None = None, cost_tilt: float = 0.0,
                 use_kernel: bool = True) -> RoutingPolicy:
     """FGTS.CDB (paper Alg. 1) on the batched protocol.
@@ -142,7 +154,16 @@ def fgts_policy(a_emb: jax.Array, cfg: fgts.FGTSConfig, *,
     (C, dim)); the chain mean is the round's theta^j. Selection is the
     dueling_score kernel's batched argmax epilogue. ``update`` is the
     single-scatter batched ring-buffer write.
+
+    Passing a ``ModelPool`` as ``a_emb`` makes the arm set dynamic: the
+    pool rides inside the policy state (``PooledState``), selection and the
+    feel-good max see only active arms, costs for the serve-time tilt come
+    from the live pool — and a hot add/retire/swap is a pure state update
+    that never retraces (``costs`` is then ignored).
     """
+    if isinstance(a_emb, ModelPool):
+        return _fgts_policy_pooled(a_emb, cfg, cost_tilt=cost_tilt,
+                                   use_kernel=use_kernel)
     tilt = cost_tilt_vector(costs, cost_tilt)
 
     def init(key):
@@ -169,6 +190,52 @@ def fgts_policy(a_emb: jax.Array, cfg: fgts.FGTSConfig, *,
 
     def update_masked(state, x, a1, a2, y, mask):
         return fgts.observe_batch(state, x, a1, a2, y, mask=mask)
+
+    return RoutingPolicy(init, act, update, name="fgts_cdb",
+                         update_masked=update_masked)
+
+
+def _fgts_policy_pooled(pool0: ModelPool, cfg: fgts.FGTSConfig, *,
+                        cost_tilt: float = 0.0,
+                        use_kernel: bool = True) -> RoutingPolicy:
+    """FGTS.CDB over a dynamic ``ModelPool`` (pool carried in the state).
+
+    ``cfg.n_models`` is the pool *capacity* K_max. With an all-active pool
+    the selection and SGLD math are bit-identical to the static policy
+    (the mask is a no-op); retired arms keep their replay-ring history and
+    embedding row so the shared posterior still learns from them.
+    """
+
+    def init(key):
+        return PooledState(init_fgts_state(cfg, key), pool0)
+
+    def act(key, state, x):
+        inner, pool = state.inner, state.pool
+        k1, k2 = jax.random.split(key)
+
+        def chains(k, theta0, j):
+            ks = jax.random.split(k, cfg.n_chains)
+            return jax.vmap(lambda kk, t0: fgts.sgld_sample(
+                kk, t0, inner, pool.a_emb, j, cfg,
+                arm_mask=pool.active))(ks, theta0)
+
+        th1 = chains(k1, inner.theta1, 1)            # (C, d)
+        th2 = chains(k2, inner.theta2, 2)
+        inner = inner._replace(theta1=th1, theta2=th2)
+        tilt = cost_tilt * pool.costs if cost_tilt != 0.0 else None
+        a1, a2 = select_pair(x, pool.a_emb, th1.mean(axis=0),
+                             th2.mean(axis=0), tilt=tilt, mask=pool.active,
+                             distinct=cfg.force_distinct,
+                             use_kernel=use_kernel)
+        return PooledState(inner, pool), a1, a2
+
+    def update(state, x, a1, a2, y):
+        return state._replace(
+            inner=fgts.observe_batch(state.inner, x, a1, a2, y))
+
+    def update_masked(state, x, a1, a2, y, mask):
+        return state._replace(
+            inner=fgts.observe_batch(state.inner, x, a1, a2, y, mask=mask))
 
     return RoutingPolicy(init, act, update, name="fgts_cdb",
                          update_masked=update_masked)

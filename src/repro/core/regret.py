@@ -5,9 +5,16 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def instant_regret(utils_t, a1, a2):
-    """utils_t: (K,) true utilities this round. eq. 1 integrand."""
-    best = jnp.max(utils_t)
+def instant_regret(utils_t, a1, a2, active=None):
+    """utils_t: (K,) true utilities this round. eq. 1 integrand.
+
+    ``active`` (K,) bool restricts the comparator to the arms actually
+    available this tick — with a dynamic pool the benchmark is the best
+    *active* arm, not a retired (or not-yet-arrived) one whose utility the
+    router could never have realized. None keeps the static global max.
+    """
+    best = jnp.max(utils_t if active is None
+                   else jnp.where(active, utils_t, -jnp.inf))
     return best - 0.5 * (utils_t[a1] + utils_t[a2])
 
 

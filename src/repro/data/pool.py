@@ -6,12 +6,75 @@ published character — long-context archs score higher on long-doc categories,
 MoE on breadth, the VLM on multimodal, etc. — plus a relative serving cost
 from active-parameter count. These drive (a) the routed-serving example and
 (b) the router-at-scale dry-run.
+
+This module also owns ``PoolEntry`` (the serving layer's per-model record)
+and the canonical pool builders — ``build_entries`` (embeddings -> entries)
+and ``synthetic_pool`` (latent skills + CCFT-style categorical embeddings
+for CPU serving runs) — shared by ``launch/serve.py``, the routed-serving
+example, and the dynamic-pool benchmarks, so no driver hand-rolls its own
+entry list.
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 from repro.configs import ARCHS
+
+
+@dataclasses.dataclass
+class PoolEntry:
+    """One candidate model as the router sees it (re-exported by
+    ``repro.serving``)."""
+    name: str
+    arch: str                      # architecture id (repro.configs)
+    cost_per_1k_tokens: float
+    embedding: np.ndarray          # CCFT model embedding a_k
+    generate_fn: Optional[Callable] = None   # (tokens) -> response (examples)
+
+
+def build_entries(names: Sequence[str], embeddings, costs,
+                  archs: Sequence[str] | None = None) -> list[PoolEntry]:
+    """The one way to turn (names, (K, d) embeddings, (K,) costs) into
+    ``PoolEntry`` rows. ``archs`` defaults to ``names`` (entry name ==
+    architecture id, the common case for the reduced CPU pools)."""
+    embeddings = np.asarray(embeddings, np.float32)
+    if len(names) != embeddings.shape[0] or len(names) != len(costs):
+        raise ValueError(
+            f"pool shapes disagree: {len(names)} names, "
+            f"{embeddings.shape[0]} embeddings, {len(costs)} costs")
+    archs = list(names) if archs is None else list(archs)
+    return [PoolEntry(name=n, arch=a, cost_per_1k_tokens=float(c),
+                      embedding=embeddings[i])
+            for i, (n, a, c) in enumerate(zip(names, archs, costs))]
+
+
+def synthetic_pool(key, arch_names: Sequence[str], n_cats: int,
+                   emb_dim: int, cost_step: float = 0.1):
+    """Pool entries with latent per-category skills + CCFT-style embeddings
+    (categorical weighting of unit category prototypes — eq. 3 shape).
+
+    Returns ``(entries, skills (K, M), protos (M, d))`` — the skills drive
+    synthetic BTL preferences in the serving drivers, the protos let a
+    later arrival derive its warm-start embedding from the same category
+    space (``skill @ protos``).
+    """
+    import jax
+    import jax.numpy as jnp
+    ks = jax.random.split(key, len(arch_names) + 1)
+    protos = jax.random.normal(ks[-1], (n_cats, emb_dim))
+    protos = protos / jnp.linalg.norm(protos, axis=-1, keepdims=True)
+    skills = jnp.stack([
+        jax.nn.softmax(3.0 * jax.random.normal(ks[i], (n_cats,)))
+        for i in range(len(arch_names))])
+    embs = skills @ protos                         # categorical weighting
+    entries = build_entries(
+        [f"{n}-pool" for n in arch_names], np.asarray(embs),
+        [cost_step * (i + 1) for i in range(len(arch_names))],
+        archs=list(arch_names))
+    return entries, skills, protos
 
 CATEGORIES = ["reasoning", "code", "long-doc", "multilingual", "chat",
               "multimodal", "summarize"]

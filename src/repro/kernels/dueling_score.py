@@ -60,6 +60,15 @@ def _resolve_interpret(interpret: bool | None) -> bool:
     return default_interpret() if interpret is None else interpret
 
 
+def mask_fallback_pair(s2: jax.Array, a1: jax.Array,
+                       a2: jax.Array) -> jax.Array:
+    """Single-survivor degeneration, shared by every masked-selection site:
+    when all of a2's candidates are masked to -inf (one active arm and
+    ``distinct``), duel (a1, a1) instead of an inactive arm. ``s2`` is the
+    post-masking score row(s); reduces over the last (arm) axis."""
+    return jnp.where(jnp.max(s2, axis=-1) == -jnp.inf, a1, a2)
+
+
 def _dueling_kernel(x_ref, a_ref, th_ref, s_ref, *, n_theta: int):
     x = x_ref[...].astype(jnp.float32)              # (BB, d)
     a = a_ref[...].astype(jnp.float32)              # (BK, d)
@@ -110,23 +119,26 @@ def dueling_score(x: jax.Array, a: jax.Array, thetas: jax.Array, *,
     return out[:, :b, :k]
 
 
-def _select_kernel(x_ref, a_ref, th_ref, tilt_ref, a1_ref, a2_ref, *,
-                   k_valid: int, distinct: bool):
+def _select_kernel(x_ref, a_ref, th_ref, tilt_ref, mask_ref, a1_ref, a2_ref,
+                   *, k_valid: int, distinct: bool):
     """Score + argmax epilogue for one (BB,) block of queries.
 
-    K lives whole in VMEM; padded arms are masked to -inf so they can never
-    win the argmax. ``tilt`` is the pre-multiplied cost penalty
-    (cost_tilt * cost_k), subtracted from both samples' scores.
+    K lives whole in VMEM; padded arms AND masked-out (inactive) arms are
+    set to -inf so they can never win the argmax. ``tilt`` is the
+    pre-multiplied cost penalty (cost_tilt * cost_k), subtracted from both
+    samples' scores; ``mask`` is the int32 arm-activity mask (dynamic model
+    pools flip it at hot add/remove without retracing).
     """
     x = x_ref[...].astype(jnp.float32)              # (BB, d)
     a = a_ref[...].astype(jnp.float32)              # (K_pad, d)
     th = th_ref[...].astype(jnp.float32)            # (2, d)
     tilt = tilt_ref[...].astype(jnp.float32)        # (K_pad,)
+    mask = mask_ref[...]                            # (K_pad,) int32
     den = jax.lax.dot_general(x * x, a * a, (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.float32)
     den = jnp.sqrt(jnp.maximum(den, 1e-24))         # (BB, K_pad)
     cols = jax.lax.broadcasted_iota(jnp.int32, den.shape, 1)
-    valid = cols < k_valid
+    valid = (cols < k_valid) & (mask[None, :] > 0)
 
     def scores(j):
         num = jax.lax.dot_general(x * th[j][None, :], a,
@@ -139,16 +151,24 @@ def _select_kernel(x_ref, a_ref, th_ref, tilt_ref, a1_ref, a2_ref, *,
     if distinct:
         s2 = jnp.where(cols == a1[:, None], -jnp.inf, s2)
     a1_ref[...] = a1
-    a2_ref[...] = jnp.argmax(s2, axis=-1).astype(jnp.int32)
+    # single-survivor pool: with one active arm a distinct pair is
+    # impossible (s2 all -inf) — duel (a1, a1) instead of a masked arm
+    a2 = jnp.argmax(s2, axis=-1).astype(jnp.int32)
+    a2_ref[...] = mask_fallback_pair(s2, a1, a2)
 
 
 def dueling_select(x: jax.Array, a: jax.Array, thetas: jax.Array, *,
-                   tilt: jax.Array | None = None, distinct: bool = False,
+                   tilt: jax.Array | None = None,
+                   mask: jax.Array | None = None, distinct: bool = False,
                    bb: int = DEFAULT_BB,
                    interpret: bool | None = None):
     """Route a batch: argmax_k of both samples' (cost-tilted) scores.
 
-    x: (B,d); a: (K,d); thetas: (2,d); tilt: (K,) score penalty or None.
+    x: (B,d); a: (K,d); thetas: (2,d); tilt: (K,) score penalty or None;
+    mask: (K,) bool arm-activity mask or None (None == all arms active —
+    dynamic model pools pass their ``active`` mask so retired / not-yet-
+    arrived arms can never win the argmax; with a single surviving active
+    arm a ``distinct`` pair degenerates to (k, k)).
     Returns (a1, a2) int32 arrays of shape (B,).
     """
     interpret = _resolve_interpret(interpret)
@@ -157,15 +177,19 @@ def dueling_select(x: jax.Array, a: jax.Array, thetas: jax.Array, *,
     assert thetas.shape[0] == 2, "dueling_select pairs exactly two thetas"
     if tilt is None:
         tilt = jnp.zeros((k,), jnp.float32)
+    mask_i = jnp.ones((k,), jnp.int32) if mask is None \
+        else mask.astype(jnp.int32)
     if k > MAX_K_FUSED:
         s = dueling_score(x, a, thetas, interpret=interpret)
         s = s - tilt[None, None, :]
+        s = jnp.where(mask_i[None, None, :] > 0, s, -jnp.inf)
         a1 = jnp.argmax(s[0], axis=-1).astype(jnp.int32)
         s2 = s[1]
         if distinct:
             s2 = jnp.where(jnp.arange(k)[None, :] == a1[:, None],
                            -jnp.inf, s2)
-        return a1, jnp.argmax(s2, axis=-1).astype(jnp.int32)
+        a2 = jnp.argmax(s2, axis=-1).astype(jnp.int32)
+        return a1, mask_fallback_pair(s2, a1, a2)
 
     bb = min(bb, max(8, b))
     b_pad = -(-b // bb) * bb
@@ -175,6 +199,7 @@ def dueling_select(x: jax.Array, a: jax.Array, thetas: jax.Array, *,
     if k_pad != k:
         a = jnp.pad(a, ((0, k_pad - k), (0, 0)))
         tilt = jnp.pad(tilt, (0, k_pad - k))
+        mask_i = jnp.pad(mask_i, (0, k_pad - k))
 
     a1, a2 = pl.pallas_call(
         functools.partial(_select_kernel, k_valid=k, distinct=distinct),
@@ -184,11 +209,12 @@ def dueling_select(x: jax.Array, a: jax.Array, thetas: jax.Array, *,
             pl.BlockSpec((k_pad, d), lambda bi: (0, 0)),
             pl.BlockSpec((2, d), lambda bi: (0, 0)),
             pl.BlockSpec((k_pad,), lambda bi: (0,)),
+            pl.BlockSpec((k_pad,), lambda bi: (0,)),
         ],
         out_specs=[pl.BlockSpec((bb,), lambda bi: (bi,)),
                    pl.BlockSpec((bb,), lambda bi: (bi,))],
         out_shape=[jax.ShapeDtypeStruct((b_pad,), jnp.int32),
                    jax.ShapeDtypeStruct((b_pad,), jnp.int32)],
         interpret=interpret,
-    )(x, a, thetas, tilt)
+    )(x, a, thetas, tilt, mask_i)
     return a1[:b], a2[:b]

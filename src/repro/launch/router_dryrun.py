@@ -50,12 +50,14 @@ ENC_CFG = EncoderConfig(vocab_size=32_768, d_model=768, n_layers=6,
 def make_route_step(cost_tilt: float = 0.05):
     """The policy layer's batched pair selection, XLA path — identical math
     to the dueling_score kernel but partitionable over the mesh batch axis
-    (a Pallas call cannot be sharded in this AOT lowering)."""
-    def route_step(x, a_emb, theta1, theta2, costs):
+    (a Pallas call cannot be sharded in this AOT lowering). ``active`` is
+    the dynamic-pool arm mask (replicated — K is tiny): hot add/remove in
+    production is a flip of this operand, not a recompile."""
+    def route_step(x, a_emb, theta1, theta2, costs, active):
         return policy_lib.select_pair(
             x, a_emb, theta1, theta2,
             tilt=policy_lib.cost_tilt_vector(costs, cost_tilt),
-            use_kernel=False)
+            mask=active, use_kernel=False)
     return route_step
 
 
@@ -96,10 +98,11 @@ def make_encode_route_step(cost_tilt: float = 0.05):
     from repro.encoder.model import encode
     route = make_route_step(cost_tilt)
 
-    def step(enc_params, tokens, mask, a_emb, theta1, theta2, costs):
+    def step(enc_params, tokens, mask, a_emb, theta1, theta2, costs,
+             active):
         x = encode(enc_params, tokens, mask, ENC_CFG)
         x = ccft.pad_queries(x, 2 * len(CATEGORIES))
-        return route(x, a_emb, theta1, theta2, costs)
+        return route(x, a_emb, theta1, theta2, costs, active)
     return step
 
 
@@ -135,8 +138,9 @@ def run(global_batch: int, horizon: int = 65_536, out: str | None = None,
         a_emb = sds((K_MODELS, DIM), jnp.float32)
         th = sds((DIM,), jnp.float32)
         costs = sds((K_MODELS,), jnp.float32)
+        active = sds((K_MODELS,), jnp.bool_)
         results.append(_compile(
-            make_route_step(), (x, a_emb, th, th, costs),
+            make_route_step(), (x, a_emb, th, th, costs, active),
             rr.route_step_specs(mesh), mesh, "route_step"))
 
         # --- update_step (parallel SGLD chains, sharded replay)
@@ -182,9 +186,9 @@ def run(global_batch: int, horizon: int = 65_536, out: str | None = None,
         th2 = sds((ENC_CFG.d_model + 2 * len(CATEGORIES),), jnp.float32)
         results.append(_compile(
             make_encode_route_step(),
-            (enc_params, toks, msk, a_emb2, th2, th2, costs),
+            (enc_params, toks, msk, a_emb2, th2, th2, costs, active),
             (esp, P(bx, None), P(bx, None), P(None, None), P(None), P(None),
-             P(None)),
+             P(None), P(None)),
             mesh, "encode_route_step"))
     if out:
         os.makedirs(os.path.dirname(out) or ".", exist_ok=True)

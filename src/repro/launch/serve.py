@@ -60,14 +60,15 @@ import numpy as np
 
 from repro.configs import ARCHS
 from repro.core import baselines, fgts
+from repro.core import model_pool as mp
 from repro.core.btl import sample_preference
 from repro.core.policy import fgts_policy
+from repro.data.pool import PoolEntry, build_entries, synthetic_pool
 from repro.data.synth import CorpusConfig, make_split
 from repro.encoder.model import EncoderConfig, init_encoder
 from repro.launch import mesh as mesh_lib
 from repro.models import lm
-from repro.serving.router_service import (PoolEntry, RouterService,
-                                          RouterServiceConfig)
+from repro.serving.router_service import RouterService, RouterServiceConfig
 
 # Any RoutingPolicy can serve — the service just drives act/update. Every
 # scoring policy honours the config's serve-time cost tilt.
@@ -77,20 +78,29 @@ from repro.core.policy import cost_tilt_vector
 POLICIES = {
     # cfg.use_kernel arrives resolved from the service (False under a mesh,
     # where the Pallas call cannot be partitioned over the batch axes).
-    "fgts": lambda a_emb, costs, cfg: fgts_policy(
-        a_emb, cfg.fgts, costs=costs, cost_tilt=cfg.cost_tilt,
+    # ``arms`` is the (K, d) embedding table for a static service, or a
+    # core.model_pool.ModelPool when the service is dynamic (k_max set) —
+    # every policy constructor takes either.
+    "fgts": lambda arms, costs, cfg: fgts_policy(
+        arms, cfg.fgts, costs=costs, cost_tilt=cfg.cost_tilt,
         use_kernel=cfg.use_kernel if cfg.use_kernel is not None else True),
-    "eps_greedy": lambda a_emb, costs, cfg: baselines.eps_greedy_policy(
-        a_emb, baselines.EpsGreedyConfig(n_models=cfg.fgts.n_models,
-                                         dim=cfg.fgts.dim),
-        tilt=cost_tilt_vector(costs, cfg.cost_tilt),
+    # dynamic pools get cost_tilt= (live pool costs, hot adds included)
+    # instead of a construction-time tilt vector
+    "eps_greedy": lambda arms, costs, cfg: baselines.eps_greedy_policy(
+        arms, baselines.EpsGreedyConfig(n_models=cfg.fgts.n_models,
+                                        dim=cfg.fgts.dim),
+        tilt=None if isinstance(arms, mp.ModelPool)
+        else cost_tilt_vector(costs, cfg.cost_tilt),
+        cost_tilt=cfg.cost_tilt,
         use_kernel=cfg.use_kernel if cfg.use_kernel is not None else True),
-    "linucb": lambda a_emb, costs, cfg: baselines.linucb_duel_policy(
-        a_emb, baselines.LinUCBConfig(n_models=cfg.fgts.n_models,
-                                      dim=cfg.fgts.dim),
-        tilt=cost_tilt_vector(costs, cfg.cost_tilt)),
-    "uniform": lambda a_emb, costs, cfg: baselines.uniform_policy(
-        cfg.fgts.n_models),
+    "linucb": lambda arms, costs, cfg: baselines.linucb_duel_policy(
+        arms, baselines.LinUCBConfig(n_models=cfg.fgts.n_models,
+                                     dim=cfg.fgts.dim),
+        tilt=None if isinstance(arms, mp.ModelPool)
+        else cost_tilt_vector(costs, cfg.cost_tilt),
+        cost_tilt=cfg.cost_tilt),
+    "uniform": lambda arms, costs, cfg: baselines.uniform_policy(
+        arms if isinstance(arms, mp.ModelPool) else cfg.fgts.n_models),
 }
 
 # Reduced pool members used for CPU serving runs (arch ids from the assigned
@@ -98,21 +108,9 @@ POLICIES = {
 DEFAULT_POOL = ["granite-3-2b", "qwen2-7b", "mamba2-1.3b",
                 "recurrentgemma-9b", "gemma2-9b"]
 
-
-def build_pool(key, arch_names, n_cats, emb_dim):
-    """Pool entries with latent per-category skills + CCFT-style embeddings."""
-    ks = jax.random.split(key, len(arch_names) + 1)
-    protos = jax.random.normal(ks[-1], (n_cats, emb_dim))
-    protos = protos / jnp.linalg.norm(protos, axis=-1, keepdims=True)
-    pool, skills = [], []
-    for i, name in enumerate(arch_names):
-        skill = jax.nn.softmax(3.0 * jax.random.normal(ks[i], (n_cats,)))
-        emb = skill @ protos                       # categorical weighting
-        pool.append(PoolEntry(name=f"{name}-pool", arch=name,
-                              cost_per_1k_tokens=0.1 * (i + 1),
-                              embedding=np.asarray(emb)))
-        skills.append(skill)
-    return pool, jnp.stack(skills), protos
+# Canonical pool construction lives in repro.data.pool; kept under the old
+# name for callers of the serve driver's helper.
+build_pool = synthetic_pool
 
 
 def main():
@@ -134,7 +132,25 @@ def main():
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
                     help="serve mesh-sharded over a (data, model) debug mesh"
                          " — e.g. 4,2; --batch must divide the data size")
+    ap.add_argument("--pool-schedule", default=None, metavar="EVENTS",
+                    help="dynamic-pool membership events, comma-separated: "
+                         "'+ARCH@R' hot-adds a CCFT-warm-started ARCH at "
+                         "round R, '-K@R' retires slot K — e.g. "
+                         "'+arctic-480b@5,-0@12'. Enables k_max = "
+                         "len(pool) + #adds")
     args = ap.parse_args()
+
+    events = []
+    if args.pool_schedule:
+        for tok in args.pool_schedule.split(","):
+            body, _, rnd = tok.strip().rpartition("@")
+            if body.startswith("+"):
+                events.append(("add", body[1:], int(rnd)))
+            elif body.startswith("-"):
+                events.append(("retire", int(body[1:]), int(rnd)))
+            else:
+                raise SystemExit(f"--pool-schedule event {tok!r} must be "
+                                 f"'+ARCH@ROUND' or '-SLOT@ROUND'")
 
     mesh = None
     if args.mesh:
@@ -156,13 +172,21 @@ def main():
     ks = jax.random.split(key, 8)
     n_cats, emb_dim = 5, 64
     pool_names = DEFAULT_POOL
-    pool, skills, protos = build_pool(ks[0], pool_names, n_cats, emb_dim)
+    # arrivals share the same latent category space: build the full zoo
+    # (initial pool + scheduled arrivals) in one shot, serve the prefix
+    arrival_names = [a for kind, a, _ in events if kind == "add"]
+    all_entries, skills, protos = build_pool(
+        ks[0], pool_names + arrival_names, n_cats, emb_dim)
+    pool = all_entries[:len(pool_names)]
+    arrivals = dict(zip(arrival_names, all_entries[len(pool_names):]))
+    k_max = len(pool_names) + len(arrival_names) if events else None
 
     enc_cfg = EncoderConfig(d_model=emb_dim, n_layers=2, n_heads=4, d_ff=256,
                             max_len=32)
     enc_params = init_encoder(ks[1], enc_cfg)
 
-    fcfg = fgts.FGTSConfig(n_models=len(pool), dim=emb_dim,
+    n_models = k_max if k_max is not None else len(pool)
+    fcfg = fgts.FGTSConfig(n_models=n_models, dim=emb_dim,
                            horizon=args.rounds * args.batch, eta=2.0, mu=0.2,
                            sgld_steps=10, sgld_eps=2e-4, sgld_minibatch=32)
     svc = RouterService(pool, enc_params, enc_cfg,
@@ -170,7 +194,8 @@ def main():
                                             policy_factory=POLICIES[
                                                 args.policy],
                                             feedback_expiry=args.feedback_expiry,
-                                            stale_half_life=args.stale_half_life),
+                                            stale_half_life=args.stale_half_life,
+                                            k_max=k_max),
                         mesh=mesh)
 
     # reduced candidate models (actual generation path)
@@ -183,22 +208,53 @@ def main():
     cc = CorpusConfig(n_categories=n_cats, seq_len=32)
     regrets = []
     in_flight = []            # (due_round, tickets, y) — votes on their way
+    # slot -> latent-skills row (arrivals may land in any freed slot)
+    row_of_slot = np.arange(n_models) % skills.shape[0]
+    arrival_row = {n: len(pool_names) + i
+                   for i, n in enumerate(arrival_names)}
     t0 = time.time()
     for r in range(args.rounds):
+        from repro.data.synth import sample_queries
+        for kind, what, rnd in events:
+            if rnd != r:
+                continue
+            if kind == "add":
+                slot = svc.add_model(arrivals[what])
+                row_of_slot[slot] = arrival_row[what]
+                # offline->online warm start: replay BTL duels of the new
+                # arm vs active incumbents on a small offline query split
+                ko, kc_off, kw = jax.random.split(
+                    jax.random.fold_in(ks[4], r), 3)
+                cats_off = jax.random.randint(kc_off, (16,), 0, n_cats)
+                toks_off, mask_off = sample_queries(ko, cats_off, cc)
+                x_off = svc.embed(toks_off, mask_off)
+                utils_off = skills[row_of_slot][:, cats_off].T
+                n_seed = svc.seed_replay(*mp.warm_start_duels(
+                    kw, x_off, utils_off, slot,
+                    jnp.asarray(svc.active_mask()),
+                    feedback_scale=8.0))    # match the live-vote sharpness
+                print(f"[serve] round {r}: +{what} -> slot {slot} "
+                      f"(CCFT warm start, {n_seed} seeded duels)")
+            else:
+                svc.retire_model(what)
+                print(f"[serve] round {r}: retired slot {what}")
         kq, kc, kf = jax.random.split(jax.random.fold_in(ks[3], r), 3)
         cats = jax.random.randint(kc, (args.batch,), 0, n_cats)
-        from repro.data.synth import sample_queries
         toks, mask = sample_queries(kq, cats, cc)
         x = svc.embed(toks, mask)
         a1, a2, tickets = svc.route_batch(x)
         if args.with_generation:
             for b in range(min(args.batch, 2)):   # decode a couple per round
                 for arm in (int(a1[b]), int(a2[b])):
-                    cfg, params = gen_models[pool_names[arm]]
+                    arch = (pool_names + arrival_names)[
+                        int(row_of_slot[arm])]
+                    if arch not in gen_models:
+                        continue      # scheduled arrivals have no reduced LM
+                    cfg, params = gen_models[arch]
                     t = toks[b: b + 1, : 8] % cfg.vocab_size
                     logits, _ = lm.forward(params, {"tokens": t}, cfg,
                                            remat=False)
-        utils = skills[:, cats].T                  # (B, K)
+        utils = skills[row_of_slot][:, cats].T     # (B, K slots)
         y = sample_preference(kf, 8.0 * utils[jnp.arange(args.batch), a1],
                               8.0 * utils[jnp.arange(args.batch), a2])
         if args.feedback_delay == 0:
@@ -215,7 +271,12 @@ def main():
         for _, due_tickets, due_y in due:
             svc.feedback_batch(due_tickets, due_y)
         svc.expire_pending()
-        best = jnp.max(utils, axis=-1)
+        # regret vs the best *active* arm (retired arms are not a benchmark)
+        if svc.dynamic:
+            act = jnp.asarray(svc.active_mask())
+            best = jnp.max(jnp.where(act[None, :], utils, -jnp.inf), axis=-1)
+        else:
+            best = jnp.max(utils, axis=-1)
         reg = jnp.mean(best - 0.5 * (utils[jnp.arange(args.batch), a1]
                                      + utils[jnp.arange(args.batch), a2]))
         regrets.append(float(reg))

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Callable, Optional
 
 import jax
@@ -42,8 +43,10 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import fgts
+from repro.core import model_pool as mp
 from repro.core.policy import (RoutingPolicy, fgts_policy, staleness_weight,
                                with_staleness)
+from repro.data.pool import PoolEntry
 from repro.encoder.model import EncoderConfig, encode
 from repro.sharding import routing_rules as rr
 from . import feedback_queue as fq
@@ -54,19 +57,15 @@ def _next_pow2(n: int) -> int:
 
 
 @dataclasses.dataclass
-class PoolEntry:
-    name: str
-    arch: str                      # architecture id (repro.configs)
-    cost_per_1k_tokens: float
-    embedding: np.ndarray          # CCFT model embedding a_k
-    generate_fn: Optional[Callable] = None   # (tokens) -> response (examples)
-
-
-@dataclasses.dataclass
 class RouterServiceConfig:
     fgts: fgts.FGTSConfig
     cost_tilt: float = 0.0         # lambda applied at serve time
     seed: int = 0
+    # Dynamic-pool capacity K_max: set to enable hot add_model /
+    # retire_model / swap_model (the policy then carries a ModelPool in its
+    # state and cfg.fgts.n_models must equal k_max — buffers are sized for
+    # capacity). None = static pool, frozen at construction.
+    k_max: Optional[int] = None
     # (a_emb, costs, cfg) -> RoutingPolicy; None = FGTS.CDB with cost tilt.
     policy_factory: Optional[Callable] = None
     # Pallas selection kernel vs XLA reference scoring. None = auto: kernel
@@ -95,8 +94,24 @@ class RouterService:
 
     def __init__(self, pool: list[PoolEntry], enc_params, enc_cfg: EncoderConfig,
                  cfg: RouterServiceConfig, *, mesh=None):
-        assert len(pool) == cfg.fgts.n_models
-        self.pool = pool
+        self.dynamic = cfg.k_max is not None
+        if self.dynamic:
+            if len(pool) > cfg.k_max:
+                raise ValueError(f"{len(pool)} pool entries exceed "
+                                 f"k_max={cfg.k_max}")
+            if cfg.fgts.n_models != cfg.k_max:
+                raise ValueError(
+                    f"dynamic pools size every arm buffer for capacity: "
+                    f"cfg.fgts.n_models={cfg.fgts.n_models} must equal "
+                    f"k_max={cfg.k_max}")
+        else:
+            assert len(pool) == cfg.fgts.n_models
+        self.pool = list(pool) + [None] * (
+            (cfg.k_max - len(pool)) if self.dynamic else 0)
+        # slots that have ever hosted an arm: add_model prefers virgin
+        # slots so an unrelated model never inherits a retired arm's
+        # replay-ring history / per-slot stats
+        self._ever_used = [p is not None for p in self.pool]
         self.enc_params = enc_params
         self.enc_cfg = enc_cfg
         self.mesh = mesh
@@ -105,12 +120,20 @@ class RouterService:
         cfg = dataclasses.replace(cfg, use_kernel=use_kernel)
         self.cfg = cfg
         self.a_emb = jnp.asarray(np.stack([p.embedding for p in pool]))
-        self.costs = jnp.asarray([p.cost_per_1k_tokens for p in pool])
+        entry_costs = [p.cost_per_1k_tokens for p in pool]
+        if self.dynamic:
+            pool0 = mp.init_pool(self.a_emb, jnp.asarray(entry_costs),
+                                 k_max=cfg.k_max)
+            self.costs = pool0.costs            # (K_max,) padded mirror
+            arms = pool0
+        else:
+            self.costs = jnp.asarray(entry_costs)
+            arms = self.a_emb
         if cfg.policy_factory is not None:
             self.policy: RoutingPolicy = cfg.policy_factory(
-                self.a_emb, self.costs, cfg)
+                arms, self.costs, cfg)
         else:
-            self.policy = fgts_policy(self.a_emb, cfg.fgts, costs=self.costs,
+            self.policy = fgts_policy(arms, cfg.fgts, costs=self.costs,
                                       cost_tilt=cfg.cost_tilt,
                                       use_kernel=use_kernel)
         self._staleness_wrapped = (cfg.stale_half_life is not None
@@ -119,6 +142,12 @@ class RouterService:
             self.policy = with_staleness(self.policy, cfg.stale_half_life)
         self._key = jax.random.PRNGKey(cfg.seed)
         self.state = self.policy.init(self._next_key())
+        if self.dynamic and not isinstance(self.state, mp.PooledState):
+            raise ValueError(
+                f"policy '{self.policy.name}' ignored the ModelPool: a "
+                f"dynamic service needs a pool-backed policy (state must "
+                f"be a PooledState) — build it from the ModelPool first "
+                f"argument the factory receives")
         capacity = cfg.feedback_capacity if mesh is None \
             else rr.round_capacity(cfg.feedback_capacity, mesh)
         self.pending = fq.init_pending(capacity, self.a_emb.shape[1])
@@ -133,6 +162,18 @@ class RouterService:
         ``sharding/routing_rules`` and replicates the policy state."""
         cfg, mesh = self.cfg, self.mesh
         resolve = functools.partial(fq.resolve, max_age=cfg.feedback_expiry)
+
+        # dynamic-pool membership programs: a hot add/retire/swap is a pure
+        # shape-stable state update (one row scatter + mask flip) — slot is
+        # a *traced* operand, so one compiled program serves every slot and
+        # membership changes never retrace act/update
+        def pool_set(state, emb, cost, slot):
+            return mp.set_pool(state, mp.set_arm(mp.get_pool(state), slot,
+                                                 emb, cost))
+
+        def pool_retire(state, slot):
+            return mp.set_pool(state, mp.retire_arm(mp.get_pool(state),
+                                                    slot))
 
         half_life = cfg.stale_half_life if self._staleness_wrapped else None
         masked = self.policy.update_masked
@@ -161,6 +202,14 @@ class RouterService:
             self._update_delayed_compact = self._update_delayed
             self._enqueue = jax.jit(fq.enqueue)
             self._resolve = jax.jit(resolve)
+            if self.dynamic:
+                self._pool_set = jax.jit(pool_set)
+                self._pool_retire = jax.jit(pool_retire)
+                # offline->online seeding folds replay duels through the
+                # policy's shape-stable masked update when it has one
+                self._update_seed = (
+                    self._update_masked if self._update_masked is not None
+                    else self._update)
             return
 
         self._n_shards = rr.n_batch_shards(mesh)
@@ -225,6 +274,21 @@ class RouterService:
         self._resolve = jax.jit(
             resolve, in_shardings=(pend, row, row, rep),
             out_shardings=(pend, res_sh))
+        if self.dynamic:
+            self._pool_set = jax.jit(pool_set,
+                                     in_shardings=(rep, rep, rep, rep),
+                                     out_shardings=rep)
+            self._pool_retire = jax.jit(pool_retire,
+                                        in_shardings=(rep, rep),
+                                        out_shardings=rep)
+            # replay batches have arbitrary lengths: fold them replicated
+            # (the state stays meshed), masked path first
+            if masked_update is not None:
+                self._update_seed = jax.jit(
+                    masked_update,
+                    in_shardings=(rep,) * 7, out_shardings=rep)
+            else:
+                self._update_seed = self._update_compact
         # replicate / shard the live buffers onto the mesh
         self.state = jax.device_put(self.state, rep)
         self.pending = jax.device_put(self.pending, pend)
@@ -371,6 +435,139 @@ class RouterService:
         """Cost accounting for a batch of dispatches."""
         return float(jnp.sum(self.costs[arms]) * tokens_out / 1000.0)
 
+    # -- dynamic pool membership (requires cfg.k_max) ------------------------
+
+    def _require_dynamic(self, what: str):
+        if not self.dynamic:
+            raise RuntimeError(
+                f"{what} needs a dynamic pool: construct the service with "
+                f"RouterServiceConfig(k_max=...) (and fgts.n_models == "
+                f"k_max) to reserve hot-swap capacity")
+
+    def model_pool(self) -> mp.ModelPool:
+        """The live arm registry (embeddings, costs, active mask)."""
+        self._require_dynamic("model_pool")
+        return mp.get_pool(self.state)
+
+    def active_mask(self) -> np.ndarray:
+        return np.asarray(jax.device_get(self.model_pool().active))
+
+    def add_model(self, entry: PoolEntry, replay=None) -> int:
+        """Hot-add a model into the first free slot; returns the slot.
+
+        The arm goes live warm, not cold: ``entry.embedding`` should come
+        from ``ccft.model_embeddings`` on the model's offline skill scores,
+        and ``replay=(x, a1, a2, y)`` (e.g. from
+        ``model_pool.warm_start_duels``) replays historical duels through
+        the policy's shape-stable masked update to pre-shape the posterior
+        before the arm takes live traffic. The add itself is one jitted
+        row-scatter + mask flip — zero new act/update compilations.
+
+        Never-used slots are preferred: reusing a retired arm's slot would
+        hand the newcomer that arm's replay-ring history and per-slot
+        stats. When only retired slots remain the first one is reused with
+        a warning — size ``k_max`` with headroom, or use ``swap_model``
+        when the inheritance is intended (a retrained successor).
+        """
+        self._require_dynamic("add_model")
+        mask = self.active_mask()
+        if mask.all():
+            raise RuntimeError(
+                f"pool at capacity k_max={self.cfg.k_max}: retire an arm "
+                f"first (or rebuild with more headroom)")
+        virgin = [i for i in range(self.cfg.k_max)
+                  if not mask[i] and not self._ever_used[i]]
+        if virgin:
+            slot = virgin[0]
+        else:
+            slot = int(np.argmin(mask))      # first retired slot
+            warnings.warn(
+                f"add_model: no never-used slot left — '{entry.name}' "
+                f"reuses retired slot {slot} and inherits its replay "
+                f"history / per-slot stats; grow k_max (or use swap_model "
+                f"if this is a successor model)", stacklevel=2)
+        self._set_slot(slot, entry)
+        if replay is not None:
+            self.seed_replay(*replay)
+        return slot
+
+    def retire_model(self, k: int) -> None:
+        """Take arm ``k`` out of rotation: a jitted mask flip. The slot's
+        embedding row and its replay-ring history are retained — the shared
+        posterior keeps learning from the retired arm's duels, it just can
+        never be selected again. In-flight duels that referenced it still
+        resolve normally."""
+        self._require_dynamic("retire_model")
+        mask = self.active_mask()
+        if not mask[k]:
+            raise ValueError(f"arm {k} is not active")
+        if mask.sum() <= 1:
+            raise RuntimeError("cannot retire the last active arm")
+        self.state = self._pool_retire(self.state,
+                                       jnp.asarray(k, jnp.int32))
+        self.costs = mp.get_pool(self.state).costs
+
+    def swap_model(self, k: int, entry: PoolEntry, replay=None) -> None:
+        """Replace slot ``k``'s model in place (retrained successor, new
+        cost point): row scatter + activate, replay history inherited — use
+        ``retire_model`` + ``add_model`` for an unrelated model instead."""
+        self._require_dynamic("swap_model")
+        if not 0 <= k < self.cfg.k_max:
+            raise ValueError(f"slot {k} outside capacity {self.cfg.k_max}")
+        self._set_slot(k, entry)
+        if replay is not None:
+            self.seed_replay(*replay)
+
+    def _set_slot(self, slot: int, entry: PoolEntry) -> None:
+        self.state = self._pool_set(
+            self.state, jnp.asarray(entry.embedding, jnp.float32),
+            jnp.asarray(entry.cost_per_1k_tokens, jnp.float32),
+            jnp.asarray(slot, jnp.int32))
+        self.pool[slot] = entry
+        self._ever_used[slot] = True
+        self.costs = mp.get_pool(self.state).costs
+
+    def seed_replay(self, x, a1, a2, y) -> int:
+        """Offline→online seeding: fold a batch of historical duels into
+        the posterior (no pending ring, no tickets — the duels already
+        happened offline). Uses the policy's shape-stable ``update_masked``
+        when it has one. Returns the number of duels folded."""
+        self._require_dynamic("seed_replay")
+        x = jnp.asarray(x, jnp.float32)
+        a1 = jnp.asarray(a1, jnp.int32)
+        a2 = jnp.asarray(a2, jnp.int32)
+        y = jnp.asarray(y, jnp.float32)
+        if self.mesh is not None:
+            x, a1, a2, y = (jax.device_put(v, self._rep_sh)
+                            for v in (x, a1, a2, y))
+        if self._update_masked is not None:
+            b = x.shape[0]
+            age = jnp.zeros((b,), jnp.int32)
+            ok = jnp.ones((b,), bool)
+            if self.mesh is not None:
+                age, ok = (jax.device_put(v, self._rep_sh)
+                           for v in (age, ok))
+            self.state = self._update_seed(self.state, x, a1, a2, y, age,
+                                           ok)
+        else:
+            self.state = self._update_seed(self.state, x, a1, a2, y)
+        return int(x.shape[0])
+
+    def compiled_program_counts(self) -> dict:
+        """Executable-cache sizes of the service's jitted programs — the
+        zero-retrace contract for dynamic pools is asserted against this
+        (an add/retire/swap must not grow any act/update entry)."""
+        fns = {"act": self._act, "update": self._update,
+               "update_delayed": self._update_delayed,
+               "update_masked": self._update_masked,
+               "enqueue": self._enqueue, "resolve": self._resolve}
+        if self.dynamic:
+            fns.update(pool_set=self._pool_set,
+                       pool_retire=self._pool_retire,
+                       update_seed=self._update_seed)
+        return {name: fn._cache_size() for name, fn in fns.items()
+                if fn is not None}
+
     # -- persistence (posterior + replay + in-flight duels survive restarts) -
 
     def save(self, path: str, step: int | None = None) -> str:
@@ -380,6 +577,11 @@ class RouterService:
                    "pending": self.pending,
                    "tick": jnp.asarray(self.tick),
                    "n_routed": jnp.asarray(self.n_routed)}
+        if self.dynamic:
+            # slot-usage history survives restarts, so add_model's
+            # virgin-slot preference (and its inheritance warning) keeps
+            # working after a checkpoint round-trip
+            payload["ever_used"] = jnp.asarray(self._ever_used)
         return save_checkpoint(path, step if step is not None
                                else self.n_routed, payload)
 
@@ -389,6 +591,8 @@ class RouterService:
         like = {"state": self.state, "key": self._key,
                 "pending": self.pending, "tick": jnp.asarray(self.tick),
                 "n_routed": jnp.asarray(self.n_routed)}
+        if self.dynamic:
+            like["ever_used"] = jnp.asarray(self._ever_used)
         try:
             payload = restore_checkpoint(path, step, like)
         except AssertionError as e:
@@ -408,4 +612,11 @@ class RouterService:
             self.pending = jax.device_put(
                 self.pending, rr.to_shardings(self.mesh,
                                               rr.pending_specs(self.mesh)))
+        if self.dynamic:
+            # the pool travels with the state: re-sync the cost mirror
+            # (entry names/registry are host bookkeeping and not part of
+            # the checkpoint — re-register entries if you need them)
+            self.costs = mp.get_pool(self.state).costs
+            self._ever_used = [bool(v) for v in
+                               np.asarray(payload["ever_used"])]
         return step

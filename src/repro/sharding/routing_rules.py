@@ -66,7 +66,12 @@ def per_query_spec(mesh) -> P:
 
 def policy_state_spec(mesh) -> P:
     """Replicated policy state (posterior chains, replay ring, counters) —
-    used as a pytree *prefix* over whatever state tree the policy carries."""
+    used as a pytree *prefix* over whatever state tree the policy carries.
+    Dynamic model pools ride inside the state (``model_pool.PooledState``)
+    and inherit this replication: the (K_max, d) embedding table, costs and
+    active mask are tiny next to the query stream, and every device needs
+    the full arm set to score its batch shard — so a hot add/retire/swap is
+    a replicated data update with no resharding."""
     return P()
 
 
@@ -90,9 +95,13 @@ def resolved_specs(mesh) -> ResolvedDuels:
 # ---------------------------------------------------------------------------
 
 def route_step_specs(mesh) -> tuple:
-    """(x, a_emb, theta1, theta2, costs) — batch sharded, the rest
-    replicated (K and dim are tiny; the batch axis is the scale axis)."""
-    return (query_batch_spec(mesh), P(None, None), P(None), P(None), P(None))
+    """(x, a_emb, theta1, theta2, costs, active) — batch sharded, the rest
+    replicated (K and dim are tiny; the batch axis is the scale axis).
+    ``active`` is the dynamic-pool arm mask: replicated like the embedding
+    table it gates, so a hot add/remove is a data update, never a new
+    sharding story."""
+    return (query_batch_spec(mesh), P(None, None), P(None), P(None), P(None),
+            P(None))
 
 
 def update_step_specs(mesh) -> tuple:

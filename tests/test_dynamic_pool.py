@@ -1,0 +1,404 @@
+"""Dynamic model pools: masked arms, hot add/remove, warm-started seeding.
+
+Contracts pinned here:
+
+  * with a static all-active pool the mask is a **no-op**: pooled
+    score-based policies (FGTS.CDB, LinUCB — selection has no random
+    draw) reproduce the static policies' routing decisions and regret
+    curves bit-for-bit through ``env.run`` (random-exploration policies
+    sample the same distribution via a masked sampler, a different
+    stream);
+  * ``env.run(pool_schedule=...)`` replays arrivals/retirements inside the
+    scan: no duel ever involves an inactive arm, and regret is charged
+    against the best *active* arm per tick;
+  * a mid-stream ``RouterService.add_model`` with a CCFT warm start
+    (offline embedding + replayed historical duels) reaches lower
+    cumulative regret at the horizon than a cold-start add;
+  * ``add_model`` / ``retire_model`` / ``swap_model`` on a live service are
+    pure data updates — zero new compilations of any service program
+    (asserted via jitted-program counting; the mesh lane re-asserts it on
+    8 forced host devices);
+  * the pool rides inside the policy state, so checkpoints carry it.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, env as env_lib, fgts
+from repro.core import model_pool as mp
+from repro.core import policy as policy_lib
+from repro.core.regret import instant_regret
+
+KEY = jax.random.PRNGKey(3)
+K, KMAX, DIM, T = 4, 6, 16, 48
+BATCH = 4
+
+
+def _cfg(n_models, **kw):
+    d = dict(n_models=n_models, dim=DIM, horizon=T, sgld_steps=2,
+             sgld_minibatch=4)
+    d.update(kw)
+    return fgts.FGTSConfig(**d)
+
+
+def _env(k_arms, key=KEY):
+    kx, ku = jax.random.split(key)
+    return env_lib.EnvData(x=jax.random.normal(kx, (T, DIM)),
+                           utils=jax.random.uniform(ku, (T, k_arms)))
+
+
+# ---------------------------------------------------------------------------
+# mask-is-a-no-op bit-identity
+# ---------------------------------------------------------------------------
+
+def test_all_active_pool_is_bit_identical_to_static():
+    """Static construction vs all-active pooled construction: identical
+    regret curves AND identical posterior state through the env loop, for
+    the kernel policy (FGTS.CDB) and a non-kernel one (LinUCB)."""
+    a_emb = jax.random.normal(jax.random.fold_in(KEY, 1), (K, DIM))
+    e = _env(K)
+    pool = mp.init_pool(a_emb)
+    pairs = [
+        (policy_lib.fgts_policy(a_emb, _cfg(K)),
+         policy_lib.fgts_policy(pool, _cfg(K))),
+        (baselines.linucb_duel_policy(
+            a_emb, baselines.LinUCBConfig(n_models=K, dim=DIM)),
+         baselines.linucb_duel_policy(
+            pool, baselines.LinUCBConfig(n_models=K, dim=DIM))),
+    ]
+    for pol_s, pol_p in pairs:
+        c_s, st_s = env_lib.run(KEY, e, pol_s, batch=BATCH)
+        c_p, st_p = env_lib.run(KEY, e, pol_p, batch=BATCH)
+        np.testing.assert_array_equal(np.asarray(c_s), np.asarray(c_p),
+                                      err_msg=pol_s.name)
+        for a, b in zip(jax.tree.leaves(st_s),
+                        jax.tree.leaves(st_p.inner)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=pol_s.name)
+
+
+def test_instant_regret_vs_best_active_arm():
+    utils = jnp.asarray([0.1, 0.9, 0.5])
+    # global best is arm 1; with arm 1 retired the benchmark is arm 2
+    full = instant_regret(utils, 2, 2)
+    masked = instant_regret(utils, 2, 2,
+                            active=jnp.asarray([True, False, True]))
+    np.testing.assert_allclose(float(full), 0.4, rtol=1e-6)
+    np.testing.assert_allclose(float(masked), 0.0, rtol=1e-6, atol=1e-7)
+    # duelled arms are indexed in utils whatever the mask
+    np.testing.assert_allclose(
+        float(instant_regret(utils, 0, 2,
+                             active=jnp.asarray([True, False, True]))),
+        0.5 - 0.5 * (0.1 + 0.5), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# env-loop schedules
+# ---------------------------------------------------------------------------
+
+def test_env_schedule_retirement_stops_selection():
+    """Retire the (likely) best arm mid-stream: rows written to the replay
+    ring after the retirement tick never reference it."""
+    a_emb = jax.random.normal(jax.random.fold_in(KEY, 2), (K, DIM))
+    e = _env(K)
+    retire_step = 6
+    pol = policy_lib.fgts_policy(mp.init_pool(a_emb), _cfg(K))
+    sched = mp.schedule([(retire_step, 0, None, None)], DIM)
+    _, state = env_lib.run(KEY, e, pol, batch=BATCH, pool_schedule=sched)
+    assert not bool(state.pool.active[0])
+    assert int(state.pool.generation) == 1
+    # ring rows are written in tick order: batches from the retire step on
+    lo = retire_step * BATCH
+    a1 = np.asarray(state.inner.a1)[lo:T]
+    a2 = np.asarray(state.inner.a2)[lo:T]
+    assert (a1 != 0).all() and (a2 != 0).all()
+
+
+def test_env_schedule_arrival_activates_and_gets_selected():
+    """A strong arm arriving mid-stream becomes selectable (and with a
+    much-better-than-everyone utility, actually selected)."""
+    k_a, k_th, k_x = jax.random.split(jax.random.fold_in(KEY, 3), 3)
+    from repro.core import ccft
+    a_emb = jax.random.normal(k_a, (KMAX, DIM))
+    theta_star = jax.random.normal(k_th, (DIM,))
+    x = jax.random.normal(k_x, (T, DIM))
+    utils = jax.vmap(lambda xi: ccft.scores_all(xi, a_emb,
+                                                theta_star))(x)
+    utils = (utils - utils.min()) / (utils.max() - utils.min())
+    # make the last arm dominate post-arrival
+    utils = utils.at[:, KMAX - 1].set(utils.max() + 0.5)
+    e = env_lib.EnvData(x=x, utils=utils)
+    arrive = 4
+    pol = policy_lib.fgts_policy(
+        mp.init_pool(a_emb[:KMAX - 1], k_max=KMAX), _cfg(KMAX, eta=8.0))
+    sched = mp.schedule([(arrive, KMAX - 1, a_emb[KMAX - 1], 0.1)], DIM)
+    _, state = env_lib.run(KEY, e, pol, batch=BATCH, pool_schedule=sched)
+    assert bool(state.pool.active[KMAX - 1])
+    np.testing.assert_allclose(np.asarray(state.pool.a_emb[KMAX - 1]),
+                               np.asarray(a_emb[KMAX - 1]), rtol=1e-6)
+    pre = np.asarray(state.inner.a1)[:arrive * BATCH]
+    assert (pre != KMAX - 1).all()          # never duelled before arrival
+    post = np.concatenate([np.asarray(state.inner.a1)[arrive * BATCH:T],
+                           np.asarray(state.inner.a2)[arrive * BATCH:T]])
+    assert (post == KMAX - 1).any()         # picked up after arrival
+
+
+def test_pool_schedule_requires_pooled_policy():
+    a_emb = jax.random.normal(KEY, (K, DIM))
+    pol = policy_lib.fgts_policy(a_emb, _cfg(K))       # static policy
+    sched = mp.schedule([(1, 0, None, None)], DIM)
+    with pytest.raises(TypeError, match="PooledState"):
+        env_lib.run(KEY, _env(K), pol, batch=BATCH, pool_schedule=sched)
+
+
+def test_warm_start_duels_shape_and_arms():
+    x_off = jax.random.normal(KEY, (12, DIM))
+    utils = jax.random.uniform(KEY, (12, KMAX))
+    active = jnp.asarray([True, True, False, True, False, True])
+    x, a1, a2, y = mp.warm_start_duels(KEY, x_off, utils, new_arm=5,
+                                       active=active)
+    assert (np.asarray(a1) == 5).all()
+    opp = np.asarray(a2)
+    assert (opp != 5).all() and np.asarray(active)[opp].all()
+    assert set(np.unique(np.asarray(y))) <= {-1.0, 1.0}
+
+
+# ---------------------------------------------------------------------------
+# live service: warm vs cold hot-add, zero-retrace, persistence
+# ---------------------------------------------------------------------------
+
+def _dyn_service(entries, k_max, seed=0, mesh=None, fgts_cfg=None,
+                 **cfg_kw):
+    from repro.encoder import EncoderConfig, init_encoder
+    from repro.serving import RouterService, RouterServiceConfig
+    enc_cfg = EncoderConfig(d_model=DIM, n_layers=1, n_heads=2, d_ff=32,
+                            max_len=8)
+    enc = init_encoder(KEY, enc_cfg)
+    fcfg = fgts_cfg if fgts_cfg is not None \
+        else _cfg(k_max, eta=8.0, horizon=512)
+    return RouterService(
+        entries, enc, enc_cfg,
+        RouterServiceConfig(fgts=fcfg, seed=seed, k_max=k_max,
+                            feedback_capacity=256, **cfg_kw), mesh=mesh)
+
+
+def _entries(embs, names=None):
+    from repro.serving import PoolEntry
+    return [PoolEntry(name=names[i] if names else f"m{i}",
+                      arch="granite-3-2b", cost_per_1k_tokens=0.1,
+                      embedding=np.asarray(embs[i], np.float32))
+            for i in range(len(embs))]
+
+
+def _linear_world(key):
+    """Linear-BTL world with the best arm parked in the last slot:
+    u_tk = <theta*, phi(x_t, a_k)> rescaled to [0, 1] — so the quality of
+    an arm's *embedding row* directly drives how well the posterior can
+    score it."""
+    from repro.core import ccft
+    k_a, k_th, k_s = jax.random.split(key, 3)
+    a = jax.random.normal(k_a, (KMAX, DIM))
+    theta_star = jax.random.normal(k_th, (DIM,))
+    xs = jax.random.normal(k_s, (512, DIM))
+    u = jax.vmap(lambda xi: ccft.scores_all(xi, a, theta_star))(xs)
+    a = a[jnp.argsort(u.mean(axis=0))]                 # best arm last
+    lo, hi = u.min(), u.max()
+
+    def utils_for(x):
+        u = jax.vmap(lambda xi: ccft.scores_all(xi, a, theta_star))(x)
+        return jnp.clip((u - lo) / (hi - lo), 0.0, 1.0)
+
+    return a, utils_for
+
+
+def _serve_with_midstream_add(new_emb, seed_replay, rounds=30, add_at=10):
+    """Serve the linear world missing its best arm; hot-add it at
+    ``add_at`` with embedding ``new_emb`` (optionally seeding the posterior
+    with offline replay duels). Returns cumulative regret vs the best
+    ACTIVE arm per round."""
+    from repro.core.btl import sample_preference
+    a_true, utils_for = _linear_world(jax.random.fold_in(KEY, 11))
+    fcfg = fgts.FGTSConfig(n_models=KMAX, dim=DIM, horizon=1024, eta=8.0,
+                           sgld_steps=8, sgld_minibatch=32)
+    svc = _dyn_service(_entries(np.asarray(a_true[:KMAX - 1])), KMAX,
+                       fgts_cfg=fcfg)
+    cum = 0.0
+    b = 8
+    for r in range(rounds):
+        if r == add_at:
+            entry = _entries([np.asarray(new_emb)], names=["arrival"])[0]
+            slot = svc.add_model(entry)
+            assert slot == KMAX - 1
+            if seed_replay:
+                ko, kw = jax.random.split(jax.random.fold_in(KEY, 500))
+                x_off = jax.random.normal(ko, (32, DIM))
+                svc.seed_replay(*mp.warm_start_duels(
+                    kw, x_off, utils_for(x_off), slot,
+                    jnp.asarray(svc.active_mask()), feedback_scale=8.0))
+        kq, kf = jax.random.split(jax.random.fold_in(KEY, 100 + r))
+        x = jax.random.normal(kq, (b, DIM))
+        a1, a2, t = svc.route_batch(x)
+        utils = utils_for(x)                             # (B, KMAX)
+        rows = jnp.arange(b)
+        y = sample_preference(kf, 8.0 * utils[rows, a1],
+                              8.0 * utils[rows, a2])
+        svc.feedback_batch(t, y)
+        act = jnp.asarray(svc.active_mask())
+        best = jnp.max(jnp.where(act[None, :], utils, -jnp.inf), axis=-1)
+        cum += float(jnp.sum(best - 0.5 * (utils[rows, a1]
+                                           + utils[rows, a2])))
+    return cum
+
+
+@pytest.mark.slow
+def test_add_model_warm_start_beats_cold_start():
+    """CCFT warm start (offline embedding + replayed offline duels) must
+    reach lower cumulative regret at the horizon than a cold add (random
+    embedding, no seeding) — the OrcaRouter-style hybrid pays for itself."""
+    a_true, _ = _linear_world(jax.random.fold_in(KEY, 11))
+    cold_emb = jax.random.normal(jax.random.fold_in(KEY, 77), (DIM,))
+    warm = _serve_with_midstream_add(a_true[KMAX - 1], seed_replay=True)
+    cold = _serve_with_midstream_add(cold_emb, seed_replay=False)
+    assert warm < cold, (warm, cold)
+
+
+def test_service_add_retire_swap_zero_new_compilations():
+    """Membership changes are data updates: after one warm-up cycle, a
+    fresh add/retire/swap + serve round compiles nothing new."""
+    embs = np.random.RandomState(0).randn(K, DIM).astype(np.float32)
+    svc = _dyn_service(_entries(embs), KMAX)
+    x = jax.random.normal(KEY, (BATCH, DIM))
+    extra = _entries(np.random.RandomState(5).randn(2, DIM), ["n0", "n1"])
+    replay = (np.random.RandomState(6).randn(8, DIM).astype(np.float32),
+              np.full((8,), K, np.int32), np.zeros((8,), np.int32),
+              np.ones((8,), np.float32))
+    # warm-up: touch every program incl. the replay-seed shape
+    _, _, t = svc.route_batch(x)
+    svc.feedback_batch(t, jnp.ones((BATCH,)))
+    svc.add_model(extra[0], replay=replay)
+    svc.retire_model(0)
+    svc.swap_model(0, extra[0])
+    _, _, t = svc.route_batch(x)
+    svc.feedback_batch(t, jnp.ones((BATCH,)))
+    counts = svc.compiled_program_counts()
+    # the cycle again: new slot, different retiree, same batch shapes
+    svc.add_model(extra[1], replay=replay)
+    svc.retire_model(1)
+    svc.swap_model(2, extra[1])
+    for _ in range(2):
+        _, _, t = svc.route_batch(x)
+        svc.feedback_batch(t, jnp.ones((BATCH,)))
+    assert svc.compiled_program_counts() == counts
+    # and the pool actually changed
+    assert svc.active_mask().sum() == K + 1   # K - 1 retired + 2 added
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+def test_service_add_retire_zero_new_compilations_mesh():
+    """Same zero-retrace contract on an 8-device (4, 2) mesh: the pool is
+    replicated policy state, so a membership change stays one compiled
+    program there too."""
+    from repro.launch import mesh as mesh_lib
+    mesh = mesh_lib.make_debug_mesh(4, 2)
+    embs = np.random.RandomState(1).randn(K, DIM).astype(np.float32)
+    svc = _dyn_service(_entries(embs), KMAX, mesh=mesh)
+    x = jax.random.normal(KEY, (32, DIM))
+    extra = _entries(np.random.RandomState(7).randn(2, DIM), ["n0", "n1"])
+    replay = (np.random.RandomState(8).randn(8, DIM).astype(np.float32),
+              np.full((8,), K, np.int32), np.zeros((8,), np.int32),
+              np.ones((8,), np.float32))
+    _, _, t = svc.route_batch(x)
+    svc.feedback_batch(t, jnp.ones((32,)))
+    svc.add_model(extra[0], replay=replay)
+    svc.retire_model(0)
+    _, _, t = svc.route_batch(x)
+    svc.feedback_batch(t, jnp.ones((32,)))
+    counts = svc.compiled_program_counts()
+    svc.add_model(extra[1], replay=replay)
+    svc.retire_model(1)
+    a1, a2, t = svc.route_batch(x)
+    svc.feedback_batch(t, jnp.ones((32,)))
+    assert svc.compiled_program_counts() == counts
+    # routed arms always active
+    act = svc.active_mask()
+    assert act[np.asarray(a1)].all() and act[np.asarray(a2)].all()
+
+
+def test_dynamic_pool_checkpoints_with_state(tmp_path):
+    """The pool rides inside the policy state: a checkpoint taken after an
+    add + retire restores the membership into a fresh service."""
+    embs = np.random.RandomState(2).randn(K, DIM).astype(np.float32)
+    svc = _dyn_service(_entries(embs), KMAX)
+    x = jax.random.normal(KEY, (BATCH, DIM))
+    _, _, t = svc.route_batch(x)
+    svc.feedback_batch(t, jnp.ones((BATCH,)))
+    svc.add_model(_entries(np.random.RandomState(3).randn(1, DIM),
+                           ["late"])[0])
+    svc.retire_model(1)
+    svc.save(str(tmp_path))
+
+    svc2 = _dyn_service(_entries(embs), KMAX)
+    svc2.restore(str(tmp_path))
+    np.testing.assert_array_equal(svc2.active_mask(), svc.active_mask())
+    np.testing.assert_array_equal(np.asarray(svc2.costs),
+                                  np.asarray(svc.costs))
+    a1a, a2a, _ = svc.route_batch(x)
+    a1b, a2b, _ = svc2.route_batch(x)
+    np.testing.assert_array_equal(np.asarray(a1a), np.asarray(a1b))
+    np.testing.assert_array_equal(np.asarray(a2a), np.asarray(a2b))
+    # slot-usage history restores too: the freed slot 1 is NOT virgin, so
+    # the next add lands in the untouched slot 5, not the retired one
+    assert svc2._ever_used == svc._ever_used
+    assert svc2.add_model(_entries(
+        np.random.RandomState(4).randn(1, DIM), ["later"])[0]) == 5
+
+
+def test_static_service_rejects_membership_calls():
+    embs = np.random.RandomState(4).randn(K, DIM).astype(np.float32)
+    from repro.encoder import EncoderConfig, init_encoder
+    from repro.serving import RouterService, RouterServiceConfig
+    enc_cfg = EncoderConfig(d_model=DIM, n_layers=1, n_heads=2, d_ff=32,
+                            max_len=8)
+    svc = RouterService(_entries(embs), init_encoder(KEY, enc_cfg), enc_cfg,
+                        RouterServiceConfig(fgts=_cfg(K)))
+    with pytest.raises(RuntimeError, match="k_max"):
+        svc.add_model(_entries(embs[:1], ["x"])[0])
+    with pytest.raises(RuntimeError, match="k_max"):
+        svc.retire_model(0)
+
+
+def test_add_model_prefers_virgin_slots_and_warns_on_reuse():
+    """An unrelated newcomer must not silently inherit a retired arm's
+    replay history: adds land in never-used slots first, and a forced
+    reuse of a retired slot warns."""
+    embs = np.random.RandomState(8).randn(2, DIM).astype(np.float32)
+    svc = _dyn_service(_entries(embs), 3)
+    svc.retire_model(0)
+    new = _entries(np.random.RandomState(9).randn(2, DIM), ["a", "b"])
+    assert svc.add_model(new[0]) == 2          # virgin slot, not freed 0
+    svc.retire_model(1)
+    with pytest.warns(UserWarning, match="reuses retired slot"):
+        assert svc.add_model(new[1]) == 0      # no virgin slot left
+    act = svc.active_mask()
+    assert act[0] and not act[1] and act[2]
+
+
+def test_service_capacity_and_guard_rails():
+    embs = np.random.RandomState(5).randn(2, DIM).astype(np.float32)
+    svc = _dyn_service(_entries(embs), 3)
+    svc.add_model(_entries(np.random.RandomState(6).randn(1, DIM),
+                           ["f"])[0])
+    with pytest.raises(RuntimeError, match="capacity"):
+        svc.add_model(_entries(np.random.RandomState(7).randn(1, DIM),
+                               ["g"])[0])
+    svc.retire_model(0)
+    svc.retire_model(1)
+    with pytest.raises(RuntimeError, match="last active"):
+        svc.retire_model(2)
+    with pytest.raises(ValueError, match="not active"):
+        svc.retire_model(0)

@@ -139,6 +139,53 @@ def test_dueling_select_argmax_epilogue(b, k, d, distinct):
         assert (np.asarray(a1) != np.asarray(a2)).all()
 
 
+@pytest.mark.parametrize("pattern", ["all_active", "single_survivor",
+                                     "mask_best", "alternate"])
+@pytest.mark.parametrize("b,k,d,distinct", [
+    (32, 8, 64, True), (7, 5, 32, False), (65, 12, 128, True),
+])
+def test_dueling_select_masked_parity(b, k, d, distinct, pattern):
+    """Masked argmax epilogue == masked XLA reference over active-mask
+    patterns (dynamic model pools): all-active must be bit-identical to
+    the unmasked kernel (mask is a no-op), a single survivor degenerates
+    distinct pairs to (k, k), and masking out the winning arm re-routes
+    to the best *active* arm — never an inactive one."""
+    from repro.core.policy import select_pair
+    from repro.kernels.dueling_score import dueling_select
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (b, d))
+    a = jax.random.normal(ks[1], (k, d))
+    th = jax.random.normal(ks[2], (2, d))
+    tilt = 0.1 * jax.random.uniform(ks[3], (k,))
+    s = ref.dueling_score_ref(x, a, th[0], th[1]) - tilt[None, None, :]
+    if pattern == "all_active":
+        mask = jnp.ones((k,), bool)
+    elif pattern == "single_survivor":
+        mask = jnp.zeros((k,), bool).at[2].set(True)
+    elif pattern == "mask_best":
+        # knock out the most frequent unmasked winner of theta1's argmax
+        winners = np.asarray(jnp.argmax(s[0], axis=-1))
+        best = np.bincount(winners, minlength=k).argmax()
+        mask = jnp.ones((k,), bool).at[int(best)].set(False)
+    else:
+        mask = jnp.arange(k) % 2 == 0
+    a1k, a2k = dueling_select(x, a, th, tilt=tilt, mask=mask,
+                              distinct=distinct)
+    a1x, a2x = select_pair(x, a, th[0], th[1], tilt=tilt, mask=mask,
+                           distinct=distinct, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(a1k), np.asarray(a1x))
+    np.testing.assert_array_equal(np.asarray(a2k), np.asarray(a2x))
+    m = np.asarray(mask)
+    assert m[np.asarray(a1k)].all() and m[np.asarray(a2k)].all()
+    if pattern == "all_active":
+        # the mask operand is a no-op: bit-identical to the unmasked kernel
+        a1u, a2u = dueling_select(x, a, th, tilt=tilt, distinct=distinct)
+        np.testing.assert_array_equal(np.asarray(a1k), np.asarray(a1u))
+        np.testing.assert_array_equal(np.asarray(a2k), np.asarray(a2u))
+    if pattern == "single_survivor":
+        assert (np.asarray(a1k) == 2).all() and (np.asarray(a2k) == 2).all()
+
+
 def test_interpret_defaults_to_backend(monkeypatch):
     """interpret=None resolves off the backend; env var overrides both ways."""
     from repro.kernels import dueling_score as ds

@@ -29,7 +29,8 @@ import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core import baselines, extensions as ext, fgts, policy
+from repro.core import baselines, extensions as ext, fgts, model_pool as mp
+from repro.core import policy
 
 KEY = jax.random.PRNGKey(7)
 N_MODELS, DIM, HORIZON = 4, 8, 16
@@ -37,6 +38,11 @@ N_MODELS, DIM, HORIZON = 4, 8, 16
 CFG = fgts.FGTSConfig(n_models=N_MODELS, dim=DIM, horizon=HORIZON,
                       sgld_steps=2, sgld_minibatch=4)
 A_EMB = jax.random.normal(KEY, (N_MODELS, DIM))
+# dynamic-pool twin of the registry world: same embeddings, arm 2 retired —
+# every protocol contract must hold for pool-backed policies too, plus the
+# no-inactive-duel guarantee below
+POOL = mp.retire_arm(mp.init_pool(A_EMB), 2)
+INACTIVE_ARM = 2
 
 
 def _fgts_rows(state):
@@ -46,6 +52,10 @@ def _fgts_rows(state):
 def _mixed_rows(state):
     h = state[0]
     return h.x, h.a1, h.a2, h.y, h.t
+
+
+def _pooled(rows_of):
+    return lambda state: rows_of(state.inner)
 
 
 # name -> (policy, distinct_guaranteed, perm_mode, ring_accessor)
@@ -71,7 +81,27 @@ POLICIES = {
     "mixed_feedback": (ext.mixed_feedback_policy(A_EMB, CFG), True, "ring",
                        _mixed_rows),
     "pl_pair": (ext.pl_pair_policy(A_EMB, CFG), True, "ring", _fgts_rows),
+    # pool-backed variants (arm 2 inactive): same contracts, masked arms
+    "fgts_pooled": (policy.fgts_policy(POOL, CFG), False, "ring",
+                    _pooled(_fgts_rows)),
+    "uniform_pooled": (baselines.uniform_policy(POOL), True, "exact", None),
+    "best_fixed_pooled": (baselines.best_fixed_policy(
+        jnp.linspace(0.0, 1.0, N_MODELS), pool=POOL), False, "exact",
+        None),
+    "eps_greedy_pooled": (baselines.eps_greedy_policy(
+        POOL, baselines.EpsGreedyConfig(n_models=N_MODELS, dim=DIM)),
+        True, "close", None),
+    "linucb_pooled": (baselines.linucb_duel_policy(
+        POOL, baselines.LinUCBConfig(n_models=N_MODELS, dim=DIM)),
+        True, "close", None),
+    "pl_pair_pooled": (ext.pl_pair_policy(POOL, CFG), True, "ring",
+                       _pooled(_fgts_rows)),
+    "mixed_pooled": (ext.mixed_feedback_policy(POOL, CFG), True, "ring",
+                     _pooled(_mixed_rows)),
 }
+
+# the pool-backed subset: these must never duel an inactive arm
+POOLED = {n for n in POLICIES if n.endswith("_pooled")}
 
 # One jitted act/update per policy, shared by every property below: the
 # protocol is consumed jitted everywhere (env scan, RouterService), and the
@@ -200,6 +230,53 @@ def test_update_delayed_at_age_zero_matches_plain_update():
         zero = jnp.zeros((b,), jnp.int32)
         _leaves_equal(wrapped.update_delayed(state, x, a1, a2, y, zero),
                       pol.update(state, x, a1, a2, y), msg=name)
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(1, 5), st.integers(0, 10_000))
+def test_no_pooled_policy_ever_duels_an_inactive_arm(b, seed):
+    """The arm mask is load-bearing: across acts and updates, no
+    pool-backed policy may route either side of a duel to an inactive arm
+    (here arm 2, retired in the registry's shared POOL)."""
+    for name in sorted(POOLED):
+        pol = POLICIES[name][0]
+        act, update = JITTED[name]
+        state = pol.init(KEY)
+        for r in range(3):
+            x, _, _, y = _batch(b, seed + r)
+            state, a1, a2 = act(jax.random.fold_in(KEY, seed + r), state, x)
+            for a in (a1, a2):
+                an = np.asarray(a)
+                assert (an != INACTIVE_ARM).all(), (name, r, an)
+                assert np.asarray(state.pool.active)[an].all(), (name, r)
+            state = update(state, x, a1, a2, y)
+
+
+def test_single_survivor_pool_duels_self():
+    """With one active arm a distinct duel is impossible: every pool-backed
+    policy must degrade to the (k, k) self-duel, never an inactive arm."""
+    lone = 1
+    pool = mp.init_pool(A_EMB)
+    for k in range(N_MODELS):
+        if k != lone:
+            pool = mp.retire_arm(pool, k)
+    pols = {
+        "fgts": policy.fgts_policy(pool, CFG),
+        "uniform": baselines.uniform_policy(pool),
+        "eps_greedy": baselines.eps_greedy_policy(
+            pool, baselines.EpsGreedyConfig(n_models=N_MODELS, dim=DIM)),
+        "linucb": baselines.linucb_duel_policy(
+            pool, baselines.LinUCBConfig(n_models=N_MODELS, dim=DIM)),
+        "pl_pair": ext.pl_pair_policy(pool, CFG),
+    }
+    x, _, _, _ = _batch(5, 17)
+    for name, pol in pols.items():
+        state = pol.init(KEY)
+        _, a1, a2 = pol.act(jax.random.fold_in(KEY, 17), state, x)
+        np.testing.assert_array_equal(np.asarray(a1),
+                                      np.full(5, lone), err_msg=name)
+        np.testing.assert_array_equal(np.asarray(a2),
+                                      np.full(5, lone), err_msg=name)
 
 
 def test_staleness_weight_discounts_towards_uninformative():

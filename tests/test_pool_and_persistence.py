@@ -75,13 +75,17 @@ def test_router_dryrun_steps_run_on_cpu():
     a = jax.random.normal(jax.random.fold_in(KEY, 1), (k, d))
     th = jax.random.normal(jax.random.fold_in(KEY, 2), (d,))
     costs = jnp.linspace(0.0, 1.0, k)
+    active = jnp.ones((k,), bool)
     route = rd.make_route_step(cost_tilt=0.0)
-    a1, a2 = route(x, a, th, th, costs)
+    a1, a2 = route(x, a, th, th, costs, active)
     assert a1.shape == (b,) and (a1 == a2).all()   # same theta, same pick
     # heavy cost tilt forces the cheapest arm
     route_t = rd.make_route_step(cost_tilt=1e6)
-    a1t, _ = route_t(x, a, th, th, costs)
+    a1t, _ = route_t(x, a, th, th, costs, active)
     assert (np.asarray(a1t) == 0).all()
+    # ... and with that arm masked out (dynamic pool), the next-cheapest
+    a1m, _ = route_t(x, a, th, th, costs, active.at[0].set(False))
+    assert (np.asarray(a1m) == 1).all()
 
     cfg = fgts.FGTSConfig(n_models=k, dim=d, horizon=16, sgld_steps=3,
                           sgld_minibatch=4)
