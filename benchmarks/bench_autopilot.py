@@ -1,0 +1,226 @@
+"""Pool autopilot vs static pool vs manual schedule — closed-loop pool
+management under one roof.
+
+The world has a deliberately bad citizen: one arm whose embedding scores
+strictly below a far cheaper arm's under theta* but whose serving cost is
+10x the pool's median. A production operator would hand-retire it; the
+autopilot must *discover* the retirement from posterior dominance, while
+its cost governor holds the realized duel cost at the configured budget
+and regret stays within a whisker of the best manual schedule:
+
+  * ``static``    — all arms active forever (no management at all);
+  * ``manual``    — the oracle operator: a ``pool_schedule`` retires the
+                    bad arm at an early fixed round (the ceiling);
+  * ``autopilot`` — ``autopilot.wrap``: dominance auto-retirement +
+                    cost governor (budget) + candidate machinery, all
+                    inside the same lax.scan.
+
+Per tick the env loop also emits the realized duel cost and the active-arm
+count (``env.run(aux_fn=...)``), so the table shows the three trajectories
+the subsystem is supposed to shape: regret, realized cost, pool size. The
+tail asserts the autopilot's compiled-program contract on a live
+``RouterService``: control ticks and the auto-retire flips compile zero
+new programs (the 8-device mesh lane re-asserts this in
+tests/test_autopilot.py).
+
+    PYTHONPATH=src REPRO_RUNS=2 python -m benchmarks.bench_autopilot
+    (REPRO_POOL_T=96 shrinks the horizon for CI smoke runs)
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.autopilot import AutopilotConfig, wrap
+from repro.core import baselines, ccft, env as env_lib, fgts
+from repro.core import model_pool as mp
+from repro.core import policy
+
+from .common import N_RUNS, SEED, emit, save_curve, timed
+
+T_ONLINE = int(os.environ.get("REPRO_POOL_T", "360"))
+K_MAX = 6
+DIM = 24
+BATCH = 4
+BAD = K_MAX - 1                  # the dominated, overpriced arm's slot
+BUDGET = 0.35                    # governor target: mean duel cost
+RETIRE_AT = 8                    # the manual operator's (oracle) retire step
+
+AP_CFG = AutopilotConfig(every=3, tau=0.75, window=2, quota=0.25,
+                         budget=BUDGET, budget_lr=0.5)
+
+
+def make_world(key: jax.Array):
+    """Linear-BTL world with one dominated, overpriced arm in slot BAD.
+
+    The bad arm's embedding is the cheapest good arm's direction bent away
+    from theta* — its normalized score (what the posterior sees) sits
+    strictly below that arm's, so dominance is learnable; its cost is 10x
+    the median, so retiring it is also what the budget wants.
+    """
+    k_a, k_th, k_x, k_n = jax.random.split(key, 4)
+    a_emb = jax.random.normal(k_a, (K_MAX, DIM))
+    theta_star = jax.random.normal(k_th, (DIM,))
+    x = jax.random.normal(k_x, (T_ONLINE, DIM))
+    # order arms so the best (by mean utility) sits at slot 0
+    utils0 = jax.vmap(lambda xi: ccft.scores_all(xi, a_emb, theta_star))(x)
+    order = jnp.argsort(-utils0.mean(axis=0))
+    a_emb = a_emb[order]
+    # slot BAD: the best arm's direction minus a theta*-aligned bite, plus
+    # noise — clearly worse than slot 0, similar specialty profile
+    bad = a_emb[0] - 0.6 * theta_star * jnp.sign(
+        jnp.sum(a_emb[0] * theta_star)) + 0.3 * jax.random.normal(k_n, (DIM,))
+    a_emb = a_emb.at[BAD].set(bad)
+    utils = jax.vmap(lambda xi: ccft.scores_all(xi, a_emb, theta_star))(x)
+    lo, hi = utils.min(), utils.max()
+    utils = (utils - lo) / (hi - lo)
+    costs = jnp.asarray([0.1, 0.2, 0.3, 0.4, 0.2, 2.0], jnp.float32)
+    return env_lib.EnvData(x=x, utils=utils), a_emb, costs
+
+
+def _policies(pool):
+    cfg = fgts.FGTSConfig(n_models=K_MAX, dim=DIM, horizon=T_ONLINE,
+                          eta=8.0, mu=0.2, sgld_steps=10, sgld_minibatch=32,
+                          n_chains=2)
+    return {
+        "fgts_cdb": policy.fgts_policy(pool, cfg),
+        "eps_greedy": baselines.eps_greedy_policy(
+            pool, baselines.EpsGreedyConfig(n_models=K_MAX, dim=DIM)),
+        "uniform": baselines.uniform_policy(pool),
+    }
+
+
+def _aux(state, a1, a2):
+    pool = mp.get_pool(state)
+    return {"cost": jnp.mean(0.5 * (pool.costs[a1] + pool.costs[a2])),
+            "n_active": jnp.sum(pool.active.astype(jnp.int32))}
+
+
+def run_cell(e, pol, sched=None, n_runs=N_RUNS, seed=SEED):
+    """(mean regret curve, active-mask fraction (K,), cost traj, pool-size
+    traj) vmapped over seeds — one compiled scan per cell."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_runs)
+
+    def one(k):
+        cum, state, aux = env_lib.run(k, e, pol, batch=BATCH,
+                                      pool_schedule=sched, aux_fn=_aux)
+        return cum, mp.get_pool(state).active, aux["cost"], aux["n_active"]
+
+    cum, active, cost, n_act = jax.jit(jax.vmap(one))(keys)
+    return (np.asarray(cum).mean(axis=0),
+            np.asarray(active).mean(axis=0),
+            np.asarray(cost).mean(axis=0),
+            np.asarray(n_act).mean(axis=0))
+
+
+def _service_zero_retrace_check() -> bool:
+    """Live-service contract: control ticks + an auto/hot membership flip
+    compile zero new programs (single device; the mesh lane re-asserts)."""
+    from repro.data.pool import PoolEntry
+    from repro.encoder import EncoderConfig, init_encoder
+    from repro.serving import RouterService, RouterServiceConfig
+    key = jax.random.PRNGKey(5)
+    dim = 16
+    embs = np.random.RandomState(2).randn(4, dim).astype(np.float32)
+    entries = [PoolEntry(name=f"m{i}", arch="granite-3-2b",
+                         cost_per_1k_tokens=0.1 * (i + 1),
+                         embedding=embs[i]) for i in range(4)]
+    enc_cfg = EncoderConfig(d_model=dim, n_layers=1, n_heads=2, d_ff=32,
+                            max_len=8)
+    svc = RouterService(
+        entries, init_encoder(key, enc_cfg), enc_cfg,
+        RouterServiceConfig(
+            fgts=fgts.FGTSConfig(n_models=6, dim=dim, horizon=128,
+                                 sgld_steps=2, sgld_minibatch=4),
+            k_max=6, feedback_capacity=64,
+            autopilot=AutopilotConfig(every=2, budget=0.2)))
+    x = jax.random.normal(key, (8, dim))
+    new = [PoolEntry(name=f"n{i}", arch="granite-3-2b",
+                     cost_per_1k_tokens=0.05,
+                     embedding=np.random.RandomState(7 + i).randn(
+                         dim).astype(np.float32)) for i in range(2)]
+    _, _, t = svc.route_batch(x)
+    svc.feedback_batch(t, jnp.ones((8,)))
+    svc.add_model(new[0])
+    svc.retire_model(0)
+    for _ in range(3):
+        _, _, t = svc.route_batch(x)
+        svc.feedback_batch(t, jnp.ones((8,)))
+    counts = svc.compiled_program_counts()
+    svc.add_model(new[1])
+    for _ in range(4):                      # crosses >= 2 control ticks
+        _, _, t = svc.route_batch(x)
+        svc.feedback_batch(t, jnp.ones((8,)))
+    return svc.compiled_program_counts() == counts
+
+
+def run(seed: int = 0):
+    rows = []
+    e, a_emb, costs = make_world(jax.random.PRNGKey(seed + 271))
+    pool = mp.init_pool(a_emb, costs)
+    manual = mp.schedule([(RETIRE_AT, BAD, None, None)], DIM)
+    late = slice(3 * (T_ONLINE // BATCH) // 4, None)     # last quarter
+
+    table = {}
+    for name in _policies(pool):
+        cells = {
+            "static": (_policies(pool)[name], None),
+            "manual": (_policies(pool)[name], manual),
+            "autopilot": (wrap(_policies(pool)[name], AP_CFG), None),
+        }
+        for scen, (pol, sched) in cells.items():
+            (cum, active, cost, n_act), secs = timed(run_cell, e, pol,
+                                                     sched)
+            save_curve(f"autopilot_{name}_{scen}", cum)
+            save_curve(f"autopilot_{name}_{scen}_cost", cost)
+            save_curve(f"autopilot_{name}_{scen}_poolsize", n_act)
+            table[(name, scen)] = dict(
+                final=float(cum[-1]),
+                late_cost=float(cost[late].mean()),
+                bad_active=float(active[BAD]),
+                pool_end=float(n_act[-1]))
+            c = table[(name, scen)]
+            rows.append(emit(
+                f"autopilot/{name}_{scen}", secs / T_ONLINE,
+                f"final={c['final']:.1f};late_cost={c['late_cost']:.3f};"
+                f"bad_active={c['bad_active']:.2f};"
+                f"pool_end={c['pool_end']:.1f}"))
+
+    print(f"\npool autopilot vs static vs manual retire@{RETIRE_AT} "
+          f"(T={T_ONLINE}, batch={BATCH}, K={K_MAX}, budget={BUDGET}; "
+          f"cells: final regret / late mean cost / final pool size)")
+    cols = ("static", "manual", "autopilot")
+    print(f"{'policy':<12}" + "".join(f"{c:>24}" for c in cols))
+    for name in _policies(pool):
+        line = f"{name:<12}"
+        for ccol in cols:
+            c = table[(name, ccol)]
+            line += (f"  {c['final']:>8.1f}/{c['late_cost']:.3f}"
+                     f"/{c['pool_end']:.1f}")
+        print(line)
+
+    fgts_ap = table[("fgts_cdb", "autopilot")]
+    fgts_man = table[("fgts_cdb", "manual")]
+    checks = {
+        # dominance must actually fire: the bad arm is retired in (almost)
+        # every seed
+        "autopilot_retires_dominated": fgts_ap["bad_active"] <= 0.5,
+        # ...without giving up the manual operator's regret (10% band)
+        "regret_within_10pct_of_manual":
+            fgts_ap["final"] <= 1.10 * fgts_man["final"],
+        # ...while the governor holds the realized cost at the budget
+        "late_cost_under_budget": fgts_ap["late_cost"] <= BUDGET,
+        # membership/control ticks stay zero-compilation on a live service
+        "zero_new_programs_on_control_ticks":
+            _service_zero_retrace_check(),
+    }
+    rows.append(emit("autopilot/checks", 0.0,
+                     ";".join(f"{k}={v}" for k, v in checks.items())))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

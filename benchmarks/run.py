@@ -17,6 +17,9 @@ results/bench.csv). Mapping to the paper:
                                     devices vs batch
     dynamic_pool bench_dynamic_pool regret recovery after a mid-stream
                                     model arrival (warm vs cold hot-add)
+    autopilot bench_autopilot       closed-loop pool management: dominance
+                                    auto-retirement + cost governor vs
+                                    static pool vs manual schedule
     kernels   bench_kernels         Pallas-vs-oracle numerics + timing
     roofline  roofline              EXPERIMENTS.md §Roofline source
 """
@@ -38,10 +41,10 @@ def main() -> None:
     if args.fast:
         os.environ["REPRO_RUNS"] = "2"
 
-    from . import (bench_baselines, bench_delayed, bench_dynamic_pool,
-                   bench_generalization, bench_kernels, bench_mixinstruct,
-                   bench_mmlu_naive, bench_routerbench, bench_scores_table,
-                   bench_sharded_serving, roofline)
+    from . import (bench_autopilot, bench_baselines, bench_delayed,
+                   bench_dynamic_pool, bench_generalization, bench_kernels,
+                   bench_mixinstruct, bench_mmlu_naive, bench_routerbench,
+                   bench_scores_table, bench_sharded_serving, roofline)
     benches = {
         "tab1": bench_scores_table.run,
         "kernels": bench_kernels.run,
@@ -53,6 +56,7 @@ def main() -> None:
         "delayed": bench_delayed.run,
         "sharded": bench_sharded_serving.run,
         "dynamic_pool": bench_dynamic_pool.run,
+        "autopilot": bench_autopilot.run,
         "roofline": roofline.run,
     }
     wanted = (args.only.split(",") if args.only else list(benches))

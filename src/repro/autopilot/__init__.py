@@ -1,0 +1,16 @@
+"""Pool autopilot: posterior-dominance auto-retirement, A/B candidate
+slots with traffic quotas, and a closed-loop cost governor — population
+management over the dynamic ``ModelPool``, fully inside the jitted
+act/update programs."""
+from .controller import (AutopilotConfig, AutopilotState, ControllerState,
+                         Decisions, apply_decisions, init_controller, step,
+                         wrap)
+from .dominance import (dominance_matrix, dominated_by_cheaper,
+                        posterior_scores_ref, win_matrix)
+
+__all__ = [
+    "AutopilotConfig", "AutopilotState", "ControllerState", "Decisions",
+    "apply_decisions", "init_controller", "step", "wrap",
+    "dominance_matrix", "dominated_by_cheaper", "posterior_scores_ref",
+    "win_matrix",
+]

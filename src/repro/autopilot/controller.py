@@ -1,0 +1,315 @@
+"""Pool autopilot — closed-loop population management over a ``ModelPool``.
+
+Three coupled loops, all pure pytree math inside the policy's own jitted
+``act``/``update`` programs (control ticks therefore compile exactly zero
+new programs — the contract the dynamic-pool layer already pins):
+
+* **Auto-retirement by posterior dominance.** Every ``every`` acts the
+  controller estimates ``P[theta . (e_i - e_j) > 0]`` over the posterior
+  samples (``dominance.dominance_matrix``) and retires arm j once some
+  cheaper-or-equal active full member dominates it with probability >= tau
+  for ``window`` consecutive control ticks. Retirement is the same masked
+  scatter a manual ``retire_model`` uses — shape-static, zero retrace.
+
+* **A/B candidate slots.** Arms that appear in the pool (hot
+  ``add_model``, an env ``pool_schedule`` arrival) enter as *candidates*:
+  their traffic is capped at a ``quota`` share by a per-row Bernoulli gate
+  layered onto the active mask inside masked selection
+  (``RoutingPolicy.act_masked`` — rows outside the gate simply cannot see
+  candidate columns). A candidate is promoted to full membership after
+  ``promote_wins`` resolved duel wins, or rolled back (auto-retired) after
+  ``max_cand_duels`` resolved duels without promoting.
+
+* **Cost governor.** The controller tracks an EMA of the realized duel
+  cost per act and integrates the budget error into a lambda that tilts
+  every score by ``lambda * cost_k`` — the same perf-cost blending the
+  CCFT embeddings use offline (``ccft.perf_cost_scores``: s = perf -
+  lambda*cost), now closed-loop at serve time.
+
+``wrap(policy, cfg)`` turns any pool-backed policy with an ``act_masked``
+path into its autopiloted twin; ``step`` is the pure controller transition
+for callers that drive it manually.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import model_pool as mp
+from ..core.policy import RoutingPolicy
+from .dominance import dominance_matrix, dominated_by_cheaper
+
+
+@dataclasses.dataclass(frozen=True)
+class AutopilotConfig:
+    # -- control cadence ----------------------------------------------------
+    every: int = 8             # acts between control ticks
+    # -- posterior-dominance auto-retirement --------------------------------
+    tau: float = 0.95          # dominance probability threshold
+    window: int = 3            # consecutive dominated control ticks to retire
+    min_active: int = 1        # hard floor on pool size (guards all kills)
+    # -- A/B candidate slots ------------------------------------------------
+    quota: float = 0.25        # candidate traffic share (per-row gate prob)
+    promote_wins: float = 16.0     # resolved duel wins to promote
+    max_cand_duels: float = 64.0   # resolved duels before auto-rollback
+    candidates_on_arrival: bool = True  # new arms enter as candidates
+    # -- cost governor ------------------------------------------------------
+    budget: Optional[float] = None  # mean realized duel cost target; None=off
+    budget_lr: float = 0.5          # integral gain on the budget error
+    lam_max: float = 10.0           # lambda clamp
+    cost_alpha: float = 0.1         # realized-cost EMA weight per act
+
+
+class ControllerState(NamedTuple):
+    """Autopilot bookkeeping — a (K_max,)-shaped pytree riding next to the
+    policy state (replicated under a mesh exactly like the pool itself)."""
+    known: jax.Array            # (K,) bool — membership snapshot (arrivals)
+    candidate: jax.Array        # (K,) bool — arm is in A/B evaluation
+    cand_wins: jax.Array        # (K,) f32  — resolved duel wins as candidate
+    cand_duels: jax.Array       # (K,) f32  — resolved duels as candidate
+    dominated_ticks: jax.Array  # (K,) i32  — consecutive dominated ctl ticks
+    lam: jax.Array              # ()   f32  — cost-governor tilt
+    cost_ema: jax.Array         # ()   f32  — realized mean duel cost EMA
+    tick: jax.Array             # ()   i32  — acts seen
+
+
+class Decisions(NamedTuple):
+    """One control tick's (shape-static) verdicts."""
+    retire: jax.Array      # (K,) bool — dominated long enough: mask off
+    promote: jax.Array     # (K,) bool — candidate -> full member
+    rollback: jax.Array    # (K,) bool — candidate auto-retired
+    dominated: jax.Array   # (K,) bool — dominated THIS tick (pre-window)
+    lam: jax.Array         # ()   f32  — cost-governor lambda after update
+
+
+def init_controller(active0: jax.Array) -> ControllerState:
+    """Fresh controller over an initial membership mask — the initial arms
+    are full members (candidacy is for arrivals)."""
+    k = active0.shape[0]
+    z = jnp.zeros
+    return ControllerState(
+        known=jnp.asarray(active0, bool),
+        candidate=z((k,), bool),
+        cand_wins=z((k,), jnp.float32),
+        cand_duels=z((k,), jnp.float32),
+        dominated_ticks=z((k,), jnp.int32),
+        lam=z((), jnp.float32),
+        cost_ema=z((), jnp.float32),
+        tick=z((), jnp.int32),
+    )
+
+
+def step(ctrl: ControllerState, posterior: jax.Array | None,
+         pool: mp.ModelPool, cfg: AutopilotConfig, *,
+         use_kernel: bool = True):
+    """One pure control transition: (ctrl, posterior, pool, stats) ->
+    (ctrl', decisions). The stats the rule consumes (realized-cost EMA,
+    candidate win/duel counters) ride inside ``ctrl`` — the wrapper's
+    act/update paths accumulate them between control ticks.
+
+    ``posterior`` is (S, d) theta samples (None disables dominance — e.g.
+    the uniform baseline has no posterior; quota and budget still run).
+    Everything is shape-static: jit it once, run it forever.
+    """
+    full = pool.active & ~ctrl.candidate           # voting/retirable members
+    if posterior is None:
+        dominated = jnp.zeros_like(pool.active)
+    else:
+        dom = dominance_matrix(posterior, pool, use_kernel=use_kernel)
+        dominated = dominated_by_cheaper(dom, pool.costs, full, full,
+                                         cfg.tau)
+    ticks = jnp.where(dominated, ctrl.dominated_ticks + 1, 0)
+    retire = full & (ticks >= cfg.window)
+
+    cand = ctrl.candidate & pool.active
+    promote = cand & (ctrl.cand_wins >= cfg.promote_wins)
+    rollback = cand & ~promote & (ctrl.cand_duels >= cfg.max_cand_duels)
+
+    # pool-size floor: cancel every kill this tick rather than choose
+    # which to spare (a rare, degenerate corner — next tick retries)
+    kill = retire | rollback
+    survivors = jnp.sum((pool.active & ~kill).astype(jnp.int32))
+    ok = survivors >= cfg.min_active
+    retire = retire & ok
+    rollback = rollback & ok
+
+    lam = ctrl.lam
+    if cfg.budget is not None:
+        lam = jnp.clip(lam + cfg.budget_lr * (ctrl.cost_ema - cfg.budget),
+                       0.0, cfg.lam_max)
+
+    done = promote | rollback
+    ctrl = ctrl._replace(
+        candidate=ctrl.candidate & ~done,
+        cand_wins=jnp.where(done, 0.0, ctrl.cand_wins),
+        cand_duels=jnp.where(done, 0.0, ctrl.cand_duels),
+        dominated_ticks=ticks,
+        lam=lam,
+    )
+    return ctrl, Decisions(retire=retire, promote=promote, rollback=rollback,
+                           dominated=dominated, lam=lam)
+
+
+def apply_decisions(pool: mp.ModelPool, dec: Decisions) -> mp.ModelPool:
+    """Fold a control tick's kills into the pool: the same masked flip a
+    manual ``retire_model`` performs, batched over arms."""
+    kill = dec.retire | dec.rollback
+    return pool._replace(
+        active=pool.active & ~kill,
+        generation=pool.generation + jnp.sum(kill, dtype=jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# The policy wrapper
+# ---------------------------------------------------------------------------
+
+class AutopilotState(NamedTuple):
+    """Wrapped policy state: ``inner`` is the pool-backed policy's own
+    ``PooledState`` (``model_pool.get_pool`` descends through this wrapper
+    structurally), ``ctrl`` the controller bookkeeping. Checkpoints,
+    lax.scan carries and mesh replication all treat it as one pytree."""
+    inner: Any
+    ctrl: ControllerState
+
+
+def _fgts_posterior(state) -> jax.Array:
+    """(2C, d) posterior samples: both FGTS thetas' warm-started chains."""
+    return jnp.concatenate([state.inner.theta1, state.inner.theta2], axis=0)
+
+
+# policy.name -> posterior extractor over the *inner* (pooled) state.
+# Policies missing here (or mapping to None) run without the dominance
+# loop: quota gating and the cost governor still apply. Point-estimate
+# policies (eps-greedy's MAP theta) are deliberately None — a single
+# sample makes win_matrix take values in {0, 1/2, 1}, so any tau in
+# (0.5, 1] degenerates to a sign test on an (initially untrained) point
+# estimate and can mass-retire the pool before learning starts; pass an
+# explicit ``posterior_fn`` to override when that is truly wanted.
+POSTERIOR_FNS: dict = {
+    "fgts_cdb": _fgts_posterior,
+    "vanilla_ts": _fgts_posterior,
+    "eps_greedy": None,         # MAP point estimate, not a posterior
+    "uniform": None,
+    "best_fixed": None,
+    "linucb_duel": None,        # per-arm ridge stats, no shared theta
+}
+
+
+def wrap(pol: RoutingPolicy, cfg: AutopilotConfig, *,
+         posterior_fn: Callable | None = None,
+         use_kernel: bool = True) -> RoutingPolicy:
+    """The autopiloted twin of a pool-backed policy.
+
+    ``pol`` must carry its arms in a ``ModelPool`` (its ``init`` returns a
+    ``PooledState``) and expose the gated ``act_masked`` selection path —
+    the quota mask and the governor's dynamic lambda flow through it as
+    traced data, so membership churn, candidacy flips and budget pressure
+    never retrace a compiled program.
+
+    ``posterior_fn(inner_state) -> (S, d)`` overrides the per-policy
+    registry (``POSTERIOR_FNS``); None with an unknown policy name
+    disables dominance-based retirement only.
+    """
+    if pol.act_masked is None:
+        raise ValueError(
+            f"policy '{pol.name}' has no act_masked path: the autopilot "
+            f"enforces candidate quotas inside masked selection — build "
+            f"the policy on a ModelPool (pooled constructors provide it)")
+    if posterior_fn is None:
+        posterior_fn = POSTERIOR_FNS.get(pol.name)
+
+    def init(key):
+        inner = pol.init(key)
+        pool = mp.get_pool(inner)      # raises on a non-pooled policy
+        return AutopilotState(inner, init_controller(pool.active))
+
+    def act(key, state, x):
+        inner, ctrl = state.inner, state.ctrl
+        pool = mp.get_pool(inner)
+        b = x.shape[0]
+        k_gate, k_act = jax.random.split(key)
+
+        # 1. arrivals since the last act become candidates (fresh counters)
+        newly = pool.active & ~ctrl.known
+        candidate = ctrl.candidate & pool.active
+        if cfg.candidates_on_arrival:
+            candidate = candidate | newly
+        ctrl = ctrl._replace(
+            known=pool.active,
+            candidate=candidate,
+            cand_wins=jnp.where(newly, 0.0, ctrl.cand_wins),
+            cand_duels=jnp.where(newly, 0.0, ctrl.cand_duels),
+            tick=ctrl.tick + 1,
+        )
+
+        # 2. control tick every cfg.every acts — both branches are traced
+        #    once; the membership flips inside are shape-static scatters
+        def do_step(args):
+            ctrl, pool = args
+            post = None if posterior_fn is None else posterior_fn(inner)
+            ctrl, dec = step(ctrl, post, pool, cfg, use_kernel=use_kernel)
+            return ctrl, apply_decisions(pool, dec)
+
+        ctrl, pool = jax.lax.cond(ctrl.tick % cfg.every == 0, do_step,
+                                  lambda args: args, (ctrl, pool))
+        inner = mp.set_pool(inner, pool)
+
+        # 3. quota gate: only gated rows may see candidate columns. If NO
+        #    active full member exists (every incumbent retired while a
+        #    candidate was mid-A/B), the gate would leave ungated rows
+        #    with an empty eligible set — argmax over all--inf routes to
+        #    slot 0, active or not. Degrade to full eligibility instead:
+        #    an all-candidate pool serves candidates on every row.
+        gate = jax.random.uniform(k_gate, (b,)) < cfg.quota
+        has_full = jnp.any(pool.active & ~ctrl.candidate)
+        row_mask = gate[:, None] | ~ctrl.candidate[None, :] | ~has_full
+
+        # 4. gated selection under the governor's live lambda tilt
+        inner, a1, a2 = pol.act_masked(k_act, inner, x, row_mask,
+                                       ctrl.lam * pool.costs)
+
+        # 5. realized-cost EMA (both duelled arms answer the query)
+        c = jnp.mean(0.5 * (pool.costs[a1] + pool.costs[a2]))
+        ema = jnp.where(ctrl.tick == 1, c,
+                        (1.0 - cfg.cost_alpha) * ctrl.cost_ema
+                        + cfg.cost_alpha * c)
+        return AutopilotState(inner, ctrl._replace(cost_ema=ema)), a1, a2
+
+    def _count(ctrl: ControllerState, a1, a2, y, ok) -> ControllerState:
+        """Candidate duel accounting on resolved feedback (masked rows are
+        absent). y's sign decides the win; a1 wins on y > 0."""
+        okf = ok.astype(jnp.float32)
+        c1 = ctrl.candidate[a1].astype(jnp.float32) * okf
+        c2 = ctrl.candidate[a2].astype(jnp.float32) * okf
+        wins = ctrl.cand_wins.at[a1].add(c1 * (y > 0)) \
+                             .at[a2].add(c2 * (y < 0))
+        duels = ctrl.cand_duels.at[a1].add(c1).at[a2].add(c2)
+        return ctrl._replace(cand_wins=wins, cand_duels=duels)
+
+    def update(state, x, a1, a2, y):
+        ok = jnp.ones(y.shape, bool)
+        return AutopilotState(pol.update(state.inner, x, a1, a2, y),
+                              _count(state.ctrl, a1, a2, y, ok))
+
+    update_masked = None
+    if pol.update_masked is not None:
+        def update_masked(state, x, a1, a2, y, mask):
+            return AutopilotState(
+                pol.update_masked(state.inner, x, a1, a2, y, mask),
+                _count(state.ctrl, a1, a2, y, mask))
+
+    update_delayed = None
+    if pol.update_delayed is not None:
+        def update_delayed(state, x, a1, a2, y, age):
+            ok = jnp.ones(y.shape, bool)
+            return AutopilotState(
+                pol.update_delayed(state.inner, x, a1, a2, y, age),
+                _count(state.ctrl, a1, a2, y, ok))
+
+    return RoutingPolicy(init, act, update,
+                         name=f"autopilot({pol.name})",
+                         update_delayed=update_delayed,
+                         update_masked=update_masked)

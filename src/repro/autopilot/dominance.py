@@ -1,0 +1,86 @@
+"""Posterior dominance — which arms does the posterior say are strictly
+beaten, and with what probability?
+
+FGTS.CDB maintains SGLD chains over the preference parameter theta. For a
+pair of arms (i, j) the context-free preference direction is the sign of
+``theta . (e_i - e_j)`` on the normalized embeddings (phi with the all-ones
+query), so the *fraction of posterior samples* preferring i over j is a
+Monte-Carlo estimate of
+
+    P[ theta . (e_i - e_j) > 0 | history ]
+
+— the posterior probability that i dominates j. ``dominance_matrix``
+computes that (K, K) matrix for every pair in one shot: arm scores per
+sample come from the ``dueling_score`` Pallas kernel driven with the
+all-ones query (``kernels.dueling_score.posterior_scores``) or the pure-XLA
+reference below (sharded serving, where a Pallas call cannot be
+partitioned); both paths are parity-tested like ``dueling_select``.
+
+The autopilot's retire rule consumes this matrix cost-aware: an arm is only
+*dominated* when some cheaper-or-equal active full member beats it with
+probability >= tau (``controller.step``); a pricier arm winning on quality
+alone never retires a budget option.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dueling_score import posterior_scores
+
+from ..core.model_pool import ModelPool
+
+
+def posterior_scores_ref(a: jax.Array, thetas: jax.Array) -> jax.Array:
+    """XLA reference for ``kernels.dueling_score.posterior_scores``:
+    s_ck = <theta_c, a_k> / ||a_k||. a: (K, d); thetas: (C, d) -> (C, K)."""
+    den = jnp.sqrt(jnp.maximum(jnp.sum(a * a, axis=-1), 1e-24))    # (K,)
+    return (thetas @ a.T) / den[None, :]
+
+
+def win_matrix(scores: jax.Array) -> jax.Array:
+    """(C, K) per-sample arm scores -> (K, K) pairwise win fractions.
+
+    P[i, j] = mean over samples of 1[s_i > s_j], ties counting 1/2 (so the
+    diagonal is exactly 0.5 and P[i, j] + P[j, i] == 1).
+    """
+    gt = (scores[:, :, None] > scores[:, None, :]).astype(jnp.float32)
+    eq = (scores[:, :, None] == scores[:, None, :]).astype(jnp.float32)
+    return jnp.mean(gt + 0.5 * eq, axis=0)
+
+
+def dominance_matrix(chains: jax.Array, pool: ModelPool | jax.Array, *,
+                     use_kernel: bool = True) -> jax.Array:
+    """P[theta . (e_i - e_j) > 0] over the posterior samples, all pairs.
+
+    chains: (C, d) posterior theta samples (for FGTS both samples' SGLD
+    chains concatenated); pool: a ``ModelPool`` (its padded embedding
+    table is scored — mask the result with ``pool.active`` downstream) or
+    a raw (K, d) table. Jits and shards cleanly; ``use_kernel=False``
+    takes the XLA reference scoring path (mesh-sharded serving).
+    Returns (K, K) float32.
+    """
+    a = pool.a_emb if isinstance(pool, ModelPool) else pool
+    s = posterior_scores(a, chains) if use_kernel \
+        else posterior_scores_ref(a, chains)
+    return win_matrix(s)
+
+
+def dominated_by_cheaper(dom: jax.Array, costs: jax.Array,
+                         eligible_winner: jax.Array,
+                         eligible_loser: jax.Array,
+                         tau: float) -> jax.Array:
+    """The cost-aware retire predicate, one control tick's worth.
+
+    Arm j counts as dominated iff SOME arm i with ``eligible_winner[i]``
+    (active full members — candidates don't retire incumbents until
+    promoted) and ``costs[i] <= costs[j]`` has ``dom[i, j] >= tau``; only
+    ``eligible_loser`` arms can be dominated. The diagonal is excluded
+    structurally (an arm never dominates itself), so a permissive
+    tau <= 0.5 cannot self-retire the whole pool. Returns (K,) bool.
+    """
+    k = dom.shape[0]
+    cheaper = costs[:, None] <= costs[None, :]               # (K, K) i vs j
+    beats = (dom >= tau) & cheaper & eligible_winner[:, None] \
+        & ~jnp.eye(k, dtype=bool)
+    return jnp.any(beats, axis=0) & eligible_loser

@@ -27,7 +27,8 @@ from repro.kernels.dueling_score import mask_fallback_pair
 
 from .ccft import phi_all
 from .model_pool import ModelPool, PooledState, masked_pair_choice
-from .policy import RoutingPolicy, preference_loss, select_pair
+from .policy import (RoutingPolicy, merge_tilt, preference_loss,
+                     select_pair)
 
 
 def uniform_policy(n_models: int | ModelPool) -> RoutingPolicy:
@@ -50,10 +51,21 @@ def uniform_policy(n_models: int | ModelPool) -> RoutingPolicy:
         return state, pairs[:, 0].astype(jnp.int32), \
             pairs[:, 1].astype(jnp.int32)
 
+    def act_masked(key, state, x, row_mask, tilt):
+        # uniform draws have no scores for a tilt to bend; the row mask
+        # narrows each row's eligible arms (candidate quota gating)
+        del tilt
+        if row_mask is None:
+            return act(key, state, x)
+        a1, a2 = masked_pair_choice(
+            key, row_mask & state.pool.active[None, :], x.shape[0])
+        return state, a1, a2
+
     def update(state, x, a1, a2, y):
         return state
 
-    return RoutingPolicy(init, act, update, name="uniform")
+    return RoutingPolicy(init, act, update, name="uniform",
+                         act_masked=act_masked if pooled else None)
 
 
 def best_fixed_policy(utils_mean: jax.Array,
@@ -118,21 +130,26 @@ def eps_greedy_policy(a_emb: jax.Array | ModelPool, cfg: EpsGreedyConfig, *,
         s = {"theta": jax.random.normal(key, (cfg.dim,)) * 0.1}
         return PooledState(s, pool0) if pooled else s
 
-    def act(key, state, x):
+    def _act(key, state, x, row_mask=None, extra_tilt=None):
         b = x.shape[0]
         k_e, k_a = jax.random.split(key)
         inner = state.inner if pooled else state
         emb = state.pool.a_emb if pooled else a_emb
         mask = state.pool.active if pooled else None
+        if row_mask is not None:
+            mask = row_mask & state.pool.active[None, :]
         eff_tilt = tilt
         if pooled and tilt is None and cost_tilt != 0.0:
             eff_tilt = cost_tilt * state.pool.costs
+        eff_tilt = merge_tilt(eff_tilt, extra_tilt)
         a1_g, a2_g = select_pair(x, emb, inner["theta"], inner["theta"],
                                  tilt=eff_tilt, mask=mask, distinct=True,
                                  use_kernel=use_kernel)
         explore = jax.random.uniform(k_e, (b,)) < cfg.eps
         if pooled:
-            r1, r2 = masked_pair_choice(k_a, state.pool.active, b)
+            # exploration honours the same per-row gate as the greedy path
+            r1, r2 = masked_pair_choice(
+                k_a, state.pool.active if row_mask is None else mask, b)
         else:
             rand = jax.vmap(lambda k: jax.random.choice(
                 k, cfg.n_models, (2,),
@@ -142,6 +159,12 @@ def eps_greedy_policy(a_emb: jax.Array | ModelPool, cfg: EpsGreedyConfig, *,
         a2 = jnp.where(explore, r2, a2_g).astype(jnp.int32)
         return state, a1, a2
 
+    def act(key, state, x):
+        return _act(key, state, x)
+
+    def act_masked(key, state, x, row_mask, tilt_extra):
+        return _act(key, state, x, row_mask, tilt_extra)
+
     def update(state, x, a1, a2, y):
         inner = state.inner if pooled else state
         emb = state.pool.a_emb if pooled else a_emb
@@ -149,7 +172,8 @@ def eps_greedy_policy(a_emb: jax.Array | ModelPool, cfg: EpsGreedyConfig, *,
         out = {"theta": inner["theta"] - cfg.lr * g}
         return state._replace(inner=out) if pooled else out
 
-    return RoutingPolicy(init, act, update, name="eps_greedy")
+    return RoutingPolicy(init, act, update, name="eps_greedy",
+                         act_masked=act_masked if pooled else None)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -198,7 +222,7 @@ def linucb_duel_policy(a_emb: jax.Array | ModelPool, cfg: LinUCBConfig, *,
         s = fresh(key)
         return PooledState(s, pool0) if pooled else s
 
-    def act(key, state, x):
+    def _act(key, state, x, row_mask=None, extra_tilt=None):
         inner = state.inner if pooled else state
         emb = state.pool.a_emb if pooled else a_emb
         feats = jax.vmap(lambda xi: phi_all(xi, emb))(x)       # (B, K, d)
@@ -210,10 +234,13 @@ def linucb_duel_policy(a_emb: jax.Array | ModelPool, cfg: LinUCBConfig, *,
         eff_tilt = tilt
         if pooled and tilt is None and cost_tilt != 0.0:
             eff_tilt = cost_tilt * state.pool.costs
+        eff_tilt = merge_tilt(eff_tilt, extra_tilt)
         if eff_tilt is not None:
             ucb = ucb - eff_tilt[None, :]
         if pooled:
-            ucb = jnp.where(state.pool.active[None, :], ucb, -jnp.inf)
+            mask = state.pool.active[None, :] if row_mask is None \
+                else row_mask & state.pool.active[None, :]
+            ucb = jnp.where(mask, ucb, -jnp.inf)
         a1 = jnp.argmax(ucb, axis=-1).astype(jnp.int32)
         masked = jnp.where(jnp.arange(cfg.n_models)[None, :] == a1[:, None],
                            -jnp.inf, ucb)
@@ -221,6 +248,12 @@ def linucb_duel_policy(a_emb: jax.Array | ModelPool, cfg: LinUCBConfig, *,
         if pooled:
             a2 = mask_fallback_pair(masked, a1, a2)
         return state, a1, a2
+
+    def act(key, state, x):
+        return _act(key, state, x)
+
+    def act_masked(key, state, x, row_mask, extra_tilt):
+        return _act(key, state, x, row_mask, extra_tilt)
 
     def update(state, x, a1, a2, y):
         inner = state.inner if pooled else state
@@ -237,4 +270,5 @@ def linucb_duel_policy(a_emb: jax.Array | ModelPool, cfg: LinUCBConfig, *,
         out = {"A": new_a, "b": new_b}
         return state._replace(inner=out) if pooled else out
 
-    return RoutingPolicy(init, act, update, name="linucb_duel")
+    return RoutingPolicy(init, act, update, name="linucb_duel",
+                         act_masked=act_masked if pooled else None)

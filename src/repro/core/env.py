@@ -96,7 +96,8 @@ def _as_delay(delay) -> DelaySpec:
 
 def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
         batch: int = 1, delay: DelaySpec | int | None = 0,
-        pool_schedule: "mp.PoolSchedule | None" = None):
+        pool_schedule: "mp.PoolSchedule | None" = None,
+        aux_fn: Callable | None = None):
     """Run any RoutingPolicy over the stream. Returns (cum_regret (T,), state).
 
     Rounds are consumed ``batch`` at a time (trailing remainder dropped when
@@ -119,6 +120,13 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
     is measured against the best **active** arm per tick. Requires a
     pool-backed policy (state is a ``PooledState``); None leaves the loop
     bit-identical to the static path.
+
+    ``aux_fn(state, a1, a2) -> pytree`` is an optional per-tick observable
+    evaluated on the post-act state and the routed pair inside the same
+    scan (e.g. realized duel cost, active-arm count for autopilot runs).
+    When given, the return becomes ``(cum_regret, state, aux)`` with each
+    aux leaf stacked over the T'/batch scan steps; None keeps the two-tuple
+    return bit-identical to before.
     """
     spec = _as_delay(delay)
     t_total = env.x.shape[0] - env.x.shape[0] % batch
@@ -138,6 +146,15 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
     if pool_schedule is not None:
         mp.get_pool(state0)        # fail fast on a non-pooled policy
 
+    def emit(state, a1, a2, reg):
+        """Scan output: the regret row, plus the aux observable when asked."""
+        return (reg, aux_fn(state, a1, a2)) if aux_fn is not None else reg
+
+    def unpack(state, ys):
+        regrets = ys[0] if aux_fn is not None else ys
+        cum = jnp.cumsum(regrets.reshape(-1))
+        return (cum, state, ys[1]) if aux_fn is not None else (cum, state)
+
     if spec.trivial:
         if pool_schedule is None:
             def step(state, inp):
@@ -148,10 +165,11 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
                                       env.feedback_scale * u_b[rows, a1],
                                       env.feedback_scale * u_b[rows, a2])
                 state = policy.update(state, x_b, a1, a2, y)
-                return state, jax.vmap(instant_regret)(u_b, a1, a2)
+                return state, emit(state, a1, a2,
+                                   jax.vmap(instant_regret)(u_b, a1, a2))
 
-            state, regrets = jax.lax.scan(step, state0, (keys, x, utils))
-            return jnp.cumsum(regrets.reshape(-1)), state
+            state, ys = jax.lax.scan(step, state0, (keys, x, utils))
+            return unpack(state, ys)
 
         def sched_step(state, inp):
             s, k, x_b, u_b = inp
@@ -163,12 +181,12 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
                                   env.feedback_scale * u_b[rows, a2])
             state = policy.update(state, x_b, a1, a2, y)
             reg = jax.vmap(lambda u, i, j: instant_regret(
-                u, i, j, active=pool.active))(u_b, a1, a2)
-            return state, reg
+                u, i, j, active=mp.get_pool(state).active))(u_b, a1, a2)
+            return state, emit(state, a1, a2, reg)
 
-        state, regrets = jax.lax.scan(sched_step, state0,
-                                      (steps, keys, x, utils))
-        return jnp.cumsum(regrets.reshape(-1)), state
+        state, ys = jax.lax.scan(sched_step, state0,
+                                 (steps, keys, x, utils))
+        return unpack(state, ys)
 
     # -- delayed path: resolve(ring head) -> act -> schedule, one scan ------
     r = spec.cap + 1                       # ring slots, addressed by due tick
@@ -188,11 +206,9 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
         k_act, k_fb, k_lag = jax.random.split(k, 3)
 
         # 0. pool membership events due this tick land before anything else
-        active = None
         if pool_schedule is not None:
             pool = mp.apply_events(mp.get_pool(state), pool_schedule, s)
             state = mp.set_pool(state, pool)
-            active = pool.active
 
         # 1. resolve: the slot due at tick s (lag <= cap < r guarantees any
         #    valid entry here was scheduled for exactly this tick)
@@ -231,13 +247,15 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
             issued=ring["issued"].at[w].set(s),
             valid=ring["valid"].at[w].set(True),
         )
+        active = mp.get_pool(state).active if pool_schedule is not None \
+            else None
         reg = jax.vmap(lambda u, i, j: instant_regret(
             u, i, j, active=active))(u_b, a1, a2)
-        return (state, ring), reg
+        return (state, ring), emit(state, a1, a2, reg)
 
-    (state, _), regrets = jax.lax.scan(delayed_step, (state0, ring0),
-                                       (steps, keys, x, utils))
-    return jnp.cumsum(regrets.reshape(-1)), state
+    (state, _), ys = jax.lax.scan(delayed_step, (state0, ring0),
+                                  (steps, keys, x, utils))
+    return unpack(state, ys)
 
 
 def averaged_runs(run_fn: Callable, key: jax.Array, n_runs: int = 5):

@@ -74,17 +74,40 @@ def init_pool(a_emb, costs=None, k_max: int | None = None) -> ModelPool:
 
 
 def get_pool(state) -> ModelPool:
-    if not isinstance(state, PooledState):
+    """The live ``ModelPool`` carried by a pool-backed policy state.
+
+    Wrapper states (e.g. the autopilot's controller-augmented state) are
+    supported structurally: any NamedTuple-style state with an ``inner``
+    field is descended until the ``PooledState`` is found, so every caller
+    that reads or swaps the pool (env schedules, service membership
+    programs, checkpoint re-sync) works unchanged through wrappers.
+    """
+    if isinstance(state, PooledState):
+        return state.pool
+    inner = getattr(state, "inner", None)
+    if inner is None:
         raise TypeError(
             "expected a PooledState (a policy built on a ModelPool); got "
             f"{type(state).__name__} — construct the policy with a "
             "ModelPool first argument to make its arm set dynamic")
-    return state.pool
+    return get_pool(inner)
+
+
+def is_pooled(state) -> bool:
+    """True when ``get_pool`` would succeed (possibly through wrappers)."""
+    try:
+        get_pool(state)
+        return True
+    except TypeError:
+        return False
 
 
 def set_pool(state, pool: ModelPool):
-    get_pool(state)            # type check
-    return state._replace(pool=pool)
+    """Functional pool swap, descending wrapper states like ``get_pool``."""
+    if isinstance(state, PooledState):
+        return state._replace(pool=pool)
+    get_pool(state)            # type check (raises on non-pooled states)
+    return state._replace(inner=set_pool(state.inner, pool))
 
 
 def set_arm(pool: ModelPool, slot, emb, cost) -> ModelPool:
@@ -111,14 +134,17 @@ def retire_arm(pool: ModelPool, slot) -> ModelPool:
 def masked_pair_choice(key: jax.Array, active: jax.Array, b: int):
     """Uniform random *distinct* pair among active arms for B rows, via
     Gumbel-top-2 (equal scores => a uniform ordered pair without
-    replacement). With a single surviving arm the pair degenerates to
-    (k, k) — a distinct duel is impossible there."""
-    g = jax.random.gumbel(key, (b, active.shape[0]))
-    g = jnp.where(active[None, :], g, -jnp.inf)
+    replacement). ``active`` is (K,) — one mask for every row — or (B, K)
+    per-row eligibility (the autopilot's candidate-quota gate). Rows with a
+    single eligible arm degenerate to (k, k) — a distinct duel is
+    impossible there."""
+    act2 = jnp.atleast_2d(active)                     # (1,K) or (B,K)
+    g = jax.random.gumbel(key, (b, active.shape[-1]))
+    g = jnp.where(act2, g, -jnp.inf)
     _, top2 = jax.lax.top_k(g, 2)
     a1 = top2[:, 0].astype(jnp.int32)
-    a2 = jnp.where(n_active_mask(active) > 1, top2[:, 1].astype(jnp.int32),
-                   a1)
+    n_act = jnp.sum(act2.astype(jnp.int32), axis=-1)  # (1,) or (B,)
+    a2 = jnp.where(n_act > 1, top2[:, 1].astype(jnp.int32), a1)
     return a1, a2
 
 

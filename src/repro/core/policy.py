@@ -52,6 +52,17 @@ class RoutingPolicy(NamedTuple):
     batch size whatever the stale-vote count (pad + mask instead of
     compact + retrace), and let the mesh-sharded service fold feedback
     without ever gathering the batch to one device.
+
+    ``act_masked(key, state, x, row_mask, tilt)`` is the optional
+    *gated-selection* path for pool-backed policies: identical to ``act``
+    except that ``row_mask`` (a (B, K) bool, or None) is AND-layered onto
+    the pool's ``active`` mask per query row, and ``tilt`` (a (K,) float,
+    or None) is an extra score penalty *added* to the policy's own cost
+    tilt. Both operands are traced data, so a caller can vary them every
+    tick without retracing. The pool autopilot drives all candidate
+    traffic quotas and its dynamic cost-governor lambda through this path;
+    with ``row_mask=None, tilt=None`` it must match plain ``act``
+    bit-for-bit.
     """
     init: Callable[[jax.Array], Any]
     act: Callable[[jax.Array, Any, jax.Array], tuple]
@@ -59,6 +70,7 @@ class RoutingPolicy(NamedTuple):
     name: str = "policy"
     update_delayed: Callable[..., Any] | None = None
     update_masked: Callable[..., Any] | None = None
+    act_masked: Callable[..., tuple] | None = None
 
 
 def staleness_weight(age: jax.Array, half_life: float) -> jax.Array:
@@ -95,10 +107,12 @@ def select_pair(x: jax.Array, a_emb: jax.Array, theta1: jax.Array,
     off-host, interpret on CPU); use_kernel=False is the matmul-identity XLA
     path that shards cleanly across a mesh batch axis.
 
-    ``mask`` is the (K,) bool arm-activity mask (dynamic model pools):
-    inactive arms score -inf on both paths, so they can never be duelled;
-    with a single surviving arm a ``distinct`` pair degenerates to (k, k).
-    None (the static default) is bit-identical to the unmasked selection.
+    ``mask`` is the bool arm-activity mask (dynamic model pools): a (K,)
+    mask applies to every row, a (B, K) mask restricts arms per query (the
+    autopilot's candidate-quota gate). Inactive arms score -inf on both
+    paths, so they can never be duelled; with a single surviving arm a
+    ``distinct`` pair degenerates to (k, k). None (the static default) is
+    bit-identical to the unmasked selection.
     """
     if use_kernel:
         return dueling_select(x, a_emb, jnp.stack([theta1, theta2]),
@@ -110,8 +124,9 @@ def select_pair(x: jax.Array, a_emb: jax.Array, theta1: jax.Array,
         s1 = s1 - tilt[None, :]
         s2 = s2 - tilt[None, :]
     if mask is not None:
-        s1 = jnp.where(mask[None, :], s1, -jnp.inf)
-        s2 = jnp.where(mask[None, :], s2, -jnp.inf)
+        m2 = jnp.atleast_2d(mask)
+        s1 = jnp.where(m2, s1, -jnp.inf)
+        s2 = jnp.where(m2, s2, -jnp.inf)
     a1 = jnp.argmax(s1, axis=-1).astype(jnp.int32)
     if distinct:
         k = a_emb.shape[0]
@@ -128,6 +143,16 @@ def cost_tilt_vector(costs: jax.Array | None,
     if costs is None or cost_tilt == 0.0:
         return None
     return cost_tilt * costs
+
+
+def merge_tilt(base: jax.Array | None,
+               extra: jax.Array | None) -> jax.Array | None:
+    """Stack score penalties: a policy's own cost tilt plus a caller's
+    dynamic one (the autopilot governor's lambda * cost_k through
+    ``act_masked``), None-transparent on both sides."""
+    if base is None:
+        return extra
+    return base if extra is None else base + extra
 
 
 # ---------------------------------------------------------------------------
@@ -209,7 +234,7 @@ def _fgts_policy_pooled(pool0: ModelPool, cfg: fgts.FGTSConfig, *,
     def init(key):
         return PooledState(init_fgts_state(cfg, key), pool0)
 
-    def act(key, state, x):
+    def _act(key, state, x, row_mask=None, extra_tilt=None):
         inner, pool = state.inner, state.pool
         k1, k2 = jax.random.split(key)
 
@@ -222,12 +247,23 @@ def _fgts_policy_pooled(pool0: ModelPool, cfg: fgts.FGTSConfig, *,
         th1 = chains(k1, inner.theta1, 1)            # (C, d)
         th2 = chains(k2, inner.theta2, 2)
         inner = inner._replace(theta1=th1, theta2=th2)
-        tilt = cost_tilt * pool.costs if cost_tilt != 0.0 else None
+        tilt = merge_tilt(cost_tilt * pool.costs if cost_tilt != 0.0
+                          else None, extra_tilt)
+        mask = pool.active if row_mask is None \
+            else row_mask & pool.active[None, :]
         a1, a2 = select_pair(x, pool.a_emb, th1.mean(axis=0),
-                             th2.mean(axis=0), tilt=tilt, mask=pool.active,
+                             th2.mean(axis=0), tilt=tilt, mask=mask,
                              distinct=cfg.force_distinct,
                              use_kernel=use_kernel)
         return PooledState(inner, pool), a1, a2
+
+    def act(key, state, x):
+        return _act(key, state, x)
+
+    def act_masked(key, state, x, row_mask, tilt):
+        # one SGLD refresh whatever the gating: the row mask and the extra
+        # (dynamic) tilt only touch the selection epilogue
+        return _act(key, state, x, row_mask, tilt)
 
     def update(state, x, a1, a2, y):
         return state._replace(
@@ -238,7 +274,7 @@ def _fgts_policy_pooled(pool0: ModelPool, cfg: fgts.FGTSConfig, *,
             inner=fgts.observe_batch(state.inner, x, a1, a2, y, mask=mask))
 
     return RoutingPolicy(init, act, update, name="fgts_cdb",
-                         update_masked=update_masked)
+                         update_masked=update_masked, act_masked=act_masked)
 
 
 def vanilla_ts_policy(a_emb: jax.Array, cfg: fgts.FGTSConfig,

@@ -12,6 +12,13 @@ def instant_regret(utils_t, a1, a2, active=None):
     available this tick — with a dynamic pool the benchmark is the best
     *active* arm, not a retired (or not-yet-arrived) one whose utility the
     router could never have realized. None keeps the static global max.
+
+    Edge cases (pinned in tests): a single-survivor pool that duels
+    (k, k) on its survivor scores exactly 0 regret; an all-inactive mask
+    has no achievable benchmark and yields -inf — every producer of
+    ``active`` (env schedules, service guard rails, the autopilot's
+    min-active floor) keeps at least one arm alive, so -inf marks a caller
+    bug rather than a valid regret.
     """
     best = jnp.max(utils_t if active is None
                    else jnp.where(active, utils_t, -jnp.inf))
@@ -27,12 +34,19 @@ def slope_ratio(cum_regret: np.ndarray, frac: float = 0.2) -> float:
 
     The paper's qualitative criterion (Fig. 1): a successful router's regret
     curve flattens; a failing one stays linear (ratio ~ 1).
+
+    The window is clamped to the curve: short horizons (len(cum) <= the
+    nominal window, e.g. smoke runs with T=2) fall back to the largest
+    window that still fits, and a single-point curve has no slope
+    information at all — ratio 1.0 (neither converging nor diverging).
     """
     cum = np.asarray(cum_regret)
     t = len(cum)
-    w = max(int(t * frac), 2)
+    if t < 2:
+        return 1.0
+    w = min(max(int(t * frac), 2), t - 1)
     early = (cum[w] - cum[0]) / w
-    late = (cum[-1] - cum[-w]) / w
+    late = (cum[-1] - cum[-1 - w]) / w
     return float(late / max(early, 1e-9))
 
 

@@ -119,6 +119,22 @@ def dueling_score(x: jax.Array, a: jax.Array, thetas: jax.Array, *,
     return out[:, :b, :k]
 
 
+def posterior_scores(a: jax.Array, thetas: jax.Array, *,
+                     interpret: bool | None = None) -> jax.Array:
+    """Context-free arm scores s_ck = <theta_c, a_k / ||a_k||> for every
+    posterior sample — the same Pallas score kernel driven with the all-ones
+    query (phi(1, a) = a/||a||, so the Hadamard identity collapses to a
+    normalized dot). a: (K, d); thetas: (C, d). Returns (C, K) float32.
+
+    The autopilot's posterior-dominance matrix is built on these: the
+    fraction of SGLD chains scoring arm i above arm j estimates
+    P[theta · (e_i - e_j) > 0] (``autopilot.dominance``, which also carries
+    the pure-XLA reference path this kernel is parity-tested against).
+    """
+    ones = jnp.ones((1, a.shape[1]), jnp.float32)
+    return dueling_score(ones, a, thetas, interpret=interpret)[:, 0, :]
+
+
 def _select_kernel(x_ref, a_ref, th_ref, tilt_ref, mask_ref, a1_ref, a2_ref,
                    *, k_valid: int, distinct: bool):
     """Score + argmax epilogue for one (BB,) block of queries.
@@ -126,19 +142,21 @@ def _select_kernel(x_ref, a_ref, th_ref, tilt_ref, mask_ref, a1_ref, a2_ref,
     K lives whole in VMEM; padded arms AND masked-out (inactive) arms are
     set to -inf so they can never win the argmax. ``tilt`` is the
     pre-multiplied cost penalty (cost_tilt * cost_k), subtracted from both
-    samples' scores; ``mask`` is the int32 arm-activity mask (dynamic model
-    pools flip it at hot add/remove without retracing).
+    samples' scores; ``mask`` is the int32 arm-activity mask, one row per
+    query (dynamic model pools flip whole columns at hot add/remove; the
+    autopilot's candidate-quota gate flips per-row slices — both without
+    retracing).
     """
     x = x_ref[...].astype(jnp.float32)              # (BB, d)
     a = a_ref[...].astype(jnp.float32)              # (K_pad, d)
     th = th_ref[...].astype(jnp.float32)            # (2, d)
     tilt = tilt_ref[...].astype(jnp.float32)        # (K_pad,)
-    mask = mask_ref[...]                            # (K_pad,) int32
+    mask = mask_ref[...]                            # (BB, K_pad) int32
     den = jax.lax.dot_general(x * x, a * a, (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.float32)
     den = jnp.sqrt(jnp.maximum(den, 1e-24))         # (BB, K_pad)
     cols = jax.lax.broadcasted_iota(jnp.int32, den.shape, 1)
-    valid = (cols < k_valid) & (mask[None, :] > 0)
+    valid = (cols < k_valid) & (mask > 0)
 
     def scores(j):
         num = jax.lax.dot_general(x * th[j][None, :], a,
@@ -165,10 +183,12 @@ def dueling_select(x: jax.Array, a: jax.Array, thetas: jax.Array, *,
     """Route a batch: argmax_k of both samples' (cost-tilted) scores.
 
     x: (B,d); a: (K,d); thetas: (2,d); tilt: (K,) score penalty or None;
-    mask: (K,) bool arm-activity mask or None (None == all arms active —
-    dynamic model pools pass their ``active`` mask so retired / not-yet-
-    arrived arms can never win the argmax; with a single surviving active
-    arm a ``distinct`` pair degenerates to (k, k)).
+    mask: arm-activity mask or None (None == all arms active). A (K,) bool
+    mask applies to every query (dynamic model pools pass their ``active``
+    mask so retired / not-yet-arrived arms can never win the argmax); a
+    (B,K) bool mask restricts arms *per query* (the autopilot's candidate
+    traffic quota gates candidate columns row by row). With a single
+    surviving arm a ``distinct`` pair degenerates to (k, k).
     Returns (a1, a2) int32 arrays of shape (B,).
     """
     interpret = _resolve_interpret(interpret)
@@ -177,12 +197,13 @@ def dueling_select(x: jax.Array, a: jax.Array, thetas: jax.Array, *,
     assert thetas.shape[0] == 2, "dueling_select pairs exactly two thetas"
     if tilt is None:
         tilt = jnp.zeros((k,), jnp.float32)
-    mask_i = jnp.ones((k,), jnp.int32) if mask is None \
-        else mask.astype(jnp.int32)
+    mask_i = jnp.ones((1, k), jnp.int32) if mask is None \
+        else jnp.atleast_2d(mask.astype(jnp.int32))
+    mask_i = jnp.broadcast_to(mask_i, (b, k))
     if k > MAX_K_FUSED:
         s = dueling_score(x, a, thetas, interpret=interpret)
         s = s - tilt[None, None, :]
-        s = jnp.where(mask_i[None, None, :] > 0, s, -jnp.inf)
+        s = jnp.where(mask_i[None, :, :] > 0, s, -jnp.inf)
         a1 = jnp.argmax(s[0], axis=-1).astype(jnp.int32)
         s2 = s[1]
         if distinct:
@@ -196,10 +217,11 @@ def dueling_select(x: jax.Array, a: jax.Array, thetas: jax.Array, *,
     k_pad = max(8, k)
     if b_pad != b:
         x = jnp.pad(x, ((0, b_pad - b), (0, 0)))
+        mask_i = jnp.pad(mask_i, ((0, b_pad - b), (0, 0)))
     if k_pad != k:
         a = jnp.pad(a, ((0, k_pad - k), (0, 0)))
         tilt = jnp.pad(tilt, (0, k_pad - k))
-        mask_i = jnp.pad(mask_i, (0, k_pad - k))
+        mask_i = jnp.pad(mask_i, ((0, 0), (0, k_pad - k)))
 
     a1, a2 = pl.pallas_call(
         functools.partial(_select_kernel, k_valid=k, distinct=distinct),
@@ -209,7 +231,7 @@ def dueling_select(x: jax.Array, a: jax.Array, thetas: jax.Array, *,
             pl.BlockSpec((k_pad, d), lambda bi: (0, 0)),
             pl.BlockSpec((2, d), lambda bi: (0, 0)),
             pl.BlockSpec((k_pad,), lambda bi: (0,)),
-            pl.BlockSpec((k_pad,), lambda bi: (0,)),
+            pl.BlockSpec((bb, k_pad), lambda bi: (bi, 0)),
         ],
         out_specs=[pl.BlockSpec((bb,), lambda bi: (bi,)),
                    pl.BlockSpec((bb,), lambda bi: (bi,))],

@@ -8,6 +8,8 @@ latent skill profile, and the posterior adapts online.
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --rounds 40 --batch 8
     PYTHONPATH=src python -m repro.launch.serve --mesh 4,2 --batch 8
+    PYTHONPATH=src python -m repro.launch.serve --autopilot --budget 0.5 \
+        --pool-schedule "+arctic-480b@5"
 
 ``--mesh data,model`` serves through the mesh-sharded RouterService: act is
 shard_map-partitioned over the batch, the pending ring and replay update
@@ -138,6 +140,16 @@ def main():
                          "round R, '-K@R' retires slot K — e.g. "
                          "'+arctic-480b@5,-0@12'. Enables k_max = "
                          "len(pool) + #adds")
+    ap.add_argument("--autopilot", action="store_true",
+                    help="closed-loop pool management: posterior-dominance "
+                         "auto-retirement, arrivals enter as quota-capped "
+                         "A/B candidates, cost governor (see --budget); "
+                         "implies a dynamic pool")
+    ap.add_argument("--budget", type=float, default=None, metavar="COST",
+                    help="autopilot cost governor target: mean realized "
+                         "duel cost ($/1k tok) to hold via the lambda tilt")
+    ap.add_argument("--autopilot-every", type=int, default=4,
+                    help="rounds between autopilot control ticks")
     args = ap.parse_args()
 
     events = []
@@ -179,7 +191,13 @@ def main():
         ks[0], pool_names + arrival_names, n_cats, emb_dim)
     pool = all_entries[:len(pool_names)]
     arrivals = dict(zip(arrival_names, all_entries[len(pool_names):]))
-    k_max = len(pool_names) + len(arrival_names) if events else None
+    k_max = len(pool_names) + len(arrival_names) \
+        if (events or args.autopilot) else None
+    ap_cfg = None
+    if args.autopilot:
+        from repro.autopilot import AutopilotConfig
+        ap_cfg = AutopilotConfig(every=args.autopilot_every,
+                                 budget=args.budget)
 
     enc_cfg = EncoderConfig(d_model=emb_dim, n_layers=2, n_heads=4, d_ff=256,
                             max_len=32)
@@ -195,7 +213,8 @@ def main():
                                                 args.policy],
                                             feedback_expiry=args.feedback_expiry,
                                             stale_half_life=args.stale_half_life,
-                                            k_max=k_max),
+                                            k_max=k_max,
+                                            autopilot=ap_cfg),
                         mesh=mesh)
 
     # reduced candidate models (actual generation path)
@@ -280,14 +299,30 @@ def main():
         reg = jnp.mean(best - 0.5 * (utils[jnp.arange(args.batch), a1]
                                      + utils[jnp.arange(args.batch), a2]))
         regrets.append(float(reg))
+        ap_note = ""
+        if args.autopilot:
+            st = svc.autopilot_status()
+            ap_note = (f" lam={st['lambda']:.3f} "
+                       f"cost_ema={st['cost_ema']:.3f} "
+                       f"active={int(st['active'].sum())}"
+                       f"/{len(st['active'])} "
+                       f"cand={int(st['candidate'].sum())}")
         print(f"[serve] round {r}: batch-regret={regrets[-1]:.4f} "
-              f"cost=${svc.spend(a1):.3f} pending={svc.pending_count()} "
-              f"({time.time()-t0:.1f}s)")
+              f"cost=${svc.spend(a1):.3f} pending={svc.pending_count()}"
+              f"{ap_note} ({time.time()-t0:.1f}s)")
     early = np.mean(regrets[:max(args.rounds // 4, 1)])
     late = np.mean(regrets[-max(args.rounds // 4, 1):])
     print(f"[serve] regret early={early:.4f} late={late:.4f} "
           f"(adaptive: {'yes' if late < early else 'no'}) "
           f"unresolved={svc.pending_count()}")
+    if args.autopilot:
+        st = svc.autopilot_status()
+        names = [p.name if p is not None else "-" for p in svc.pool]
+        alive = [n for n, a in zip(names, st["active"]) if a]
+        cands = [n for n, c in zip(names, st["candidate"]) if c]
+        print(f"[serve] autopilot: lam={st['lambda']:.3f} "
+              f"cost_ema={st['cost_ema']:.3f} active={alive} "
+              f"candidates={cands}")
 
 
 if __name__ == "__main__":

@@ -42,6 +42,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import autopilot as ap
 from repro.core import fgts
 from repro.core import model_pool as mp
 from repro.core.policy import (RoutingPolicy, fgts_policy, staleness_weight,
@@ -87,6 +88,14 @@ class RouterServiceConfig:
     feedback_capacity: int = 1024  # max in-flight duels (ring: oldest expire)
     feedback_expiry: Optional[int] = None   # max age in ticks; None = never
     stale_half_life: Optional[float] = None  # age-discount stale votes
+    # -- pool autopilot -----------------------------------------------------
+    # Closed-loop population management (requires k_max): the policy is
+    # wrapped with repro.autopilot — posterior-dominance auto-retirement,
+    # arrivals enter as quota-capped A/B candidates, and a cost-governor
+    # lambda holds the realized duel cost at the configured budget. The
+    # controller runs inside the jitted act (control ticks compile nothing
+    # new); its state replicates with the policy state under a mesh.
+    autopilot: Optional[ap.AutopilotConfig] = None
 
 
 class RouterService:
@@ -136,13 +145,21 @@ class RouterService:
             self.policy = fgts_policy(arms, cfg.fgts, costs=self.costs,
                                       cost_tilt=cfg.cost_tilt,
                                       use_kernel=use_kernel)
+        if cfg.autopilot is not None:
+            if not self.dynamic:
+                raise ValueError(
+                    "autopilot manages pool membership: construct the "
+                    "service with RouterServiceConfig(k_max=...) so the "
+                    "policy carries a ModelPool it can retire into")
+            self.policy = ap.wrap(self.policy, cfg.autopilot,
+                                  use_kernel=use_kernel)
         self._staleness_wrapped = (cfg.stale_half_life is not None
                                    and self.policy.update_delayed is None)
         if self._staleness_wrapped:
             self.policy = with_staleness(self.policy, cfg.stale_half_life)
         self._key = jax.random.PRNGKey(cfg.seed)
         self.state = self.policy.init(self._next_key())
-        if self.dynamic and not isinstance(self.state, mp.PooledState):
+        if self.dynamic and not mp.is_pooled(self.state):
             raise ValueError(
                 f"policy '{self.policy.name}' ignored the ModelPool: a "
                 f"dynamic service needs a pool-backed policy (state must "
@@ -189,6 +206,24 @@ class RouterService:
         else:
             masked_update = None
 
+        def seed_fn(fn):
+            """Seeding program for offline->online replay. Under an
+            autopilot the candidate flags are blanked around the fold:
+            synthetic offline duels (e.g. ``warm_start_duels`` pairing a
+            newcomer against incumbents mid-A/B) must shape the posterior
+            only — never a live candidate's win/duel tallies."""
+            if cfg.autopilot is None:
+                return fn
+
+            def seeded(state, *args):
+                ctrl = state.ctrl
+                blank = state._replace(ctrl=ctrl._replace(
+                    candidate=jnp.zeros_like(ctrl.candidate)))
+                out = fn(blank, *args)
+                return out._replace(ctrl=out.ctrl._replace(
+                    candidate=ctrl.candidate))
+            return seeded
+
         if mesh is None:
             self._n_shards = 1
             self._act = jax.jit(self.policy.act)
@@ -207,9 +242,15 @@ class RouterService:
                 self._pool_retire = jax.jit(pool_retire)
                 # offline->online seeding folds replay duels through the
                 # policy's shape-stable masked update when it has one
-                self._update_seed = (
-                    self._update_masked if self._update_masked is not None
-                    else self._update)
+                if cfg.autopilot is not None:
+                    self._update_seed = jax.jit(seed_fn(
+                        masked_update if masked_update is not None
+                        else self.policy.update))
+                else:
+                    self._update_seed = (
+                        self._update_masked
+                        if self._update_masked is not None
+                        else self._update)
             return
 
         self._n_shards = rr.n_batch_shards(mesh)
@@ -230,8 +271,11 @@ class RouterService:
         # partitionable threefry instead: per-row randomness then comes out
         # decorrelated across shards and invariant to the mesh size (the
         # default threefry lowering is NOT sharding-invariant).
+        # the autopilot's quota gate is a *per-row* uniform draw, so its act
+        # takes the GSPMD path by default like factory policies (shard_map
+        # with a replicated key would repeat the same gate on every shard)
         use_sm = cfg.act_shard_map if cfg.act_shard_map is not None \
-            else cfg.policy_factory is None
+            else (cfg.policy_factory is None and cfg.autopilot is None)
         if use_sm:
             act = shard_map(self.policy.act, mesh=mesh,
                             in_specs=(P(), P(), rr.query_batch_spec(mesh)),
@@ -285,8 +329,12 @@ class RouterService:
             # (the state stays meshed), masked path first
             if masked_update is not None:
                 self._update_seed = jax.jit(
-                    masked_update,
+                    seed_fn(masked_update),
                     in_shardings=(rep,) * 7, out_shardings=rep)
+            elif cfg.autopilot is not None:
+                self._update_seed = jax.jit(
+                    seed_fn(self.policy.update),
+                    in_shardings=(rep,) * 5, out_shardings=rep)
             else:
                 self._update_seed = self._update_compact
         # replicate / shard the live buffers onto the mesh
@@ -452,6 +500,33 @@ class RouterService:
     def active_mask(self) -> np.ndarray:
         return np.asarray(jax.device_get(self.model_pool().active))
 
+    # -- pool autopilot readouts (requires cfg.autopilot) --------------------
+
+    def controller_state(self) -> "ap.ControllerState":
+        """The live autopilot controller state (device pytree)."""
+        if self.cfg.autopilot is None:
+            raise RuntimeError(
+                "no autopilot: construct the service with "
+                "RouterServiceConfig(autopilot=AutopilotConfig(...))")
+        return self.state.ctrl
+
+    def autopilot_status(self) -> dict:
+        """Host snapshot of the control loops: governor lambda, realized
+        cost EMA, candidate slots and their duel tallies, dominance
+        streaks. Pure observability — reading it never touches the jitted
+        programs."""
+        ctrl = jax.device_get(self.controller_state())
+        return {
+            "lambda": float(ctrl.lam),
+            "cost_ema": float(ctrl.cost_ema),
+            "tick": int(ctrl.tick),
+            "active": self.active_mask(),
+            "candidate": np.asarray(ctrl.candidate),
+            "cand_wins": np.asarray(ctrl.cand_wins),
+            "cand_duels": np.asarray(ctrl.cand_duels),
+            "dominated_ticks": np.asarray(ctrl.dominated_ticks),
+        }
+
     def add_model(self, entry: PoolEntry, replay=None) -> int:
         """Hot-add a model into the first free slot; returns the slot.
 
@@ -462,6 +537,13 @@ class RouterService:
         the policy's shape-stable masked update to pre-shape the posterior
         before the arm takes live traffic. The add itself is one jitted
         row-scatter + mask flip — zero new act/update compilations.
+
+        Under an autopilot (``cfg.autopilot``) the arm enters as an A/B
+        *candidate*: the next act registers the arrival, caps its traffic
+        at the configured quota, and promotes or rolls it back on its duel
+        record — seeded replay duels fold into the posterior but do not
+        count toward promotion (the arm is not yet a candidate while they
+        replay).
 
         Never-used slots are preferred: reusing a retired arm's slot would
         hand the newcomer that arm's replay-ring history and per-slot

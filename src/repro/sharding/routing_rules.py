@@ -71,7 +71,11 @@ def policy_state_spec(mesh) -> P:
     and inherit this replication: the (K_max, d) embedding table, costs and
     active mask are tiny next to the query stream, and every device needs
     the full arm set to score its batch shard — so a hot add/retire/swap is
-    a replicated data update with no resharding."""
+    a replicated data update with no resharding. The pool autopilot's
+    controller state (``autopilot.ControllerState``: candidate flags, duel
+    tallies, governor lambda — all (K_max,)-or-scalar) wraps the pooled
+    state (``autopilot.AutopilotState``) and replicates under the same
+    prefix, so control ticks are replicated data updates too."""
     return P()
 
 

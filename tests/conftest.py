@@ -49,16 +49,30 @@ except ImportError:
 
     def _given(*strats):
         def deco(fn):
-            # NB: no functools.wraps — pytest must see the zero-arg
-            # signature of the wrapper, not fn's strategy parameters.
+            import inspect
+
+            # Like real hypothesis with positional strategies: the LAST
+            # len(strats) parameters are strategy-filled; any leading
+            # parameters stay visible to pytest (via __signature__) so
+            # ``@given`` composes with ``@pytest.mark.parametrize`` (and
+            # fixtures) exactly as the real package does.
+            params = list(inspect.signature(fn).parameters.values())
+            targets = [p.name for p in params[len(params) - len(strats):]]
+            lead = params[:len(params) - len(strats)]
+
             def wrapper(**kw):
                 rng = _random.Random(1234)
                 n = getattr(wrapper, "_max_examples",
                             getattr(fn, "_max_examples", 20))
                 for _ in range(n):
-                    fn(*(s.sample(rng) for s in strats), **kw)
+                    fn(**kw, **{t: s.sample(rng)
+                                for t, s in zip(targets, strats)})
             wrapper.__name__ = fn.__name__
             wrapper.__doc__ = fn.__doc__
+            wrapper.__signature__ = inspect.Signature(lead)
+            # carry pytest marks applied below @given in the decorator
+            # stack (e.g. @given on top of @pytest.mark.parametrize)
+            wrapper.pytestmark = list(getattr(fn, "pytestmark", []))
             return wrapper
         return deco
 

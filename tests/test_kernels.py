@@ -186,6 +186,53 @@ def test_dueling_select_masked_parity(b, k, d, distinct, pattern):
         assert (np.asarray(a1k) == 2).all() and (np.asarray(a2k) == 2).all()
 
 
+@pytest.mark.parametrize("b,k,d,distinct", [
+    (32, 8, 64, True), (7, 5, 32, False),
+])
+def test_dueling_select_per_row_mask_parity(b, k, d, distinct):
+    """(B, K) per-row masks (the autopilot's candidate-quota gate): kernel
+    == XLA reference row by row, rows gated shut for an arm never emit it,
+    and a broadcast (B, K) copy of a (K,) mask routes identically to the
+    1-D mask."""
+    from repro.core.policy import select_pair
+    from repro.kernels.dueling_score import dueling_select
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (b, d))
+    a = jax.random.normal(ks[1], (k, d))
+    th = jax.random.normal(ks[2], (2, d))
+    # per-row gate: even rows may not see arm 1, odd rows see everything
+    row_mask = jnp.ones((b, k), bool).at[::2, 1].set(False)
+    a1k, a2k = dueling_select(x, a, th, mask=row_mask, distinct=distinct)
+    a1x, a2x = select_pair(x, a, th[0], th[1], mask=row_mask,
+                           distinct=distinct, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(a1k), np.asarray(a1x))
+    np.testing.assert_array_equal(np.asarray(a2k), np.asarray(a2x))
+    assert (np.asarray(a1k)[::2] != 1).all()
+    assert (np.asarray(a2k)[::2] != 1).all()
+    col = jnp.arange(k) % 2 == 0
+    a1b, a2b = dueling_select(x, a, th,
+                              mask=jnp.broadcast_to(col[None, :], (b, k)),
+                              distinct=distinct)
+    a1c, a2c = dueling_select(x, a, th, mask=col, distinct=distinct)
+    np.testing.assert_array_equal(np.asarray(a1b), np.asarray(a1c))
+    np.testing.assert_array_equal(np.asarray(a2b), np.asarray(a2c))
+
+
+@pytest.mark.parametrize("k,c,d", [(4, 2, 32), (11, 6, 64), (40, 3, 128)])
+def test_posterior_scores_matches_normalized_dot(k, c, d):
+    """The all-ones-query reduction of the score kernel == theta·a/||a||
+    (the autopilot dominance matrix is built on this; see also the
+    dominance parity tests in test_autopilot.py)."""
+    from repro.autopilot import posterior_scores_ref
+    from repro.kernels.dueling_score import posterior_scores
+    ks = jax.random.split(KEY, 2)
+    a = jax.random.normal(ks[0], (k, d))
+    th = jax.random.normal(ks[1], (c, d))
+    np.testing.assert_allclose(np.asarray(posterior_scores(a, th)),
+                               np.asarray(posterior_scores_ref(a, th)),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_interpret_defaults_to_backend(monkeypatch):
     """interpret=None resolves off the backend; env var overrides both ways."""
     from repro.kernels import dueling_score as ds
