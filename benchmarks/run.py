@@ -21,7 +21,12 @@ results/bench.csv). Mapping to the paper:
                                     auto-retirement + cost governor vs
                                     static pool vs manual schedule
     kernels   bench_kernels         Pallas-vs-oracle numerics + timing
+    sgld      bench_sgld            fused SGLD posterior-update kernel vs
+                                    the XLA paths (roofline-backed)
     roofline  roofline              EXPERIMENTS.md §Roofline source
+
+Benches that emit paired ``<shape>:kernel`` / ``<shape>:xla`` rows get a
+one-line kernel-vs-XLA speedup summary (median over shapes) after the run.
 """
 from __future__ import annotations
 
@@ -44,10 +49,12 @@ def main() -> None:
     from . import (bench_autopilot, bench_baselines, bench_delayed,
                    bench_dynamic_pool, bench_generalization, bench_kernels,
                    bench_mixinstruct, bench_mmlu_naive, bench_routerbench,
-                   bench_scores_table, bench_sharded_serving, roofline)
+                   bench_scores_table, bench_sgld, bench_sharded_serving,
+                   roofline)
     benches = {
         "tab1": bench_scores_table.run,
         "kernels": bench_kernels.run,
+        "sgld": bench_sgld.run,
         "fig1": bench_mmlu_naive.run,
         "fig2": bench_routerbench.run,
         "fig2cd": bench_generalization.run,
@@ -78,8 +85,31 @@ def main() -> None:
     with open(os.path.join(RESULTS, "bench.csv"), "w") as f:
         f.write("name,us_per_call,derived\n")
         f.write("\n".join(all_rows) + "\n")
+    _speedup_summary(all_rows)
     if failures:
         raise SystemExit(f"failed benches: {failures}")
+
+
+def _speedup_summary(all_rows: list) -> None:
+    """One line per bench with paired <shape>:kernel / <shape>:xla rows:
+    the median (and range of) kernel-vs-XLA per-shape speedup."""
+    times: dict = {}
+    for row in all_rows:
+        name, us = row.split(",")[:2]
+        base, _, variant = name.rpartition(":")
+        if variant in ("kernel", "xla") and base:
+            times.setdefault(base, {})[variant] = float(us)
+    by_bench: dict = {}
+    for base, t in times.items():
+        if "kernel" in t and "xla" in t and t["kernel"] > 0:
+            by_bench.setdefault(base.split("/")[0], []).append(
+                t["xla"] / t["kernel"])
+    for bench, ratios in sorted(by_bench.items()):
+        ratios.sort()
+        med = ratios[len(ratios) // 2]
+        print(f"# speedup {bench}: kernel {med:.2f}x vs xla "
+              f"(median of {len(ratios)} shapes, "
+              f"min {ratios[0]:.2f}x, max {ratios[-1]:.2f}x)")
 
 
 if __name__ == "__main__":

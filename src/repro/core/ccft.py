@@ -133,3 +133,15 @@ def scores_all(x: jax.Array, a_all: jax.Array, theta: jax.Array) -> jax.Array:
     num = a_all @ (x * theta)
     den = jnp.sqrt(jnp.maximum((a_all * a_all) @ (x * x), 1e-24))
     return num / den
+
+
+def scores_batch(x: jax.Array, a_all: jax.Array,
+                 theta: jax.Array) -> jax.Array:
+    """Batched ``scores_all``: x (m, d) against a_all (K, d) -> (m, K).
+
+    Two matmuls total — (x*theta) @ A^T over sqrt(x^2 @ (A^2)^T) — instead
+    of the per-row vmap that materializes (m, K, d) Hadamard features.
+    """
+    num = (x * theta[None, :]) @ a_all.T
+    den = jnp.sqrt(jnp.maximum((x * x) @ (a_all * a_all).T, 1e-24))
+    return num / den

@@ -130,21 +130,35 @@ def mixed_potential(theta: jax.Array, idx: jax.Array, h: MixedHistory,
     Duel rows use the paper's eq. 2 preference term (feel-good omitted for
     the mixed estimator — it needs the opponent arm, undefined for clicks);
     click rows use the Bernoulli term. One theta serves both streams.
+
+    Like the FGTS potential, the data term dispatches on
+    ``cfg.sgld_backend``: the fused kernel / its pure-XLA lowering carry
+    the hand-VJP two-matmul path (kernels/sgld_update), "autodiff" keeps
+    the legacy phi-based jax.grad reference.
     """
+    from repro.kernels.sgld_update import (resolve_sgld_backend,
+                                           sgld_mixed_potential)
     xb, a1b, a2b = h.x[idx], h.a1[idx], h.a2[idx]
     yb, duelb = h.y[idx], h.is_duel[idx]
-    phi1 = phi(xb, a_emb[a1b])
-    phi2 = phi(xb, a_emb[a2b])
-    duel_term = cfg.eta * logistic_loss(yb * ((phi1 - phi2) @ theta))
-    s1 = phi1 @ theta
-    click_term = cfg.eta * jnp.where(yb > 0.5, logistic_loss(s1),
-                                     logistic_loss(-s1))
-    terms = jnp.where(duelb, duel_term, click_term)
     valid = (idx < h.t).astype(jnp.float32)
     n_valid = jnp.maximum(valid.sum(), 1.0)
     scale = h.t.astype(jnp.float32) / n_valid
+    backend = resolve_sgld_backend(cfg.sgld_backend)
+    if backend == "autodiff":
+        phi1 = phi(xb, a_emb[a1b])
+        phi2 = phi(xb, a_emb[a2b])
+        duel_term = cfg.eta * logistic_loss(yb * ((phi1 - phi2) @ theta))
+        s1 = phi1 @ theta
+        click_term = cfg.eta * jnp.where(yb > 0.5, logistic_loss(s1),
+                                         logistic_loss(-s1))
+        terms = jnp.where(duelb, duel_term, click_term)
+        data = jnp.sum(terms * valid)
+    else:
+        data = sgld_mixed_potential(theta, xb, a1b, a2b, yb,
+                                    duelb.astype(jnp.float32), valid, a_emb,
+                                    eta=cfg.eta, backend=backend)
     prior = jnp.sum(theta * theta) / (2.0 * cfg.prior_var)
-    return scale * jnp.sum(terms * valid) + prior
+    return scale * data + prior
 
 
 def mixed_sgld_sample(key: jax.Array, theta0: jax.Array, h: MixedHistory,

@@ -25,9 +25,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.dueling_score import mask_fallback_pair
+from repro.kernels.sgld_update import resolve_sgld_backend, sgld_potential
+from repro.optim.sgld import decayed_step_size
 
 from .btl import logistic_loss
-from .ccft import phi, scores_all
+from .ccft import scores_all, scores_batch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +53,15 @@ class FGTSConfig:
     force_distinct: bool = False     # force a2 != a1 at selection
     n_chains: int = 1                # parallel SGLD chains per theta sample
                                      # (vmapped; warm-started across rounds)
+    # SGLD gradient backend: "fused" runs the minibatch potential through
+    # the hand-VJP Pallas kernel (kernels/sgld_update), "xla" forces that
+    # kernel's pure-XLA interpret lowering (same program under interpret
+    # mode — bit-identical by construction, and GSPMD-partitionable),
+    # "autodiff" the legacy jax.grad reference over likelihood_batch.
+    # "auto" (default) picks fused on accelerator backends and xla on
+    # host, overridable at trace time via the REPRO_SGLD_BACKEND env var —
+    # flipping the backend never retraces compiled serving programs.
+    sgld_backend: str = "auto"
 
 
 class FGTSState(NamedTuple):
@@ -86,33 +97,49 @@ def likelihood_batch(theta: jax.Array, x: jax.Array, a1: jax.Array,
     ``arm_mask`` (K,) bool restricts the feel-good max to *active* arms
     (dynamic pools: the optimism target is the best arm available now, not
     a retired one); None keeps the static all-arms max.
+
+    Everything reads off one batched two-matmul score table (the Hadamard
+    identity, see ``ccft.scores_batch``): the duelled pair's scores are
+    gathers of s_all, so no (m, K, d) feature tensor is ever built — this
+    is the XLA reference the fused SGLD kernel is parity-tested against.
     """
-    phi1 = phi(x, a_emb[a1])                             # (m, dim)
-    phi2 = phi(x, a_emb[a2])
-    z = y * ((phi1 - phi2) @ theta)
+    s_all = scores_batch(x, a_emb, theta)                # (m, K)
+    s1 = jnp.take_along_axis(s_all, a1[:, None], axis=1)[:, 0]
+    s2 = jnp.take_along_axis(s_all, a2[:, None], axis=1)[:, 0]
+    z = y * (s1 - s2)
     pref = cfg.eta * logistic_loss(z)                    # (m,)
-    s_all = jax.vmap(lambda xi: scores_all(xi, a_emb, theta))(x)   # (m, K)
     if arm_mask is not None:
         s_all = jnp.where(arm_mask[None, :], s_all, -jnp.inf)
-    opp = phi2 if j == 1 else phi1                       # a^{3-j} features
-    s_opp = opp @ theta                                  # (m,)
+    s_opp = s2 if j == 1 else s1                         # a^{3-j} score
     feelgood = jnp.max(s_all, axis=-1) - s_opp
     return pref - cfg.mu * feelgood                      # (m,)
 
 
 def _potential(theta, idx, state: FGTSState, a_emb, j, cfg: FGTSConfig,
                arm_mask=None):
-    """U(theta) = (T/m) * sum_minibatch L^j + ||theta||^2 / (2 prior_var)."""
-    m = idx.shape[0]
-    terms = likelihood_batch(theta, state.x[idx], state.a1[idx],
-                             state.a2[idx], state.y[idx], a_emb, j, cfg,
-                             arm_mask=arm_mask)
+    """U(theta) = (T/m) * sum_minibatch L^j + ||theta||^2 / (2 prior_var).
+
+    The data term dispatches on ``cfg.sgld_backend``: the fused Pallas
+    kernel / its pure-XLA lowering carry a hand-derived custom VJP (so
+    jax.grad of this potential never materializes (m, K, d)); "autodiff"
+    is the legacy jax.grad-through-likelihood_batch reference.
+    """
     valid = (idx < state.t).astype(jnp.float32)
     n_valid = jnp.maximum(jnp.sum(valid), 1.0)
     scale = state.t.astype(jnp.float32) / n_valid
-    data_term = scale * jnp.sum(terms * valid)
+    backend = resolve_sgld_backend(cfg.sgld_backend)
+    if backend == "autodiff":
+        terms = likelihood_batch(theta, state.x[idx], state.a1[idx],
+                                 state.a2[idx], state.y[idx], a_emb, j, cfg,
+                                 arm_mask=arm_mask)
+        data = jnp.sum(terms * valid)
+    else:
+        data = sgld_potential(theta, state.x[idx], state.a1[idx],
+                              state.a2[idx], state.y[idx], valid, a_emb,
+                              arm_mask, j=j, eta=cfg.eta, mu=cfg.mu,
+                              backend=backend)
     prior = jnp.sum(theta * theta) / (2.0 * cfg.prior_var)
-    return data_term + prior
+    return scale * data + prior
 
 
 def sgld_loop(key: jax.Array, theta0: jax.Array, grad_fn, n_obs: jax.Array,
@@ -150,8 +177,8 @@ def sgld_sample(key: jax.Array, theta0: jax.Array, state: FGTSState,
     ``arm_mask`` restricts the feel-good max to active arms."""
     grad_fn = jax.grad(_potential)
     t = state.t.astype(jnp.float32)
-    eps = cfg.sgld_eps * (cfg.sgld_decay_t0
-                          / (cfg.sgld_decay_t0 + t)) ** cfg.sgld_decay_pow
+    eps = decayed_step_size(cfg.sgld_eps, t, cfg.sgld_decay_t0,
+                            cfg.sgld_decay_pow)
     return sgld_loop(key, theta0,
                      lambda th, idx: grad_fn(th, idx, state, a_emb, j, cfg,
                                              arm_mask),

@@ -176,9 +176,12 @@ def fgts_policy(a_emb: jax.Array | ModelPool, cfg: fgts.FGTSConfig, *,
 
     Each ``act`` runs cfg.n_chains vmapped SGLD chains per posterior sample,
     warm-started from the previous round's chains (state.theta1/theta2 are
-    (C, dim)); the chain mean is the round's theta^j. Selection is the
-    dueling_score kernel's batched argmax epilogue. ``update`` is the
-    single-scatter batched ring-buffer write.
+    (C, dim)); the chain mean is the round's theta^j. The chains' gradient
+    evaluations route through the fused SGLD potential kernel (or its
+    pure-XLA lowering / the autodiff reference) per ``cfg.sgld_backend`` —
+    see ``kernels/sgld_update``. Selection is the dueling_score kernel's batched
+    argmax epilogue. ``update`` is the single-scatter batched ring-buffer
+    write.
 
     Passing a ``ModelPool`` as ``a_emb`` makes the arm set dynamic: the
     pool rides inside the policy state (``PooledState``), selection and the

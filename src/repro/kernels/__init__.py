@@ -1,5 +1,5 @@
 from .ops import (dueling_score_op, dueling_select_op, flash_attention_op,
-                  rglru_scan_op, ssd_scan_op)
+                  rglru_scan_op, sgld_potential_op, ssd_scan_op)
 
 __all__ = ["dueling_score_op", "dueling_select_op", "flash_attention_op",
-           "rglru_scan_op", "ssd_scan_op"]
+           "rglru_scan_op", "sgld_potential_op", "ssd_scan_op"]

@@ -15,6 +15,7 @@ import jax
 from .dueling_score import default_interpret, dueling_score, dueling_select
 from .flash_attention import flash_attention
 from .rglru_scan import rglru_scan
+from .sgld_update import sgld_potential
 from .ssd_scan import ssd_scan
 
 
@@ -43,3 +44,11 @@ def dueling_score_op(x, a, thetas):
 def dueling_select_op(x, a, thetas, tilt=None, *, distinct=False):
     """Batched route selection: (a1, a2) = argmax pair of tilted scores."""
     return dueling_select(x, a, thetas, tilt=tilt, distinct=distinct)
+
+
+@functools.partial(jax.jit, static_argnames=("j", "eta", "mu", "backend"))
+def sgld_potential_op(theta, x, a1, a2, y, valid, a_emb, arm_mask=None, *,
+                      j=1, eta=1.0, mu=0.2, backend="fused"):
+    """Fused FGTS minibatch potential (custom-VJP gradient w.r.t. theta)."""
+    return sgld_potential(theta, x, a1, a2, y, valid, a_emb, arm_mask,
+                          j=j, eta=eta, mu=mu, backend=backend)

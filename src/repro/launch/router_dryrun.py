@@ -144,8 +144,13 @@ def run(global_batch: int, horizon: int = 65_536, out: str | None = None,
             rr.route_step_specs(mesh), mesh, "route_step"))
 
         # --- update_step (parallel SGLD chains, sharded replay)
+        # sgld_backend="xla": like select_pair(use_kernel=False) above, the
+        # AOT GSPMD lowering cannot partition a compiled Pallas call — the
+        # kernel's pure-XLA lowering is the same math with the same
+        # hand-derived VJP
         cfg = fgts.FGTSConfig(n_models=K_MODELS, dim=DIM, horizon=horizon,
-                              sgld_steps=20, sgld_minibatch=256)
+                              sgld_steps=20, sgld_minibatch=256,
+                              sgld_backend="xla")
         n_chains = 16
         upd = make_update_step(cfg, n_chains)
         args = (sds((2,), jnp.uint32), th,

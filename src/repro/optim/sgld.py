@@ -11,6 +11,16 @@ import jax
 import jax.numpy as jnp
 
 
+def decayed_step_size(eps0: float, t: jax.Array, t0: float,
+                      power: float) -> jax.Array:
+    """Welling & Teh's polynomially decaying step: eps0 * (t0/(t0+t))^power.
+
+    power=0 keeps steps constant; the FGTS sampler feeds the round count t
+    so the chain anneals as evidence accumulates.
+    """
+    return eps0 * (t0 / (t0 + t)) ** power
+
+
 def sgld_step(theta, grad_u, eps: jax.Array, key: jax.Array):
     """One SGLD step on a pytree. grad_u = ∇ of the potential (−log posterior)."""
     leaves, treedef = jax.tree.flatten(theta)

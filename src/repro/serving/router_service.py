@@ -127,6 +127,13 @@ class RouterService:
         use_kernel = cfg.use_kernel if cfg.use_kernel is not None \
             else mesh is None
         cfg = dataclasses.replace(cfg, use_kernel=use_kernel)
+        if mesh is not None and cfg.fgts.sgld_backend == "auto":
+            # like use_kernel: a compiled Pallas call cannot be partitioned
+            # over the mesh, so auto resolves the SGLD gradient to the fused
+            # kernel's pure-XLA lowering (bit-identical under interpret
+            # mode) for the GSPMD programs
+            cfg = dataclasses.replace(
+                cfg, fgts=dataclasses.replace(cfg.fgts, sgld_backend="xla"))
         self.cfg = cfg
         self.a_emb = jnp.asarray(np.stack([p.embedding for p in pool]))
         entry_costs = [p.cost_per_1k_tokens for p in pool]

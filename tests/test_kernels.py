@@ -218,6 +218,44 @@ def test_dueling_select_per_row_mask_parity(b, k, d, distinct):
     np.testing.assert_array_equal(np.asarray(a2b), np.asarray(a2c))
 
 
+@pytest.mark.parametrize("mask_kind", ["none", "cols", "rows"])
+@pytest.mark.parametrize("k", [1100, 2048])
+def test_dueling_select_large_k_fallback_parity(k, mask_kind):
+    """K > MAX_K_FUSED falls off the fused epilogue onto the plain-XLA
+    branch inside dueling_select: that branch must route identically to
+    select_pair(use_kernel=False) — including ragged K, cost tilt, (K,)
+    and (B, K) masks, and force-distinct — and never emit a masked arm."""
+    from repro.core.policy import select_pair
+    from repro.kernels.dueling_score import MAX_K_FUSED, dueling_select
+    assert k > MAX_K_FUSED
+    b, d = 9, 32
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (b, d))
+    a = jax.random.normal(ks[1], (k, d))
+    th = jax.random.normal(ks[2], (2, d))
+    tilt = 0.1 * jax.random.uniform(ks[3], (k,))
+    if mask_kind == "none":
+        mask = None
+    elif mask_kind == "cols":
+        mask = jnp.arange(k) % 3 != 0
+    else:
+        mask = jnp.ones((b, k), bool).at[::2, : k // 2].set(False)
+    a1k, a2k = dueling_select(x, a, th, tilt=tilt, mask=mask, distinct=True)
+    a1x, a2x = select_pair(x, a, th[0], th[1], tilt=tilt, mask=mask,
+                           distinct=True, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(a1k), np.asarray(a1x))
+    np.testing.assert_array_equal(np.asarray(a2k), np.asarray(a2x))
+    assert (np.asarray(a1k) != np.asarray(a2k)).all()
+    if mask_kind == "cols":
+        m = np.asarray(mask)
+        assert m[np.asarray(a1k)].all() and m[np.asarray(a2k)].all()
+    elif mask_kind == "rows":
+        m = np.asarray(mask)
+        rows = np.arange(b)
+        assert m[rows, np.asarray(a1k)].all()
+        assert m[rows, np.asarray(a2k)].all()
+
+
 @pytest.mark.parametrize("k,c,d", [(4, 2, 32), (11, 6, 64), (40, 3, 128)])
 def test_posterior_scores_matches_normalized_dot(k, c, d):
     """The all-ones-query reduction of the score kernel == theta·a/||a||

@@ -291,6 +291,93 @@ def test_staleness_weight_discounts_towards_uninformative():
 
 
 # ---------------------------------------------------------------------------
+# SGLD backend conformance: the fused kernel is an implementation detail
+# ---------------------------------------------------------------------------
+
+def _fgts_family(backend):
+    """Every registered policy whose update path runs SGLD, built against
+    one explicit potential backend."""
+    cfg = dataclasses.replace(CFG, sgld_backend=backend)
+    return {
+        "fgts": policy.fgts_policy(A_EMB, cfg),
+        "fgts_chains": policy.fgts_policy(
+            A_EMB, dataclasses.replace(cfg, n_chains=2)),
+        "vanilla_ts": policy.vanilla_ts_policy(A_EMB, cfg),
+        "mixed_feedback": ext.mixed_feedback_policy(A_EMB, cfg),
+        "pl_pair": ext.pl_pair_policy(A_EMB, cfg),
+        "fgts_pooled": policy.fgts_policy(POOL, cfg),
+    }
+
+
+def test_sgld_backend_is_invisible_to_policies(monkeypatch):
+    """Kernel-path vs XLA-path SGLD chains are bit-identical under
+    interpret mode for every FGTS-family policy — static, pooled, and the
+    per-row ``act_masked`` path: same keys => bitwise identical states and
+    routed arms across three act/update rounds. The fused potential is an
+    implementation detail, not an algorithm change."""
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")   # fused => interpret
+    fams = {b: _fgts_family(b) for b in ("fused", "xla")}
+    row_mask = jnp.ones((3, N_MODELS), bool).at[::2, 1].set(False)
+    for name in fams["fused"]:
+        outs = {}
+        for b, fam in fams.items():
+            pol = fam[name]
+            act = jax.jit(pol.act)
+            update = jax.jit(pol.update)
+            state = pol.init(KEY)
+            arms = []
+            for r in range(3):
+                x, _, _, y = _batch(3, 29 + r)
+                k = jax.random.fold_in(KEY, r)
+                if name == "fgts_pooled" and pol.act_masked is not None:
+                    state, a1, a2 = jax.jit(pol.act_masked)(
+                        k, state, x, row_mask,
+                        jnp.zeros((N_MODELS,), jnp.float32))
+                else:
+                    state, a1, a2 = act(k, state, x)
+                state = update(state, x, a1, a2, y)
+                arms.append((a1, a2))
+            outs[b] = (state, arms)
+        _leaves_equal(outs["fused"][0], outs["xla"][0],
+                      msg=f"{name} state")
+        for (f1, f2), (x1, x2) in zip(outs["fused"][1], outs["xla"][1]):
+            np.testing.assert_array_equal(np.asarray(f1), np.asarray(x1),
+                                          err_msg=name)
+            np.testing.assert_array_equal(np.asarray(f2), np.asarray(x2),
+                                          err_msg=name)
+
+
+def test_sgld_backend_flip_does_not_retrace_serving(monkeypatch):
+    """Flipping the SGLD backend env override mid-process must not retrace
+    any live serving program: the override is read at trace time only, so
+    ``compiled_program_counts`` stays flat while routing continues (the
+    same zero-retrace contract the dynamic-pool membership ops pin)."""
+    from repro.encoder import EncoderConfig, init_encoder
+    from repro.serving import (PoolEntry, RouterService,
+                               RouterServiceConfig)
+    monkeypatch.delenv("REPRO_SGLD_BACKEND", raising=False)
+    enc_cfg = EncoderConfig(d_model=DIM, n_layers=1, n_heads=2, d_ff=32,
+                            max_len=8)
+    entries = [PoolEntry(name=f"m{i}", arch="granite-3-2b",
+                         cost_per_1k_tokens=0.1 * (i + 1),
+                         embedding=np.random.RandomState(i).randn(DIM)
+                         .astype(np.float32)) for i in range(N_MODELS)]
+    svc = RouterService(
+        entries, init_encoder(KEY, enc_cfg), enc_cfg,
+        RouterServiceConfig(fgts=CFG, feedback_capacity=64))
+    x = jax.random.normal(KEY, (4, DIM))
+    for _ in range(2):                       # warm every program once
+        _, _, t = svc.route_batch(x)
+        svc.feedback_batch(t, jnp.ones((4,)))
+    counts = svc.compiled_program_counts()
+    for backend in ("fused", "xla", "autodiff"):
+        monkeypatch.setenv("REPRO_SGLD_BACKEND", backend)
+        _, _, t = svc.route_batch(x)
+        svc.feedback_batch(t, jnp.ones((4,)))
+        assert svc.compiled_program_counts() == counts, backend
+
+
+# ---------------------------------------------------------------------------
 # autopilot invariants over the pooled registry
 # ---------------------------------------------------------------------------
 

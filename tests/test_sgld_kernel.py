@@ -1,0 +1,348 @@
+"""Fused SGLD potential kernel vs. the reference paths.
+
+Three implementations of the FGTS minibatch potential coexist:
+
+  * ``backend="fused"``  — the Pallas kernel (Mosaic on accelerators,
+    interpret lowering elsewhere) with the hand-derived custom-VJP;
+  * ``backend="xla"``    — the kernel's interpret lowering, forced: the
+    same program in pure XLA ops, so fused-under-interpret and xla are
+    bit-identical *by construction*;
+  * ``backend="autodiff"`` — jax.grad through ``likelihood_batch``: an
+    independent implementation used as the fp32-tolerance oracle here.
+
+``old_likelihood_batch`` below is the pre-kernel implementation (explicit
+phi features, vmapped scores_all — materializes (m, K, d)) kept verbatim as
+the numerics pin for *both* the batched-identity rewrite of
+``likelihood_batch`` and the kernel.
+
+Forward values may differ from the eager references in the last ULP (XLA
+fuses the mul+dot differently inside the kernel body), hence fp32
+tolerances on potentials/gradients vs. the oracle; fused-vs-xla assertions
+are bitwise.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fgts
+from repro.core.btl import logistic_loss
+from repro.core.ccft import phi, scores_all
+from repro.kernels import sgld_update as su
+from repro.kernels.dueling_score import MAX_K_FUSED
+
+KEY = jax.random.PRNGKey(6)
+
+TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+def old_likelihood_batch(theta, x, a1, a2, y, a_emb, j, cfg, arm_mask=None):
+    """The pre-kernel likelihood (explicit phi features): the numerics pin."""
+    phi1 = phi(x, a_emb[a1])
+    phi2 = phi(x, a_emb[a2])
+    z = y * ((phi1 - phi2) @ theta)
+    pref = cfg.eta * logistic_loss(z)
+    s_all = jax.vmap(lambda xi: scores_all(xi, a_emb, theta))(x)
+    if arm_mask is not None:
+        s_all = jnp.where(arm_mask[None, :], s_all, -jnp.inf)
+    opp = phi2 if j == 1 else phi1
+    s_opp = opp @ theta
+    feelgood = jnp.max(s_all, axis=-1) - s_opp
+    return pref - cfg.mu * feelgood
+
+
+def _data(m, k, d, seed=0):
+    ks = jax.random.split(jax.random.fold_in(KEY, seed), 7)
+    x = jax.random.normal(ks[0], (m, d))
+    a1 = jax.random.randint(ks[1], (m,), 0, k)
+    off = jax.random.randint(ks[2], (m,), 1, k) if k > 1 \
+        else jnp.zeros((m,), jnp.int32)
+    a2 = (a1 + off) % k
+    y = jnp.where(jax.random.bernoulli(ks[3], 0.5, (m,)), 1.0, -1.0)
+    valid = (jnp.arange(m) < max(1, int(0.8 * m))).astype(jnp.float32)
+    a_emb = jax.random.normal(ks[4], (k, d))
+    theta = jax.random.normal(ks[5], (d,))
+    mask = jnp.arange(k) != min(1, k - 1)          # one retired arm
+    return theta, x, a1, a2, y, valid, a_emb, mask
+
+
+def _cfg(k, d, m, **kw):
+    return fgts.FGTSConfig(n_models=k, dim=d, horizon=m, eta=1.3, mu=0.27,
+                           **kw)
+
+
+# ---------------------------------------------------------------------------
+# forward + gradient parity matrix vs. both references
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("interpret", [True, None])
+@pytest.mark.parametrize("masked", [False, True])
+@pytest.mark.parametrize("j", [1, 2])
+@pytest.mark.parametrize("m,k", [(32, 8), (128, 64), (512, 256)])
+def test_potential_matches_references(m, k, j, masked, interpret):
+    """Fused forward == old likelihood == rewritten likelihood (fp32 tol),
+    and fused == xla bitwise, across the acceptance shape matrix, both
+    masked and unmasked, in forced-interpret and auto-selection modes."""
+    d = 32
+    theta, x, a1, a2, y, valid, a_emb, mask = _data(m, k, d)
+    am = mask if masked else None
+    cfg = _cfg(k, d, m)
+    ref = jnp.sum(old_likelihood_batch(theta, x, a1, a2, y, a_emb, j, cfg,
+                                       am) * valid)
+    new = jnp.sum(fgts.likelihood_batch(theta, x, a1, a2, y, a_emb, j, cfg,
+                                        am) * valid)
+    pot = functools.partial(su.sgld_potential, j=j, eta=cfg.eta, mu=cfg.mu,
+                            interpret=interpret)
+    fused = pot(theta, x, a1, a2, y, valid, a_emb, am, backend="fused")
+    xla = pot(theta, x, a1, a2, y, valid, a_emb, am, backend="xla")
+    np.testing.assert_allclose(np.asarray(new), np.asarray(ref), **TOL)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref), **TOL)
+    if interpret or jax.default_backend() == "cpu":
+        assert np.asarray(fused).tobytes() == np.asarray(xla).tobytes()
+    else:                                      # compiled Mosaic vs lowering
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(xla),
+                                   **TOL)
+
+
+@pytest.mark.parametrize("masked", [False, True])
+@pytest.mark.parametrize("j", [1, 2])
+@pytest.mark.parametrize("m,k", [(32, 8), (128, 64), (512, 256)])
+def test_custom_vjp_gradient_matches_autodiff(m, k, j, masked):
+    """The hand-derived backward == jax.grad through both likelihood
+    implementations (fp32 tol; includes tie-split feel-good argmax), and
+    fused == xla bitwise."""
+    d = 32
+    theta, x, a1, a2, y, valid, a_emb, mask = _data(m, k, d, seed=1)
+    am = mask if masked else None
+    cfg = _cfg(k, d, m)
+    g_old = jax.grad(lambda t: jnp.sum(old_likelihood_batch(
+        t, x, a1, a2, y, a_emb, j, cfg, am) * valid))(theta)
+    g_new = jax.grad(lambda t: jnp.sum(fgts.likelihood_batch(
+        t, x, a1, a2, y, a_emb, j, cfg, am) * valid))(theta)
+    grad_of = lambda b: jax.grad(lambda t: su.sgld_potential(
+        t, x, a1, a2, y, valid, a_emb, am, j=j, eta=cfg.eta, mu=cfg.mu,
+        backend=b))(theta)
+    g_fused, g_xla = grad_of("fused"), grad_of("xla")
+    np.testing.assert_allclose(np.asarray(g_new), np.asarray(g_old), **TOL)
+    np.testing.assert_allclose(np.asarray(g_fused), np.asarray(g_old),
+                               **TOL)
+    if jax.default_backend() == "cpu":
+        assert np.asarray(g_fused).tobytes() == np.asarray(g_xla).tobytes()
+    else:
+        np.testing.assert_allclose(np.asarray(g_fused), np.asarray(g_xla),
+                                   **TOL)
+
+
+def test_multi_tile_and_ragged_rows():
+    """Minibatches that don't divide the row tile (m=300 -> 3 tiles of 128
+    with 84 zero-padded rows) still match the oracle — padding can never
+    contribute (its valid mask is zero and zero rows stay finite)."""
+    m, k, d = 300, 16, 48
+    theta, x, a1, a2, y, valid, a_emb, _ = _data(m, k, d, seed=2)
+    cfg = _cfg(k, d, m)
+    ref = jnp.sum(old_likelihood_batch(theta, x, a1, a2, y, a_emb, 1, cfg)
+                  * valid)
+    g_ref = jax.grad(lambda t: jnp.sum(old_likelihood_batch(
+        t, x, a1, a2, y, a_emb, 1, cfg) * valid))(theta)
+    for b in ("fused", "xla"):
+        out = su.sgld_potential(theta, x, a1, a2, y, valid, a_emb, j=1,
+                                eta=cfg.eta, mu=cfg.mu, backend=b)
+        g = jax.grad(lambda t: su.sgld_potential(
+            t, x, a1, a2, y, valid, a_emb, j=1, eta=cfg.eta, mu=cfg.mu,
+            backend=b))(theta)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), **TOL)
+
+
+def test_vmap_over_chains_matches_loop():
+    """vmap over 8 chain thetas (the fgts_policy n_chains path): fused and
+    xla agree bitwise on CPU, and the vmapped potentials/gradients match a
+    per-chain loop."""
+    m, k, d = 100, 11, 48
+    theta, x, a1, a2, y, valid, a_emb, mask = _data(m, k, d, seed=3)
+    theta8 = jax.random.normal(jax.random.fold_in(KEY, 8), (8, d))
+    f = lambda t, b: su.sgld_potential(t, x, a1, a2, y, valid, a_emb, mask,
+                                       j=1, eta=1.3, mu=0.27, backend=b)
+    v_fused = jax.vmap(lambda t: f(t, "fused"))(theta8)
+    v_xla = jax.vmap(lambda t: f(t, "xla"))(theta8)
+    gv_fused = jax.vmap(jax.grad(lambda t: f(t, "fused")))(theta8)
+    gv_xla = jax.vmap(jax.grad(lambda t: f(t, "xla")))(theta8)
+    if jax.default_backend() == "cpu":
+        assert np.asarray(v_fused).tobytes() == np.asarray(v_xla).tobytes()
+        assert np.asarray(gv_fused).tobytes() \
+            == np.asarray(gv_xla).tobytes()
+    loop_v = jnp.stack([f(theta8[i], "xla") for i in range(8)])
+    loop_g = jnp.stack([jax.grad(lambda t: f(t, "xla"))(theta8[i])
+                        for i in range(8)])
+    np.testing.assert_allclose(np.asarray(v_xla), np.asarray(loop_v), **TOL)
+    np.testing.assert_allclose(np.asarray(gv_xla), np.asarray(loop_g),
+                               **TOL)
+
+
+def test_mixed_potential_matches_reference():
+    """The mixed duel+click estimator (core/extensions) through the kernel:
+    forward and gradient vs. the explicit phi-feature reference."""
+    m, k, d = 100, 11, 48
+    theta, x, a1, a2, y, valid, a_emb, _ = _data(m, k, d, seed=4)
+    is_duel = jax.random.bernoulli(jax.random.fold_in(KEY, 9), 0.6, (m,))
+    ym = jnp.where(is_duel, y, (y > 0).astype(jnp.float32))
+
+    def ref(t):
+        phi1, phi2 = phi(x, a_emb[a1]), phi(x, a_emb[a2])
+        duel = 1.3 * logistic_loss(ym * ((phi1 - phi2) @ t))
+        s1 = phi1 @ t
+        click = 1.3 * jnp.where(ym > 0.5, logistic_loss(s1),
+                                logistic_loss(-s1))
+        return jnp.sum(jnp.where(is_duel, duel, click) * valid)
+
+    for b in ("fused", "xla"):
+        out = su.sgld_mixed_potential(theta, x, a1, a2, ym, is_duel, valid,
+                                      a_emb, eta=1.3, backend=b)
+        g = jax.grad(lambda t: su.sgld_mixed_potential(
+            t, x, a1, a2, ym, is_duel, valid, a_emb, eta=1.3,
+            backend=b))(theta)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref(theta)),
+                                   **TOL)
+        np.testing.assert_allclose(np.asarray(g),
+                                   np.asarray(jax.grad(ref)(theta)), **TOL)
+
+
+def test_k_above_max_fused_degrades_to_lowering():
+    """K > MAX_K_FUSED no longer fits one VMEM tile: the fused path must
+    silently fall back to the pure-XLA lowering (bitwise equal to
+    backend='xla') and still match the oracle."""
+    m, k, d = 64, MAX_K_FUSED + 76, 24
+    theta, x, a1, a2, y, valid, a_emb, _ = _data(m, k, d, seed=5)
+    cfg = _cfg(k, d, m)
+    ref = jnp.sum(old_likelihood_batch(theta, x, a1, a2, y, a_emb, 1, cfg)
+                  * valid)
+    fused = su.sgld_potential(theta, x, a1, a2, y, valid, a_emb, j=1,
+                              eta=cfg.eta, mu=cfg.mu, backend="fused")
+    xla = su.sgld_potential(theta, x, a1, a2, y, valid, a_emb, j=1,
+                            eta=cfg.eta, mu=cfg.mu, backend="xla")
+    assert np.asarray(fused).tobytes() == np.asarray(xla).tobytes()
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end SGLD chains + backend resolution
+# ---------------------------------------------------------------------------
+
+def _observed_state(cfg, n=40, seed=6):
+    m = cfg.horizon
+    _, x, a1, a2, y, _, _, _ = _data(m, cfg.n_models, cfg.dim, seed=seed)
+    st = fgts.init_state(cfg, KEY)
+    for i in range(n):
+        st = fgts.observe(st, x[i], a1[i], a2[i], y[i])
+    return st
+
+
+@pytest.mark.parametrize("n_chains", [1, 8])
+def test_sgld_chains_bitwise_across_kernel_backends(n_chains):
+    """Whole SGLD chains (sgld_sample under lax.scan, vmapped over chains):
+    fused and xla produce bit-identical samples under interpret mode, and
+    both stay within fp32 tolerance of the autodiff reference chain."""
+    cfg = _cfg(11, 48, 64, sgld_steps=5, sgld_minibatch=16)
+    a_emb = jax.random.normal(jax.random.fold_in(KEY, 10), (11, 48))
+    st = _observed_state(cfg)
+    keys = jax.random.split(jax.random.fold_in(KEY, 11), n_chains)
+
+    def chains(backend):
+        c = dataclasses.replace(cfg, sgld_backend=backend)
+        return jax.vmap(lambda k: fgts.sgld_sample(
+            k, st.theta1, st, a_emb, 1, c))(keys)
+
+    fused, xla, auto = chains("fused"), chains("xla"), chains("autodiff")
+    if jax.default_backend() == "cpu":
+        assert np.asarray(fused).tobytes() == np.asarray(xla).tobytes()
+    else:
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(xla),
+                                   **TOL)
+    np.testing.assert_allclose(np.asarray(xla), np.asarray(auto), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_masked_chain_matches_autodiff_masked_chain():
+    """The arm-masked potential (dynamic pools: feel-good max over active
+    arms only) agrees between the kernel path and the autodiff path at the
+    chain level."""
+    cfg = _cfg(8, 24, 64, sgld_steps=4, sgld_minibatch=8)
+    a_emb = jax.random.normal(jax.random.fold_in(KEY, 12), (8, 24))
+    mask = jnp.arange(8) != 2
+    st = _observed_state(cfg, seed=7)
+    k = jax.random.fold_in(KEY, 13)
+    out = {b: fgts.sgld_sample(
+        k, st.theta1, st, a_emb, 1,
+        dataclasses.replace(cfg, sgld_backend=b), arm_mask=mask)
+        for b in ("xla", "autodiff")}
+    np.testing.assert_allclose(np.asarray(out["xla"]),
+                               np.asarray(out["autodiff"]), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_resolve_sgld_backend(monkeypatch):
+    """'auto' follows default_interpret() and the REPRO_SGLD_BACKEND env
+    override; explicit names pass through untouched; junk raises."""
+    monkeypatch.delenv("REPRO_SGLD_BACKEND", raising=False)
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    from repro.kernels.dueling_score import default_interpret
+    want = "xla" if default_interpret() else "fused"
+    assert su.resolve_sgld_backend("auto") == want
+    for b in ("fused", "xla", "autodiff"):
+        monkeypatch.setenv("REPRO_SGLD_BACKEND", b)
+        assert su.resolve_sgld_backend("auto") == b
+        # explicit backends ignore the env var
+        other = "xla" if b != "xla" else "fused"
+        assert su.resolve_sgld_backend(other) == other
+    monkeypatch.setenv("REPRO_SGLD_BACKEND", "mosaic")
+    with pytest.raises(ValueError):
+        su.resolve_sgld_backend("auto")
+    with pytest.raises(ValueError):
+        su.resolve_sgld_backend("pallas")
+    with pytest.raises(ValueError):
+        su.sgld_potential(jnp.zeros((4,)), jnp.zeros((2, 4)),
+                          jnp.zeros((2,), jnp.int32),
+                          jnp.zeros((2,), jnp.int32), jnp.ones((2,)),
+                          jnp.ones((2,)), jnp.zeros((3, 4)),
+                          backend="auto")   # resolve first, by contract
+
+
+def test_decayed_step_size():
+    from repro.optim.sgld import decayed_step_size
+    assert float(decayed_step_size(0.1, 0, 100.0, 0.55)) \
+        == pytest.approx(0.1)
+    a = float(decayed_step_size(0.1, 100, 100.0, 0.55))
+    b = float(decayed_step_size(0.1, 1000, 100.0, 0.55))
+    assert 0 < b < a < 0.1
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n_chains", [1, 8])
+def test_full_bench_shape_parity(n_chains):
+    """The largest bench shape (K=1024, m=1024, d=768): kernel forward and
+    gradient vs. the autodiff oracle, 1 and 8 chains."""
+    m, k, d = 1024, 1024, 768
+    theta, x, a1, a2, y, valid, a_emb, _ = _data(m, k, d, seed=8)
+    cfg = _cfg(k, d, m)
+    thetas = jax.random.normal(jax.random.fold_in(KEY, 14), (n_chains, d))
+
+    def oracle(t):
+        return jnp.sum(fgts.likelihood_batch(t, x, a1, a2, y, a_emb, 1,
+                                             cfg) * valid)
+
+    def fused(t):
+        return su.sgld_potential(t, x, a1, a2, y, valid, a_emb, j=1,
+                                 eta=cfg.eta, mu=cfg.mu, backend="fused")
+
+    v_ref = jax.vmap(oracle)(thetas)
+    v_fused = jax.vmap(fused)(thetas)
+    # sums of ~1e3 terms: scale the tolerance by the magnitude
+    np.testing.assert_allclose(np.asarray(v_fused), np.asarray(v_ref),
+                               rtol=1e-4, atol=1e-2)
+    g_ref = jax.vmap(jax.grad(oracle))(thetas)
+    g_fused = jax.vmap(jax.grad(fused))(thetas)
+    np.testing.assert_allclose(np.asarray(g_fused), np.asarray(g_ref),
+                               rtol=1e-3, atol=1e-3)

@@ -234,3 +234,24 @@ def test_route_batch_rejects_indivisible_batch():
     svc = _service(mesh=_mesh())
     with pytest.raises(ValueError, match="divide"):
         svc.route_batch(jax.random.normal(KEY, (BATCH + 1, DIM)))
+
+
+def test_sgld_backend_flip_no_retrace_on_mesh(monkeypatch):
+    """The SGLD backend env override is trace-time-only on the mesh lane
+    too: a mid-process flip compiles nothing new while the sharded service
+    keeps routing and folding feedback. (Mesh mode itself pins "auto" to
+    the pure-XLA lowering — a compiled Pallas call cannot be partitioned —
+    so the override never reaches a traced program here.)"""
+    monkeypatch.delenv("REPRO_SGLD_BACKEND", raising=False)
+    svc = _service(mesh=_mesh())
+    x = jax.random.normal(KEY, (BATCH, DIM))
+    for _ in range(2):                        # warm every program once
+        _, _, t = svc.route_batch(x)
+        svc.feedback_batch(t, jnp.ones((BATCH,)))
+    counts = svc.compiled_program_counts()
+    for backend in ("fused", "xla", "autodiff"):
+        monkeypatch.setenv("REPRO_SGLD_BACKEND", backend)
+        a1, a2, t = svc.route_batch(x)
+        svc.feedback_batch(t, jnp.ones((BATCH,)))
+        assert svc.compiled_program_counts() == counts, backend
+    assert svc.pending_count() == 0
