@@ -1,0 +1,258 @@
+"""Preference-conditioned Pareto front: one posterior vs per-tilt retraining.
+
+The tentpole claim of per-request preference tilts is that ONE
+pref-conditioned FGTS.CDB posterior serves every point of the cost-quality
+trade-off: a request carrying cost weight lambda is routed under the extra
+utility tilt ``lambda * cost_k``, its duel feeds back conditioned on the
+same lambda (the feel-good term targets the tilted objective), and no
+retraining or retracing happens between trade-off points. This bench proves
+it against the strongest honest baseline — K separate FGTS runs, each
+*retrained from scratch* with a fixed construction-time ``cost_tilt``:
+
+  * ``pareto/pref:lamL``    — the single pref-conditioned run, evaluated on
+                              the rows that carried tilt L (each scan step
+                              cycles the tilt grid over its batch rows)
+  * ``pareto/retrain:lamL`` — a dedicated FGTS run with cost_tilt=L,
+                              evaluated on all its rows
+
+Both report *tilted* regret — utilities discounted by the tilt the row was
+served under, ``u~_k = u_k - (L / feedback_scale) * cost_k`` (scores fit
+``feedback_scale * u``, so a score-space tilt L is a utility-space tilt
+L/scale) — plus the realized mean duel cost, giving the regret-vs-cost
+front table. Acceptance: the shared posterior stays within 10% tilted
+regret of every per-tilt retrained baseline.
+
+The zero-retrace contract rides along: a ``RouterService`` is driven
+through every distinct tilt value and ``compiled_program_counts`` must not
+grow after the first pref batch (prefs are traced operands — the
+8-device mesh twin of this check lives in tests/test_sharded_serving.py).
+
+    PYTHONPATH=src python -m benchmarks.bench_pareto [--smoke]
+
+A full run merges a ``"pareto"`` record into ``BENCH_7.json``; ``--smoke``
+shrinks the stream and skips the artifact (CI interpret lane).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ccft, env as env_lib, fgts
+from repro.core import model_pool as mp
+from repro.core.policy import fgts_policy
+
+from .common import emit, merge_bench_json, timed
+
+TILTS = (0.0, 0.25, 0.5, 1.0, 2.0)   # score-space cost weights (>= 5 points)
+K = 6
+DIM = 24
+BATCH = 10                           # 2 rows per tilt per scan step
+T_FULL = 4000
+T_SMOKE = 400
+N_SEEDS_FULL = 5   # per-seed ratios are noisy (~±0.1); 5 seeds stabilise
+FEEDBACK_SCALE = 5.0
+
+
+def make_pareto_env(key: jax.Array, t: int):
+    """Linear-BTL world with a real cost-quality trade-off.
+
+    Utilities are ``<theta*, phi(x, a_k)>`` rescaled to [0, 1] and then
+    *correlated with cost* (cheap arms weakened, expensive arms boosted, on
+    a concave schedule), so the tilted-optimal arm actually moves as the
+    tilt grows — a front, not a single dominant arm.
+    """
+    k_a, k_th, k_x = jax.random.split(key, 3)
+    a_emb = jax.random.normal(k_a, (K, DIM))
+    theta_star = jax.random.normal(k_th, (DIM,))
+    x = jax.random.normal(k_x, (t, DIM))
+    utils = jax.vmap(lambda xi: ccft.scores_all(xi, a_emb, theta_star))(x)
+    lo, hi = utils.min(), utils.max()
+    utils = (utils - lo) / (hi - lo)
+    # concave quality-for-cost schedule: diminishing returns, so each tilt
+    # has its own sweet spot along the cost axis
+    costs = jnp.linspace(0.0, 2.5, K)
+    quality = 0.6 * jnp.sqrt(costs / costs[-1])
+    utils = 0.4 * utils + quality[None, :]
+    return env_lib.EnvData(x=x, utils=utils,
+                           feedback_scale=jnp.asarray(FEEDBACK_SCALE)), \
+        a_emb, costs
+
+
+def _fgts_cfg(t: int) -> fgts.FGTSConfig:
+    return fgts.FGTSConfig(n_models=K, dim=DIM, horizon=t, eta=8.0, mu=0.2,
+                           sgld_steps=10, sgld_minibatch=32)
+
+
+def _tilted_regret(utils_sb, costs, a1, a2, lam_util):
+    """Mean instant regret on the tilted utility scale u~ = u - lam*c."""
+    ut = utils_sb - lam_util * costs[None, None, :]
+    best = jnp.max(ut, axis=-1)
+    took = 0.5 * (jnp.take_along_axis(ut, a1[..., None], -1)[..., 0]
+                  + jnp.take_along_axis(ut, a2[..., None], -1)[..., 0])
+    return jnp.mean(best - took)
+
+
+def _realized_cost(costs, a1, a2):
+    return float(jnp.mean(0.5 * (costs[a1] + costs[a2])))
+
+
+def _retrace_check() -> dict:
+    """Drive a RouterService through every tilt: the compiled act/update
+    cache must be flat after the first pref batch (prefs are traced)."""
+    from repro.data.pool import PoolEntry
+    from repro.encoder.model import EncoderConfig
+    from repro.serving.router_service import (RouterService,
+                                              RouterServiceConfig)
+    d = 16
+    cfg = fgts.FGTSConfig(n_models=4, dim=d, horizon=64, sgld_steps=2,
+                          sgld_minibatch=8)
+    pool = [PoolEntry(name=f"m{i}", arch="bench",
+                      embedding=np.ones(d, np.float32) * i,
+                      cost_per_1k_tokens=float(i)) for i in range(4)]
+    svc = RouterService(pool, None, EncoderConfig(),
+                        RouterServiceConfig(fgts=cfg, k_max=4,
+                                            feedback_capacity=32))
+    x = jnp.asarray(np.linspace(-1, 1, 8 * d).reshape(8, d), jnp.float32)
+    _, _, t0 = svc.route_batch(x, prefs=jnp.zeros((8,)))
+    svc.feedback_batch(t0, jnp.ones(8))
+    before = svc.compiled_program_counts()
+    for lam in TILTS:
+        _, _, tk = svc.route_batch(x, prefs=jnp.full((8,), lam))
+        svc.feedback_batch(tk, jnp.ones(8))
+    after = svc.compiled_program_counts()
+    return dict(counts_before=before, counts_after=after,
+                flat=before == after)
+
+
+def run(smoke: bool = False, out: str | None = "BENCH_7.json"):
+    smoke = smoke or bool(int(os.environ.get("REPRO_PARETO_SMOKE", "0")))
+    t = T_SMOKE if smoke else T_FULL
+    n_seeds = 1 if smoke else N_SEEDS_FULL
+    rows = []
+    e, a_emb, costs = make_pareto_env(jax.random.PRNGKey(321), t)
+    pool = mp.init_pool(a_emb, costs)
+    cfg = _fgts_cfg(t)
+    n_steps = t // BATCH
+    tilts = jnp.asarray(TILTS)
+    utils_sb = e.utils[: n_steps * BATCH].reshape(n_steps, BATCH, K)
+
+    # per-row tilt assignment: cycle the grid over the flattened stream so
+    # every tilt sees the same number of rows, interleaved in time
+    def pref_fn(s, x_b):
+        return tilts[(s * BATCH + jnp.arange(BATCH)) % len(TILTS)]
+
+    pref_sb = jax.vmap(pref_fn)(jnp.arange(n_steps),
+                                jnp.zeros((n_steps, 1)))   # (n_steps, B)
+
+    def aux_fn(state, a1, a2):
+        return a1, a2
+
+    pol_pref = fgts_policy(pool, cfg)
+    keys = jax.random.split(jax.random.PRNGKey(7), n_seeds)
+    run_pref = jax.jit(jax.vmap(lambda k: env_lib.run(
+        k, e, pol_pref, batch=BATCH, aux_fn=aux_fn, pref_fn=pref_fn)[2]))
+    (pa1, pa2), pref_secs = timed(run_pref, keys)   # (seeds, n_steps, B)
+
+    table = {}
+    for li, lam in enumerate(TILTS):
+        lam_util = lam / FEEDBACK_SCALE
+        sel = pref_sb == lam                         # (n_steps, B)
+        regs, rcosts = [], []
+        for s in range(n_seeds):
+            ut = utils_sb - lam_util * costs[None, None, :]
+            best = jnp.max(ut, axis=-1)
+            took = 0.5 * (jnp.take_along_axis(ut, pa1[s][..., None],
+                                              -1)[..., 0]
+                          + jnp.take_along_axis(ut, pa2[s][..., None],
+                                                -1)[..., 0])
+            regs.append(float(jnp.sum(jnp.where(sel, best - took, 0.0))
+                              / jnp.sum(sel)))
+            rcosts.append(float(
+                jnp.sum(jnp.where(sel, 0.5 * (costs[pa1[s]]
+                                              + costs[pa2[s]]), 0.0))
+                / jnp.sum(sel)))
+        table[("pref", lam)] = (float(np.mean(regs)),
+                                float(np.mean(rcosts)))
+        rows.append(emit(f"pareto/pref:lam{lam:g}",
+                         pref_secs / (n_seeds * t),
+                         f"tilted_regret={np.mean(regs):.4f};"
+                         f"realized_cost={np.mean(rcosts):.3f}"))
+
+    # per-tilt retrained baselines: a fresh FGTS with construction-time
+    # cost_tilt=lam, full stream each — K separate posteriors
+    for lam in TILTS:
+        lam_util = lam / FEEDBACK_SCALE
+        pol = fgts_policy(pool, cfg, cost_tilt=float(lam))
+        run_base = jax.jit(jax.vmap(lambda k: env_lib.run(
+            k, e, pol, batch=BATCH, aux_fn=aux_fn)[2]))
+        (ba1, ba2), base_secs = timed(run_base, keys)
+        regs = [float(_tilted_regret(utils_sb, costs, ba1[s], ba2[s],
+                                     lam_util)) for s in range(n_seeds)]
+        rcost = float(np.mean([_realized_cost(costs, ba1[s].reshape(-1),
+                                              ba2[s].reshape(-1))
+                               for s in range(n_seeds)]))
+        table[("retrain", lam)] = (float(np.mean(regs)), rcost)
+        rows.append(emit(f"pareto/retrain:lam{lam:g}",
+                         base_secs / (n_seeds * t),
+                         f"tilted_regret={np.mean(regs):.4f};"
+                         f"realized_cost={rcost:.3f}"))
+
+    retrace = _retrace_check()
+    rows.append(emit("pareto/retrace_flat", 0.0,
+                     f"flat={int(retrace['flat'])}"))
+
+    # regret-vs-realized-cost front table
+    print(f"\npareto front: one pref-conditioned posterior vs per-tilt "
+          f"retrained FGTS (T={t}, batch={BATCH}, K={K}, "
+          f"seeds={n_seeds}; cells: tilted regret / realized duel cost)")
+    header = "".join(f"{f'lam={v:g}':>18}" for v in TILTS)
+    print(f"{'':14}{header}")
+    ratios = {}
+    for kind in ("pref", "retrain"):
+        cells = "".join(
+            f"{table[(kind, v)][0]:>10.4f}/{table[(kind, v)][1]:<7.3f}"
+            for v in TILTS)
+        print(f"{kind:>13} {cells}")
+    for v in TILTS:
+        base = table[("retrain", v)][0]
+        ratios[v] = table[("pref", v)][0] / base if base > 0 else 1.0
+    worst = max(ratios.values())
+    print(f"{'ratio':>13} " + "".join(f"{ratios[v]:>17.3f}x"
+                                      for v in TILTS))
+    print(f"# pareto: worst pref/retrain regret ratio {worst:.3f}x "
+          f"(acceptance <= 1.10x), retrace flat={retrace['flat']}")
+
+    if not smoke and out:
+        payload = dict(
+            backend=jax.default_backend(), T=t, batch=BATCH, K=K,
+            seeds=n_seeds, tilts=list(TILTS),
+            front={f"lam{v:g}": dict(
+                pref_regret=table[("pref", v)][0],
+                pref_cost=table[("pref", v)][1],
+                retrain_regret=table[("retrain", v)][0],
+                retrain_cost=table[("retrain", v)][1],
+                ratio=ratios[v]) for v in TILTS},
+            worst_ratio=worst,
+            retrace_flat=bool(retrace["flat"]),
+            compiled_program_counts=retrace["counts_after"])
+        merge_bench_json(out, "pareto", payload, pr=7)
+        print(f"# bench_pareto: wrote {out}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short stream, 1 seed, no JSON artifact (CI lane)")
+    ap.add_argument("--out", default="BENCH_7.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,15 @@ point and reports microseconds *per SGLD step* for three backends:
     :autodiff  backend="autodiff" — the legacy path: jax.grad through
                likelihood_batch (the pre-kernel implementation, also the
                numerics oracle: the kernel row carries max_err against it)
+    :auto      backend="auto"     — whatever the trace-time heuristic
+               (``resolve_sgld_backend``) picks for this point's chain
+               count; reported as the resolved backend's time (same
+               compiled program — timing it twice would measure noise).
+               The BENCH_6 regression this guards: on host, multi-chain
+               sweeps vmap the XLA scan and its per-chain control flow
+               dominates — auto now resolves chains>1 to "autodiff"
+               (one traced graph, vmap-friendly) and only single-chain
+               host points to "xla".
 
 Derived fields per row: an analytic per-step cost model and where it lands
 on the roofline. Per gradient evaluation the kernel runs 5 (m, K)x(K, d)-
@@ -28,16 +37,16 @@ score recompute + the weighted feature sum), so
     ai     = flops / bytes
     roofline_us = max(flops / PEAK_FLOPS_BF16, bytes / HBM_BW) · 1e6
 
-A full run also writes ``BENCH_6.json`` (rows + kernel-vs-xla and
-kernel-vs-autodiff medians); ``--smoke`` runs a two-point subset for the
-CI interpret lane and skips the JSON artifact.
+A full run also merges an ``"sgld"`` record into ``BENCH_7.json`` (rows +
+kernel-vs-xla / kernel-vs-autodiff / auto-vs-autodiff medians); ``--smoke``
+runs a two-point subset for the CI interpret lane and skips the JSON
+artifact.
 
     PYTHONPATH=src python -m benchmarks.bench_sgld [--smoke] [--out F.json]
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
@@ -46,10 +55,10 @@ import numpy as np
 
 from repro.core import fgts
 from repro.kernels.dueling_score import default_interpret
-from repro.kernels.sgld_update import MAX_K_FUSED
+from repro.kernels.sgld_update import MAX_K_FUSED, resolve_sgld_backend
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
 
-from .common import emit
+from .common import emit, merge_bench_json
 
 STEPS = 2                      # SGLD steps per timed sample call
 BACKENDS = ("kernel", "xla", "autodiff")
@@ -90,6 +99,7 @@ def _point(k, m, d, c, seed=0):
     def sampler(backend):
         cfg = fgts.FGTSConfig(n_models=k, dim=d, horizon=m,
                               sgld_steps=STEPS, sgld_minibatch=m,
+                              n_chains=c,
                               sgld_backend=_CFG_BACKEND[backend])
         return jax.jit(lambda kk, s, th: jax.vmap(
             lambda ki: fgts.sgld_sample(ki, th, s, a_emb, 1, cfg))(kk))
@@ -112,8 +122,11 @@ def _time_interleaved(fns, *args, n=5):
     return best
 
 
-def run(smoke: bool = False, out: str | None = "BENCH_6.json"):
+def run(smoke: bool = False, out: str | None = "BENCH_7.json"):
     rows, records = [], []
+    # label the auto heuristic's pick in this bench's vocabulary
+    resolved_label = {"fused": "kernel", "xla": "xla",
+                      "autodiff": "autodiff"}
     for k, m, d, c in (SMOKE if smoke else SWEEP):
         sampler, keys, st, theta = _point(k, m, d, c)
         flops, bytes_, ai, roof = _cost_model(k, m, d, c)
@@ -128,6 +141,8 @@ def run(smoke: bool = False, out: str | None = "BENCH_6.json"):
         if same_program:
             best["xla"] = best["kernel"]
         secs = {b: best[b] / STEPS for b in BACKENDS}
+        auto_to = resolved_label[resolve_sgld_backend("auto", c)]
+        secs["auto"] = secs[auto_to]        # same compiled program
         samples = {b: fn(keys, st, theta) for b, fn in fns.items()}
         err = float(jnp.max(jnp.abs(samples["kernel"]
                                     - samples["autodiff"])))
@@ -139,8 +154,12 @@ def run(smoke: bool = False, out: str | None = "BENCH_6.json"):
         xla_model = model + (";shared_with_kernel=1" if same_program else "")
         rows.append(emit(f"{base}:xla", secs["xla"], xla_model))
         rows.append(emit(f"{base}:autodiff", secs["autodiff"], model))
+        rows.append(emit(f"{base}:auto", secs["auto"],
+                         f"{model};resolves_to={auto_to}"))
         records.append(dict(K=k, m=m, d=d, chains=c,
-                            us_per_step={b: secs[b] * 1e6 for b in BACKENDS},
+                            us_per_step={b: secs[b] * 1e6
+                                         for b in (*BACKENDS, "auto")},
+                            auto_resolves_to=auto_to,
                             xla_shared_with_kernel=same_program,
                             flops=flops, bytes=bytes_, ai=ai,
                             roofline_us=roof, max_err=err))
@@ -149,15 +168,25 @@ def run(smoke: bool = False, out: str | None = "BENCH_6.json"):
                   for r in records]
         vs_ad = [r["us_per_step"]["autodiff"] / r["us_per_step"]["kernel"]
                  for r in records]
+        # the BENCH_6 regression guard: auto must never lose to the legacy
+        # autodiff path, in particular on the multi-chain host rows where
+        # the old chains-blind heuristic picked the scan-heavy XLA lowering
+        auto_vs_ad = [r["us_per_step"]["autodiff"] / r["us_per_step"]["auto"]
+                      for r in records]
+        auto_vs_ad_mc = [
+            r["us_per_step"]["autodiff"] / r["us_per_step"]["auto"]
+            for r in records if r["chains"] > 1]
         payload = dict(
-            pr=6, bench="sgld", backend=jax.default_backend(),
+            bench="sgld", backend=jax.default_backend(),
             steps=STEPS, rows=records,
             summary=dict(
                 kernel_vs_xla_speedup_median=float(np.median(vs_xla)),
                 kernel_vs_autodiff_speedup_median=float(np.median(vs_ad)),
+                auto_vs_autodiff_speedup_median=float(np.median(auto_vs_ad)),
+                auto_vs_autodiff_speedup_min_multichain=float(
+                    min(auto_vs_ad_mc)) if auto_vs_ad_mc else None,
                 max_err=max(r["max_err"] for r in records)))
-        with open(out, "w") as f:
-            json.dump(payload, f, indent=1)
+        merge_bench_json(out, "sgld", payload, pr=7)
         print(f"# bench_sgld: wrote {out}")
     return rows
 
@@ -166,7 +195,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="two-point subset, no JSON artifact (CI lane)")
-    ap.add_argument("--out", default="BENCH_6.json")
+    ap.add_argument("--out", default="BENCH_7.json")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     run(smoke=args.smoke, out=args.out)

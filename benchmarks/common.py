@@ -145,6 +145,28 @@ def emit(name: str, seconds: float, derived) -> str:
     return row
 
 
+def merge_bench_json(path: str, key: str, payload: dict, pr: int) -> None:
+    """Read-modify-write one bench's record into a shared BENCH_N.json.
+
+    PR-level bench artifacts hold one top-level object per bench (e.g.
+    ``"sgld"`` and ``"pareto"`` both land in BENCH_7.json): each bench
+    rewrites only its own key, so running them in any order — or re-running
+    one — never clobbers the other's numbers."""
+    import json
+    doc = {"pr": pr}
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (FileNotFoundError, ValueError):
+        pass
+    if "bench" in doc and key not in doc:
+        doc = {"pr": doc.get("pr", pr)}      # pre-merge single-bench layout
+    doc["pr"] = pr
+    doc[key] = payload
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+
+
 def timed(fn, *args, **kw):
     t0 = time.time()
     out = fn(*args, **kw)

@@ -23,6 +23,9 @@ results/bench.csv). Mapping to the paper:
     kernels   bench_kernels         Pallas-vs-oracle numerics + timing
     sgld      bench_sgld            fused SGLD posterior-update kernel vs
                                     the XLA paths (roofline-backed)
+    pareto    bench_pareto          one pref-conditioned posterior vs
+                                    per-tilt retrained FGTS (regret-vs-cost
+                                    front + zero-retrace contract)
     roofline  roofline              EXPERIMENTS.md §Roofline source
 
 Benches that emit paired ``<shape>:kernel`` / ``<shape>:xla`` rows get a
@@ -48,13 +51,14 @@ def main() -> None:
 
     from . import (bench_autopilot, bench_baselines, bench_delayed,
                    bench_dynamic_pool, bench_generalization, bench_kernels,
-                   bench_mixinstruct, bench_mmlu_naive, bench_routerbench,
-                   bench_scores_table, bench_sgld, bench_sharded_serving,
-                   roofline)
+                   bench_mixinstruct, bench_mmlu_naive, bench_pareto,
+                   bench_routerbench, bench_scores_table, bench_sgld,
+                   bench_sharded_serving, roofline)
     benches = {
         "tab1": bench_scores_table.run,
         "kernels": bench_kernels.run,
         "sgld": bench_sgld.run,
+        "pareto": bench_pareto.run,
         "fig1": bench_mmlu_naive.run,
         "fig2": bench_routerbench.run,
         "fig2cd": bench_generalization.run,

@@ -226,7 +226,7 @@ def wrap(pol: RoutingPolicy, cfg: AutopilotConfig, *,
         pool = mp.get_pool(inner)      # raises on a non-pooled policy
         return AutopilotState(inner, init_controller(pool.active))
 
-    def act(key, state, x):
+    def _act(key, state, x, pref=None):
         inner, ctrl = state.inner, state.ctrl
         pool = mp.get_pool(inner)
         b = x.shape[0]
@@ -267,9 +267,16 @@ def wrap(pol: RoutingPolicy, cfg: AutopilotConfig, *,
         has_full = jnp.any(pool.active & ~ctrl.candidate)
         row_mask = gate[:, None] | ~ctrl.candidate[None, :] | ~has_full
 
-        # 4. gated selection under the governor's live lambda tilt
-        inner, a1, a2 = pol.act_masked(k_act, inner, x, row_mask,
-                                       ctrl.lam * pool.costs)
+        # 4. gated selection under the governor's live lambda tilt. With a
+        #    per-request preference the governor's lambda is the *baseline*
+        #    the per-row pref adds to: the inner act_pref sees pref + lam,
+        #    i.e. the effective tilt (lam + pref_i) * cost_k.
+        if pref is None:
+            inner, a1, a2 = pol.act_masked(k_act, inner, x, row_mask,
+                                           ctrl.lam * pool.costs)
+        else:
+            inner, a1, a2 = pol.act_pref(k_act, inner, x, row_mask,
+                                         pref + ctrl.lam)
 
         # 5. realized-cost EMA (both duelled arms answer the query)
         c = jnp.mean(0.5 * (pool.costs[a1] + pool.costs[a2]))
@@ -277,6 +284,17 @@ def wrap(pol: RoutingPolicy, cfg: AutopilotConfig, *,
                         (1.0 - cfg.cost_alpha) * ctrl.cost_ema
                         + cfg.cost_alpha * c)
         return AutopilotState(inner, ctrl._replace(cost_ema=ema)), a1, a2
+
+    def act(key, state, x):
+        return _act(key, state, x)
+
+    act_pref = None
+    if pol.act_pref is not None:
+        def act_pref(key, state, x, row_mask, pref):
+            # the autopilot owns the quota gate; an outer row_mask would
+            # fight it, so the serving layer passes row_mask=None here
+            del row_mask
+            return _act(key, state, x, pref)
 
     def _count(ctrl: ControllerState, a1, a2, y, ok) -> ControllerState:
         """Candidate duel accounting on resolved feedback (masked rows are
@@ -309,7 +327,16 @@ def wrap(pol: RoutingPolicy, cfg: AutopilotConfig, *,
                 pol.update_delayed(state.inner, x, a1, a2, y, age),
                 _count(state.ctrl, a1, a2, y, ok))
 
+    update_pref = None
+    if pol.update_pref is not None:
+        def update_pref(state, x, a1, a2, y, pref, mask):
+            return AutopilotState(
+                pol.update_pref(state.inner, x, a1, a2, y, pref, mask),
+                _count(state.ctrl, a1, a2, y, mask))
+
     return RoutingPolicy(init, act, update,
                          name=f"autopilot({pol.name})",
                          update_delayed=update_delayed,
-                         update_masked=update_masked)
+                         update_masked=update_masked,
+                         act_pref=act_pref,
+                         update_pref=update_pref)

@@ -27,7 +27,7 @@ from repro.kernels.dueling_score import mask_fallback_pair
 
 from .ccft import phi_all
 from .model_pool import ModelPool, PooledState, masked_pair_choice
-from .policy import (RoutingPolicy, merge_tilt, preference_loss,
+from .policy import (RoutingPolicy, merge_tilt, pref_tilt, preference_loss,
                      select_pair)
 
 
@@ -61,11 +61,18 @@ def uniform_policy(n_models: int | ModelPool) -> RoutingPolicy:
             key, row_mask & state.pool.active[None, :], x.shape[0])
         return state, a1, a2
 
+    def act_pref(key, state, x, row_mask, pref):
+        # no scores to tilt: a uniform draw ignores the preference but
+        # still honours the row gating (keeps the serving contract total)
+        del pref
+        return act_masked(key, state, x, row_mask, None)
+
     def update(state, x, a1, a2, y):
         return state
 
     return RoutingPolicy(init, act, update, name="uniform",
-                         act_masked=act_masked if pooled else None)
+                         act_masked=act_masked if pooled else None,
+                         act_pref=act_pref if pooled else None)
 
 
 def best_fixed_policy(utils_mean: jax.Array,
@@ -165,6 +172,10 @@ def eps_greedy_policy(a_emb: jax.Array | ModelPool, cfg: EpsGreedyConfig, *,
     def act_masked(key, state, x, row_mask, tilt_extra):
         return _act(key, state, x, row_mask, tilt_extra)
 
+    def act_pref(key, state, x, row_mask, pref):
+        return _act(key, state, x, row_mask,
+                    pref_tilt(pref, state.pool.costs))
+
     def update(state, x, a1, a2, y):
         inner = state.inner if pooled else state
         emb = state.pool.a_emb if pooled else a_emb
@@ -173,7 +184,8 @@ def eps_greedy_policy(a_emb: jax.Array | ModelPool, cfg: EpsGreedyConfig, *,
         return state._replace(inner=out) if pooled else out
 
     return RoutingPolicy(init, act, update, name="eps_greedy",
-                         act_masked=act_masked if pooled else None)
+                         act_masked=act_masked if pooled else None,
+                         act_pref=act_pref if pooled else None)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -236,7 +248,7 @@ def linucb_duel_policy(a_emb: jax.Array | ModelPool, cfg: LinUCBConfig, *,
             eff_tilt = cost_tilt * state.pool.costs
         eff_tilt = merge_tilt(eff_tilt, extra_tilt)
         if eff_tilt is not None:
-            ucb = ucb - eff_tilt[None, :]
+            ucb = ucb - jnp.atleast_2d(eff_tilt)   # (1,K) global / (B,K) row
         if pooled:
             mask = state.pool.active[None, :] if row_mask is None \
                 else row_mask & state.pool.active[None, :]
@@ -255,6 +267,10 @@ def linucb_duel_policy(a_emb: jax.Array | ModelPool, cfg: LinUCBConfig, *,
     def act_masked(key, state, x, row_mask, extra_tilt):
         return _act(key, state, x, row_mask, extra_tilt)
 
+    def act_pref(key, state, x, row_mask, pref):
+        return _act(key, state, x, row_mask,
+                    pref_tilt(pref, state.pool.costs))
+
     def update(state, x, a1, a2, y):
         inner = state.inner if pooled else state
         emb = state.pool.a_emb if pooled else a_emb
@@ -271,4 +287,5 @@ def linucb_duel_policy(a_emb: jax.Array | ModelPool, cfg: LinUCBConfig, *,
         return state._replace(inner=out) if pooled else out
 
     return RoutingPolicy(init, act, update, name="linucb_duel",
-                         act_masked=act_masked if pooled else None)
+                         act_masked=act_masked if pooled else None,
+                         act_pref=act_pref if pooled else None)

@@ -97,7 +97,8 @@ def _as_delay(delay) -> DelaySpec:
 def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
         batch: int = 1, delay: DelaySpec | int | None = 0,
         pool_schedule: "mp.PoolSchedule | None" = None,
-        aux_fn: Callable | None = None):
+        aux_fn: Callable | None = None,
+        pref_fn: Callable | None = None):
     """Run any RoutingPolicy over the stream. Returns (cum_regret (T,), state).
 
     Rounds are consumed ``batch`` at a time (trailing remainder dropped when
@@ -127,6 +128,18 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
     When given, the return becomes ``(cum_regret, state, aux)`` with each
     aux leaf stacked over the T'/batch scan steps; None keeps the two-tuple
     return bit-identical to before.
+
+    ``pref_fn(step, x_b) -> (B,)`` assigns each query a per-request cost
+    weight: row i of the batch is selected under the extra utility tilt
+    ``pref_i * cost_k`` through the policy's ``act_pref`` path, and the
+    resulting duel is folded back through ``update_pref`` with the same
+    pref (so a preference-conditioned posterior learns every trade-off it
+    serves — the Pareto benchmark drives one run through a grid of tilts
+    this way). The function is traced once into the scan (evaluated via
+    ``vmap`` over steps, so it must be jax-traceable); it requires a
+    preference-aware policy. Regret stays charged on the *untilted*
+    utilities — tilt-conditional fronts are an offline readout over the
+    routed pairs (``aux_fn``). None keeps every path bit-identical.
     """
     spec = _as_delay(delay)
     t_total = env.x.shape[0] - env.x.shape[0] % batch
@@ -146,6 +159,31 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
     if pool_schedule is not None:
         mp.get_pool(state0)        # fail fast on a non-pooled policy
 
+    prefs = None
+    if pref_fn is not None:
+        if policy.act_pref is None:
+            raise ValueError(
+                f"pref_fn needs a preference-aware policy: "
+                f"'{policy.name}' has no act_pref path (use the pooled "
+                f"FGTS/eps-greedy/LinUCB families)")
+        prefs = jnp.asarray(jax.vmap(pref_fn)(steps, x), jnp.float32)
+        if prefs.shape != (n_steps, batch):
+            raise ValueError(
+                f"pref_fn(step, x_b) must return a ({batch},) row per "
+                f"step; got sequence shape {prefs.shape}")
+    xs_extra = () if prefs is None else (prefs,)
+    ones_b = jnp.ones((batch,), bool)
+
+    def do_act(k, state, x_b, p_b):
+        if p_b is None:
+            return policy.act(k, state, x_b)
+        return policy.act_pref(k, state, x_b, None, p_b)
+
+    def do_update(state, x_b, a1, a2, y, p_b):
+        if p_b is not None and policy.update_pref is not None:
+            return policy.update_pref(state, x_b, a1, a2, y, p_b, ones_b)
+        return policy.update(state, x_b, a1, a2, y)
+
     def emit(state, a1, a2, reg):
         """Scan output: the regret row, plus the aux observable when asked."""
         return (reg, aux_fn(state, a1, a2)) if aux_fn is not None else reg
@@ -158,34 +196,37 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
     if spec.trivial:
         if pool_schedule is None:
             def step(state, inp):
-                k, x_b, u_b = inp
+                k, x_b, u_b = inp[:3]
+                p_b = inp[3] if prefs is not None else None
                 k_act, k_fb = jax.random.split(k)
-                state, a1, a2 = policy.act(k_act, state, x_b)
+                state, a1, a2 = do_act(k_act, state, x_b, p_b)
                 y = sample_preference(k_fb,
                                       env.feedback_scale * u_b[rows, a1],
                                       env.feedback_scale * u_b[rows, a2])
-                state = policy.update(state, x_b, a1, a2, y)
+                state = do_update(state, x_b, a1, a2, y, p_b)
                 return state, emit(state, a1, a2,
                                    jax.vmap(instant_regret)(u_b, a1, a2))
 
-            state, ys = jax.lax.scan(step, state0, (keys, x, utils))
+            state, ys = jax.lax.scan(step, state0,
+                                     (keys, x, utils) + xs_extra)
             return unpack(state, ys)
 
         def sched_step(state, inp):
-            s, k, x_b, u_b = inp
+            s, k, x_b, u_b = inp[:4]
+            p_b = inp[4] if prefs is not None else None
             pool = mp.apply_events(mp.get_pool(state), pool_schedule, s)
             state = mp.set_pool(state, pool)
             k_act, k_fb = jax.random.split(k)
-            state, a1, a2 = policy.act(k_act, state, x_b)
+            state, a1, a2 = do_act(k_act, state, x_b, p_b)
             y = sample_preference(k_fb, env.feedback_scale * u_b[rows, a1],
                                   env.feedback_scale * u_b[rows, a2])
-            state = policy.update(state, x_b, a1, a2, y)
+            state = do_update(state, x_b, a1, a2, y, p_b)
             reg = jax.vmap(lambda u, i, j: instant_regret(
                 u, i, j, active=mp.get_pool(state).active))(u_b, a1, a2)
             return state, emit(state, a1, a2, reg)
 
         state, ys = jax.lax.scan(sched_step, state0,
-                                 (steps, keys, x, utils))
+                                 (steps, keys, x, utils) + xs_extra)
         return unpack(state, ys)
 
     # -- delayed path: resolve(ring head) -> act -> schedule, one scan ------
@@ -199,10 +240,15 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
         issued=jnp.zeros((r,), jnp.int32),
         valid=jnp.zeros((r,), bool),
     )
+    if prefs is not None:
+        # the pref a duel was served under rides the lag ring with it, so
+        # the delayed fold conditions on the same tilt the act optimized
+        ring0["pref"] = jnp.zeros((r, batch), jnp.float32)
 
     def delayed_step(carry, inp):
         state, ring = carry
-        s, k, x_b, u_b = inp
+        s, k, x_b, u_b = inp[:4]
+        p_b = inp[4] if prefs is not None else None
         k_act, k_fb, k_lag = jax.random.split(k, 3)
 
         # 0. pool membership events due this tick land before anything else
@@ -217,6 +263,8 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
         def fold(st):
             args = (st, ring["x"][slot], ring["a1"][slot], ring["a2"][slot],
                     ring["y"][slot])
+            if prefs is not None and policy.update_pref is not None:
+                return policy.update_pref(*args, ring["pref"][slot], ones_b)
             if policy.update_delayed is not None:
                 age = jnp.full((batch,), s - ring["issued"][slot], jnp.int32)
                 return policy.update_delayed(*args, age)
@@ -226,7 +274,7 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
         ring = dict(ring, valid=ring["valid"].at[slot].set(False))
 
         # 2. act (regret charged now, whenever the feedback lands)
-        state, a1, a2 = policy.act(k_act, state, x_b)
+        state, a1, a2 = do_act(k_act, state, x_b, p_b)
         y = sample_preference(k_fb, env.feedback_scale * u_b[rows, a1],
                               env.feedback_scale * u_b[rows, a2])
 
@@ -239,7 +287,7 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
                                   / jnp.log1p(-spec.geom_p)).astype(jnp.int32)
         lag = jnp.clip(lag, 1, spec.cap)
         w = (s + lag) % r
-        ring = dict(
+        wrote = dict(
             x=ring["x"].at[w].set(x_b),
             a1=ring["a1"].at[w].set(a1),
             a2=ring["a2"].at[w].set(a2),
@@ -247,6 +295,9 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
             issued=ring["issued"].at[w].set(s),
             valid=ring["valid"].at[w].set(True),
         )
+        if prefs is not None:
+            wrote["pref"] = ring["pref"].at[w].set(p_b)
+        ring = wrote
         active = mp.get_pool(state).active if pool_schedule is not None \
             else None
         reg = jax.vmap(lambda u, i, j: instant_regret(
@@ -254,7 +305,7 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
         return (state, ring), emit(state, a1, a2, reg)
 
     (state, _), ys = jax.lax.scan(delayed_step, (state0, ring0),
-                                  (steps, keys, x, utils))
+                                  (steps, keys, x, utils) + xs_extra)
     return unpack(state, ys)
 
 

@@ -143,7 +143,7 @@ def mixed_potential(theta: jax.Array, idx: jax.Array, h: MixedHistory,
     valid = (idx < h.t).astype(jnp.float32)
     n_valid = jnp.maximum(valid.sum(), 1.0)
     scale = h.t.astype(jnp.float32) / n_valid
-    backend = resolve_sgld_backend(cfg.sgld_backend)
+    backend = resolve_sgld_backend(cfg.sgld_backend, cfg.n_chains)
     if backend == "autodiff":
         phi1 = phi(xb, a_emb[a1b])
         phi2 = phi(xb, a_emb[a2b])

@@ -72,6 +72,11 @@ class FGTSState(NamedTuple):
     t: jax.Array        # scalar int32 — rounds seen
     theta1: jax.Array   # (dim,) current posterior samples (warm start)
     theta2: jax.Array
+    # (H,) per-duel preference weight the duel was served under (0 = the
+    # plain untilted objective). None on legacy states: the feel-good term
+    # is then globally untilted — appended with a default so existing
+    # kwargs constructions and checkpoints stay valid.
+    pref: jax.Array | None = None
 
 
 def init_state(cfg: FGTSConfig, key: jax.Array) -> FGTSState:
@@ -85,18 +90,30 @@ def init_state(cfg: FGTSConfig, key: jax.Array) -> FGTSState:
         t=z((), jnp.int32),
         theta1=jax.random.normal(k1, (cfg.dim,)) * cfg.prior_var ** 0.5,
         theta2=jax.random.normal(k2, (cfg.dim,)) * cfg.prior_var ** 0.5,
+        pref=z((cfg.horizon,), jnp.float32),
     )
 
 
 def likelihood_batch(theta: jax.Array, x: jax.Array, a1: jax.Array,
                      a2: jax.Array, y: jax.Array, a_emb: jax.Array,
                      j: int, cfg: FGTSConfig,
-                     arm_mask: jax.Array | None = None) -> jax.Array:
+                     arm_mask: jax.Array | None = None,
+                     pref: jax.Array | None = None,
+                     costs: jax.Array | None = None) -> jax.Array:
     """Sum of L^j over a (masked) minibatch. x: (m,dim), a_emb: (K,dim).
 
     ``arm_mask`` (K,) bool restricts the feel-good max to *active* arms
     (dynamic pools: the optimism target is the best arm available now, not
     a retired one); None keeps the static all-arms max.
+
+    ``pref`` (m,) + ``costs`` (K,) condition the feel-good term on the
+    trade-off each duel was served under: with the per-row tilt
+    t_ik = pref_i * cost_k, optimism targets the *tilted* objective,
+    max_k (s_k - t_ik) - (s_opp - t_opp) — so one posterior learns a theta
+    whose argmax under any serve-time tilt is the right arm for that
+    trade-off. ``pref = 0`` rows (or either operand None) reduce exactly to
+    the untilted feel-good; the preference branch of the BTL term is
+    untouched (the observed comparison is tilt-free).
 
     Everything reads off one batched two-matmul score table (the Hadamard
     identity, see ``ccft.scores_batch``): the duelled pair's scores are
@@ -107,36 +124,49 @@ def likelihood_batch(theta: jax.Array, x: jax.Array, a1: jax.Array,
     s1 = jnp.take_along_axis(s_all, a1[:, None], axis=1)[:, 0]
     s2 = jnp.take_along_axis(s_all, a2[:, None], axis=1)[:, 0]
     z = y * (s1 - s2)
-    pref = cfg.eta * logistic_loss(z)                    # (m,)
+    pref_ll = cfg.eta * logistic_loss(z)                 # (m,)
+    if pref is not None and costs is not None:
+        t = pref[:, None] * costs[None, :]               # (m, K)
+        s_all = s_all - t
+        opp_idx = a2 if j == 1 else a1
+        t_opp = jnp.take_along_axis(t, opp_idx[:, None], axis=1)[:, 0]
+    else:
+        t_opp = 0.0
     if arm_mask is not None:
         s_all = jnp.where(arm_mask[None, :], s_all, -jnp.inf)
-    s_opp = s2 if j == 1 else s1                         # a^{3-j} score
+    s_opp = (s2 if j == 1 else s1) - t_opp               # tilted a^{3-j}
     feelgood = jnp.max(s_all, axis=-1) - s_opp
-    return pref - cfg.mu * feelgood                      # (m,)
+    return pref_ll - cfg.mu * feelgood                   # (m,)
 
 
 def _potential(theta, idx, state: FGTSState, a_emb, j, cfg: FGTSConfig,
-               arm_mask=None):
+               arm_mask=None, costs=None):
     """U(theta) = (T/m) * sum_minibatch L^j + ||theta||^2 / (2 prior_var).
 
     The data term dispatches on ``cfg.sgld_backend``: the fused Pallas
     kernel / its pure-XLA lowering carry a hand-derived custom VJP (so
     jax.grad of this potential never materializes (m, K, d)); "autodiff"
     is the legacy jax.grad-through-likelihood_batch reference.
+
+    With ``costs`` (K,) and a state that carries per-duel prefs, the
+    feel-good term is conditioned on each replayed duel's own tilt
+    (see ``likelihood_batch``).
     """
     valid = (idx < state.t).astype(jnp.float32)
     n_valid = jnp.maximum(jnp.sum(valid), 1.0)
     scale = state.t.astype(jnp.float32) / n_valid
-    backend = resolve_sgld_backend(cfg.sgld_backend)
+    pref = None if (state.pref is None or costs is None) else state.pref[idx]
+    backend = resolve_sgld_backend(cfg.sgld_backend, cfg.n_chains)
     if backend == "autodiff":
         terms = likelihood_batch(theta, state.x[idx], state.a1[idx],
                                  state.a2[idx], state.y[idx], a_emb, j, cfg,
-                                 arm_mask=arm_mask)
+                                 arm_mask=arm_mask, pref=pref, costs=costs)
         data = jnp.sum(terms * valid)
     else:
         data = sgld_potential(theta, state.x[idx], state.a1[idx],
                               state.a2[idx], state.y[idx], valid, a_emb,
-                              arm_mask, j=j, eta=cfg.eta, mu=cfg.mu,
+                              arm_mask, pref=pref, costs=costs,
+                              j=j, eta=cfg.eta, mu=cfg.mu,
                               backend=backend)
     prior = jnp.sum(theta * theta) / (2.0 * cfg.prior_var)
     return scale * data + prior
@@ -171,17 +201,20 @@ def sgld_loop(key: jax.Array, theta0: jax.Array, grad_fn, n_obs: jax.Array,
 
 def sgld_sample(key: jax.Array, theta0: jax.Array, state: FGTSState,
                 a_emb: jax.Array, j: int, cfg: FGTSConfig,
-                arm_mask: jax.Array | None = None) -> jax.Array:
+                arm_mask: jax.Array | None = None,
+                costs: jax.Array | None = None) -> jax.Array:
     """Run cfg.sgld_steps of SGLD from theta0 on the pseudo-posterior,
     with the Welling & Teh decaying step size in the round count t.
-    ``arm_mask`` restricts the feel-good max to active arms."""
+    ``arm_mask`` restricts the feel-good max to active arms; ``costs``
+    switches on the preference-conditioned feel-good (each replayed duel
+    tilted by its own stored pref)."""
     grad_fn = jax.grad(_potential)
     t = state.t.astype(jnp.float32)
     eps = decayed_step_size(cfg.sgld_eps, t, cfg.sgld_decay_t0,
                             cfg.sgld_decay_pow)
     return sgld_loop(key, theta0,
                      lambda th, idx: grad_fn(th, idx, state, a_emb, j, cfg,
-                                             arm_mask),
+                                             arm_mask, costs),
                      state.t, state.x.shape[0], cfg, eps=eps)
 
 
@@ -206,7 +239,7 @@ def select_arms(theta1: jax.Array, theta2: jax.Array, x_t: jax.Array,
 
 
 def observe(state: FGTSState, x_t: jax.Array, a1: jax.Array, a2: jax.Array,
-            y: jax.Array) -> FGTSState:
+            y: jax.Array, pref: jax.Array | float = 0.0) -> FGTSState:
     """Append (x_t, a1, a2, y) to the replay history (ring on overflow)."""
     i = state.t % state.x.shape[0]
     return state._replace(
@@ -215,6 +248,7 @@ def observe(state: FGTSState, x_t: jax.Array, a1: jax.Array, a2: jax.Array,
         a2=state.a2.at[i].set(a2),
         y=state.y.at[i].set(y),
         t=state.t + 1,
+        pref=None if state.pref is None else state.pref.at[i].set(pref),
     )
 
 
@@ -233,7 +267,8 @@ def ring_slots(t: jax.Array, capacity: int, b: int):
 
 def observe_batch(state: FGTSState, x_b: jax.Array, a1: jax.Array,
                   a2: jax.Array, y: jax.Array,
-                  mask: jax.Array | None = None) -> FGTSState:
+                  mask: jax.Array | None = None,
+                  pref: jax.Array | None = None) -> FGTSState:
     """Fold B duels into the replay ring with ONE scatter per buffer.
 
     Equivalent to B sequential ``observe`` calls, including wraparound past
@@ -252,6 +287,8 @@ def observe_batch(state: FGTSState, x_b: jax.Array, a1: jax.Array,
     """
     b = x_b.shape[0]
     cap = state.x.shape[0]
+    if pref is None:
+        pref = jnp.zeros((b,), jnp.float32)
     if mask is None:
         drop, idx = ring_slots(state.t, cap, b)
         return state._replace(
@@ -260,6 +297,8 @@ def observe_batch(state: FGTSState, x_b: jax.Array, a1: jax.Array,
             a2=state.a2.at[idx].set(a2[drop:]),
             y=state.y.at[idx].set(y[drop:]),
             t=state.t + b,
+            pref=None if state.pref is None
+            else state.pref.at[idx].set(pref[drop:]),
         )
     mask = mask.astype(bool)
     rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
@@ -272,6 +311,8 @@ def observe_batch(state: FGTSState, x_b: jax.Array, a1: jax.Array,
         a2=state.a2.at[idx].set(a2.astype(state.a2.dtype), mode="drop"),
         y=state.y.at[idx].set(y, mode="drop"),
         t=state.t + n,
+        pref=None if state.pref is None
+        else state.pref.at[idx].set(pref, mode="drop"),
     )
 
 

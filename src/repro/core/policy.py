@@ -63,6 +63,22 @@ class RoutingPolicy(NamedTuple):
     traffic quotas and its dynamic cost-governor lambda through this path;
     with ``row_mask=None, tilt=None`` it must match plain ``act``
     bit-for-bit.
+
+    ``act_pref(key, state, x, row_mask, pref)`` is the optional
+    *preference-conditioned* selection path: ``pref`` is a (B,) per-request
+    cost weight, broadcast to the effective (B, K) tilt
+    ``pref_i * cost_k`` and layered onto the policy's own cost tilt (and,
+    under the autopilot, onto the governor's global lambda — the baseline
+    the per-row preference adds to). ``pref`` is traced data: a service can
+    serve every point of the cost-quality Pareto front from one compiled
+    program and one learned state. ``pref = 0`` rows must be bit-identical
+    to ``act_masked`` with ``tilt=None``.
+
+    ``update_pref(state, x, a1, a2, y, pref, mask)`` is the matching
+    feedback path: same contract as ``update_masked`` plus the (B,) ``pref``
+    each duel was served under, so preference-aware learners (the FGTS
+    feel-good term) can condition on the trade-off the duel actually
+    optimized for.
     """
     init: Callable[[jax.Array], Any]
     act: Callable[[jax.Array, Any, jax.Array], tuple]
@@ -71,10 +87,21 @@ class RoutingPolicy(NamedTuple):
     update_delayed: Callable[..., Any] | None = None
     update_masked: Callable[..., Any] | None = None
     act_masked: Callable[..., tuple] | None = None
+    act_pref: Callable[..., tuple] | None = None
+    update_pref: Callable[..., Any] | None = None
 
 
 def staleness_weight(age: jax.Array, half_life: float) -> jax.Array:
-    """Exponential discount 2^(-age / half_life) for stale feedback."""
+    """Exponential discount 2^(-age / half_life) for stale feedback.
+
+    ``half_life <= 0`` means "no discounting" (weight 1.0 at every age) —
+    the natural reading of ``--stale-half-life 0`` — rather than the
+    NaN/Inf an unguarded division would silently feed into the posterior;
+    ``half_life = inf`` is the same no-op through the regular formula.
+    """
+    ones = jnp.ones(jnp.shape(age), jnp.float32)
+    if half_life <= 0:
+        return ones
     return jnp.exp2(-age.astype(jnp.float32) / half_life)
 
 
@@ -121,8 +148,9 @@ def select_pair(x: jax.Array, a_emb: jax.Array, theta1: jax.Array,
     s1 = ((x * theta1[None, :]) @ a_emb.T) / den
     s2 = ((x * theta2[None, :]) @ a_emb.T) / den
     if tilt is not None:
-        s1 = s1 - tilt[None, :]
-        s2 = s2 - tilt[None, :]
+        t2 = jnp.atleast_2d(tilt)        # (1, K) global or (B, K) per-row
+        s1 = s1 - t2
+        s2 = s2 - t2
     if mask is not None:
         m2 = jnp.atleast_2d(mask)
         s1 = jnp.where(m2, s1, -jnp.inf)
@@ -149,10 +177,26 @@ def merge_tilt(base: jax.Array | None,
                extra: jax.Array | None) -> jax.Array | None:
     """Stack score penalties: a policy's own cost tilt plus a caller's
     dynamic one (the autopilot governor's lambda * cost_k through
-    ``act_masked``), None-transparent on both sides."""
+    ``act_masked``, or a per-request preference tilt through ``act_pref``),
+    None-transparent on both sides.
+
+    A 1-D operand is per-arm ``(K,)``, a 2-D one per-row ``(B, K)``; mixed
+    ranks broadcast through an ``atleast_2d`` lift, so a global cost tilt
+    composes with a per-request tilt into one ``(B, K)`` penalty.
+    """
     if base is None:
         return extra
-    return base if extra is None else base + extra
+    if extra is None:
+        return base
+    if base.ndim != extra.ndim:
+        return jnp.atleast_2d(base) + jnp.atleast_2d(extra)
+    return base + extra
+
+
+def pref_tilt(pref: jax.Array, costs: jax.Array) -> jax.Array:
+    """Per-request preference tilt: ``(B,)`` cost weights x ``(K,)`` arm
+    costs -> the effective ``(B, K)`` score penalty ``pref_i * cost_k``."""
+    return pref[:, None] * costs[None, :]
 
 
 # ---------------------------------------------------------------------------
@@ -197,21 +241,25 @@ def fgts_policy(a_emb: jax.Array | ModelPool, cfg: fgts.FGTSConfig, *,
     def init(key):
         return init_fgts_state(cfg, key)
 
-    def act(key, state, x):
+    def _act(key, state, x, extra_tilt=None):
         k1, k2 = jax.random.split(key)
 
         def chains(k, theta0, j):
             ks = jax.random.split(k, cfg.n_chains)
             return jax.vmap(lambda kk, t0: fgts.sgld_sample(
-                kk, t0, state, a_emb, j, cfg))(ks, theta0)
+                kk, t0, state, a_emb, j, cfg, costs=costs))(ks, theta0)
 
         th1 = chains(k1, state.theta1, 1)            # (C, d)
         th2 = chains(k2, state.theta2, 2)
         state = state._replace(theta1=th1, theta2=th2)
         a1, a2 = select_pair(x, a_emb, th1.mean(axis=0), th2.mean(axis=0),
-                             tilt=tilt, distinct=cfg.force_distinct,
+                             tilt=merge_tilt(tilt, extra_tilt),
+                             distinct=cfg.force_distinct,
                              use_kernel=use_kernel)
         return state, a1, a2
+
+    def act(key, state, x):
+        return _act(key, state, x)
 
     def update(state, x, a1, a2, y):
         return fgts.observe_batch(state, x, a1, a2, y)
@@ -219,8 +267,19 @@ def fgts_policy(a_emb: jax.Array | ModelPool, cfg: fgts.FGTSConfig, *,
     def update_masked(state, x, a1, a2, y, mask):
         return fgts.observe_batch(state, x, a1, a2, y, mask=mask)
 
+    act_pref = update_pref = None
+    if costs is not None:
+        def act_pref(key, state, x, row_mask, pref):
+            del row_mask                       # static policy: no arm gating
+            return _act(key, state, x, pref_tilt(pref, costs))
+
+        def update_pref(state, x, a1, a2, y, pref, mask):
+            return fgts.observe_batch(state, x, a1, a2, y, mask=mask,
+                                      pref=pref)
+
     return RoutingPolicy(init, act, update, name="fgts_cdb",
-                         update_masked=update_masked)
+                         update_masked=update_masked,
+                         act_pref=act_pref, update_pref=update_pref)
 
 
 def _fgts_policy_pooled(pool0: ModelPool, cfg: fgts.FGTSConfig, *,
@@ -245,7 +304,7 @@ def _fgts_policy_pooled(pool0: ModelPool, cfg: fgts.FGTSConfig, *,
             ks = jax.random.split(k, cfg.n_chains)
             return jax.vmap(lambda kk, t0: fgts.sgld_sample(
                 kk, t0, inner, pool.a_emb, j, cfg,
-                arm_mask=pool.active))(ks, theta0)
+                arm_mask=pool.active, costs=pool.costs))(ks, theta0)
 
         th1 = chains(k1, inner.theta1, 1)            # (C, d)
         th2 = chains(k2, inner.theta2, 2)
@@ -268,6 +327,13 @@ def _fgts_policy_pooled(pool0: ModelPool, cfg: fgts.FGTSConfig, *,
         # (dynamic) tilt only touch the selection epilogue
         return _act(key, state, x, row_mask, tilt)
 
+    def act_pref(key, state, x, row_mask, pref):
+        # per-request preference: the (B,) cost weight becomes a (B, K)
+        # tilt against the live pool's costs — selection only; the pref
+        # enters the replay ring at update_pref time
+        return _act(key, state, x, row_mask,
+                    pref_tilt(pref, state.pool.costs))
+
     def update(state, x, a1, a2, y):
         return state._replace(
             inner=fgts.observe_batch(state.inner, x, a1, a2, y))
@@ -276,8 +342,14 @@ def _fgts_policy_pooled(pool0: ModelPool, cfg: fgts.FGTSConfig, *,
         return state._replace(
             inner=fgts.observe_batch(state.inner, x, a1, a2, y, mask=mask))
 
+    def update_pref(state, x, a1, a2, y, pref, mask):
+        return state._replace(
+            inner=fgts.observe_batch(state.inner, x, a1, a2, y, mask=mask,
+                                     pref=pref))
+
     return RoutingPolicy(init, act, update, name="fgts_cdb",
-                         update_masked=update_masked, act_masked=act_masked)
+                         update_masked=update_masked, act_masked=act_masked,
+                         act_pref=act_pref, update_pref=update_pref)
 
 
 def vanilla_ts_policy(a_emb: jax.Array, cfg: fgts.FGTSConfig,

@@ -21,8 +21,9 @@ with the ``REPRO_PALLAS_INTERPRET`` env var ("1"/"0").
 ``dueling_select`` is the batched argmax epilogue: same score math, but the
 kernel reduces each (BB, K) tile directly to the routed pair (a1, a2) per
 query — K stays whole in VMEM, so no (J,B,K) score tensor ever reaches HBM.
-It also applies the serve-time cost tilt and the paper's force-distinct
-selection inside the kernel.
+It also applies the serve-time cost tilt — a global (K,) penalty or a
+per-request (B,K) preference tilt, row-broadcast exactly like the activity
+mask — and the paper's force-distinct selection inside the kernel.
 """
 from __future__ import annotations
 
@@ -141,16 +142,17 @@ def _select_kernel(x_ref, a_ref, th_ref, tilt_ref, mask_ref, a1_ref, a2_ref,
 
     K lives whole in VMEM; padded arms AND masked-out (inactive) arms are
     set to -inf so they can never win the argmax. ``tilt`` is the
-    pre-multiplied cost penalty (cost_tilt * cost_k), subtracted from both
-    samples' scores; ``mask`` is the int32 arm-activity mask, one row per
-    query (dynamic model pools flip whole columns at hot add/remove; the
-    autopilot's candidate-quota gate flips per-row slices — both without
-    retracing).
+    pre-multiplied score penalty, one row per query — a global cost tilt
+    (cost_tilt * cost_k broadcast over rows) or a per-request preference
+    tilt (pref_b * cost_k), subtracted from both samples' scores; ``mask``
+    is the int32 arm-activity mask, one row per query (dynamic model pools
+    flip whole columns at hot add/remove; the autopilot's candidate-quota
+    gate flips per-row slices — both without retracing).
     """
     x = x_ref[...].astype(jnp.float32)              # (BB, d)
     a = a_ref[...].astype(jnp.float32)              # (K_pad, d)
     th = th_ref[...].astype(jnp.float32)            # (2, d)
-    tilt = tilt_ref[...].astype(jnp.float32)        # (K_pad,)
+    tilt = tilt_ref[...].astype(jnp.float32)        # (BB, K_pad)
     mask = mask_ref[...]                            # (BB, K_pad) int32
     den = jax.lax.dot_general(x * x, a * a, (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.float32)
@@ -162,7 +164,7 @@ def _select_kernel(x_ref, a_ref, th_ref, tilt_ref, mask_ref, a1_ref, a2_ref,
         num = jax.lax.dot_general(x * th[j][None, :], a,
                                   (((1,), (1,)), ((), ())),
                                   preferred_element_type=jnp.float32)
-        return jnp.where(valid, num / den - tilt[None, :], -jnp.inf)
+        return jnp.where(valid, num / den - tilt, -jnp.inf)
 
     a1 = jnp.argmax(scores(0), axis=-1).astype(jnp.int32)       # (BB,)
     s2 = scores(1)
@@ -182,27 +184,32 @@ def dueling_select(x: jax.Array, a: jax.Array, thetas: jax.Array, *,
                    interpret: bool | None = None):
     """Route a batch: argmax_k of both samples' (cost-tilted) scores.
 
-    x: (B,d); a: (K,d); thetas: (2,d); tilt: (K,) score penalty or None;
-    mask: arm-activity mask or None (None == all arms active). A (K,) bool
-    mask applies to every query (dynamic model pools pass their ``active``
-    mask so retired / not-yet-arrived arms can never win the argmax); a
-    (B,K) bool mask restricts arms *per query* (the autopilot's candidate
-    traffic quota gates candidate columns row by row). With a single
-    surviving arm a ``distinct`` pair degenerates to (k, k).
-    Returns (a1, a2) int32 arrays of shape (B,).
+    x: (B,d); a: (K,d); thetas: (2,d); tilt: score penalty or None;
+    mask: arm-activity mask or None (None == all arms active). Like the
+    mask, the tilt operand is row-broadcast: a (K,) tilt (the global
+    serve-time cost penalty cost_tilt * cost_k) applies to every query,
+    while a (B,K) tilt carries *per-request* penalties (preference-
+    conditioned routing: pref_b * cost_k bends each row's trade-off
+    independently). A (K,) bool mask applies to every query (dynamic model
+    pools pass their ``active`` mask so retired / not-yet-arrived arms can
+    never win the argmax); a (B,K) bool mask restricts arms *per query*
+    (the autopilot's candidate traffic quota gates candidate columns row
+    by row). With a single surviving arm a ``distinct`` pair degenerates
+    to (k, k). Returns (a1, a2) int32 arrays of shape (B,).
     """
     interpret = _resolve_interpret(interpret)
     b, d = x.shape
     k = a.shape[0]
     assert thetas.shape[0] == 2, "dueling_select pairs exactly two thetas"
-    if tilt is None:
-        tilt = jnp.zeros((k,), jnp.float32)
+    tilt_i = jnp.zeros((1, k), jnp.float32) if tilt is None \
+        else jnp.atleast_2d(tilt.astype(jnp.float32))
+    tilt_i = jnp.broadcast_to(tilt_i, (b, k))
     mask_i = jnp.ones((1, k), jnp.int32) if mask is None \
         else jnp.atleast_2d(mask.astype(jnp.int32))
     mask_i = jnp.broadcast_to(mask_i, (b, k))
     if k > MAX_K_FUSED:
         s = dueling_score(x, a, thetas, interpret=interpret)
-        s = s - tilt[None, None, :]
+        s = s - tilt_i[None, :, :]
         s = jnp.where(mask_i[None, :, :] > 0, s, -jnp.inf)
         a1 = jnp.argmax(s[0], axis=-1).astype(jnp.int32)
         s2 = s[1]
@@ -217,10 +224,11 @@ def dueling_select(x: jax.Array, a: jax.Array, thetas: jax.Array, *,
     k_pad = max(8, k)
     if b_pad != b:
         x = jnp.pad(x, ((0, b_pad - b), (0, 0)))
+        tilt_i = jnp.pad(tilt_i, ((0, b_pad - b), (0, 0)))
         mask_i = jnp.pad(mask_i, ((0, b_pad - b), (0, 0)))
     if k_pad != k:
         a = jnp.pad(a, ((0, k_pad - k), (0, 0)))
-        tilt = jnp.pad(tilt, (0, k_pad - k))
+        tilt_i = jnp.pad(tilt_i, ((0, 0), (0, k_pad - k)))
         mask_i = jnp.pad(mask_i, ((0, 0), (0, k_pad - k)))
 
     a1, a2 = pl.pallas_call(
@@ -230,7 +238,7 @@ def dueling_select(x: jax.Array, a: jax.Array, thetas: jax.Array, *,
             pl.BlockSpec((bb, d), lambda bi: (bi, 0)),
             pl.BlockSpec((k_pad, d), lambda bi: (0, 0)),
             pl.BlockSpec((2, d), lambda bi: (0, 0)),
-            pl.BlockSpec((k_pad,), lambda bi: (0,)),
+            pl.BlockSpec((bb, k_pad), lambda bi: (bi, 0)),
             pl.BlockSpec((bb, k_pad), lambda bi: (bi, 0)),
         ],
         out_specs=[pl.BlockSpec((bb,), lambda bi: (bi,)),
@@ -238,5 +246,5 @@ def dueling_select(x: jax.Array, a: jax.Array, thetas: jax.Array, *,
         out_shape=[jax.ShapeDtypeStruct((b_pad,), jnp.int32),
                    jax.ShapeDtypeStruct((b_pad,), jnp.int32)],
         interpret=interpret,
-    )(x, a, thetas, tilt, mask_i)
+    )(x, a, thetas, tilt_i, mask_i)
     return a1[:b], a2[:b]

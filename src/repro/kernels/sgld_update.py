@@ -5,9 +5,11 @@ each SGLD step evaluates (the gradient of) the minibatch potential
 
     U_data(theta) = sum_i valid_i * L^j(theta, x_i, a1_i, a2_i, y_i)
     L^j = eta * softplus(-y <theta, phi1 - phi2>)
-        - mu  * (max_{k active} s_k - s_opp)          (feel-good term)
+        - mu  * (max_{k active} (s_k - t_ik) - (s_opp - t_opp))   (feel-good)
 
-with phi(x,a) = (x*a)/||x*a|| and s_k = <theta, phi(x, a_k)>. The naive
+with phi(x,a) = (x*a)/||x*a||, s_k = <theta, phi(x, a_k)> and the optional
+per-row preference tilt t_ik = pref_i * cost_k (zero when preference
+conditioning is off — then the term is the plain feel-good max). The naive
 evaluation materializes an (m, K, d) feature tensor per gradient step. This
 kernel fuses the whole minibatch term into two MXU matmuls per tile via the
 same Hadamard identity the serving kernel uses:
@@ -69,15 +71,18 @@ DEFAULT_BM = 128
 SGLD_BACKENDS = ("auto", "fused", "xla", "autodiff")
 
 
-def resolve_sgld_backend(backend: str = "auto") -> str:
+def resolve_sgld_backend(backend: str = "auto", chains: int = 1) -> str:
     """Resolve an SGLD backend name to one of fused / xla / autodiff.
 
     "auto" picks the fused Pallas kernel when a compiled Pallas backend is
-    available (``default_interpret()`` False) and the pure-XLA lowering
-    otherwise; ``REPRO_SGLD_BACKEND`` overrides the auto choice. Explicit
-    names pass through untouched (tests pin them). Like every kernel knob
-    here the env var is read at trace time: flipping it mid-process does
-    not retrace already-compiled programs.
+    available (``default_interpret()`` False). On host the interpret
+    lowering's grid emulation serializes poorly under ``vmap`` over chains
+    (BENCH_6: ~1.8x slower than the autodiff reference at chains=8), so
+    multi-chain host configs resolve to "autodiff" and single-chain ones to
+    "xla". ``REPRO_SGLD_BACKEND`` overrides the auto choice; explicit names
+    pass through untouched (tests pin them). ``chains`` is a static config
+    field and the env var is read at trace time, so the choice is fixed per
+    trace — flipping either mid-process never retraces compiled programs.
     """
     if backend not in SGLD_BACKENDS:
         raise ValueError(f"sgld_backend {backend!r} not in {SGLD_BACKENDS}")
@@ -89,7 +94,9 @@ def resolve_sgld_backend(backend: str = "auto") -> str:
             raise ValueError(f"REPRO_SGLD_BACKEND={env!r} not in "
                              f"('fused', 'xla', 'autodiff')")
         return env
-    return "xla" if default_interpret() else "fused"
+    if not default_interpret():
+        return "fused"
+    return "autodiff" if chains > 1 else "xla"
 
 
 class _SgldSpec(NamedTuple):
@@ -118,9 +125,12 @@ def _tile_scores(theta, x, a):
     return num / den, den
 
 
-def _tile_terms(mode, theta, x, a1, a2, y, duel, valid, a, mask, *,
-                j, eta, mu, k_valid):
-    """Summed potential contribution of one (bm,) row tile."""
+def _tile_terms(mode, theta, x, a1, a2, y, duel, valid, pref, a, mask,
+                costs, *, j, eta, mu, k_valid):
+    """Summed potential contribution of one (bm,) row tile. ``pref`` (bm,)
+    and ``costs`` (Kp,) carry the per-row feel-good tilt t_ik = pref_i *
+    cost_k (all-zero when preference conditioning is off — a bitwise no-op
+    since the tilt only ever *subtracts*)."""
     s, _ = _tile_scores(theta, x, a)
     cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     oh1 = cols == a1[:, None]
@@ -128,23 +138,28 @@ def _tile_terms(mode, theta, x, a1, a2, y, duel, valid, a, mask, *,
     s1 = jnp.sum(jnp.where(oh1, s, 0.0), axis=1)     # exact one-hot gather
     s2 = jnp.sum(jnp.where(oh2, s, 0.0), axis=1)
     z = y * (s1 - s2)
-    pref = eta * jax.nn.softplus(-z)
+    pref_ll = eta * jax.nn.softplus(-z)
     if mode == "fgts":
+        t = pref[:, None] * costs[None, :]           # (bm, Kp) tilt
         live = (cols < k_valid) & (mask[None, :] > 0)
-        smax = jnp.max(jnp.where(live, s, -jnp.inf), axis=1)
-        opp = s2 if j == 1 else s1
-        terms = pref - mu * (smax - opp)
+        smax = jnp.max(jnp.where(live, s - t, -jnp.inf), axis=1)
+        t_opp = jnp.sum(jnp.where(oh2 if j == 1 else oh1, t, 0.0), axis=1)
+        opp = (s2 if j == 1 else s1) - t_opp
+        terms = pref_ll - mu * (smax - opp)
     else:                                            # mixed duel + click rows
         click = eta * jnp.where(y > 0.5, jax.nn.softplus(-s1),
                                 jax.nn.softplus(s1))
-        terms = jnp.where(duel > 0, pref, click)
+        terms = jnp.where(duel > 0, pref_ll, click)
     return jnp.sum(terms * valid)
 
 
-def _tile_grad(mode, theta, x, a1, a2, y, duel, valid, a, mask, g, *,
-               j, eta, mu, k_valid):
+def _tile_grad(mode, theta, x, a1, a2, y, duel, valid, pref, a, mask,
+               costs, g, *, j, eta, mu, k_valid):
     """d(tile potential)/dtheta: weights W on the score matrix, then
-    dtheta = g * sum_i x_i * ((W_i / den_i) @ A)."""
+    dtheta = g * sum_i x_i * ((W_i / den_i) @ A). The tilt t_ik is
+    theta-independent, so it only moves *which* column wins the feel-good
+    max (the argmax one-hot is taken on the tilted scores); the weight
+    values are unchanged."""
     s, den = _tile_scores(theta, x, a)
     cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     oh1b = cols == a1[:, None]
@@ -157,8 +172,9 @@ def _tile_grad(mode, theta, x, a1, a2, y, duel, valid, a, mask, g, *,
     oh2 = oh2b.astype(jnp.float32)
     if mode == "fgts":
         w = dz[:, None] * (oh1 - oh2)
+        t = pref[:, None] * costs[None, :]
         live = (cols < k_valid) & (mask[None, :] > 0)
-        sm = jnp.where(live, s, -jnp.inf)
+        sm = jnp.where(live, s - t, -jnp.inf)
         smax = jnp.max(sm, axis=1)
         # tie-split argmax one-hot: jnp.max's VJP spreads the cotangent
         # evenly over tied maxima, so the hand gradient must too
@@ -181,19 +197,21 @@ def _tile_grad(mode, theta, x, a1, a2, y, duel, valid, a, mask, g, *,
 # Pallas kernels + drivers (forward and backward)
 # ---------------------------------------------------------------------------
 
-def _fwd_kernel(th_ref, x_ref, a1_ref, a2_ref, y_ref, du_ref, v_ref, a_ref,
-                m_ref, o_ref, *, mode, j, eta, mu, k_valid):
+def _fwd_kernel(th_ref, x_ref, a1_ref, a2_ref, y_ref, du_ref, v_ref, p_ref,
+                a_ref, m_ref, c_ref, o_ref, *, mode, j, eta, mu, k_valid):
     o_ref[0, 0] = _tile_terms(
         mode, th_ref[...], x_ref[...], a1_ref[...], a2_ref[...], y_ref[...],
-        du_ref[...], v_ref[...], a_ref[...], m_ref[...],
-        j=j, eta=eta, mu=mu, k_valid=k_valid)
+        du_ref[...], v_ref[...], p_ref[...], a_ref[...], m_ref[...],
+        c_ref[...], j=j, eta=eta, mu=mu, k_valid=k_valid)
 
 
 def _bwd_kernel(g_ref, th_ref, x_ref, a1_ref, a2_ref, y_ref, du_ref, v_ref,
-                a_ref, m_ref, o_ref, *, mode, j, eta, mu, k_valid):
+                p_ref, a_ref, m_ref, c_ref, o_ref, *, mode, j, eta, mu,
+                k_valid):
     o_ref[0, :] = _tile_grad(
         mode, th_ref[...], x_ref[...], a1_ref[...], a2_ref[...], y_ref[...],
-        du_ref[...], v_ref[...], a_ref[...], m_ref[...], g_ref[0, 0],
+        du_ref[...], v_ref[...], p_ref[...], a_ref[...], m_ref[...],
+        c_ref[...], g_ref[0, 0],
         j=j, eta=eta, mu=mu, k_valid=k_valid)
 
 
@@ -207,8 +225,10 @@ def _row_specs(spec, d, kp):
         pl.BlockSpec((bm,), lambda i: (i,)),         # y
         pl.BlockSpec((bm,), lambda i: (i,)),         # is_duel
         pl.BlockSpec((bm,), lambda i: (i,)),         # valid
+        pl.BlockSpec((bm,), lambda i: (i,)),         # pref (feel-good tilt)
         pl.BlockSpec((kp, d), lambda i: (0, 0)),     # a_emb
         pl.BlockSpec((kp,), lambda i: (0,)),         # arm mask
+        pl.BlockSpec((kp,), lambda i: (0,)),         # arm costs
     ]
 
 
@@ -217,7 +237,7 @@ def _statics(spec):
                 k_valid=spec.k_valid)
 
 
-def _forward(spec, theta, x, a1, a2, y, du, valid, a_emb, mask):
+def _forward(spec, theta, x, a1, a2, y, du, valid, pref, a_emb, mask, costs):
     d = x.shape[1]
     kp = a_emb.shape[0]
     n = x.shape[0] // spec.bm
@@ -228,11 +248,12 @@ def _forward(spec, theta, x, a1, a2, y, du, valid, a_emb, mask):
         out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
         interpret=spec.interpret,
-    )(theta, x, a1, a2, y, du, valid, a_emb, mask)
+    )(theta, x, a1, a2, y, du, valid, pref, a_emb, mask, costs)
     return jnp.sum(partials)
 
 
-def _backward(spec, g, theta, x, a1, a2, y, du, valid, a_emb, mask):
+def _backward(spec, g, theta, x, a1, a2, y, du, valid, pref, a_emb, mask,
+              costs):
     d = x.shape[1]
     kp = a_emb.shape[0]
     n = x.shape[0] // spec.bm
@@ -245,29 +266,35 @@ def _backward(spec, g, theta, x, a1, a2, y, du, valid, a_emb, mask):
         out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
         interpret=spec.interpret,
-    )(g2, theta, x, a1, a2, y, du, valid, a_emb, mask)
+    )(g2, theta, x, a1, a2, y, du, valid, pref, a_emb, mask, costs)
     return jnp.sum(partials, axis=0)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _potential_sum(spec, theta, x, a1, a2, y, du, valid, a_emb, mask):
-    return _forward(spec, theta, x, a1, a2, y, du, valid, a_emb, mask)
+def _potential_sum(spec, theta, x, a1, a2, y, du, valid, pref, a_emb, mask,
+                   costs):
+    return _forward(spec, theta, x, a1, a2, y, du, valid, pref, a_emb, mask,
+                    costs)
 
 
-def _potential_sum_fwd(spec, theta, x, a1, a2, y, du, valid, a_emb, mask):
-    out = _forward(spec, theta, x, a1, a2, y, du, valid, a_emb, mask)
-    return out, (theta, x, a1, a2, y, du, valid, a_emb, mask)
+def _potential_sum_fwd(spec, theta, x, a1, a2, y, du, valid, pref, a_emb,
+                       mask, costs):
+    out = _forward(spec, theta, x, a1, a2, y, du, valid, pref, a_emb, mask,
+                   costs)
+    return out, (theta, x, a1, a2, y, du, valid, pref, a_emb, mask, costs)
 
 
 def _potential_sum_bwd(spec, res, g):
-    theta, x, a1, a2, y, du, valid, a_emb, mask = res
-    dtheta = _backward(spec, g, theta, x, a1, a2, y, du, valid, a_emb, mask)
+    theta, x, a1, a2, y, du, valid, pref, a_emb, mask, costs = res
+    dtheta = _backward(spec, g, theta, x, a1, a2, y, du, valid, pref, a_emb,
+                       mask, costs)
     f0 = lambda v: np.zeros(jnp.shape(v), dtype=jax.dtypes.float0)
     # only theta's cotangent is exact — SGLD differentiates w.r.t. theta
     # alone; x / y / a_emb get symbolic zeros, int operands float0
     return (dtheta, jnp.zeros_like(x), f0(a1), f0(a2), jnp.zeros_like(y),
             jnp.zeros_like(du), jnp.zeros_like(valid),
-            jnp.zeros_like(a_emb), f0(mask))
+            jnp.zeros_like(pref), jnp.zeros_like(a_emb), f0(mask),
+            jnp.zeros_like(costs))
 
 
 _potential_sum.defvjp(_potential_sum_fwd, _potential_sum_bwd)
@@ -290,17 +317,22 @@ def _prep_rows(bm, x, *rows):
     return (bm, x) + rows
 
 
-def _prep_arms(a_emb, arm_mask):
+def _prep_arms(a_emb, arm_mask, costs=None):
     """Pad the arm table to >= 8 columns; the kernel masks padding via
-    k_valid, so padded columns can never win the feel-good max."""
+    k_valid, so padded columns can never win the feel-good max. ``costs``
+    (the feel-good tilt's arm operand) defaults to zeros — a bitwise no-op
+    tilt — and is zero-padded like the table."""
     k = a_emb.shape[0]
     kp = max(8, k)
     mask = jnp.ones((k,), jnp.int32) if arm_mask is None \
         else arm_mask.astype(jnp.int32)
+    costs = jnp.zeros((k,), jnp.float32) if costs is None \
+        else costs.astype(jnp.float32)
     if kp != k:
         a_emb = jnp.pad(a_emb, ((0, kp - k), (0, 0)))
         mask = jnp.pad(mask, (0, kp - k))
-    return a_emb, mask, k
+        costs = jnp.pad(costs, (0, kp - k))
+    return a_emb, mask, costs, k
 
 
 def _resolve_kernel_mode(backend: str, k: int,
@@ -319,6 +351,8 @@ def _resolve_kernel_mode(backend: str, k: int,
 def sgld_potential(theta: jax.Array, x: jax.Array, a1: jax.Array,
                    a2: jax.Array, y: jax.Array, valid: jax.Array,
                    a_emb: jax.Array, arm_mask: jax.Array | None = None, *,
+                   pref: jax.Array | None = None,
+                   costs: jax.Array | None = None,
                    j: int = 1, eta: float = 1.0, mu: float = 0.2,
                    backend: str = "fused", bm: int = DEFAULT_BM,
                    interpret: bool | None = None) -> jax.Array:
@@ -326,20 +360,26 @@ def sgld_potential(theta: jax.Array, x: jax.Array, a1: jax.Array,
 
     theta: (d,); x: (m, d); a1/a2: (m,) int32; y/valid: (m,); a_emb: (K, d);
     arm_mask: (K,) bool restricting the feel-good max to active arms (None =
-    all arms). Returns a float32 scalar; ``jax.grad`` w.r.t. theta runs the
-    hand-derived custom-VJP backward. ``backend`` is "fused" (compiled
-    Mosaic where available) or "xla" (the bit-identical interpret lowering);
-    K > MAX_K_FUSED degrades fused to the lowering. ``vmap`` over theta
-    gives per-chain potentials.
+    all arms). ``pref`` (m,) + ``costs`` (K,) condition the feel-good term
+    on each row's own preference tilt t_ik = pref_i * cost_k (either None =
+    zeros, bit-identical to the untilted term). Returns a float32 scalar;
+    ``jax.grad`` w.r.t. theta runs the hand-derived custom-VJP backward.
+    ``backend`` is "fused" (compiled Mosaic where available) or "xla" (the
+    bit-identical interpret lowering); K > MAX_K_FUSED degrades fused to
+    the lowering. ``vmap`` over theta gives per-chain potentials.
     """
     interpret = _resolve_kernel_mode(backend, a_emb.shape[0], interpret)
-    ap, mask, k = _prep_arms(a_emb, arm_mask)
-    bm, xp, a1p, a2p, yp, vp = _prep_rows(
+    ap, mask, cp, k = _prep_arms(a_emb, arm_mask, costs)
+    if pref is None:
+        pref = jnp.zeros(x.shape[:1], jnp.float32)
+    bm, xp, a1p, a2p, yp, vp, pp = _prep_rows(
         bm, x, a1.astype(jnp.int32), a2.astype(jnp.int32),
-        y.astype(jnp.float32), valid.astype(jnp.float32))
+        y.astype(jnp.float32), valid.astype(jnp.float32),
+        pref.astype(jnp.float32))
     du = jnp.zeros_like(yp)                         # unused in fgts mode
     spec = _SgldSpec("fgts", j, float(eta), float(mu), bm, interpret, k)
-    return _potential_sum(spec, theta, xp, a1p, a2p, yp, du, vp, ap, mask)
+    return _potential_sum(spec, theta, xp, a1p, a2p, yp, du, vp, pp, ap,
+                          mask, cp)
 
 
 def sgld_mixed_potential(theta: jax.Array, x: jax.Array, a1: jax.Array,
@@ -355,10 +395,12 @@ def sgld_mixed_potential(theta: jax.Array, x: jax.Array, a1: jax.Array,
     custom-VJP structure as ``sgld_potential``.
     """
     interpret = _resolve_kernel_mode(backend, a_emb.shape[0], interpret)
-    ap, mask, k = _prep_arms(a_emb, None)
+    ap, mask, cp, k = _prep_arms(a_emb, None)
     bm, xp, a1p, a2p, yp, dup, vp = _prep_rows(
         bm, x, a1.astype(jnp.int32), a2.astype(jnp.int32),
         y.astype(jnp.float32), is_duel.astype(jnp.float32),
         valid.astype(jnp.float32))
+    pp = jnp.zeros_like(yp)                         # no feel-good, no tilt
     spec = _SgldSpec("mixed", 0, float(eta), 0.0, bm, interpret, k)
-    return _potential_sum(spec, theta, xp, a1p, a2p, yp, dup, vp, ap, mask)
+    return _potential_sum(spec, theta, xp, a1p, a2p, yp, dup, vp, pp, ap,
+                          mask, cp)

@@ -150,7 +150,37 @@ def main():
                          "duel cost ($/1k tok) to hold via the lambda tilt")
     ap.add_argument("--autopilot-every", type=int, default=4,
                     help="rounds between autopilot control ticks")
+    ap.add_argument("--pref-dist", default=None, metavar="SPEC",
+                    help="per-request preference tilts: 'grid:V1,V2,...' "
+                         "cycles the listed cost weights over batch rows, "
+                         "'uniform:LO,HI' samples one per request per round. "
+                         "Row i routes under the extra utility tilt "
+                         "pref_i*cost_k — one shared posterior serves every "
+                         "trade-off (needs a preference-aware policy; all "
+                         "built-ins qualify when the pool is dynamic)")
     args = ap.parse_args()
+
+    pref_sampler = None
+    if args.pref_dist:
+        kind, _, body = args.pref_dist.partition(":")
+        try:
+            vals = [float(v) for v in body.split(",")] if body else []
+        except ValueError:
+            vals = None
+        if kind == "grid" and vals:
+            grid = jnp.asarray(vals, jnp.float32)
+
+            def pref_sampler(k, r, b):
+                return grid[(r * b + jnp.arange(b)) % grid.shape[0]]
+        elif kind == "uniform" and vals is not None and len(vals) == 2:
+            lo, hi = vals
+
+            def pref_sampler(k, r, b):
+                return jax.random.uniform(k, (b,), minval=lo, maxval=hi)
+        else:
+            raise SystemExit(
+                f"--pref-dist {args.pref_dist!r} must be 'grid:V1,V2,...' "
+                f"or 'uniform:LO,HI'")
 
     events = []
     if args.pool_schedule:
@@ -226,6 +256,7 @@ def main():
 
     cc = CorpusConfig(n_categories=n_cats, seq_len=32)
     regrets = []
+    pref_log, duel_cost_log = [], []   # realized-cost readout per tilt
     in_flight = []            # (due_round, tickets, y) — votes on their way
     # slot -> latent-skills row (arrivals may land in any freed slot)
     row_of_slot = np.arange(n_models) % skills.shape[0]
@@ -261,7 +292,13 @@ def main():
         cats = jax.random.randint(kc, (args.batch,), 0, n_cats)
         toks, mask = sample_queries(kq, cats, cc)
         x = svc.embed(toks, mask)
-        a1, a2, tickets = svc.route_batch(x)
+        prefs = None if pref_sampler is None else pref_sampler(
+            jax.random.fold_in(ks[5], r), r, args.batch)
+        a1, a2, tickets = svc.route_batch(x, prefs=prefs)
+        if prefs is not None:
+            pref_log.append(np.asarray(prefs))
+            duel_cost_log.append(np.asarray(
+                0.5 * (svc.costs[a1] + svc.costs[a2])))
         if args.with_generation:
             for b in range(min(args.batch, 2)):   # decode a couple per round
                 for arm in (int(a1[b]), int(a2[b])):
@@ -315,6 +352,22 @@ def main():
     print(f"[serve] regret early={early:.4f} late={late:.4f} "
           f"(adaptive: {'yes' if late < early else 'no'}) "
           f"unresolved={svc.pending_count()}")
+    if pref_log:
+        # realized duel cost bucketed by the pref each request carried:
+        # higher tilts should buy cheaper duels — the cost-quality knob
+        # working end to end from one posterior
+        pv = np.concatenate(pref_log)
+        cv = np.concatenate(duel_cost_log)
+        edges = np.unique(np.round(pv, 6))
+        if edges.size > 8:                     # continuous dist: quartiles
+            edges = np.quantile(pv, [0.0, 0.25, 0.5, 0.75])
+        parts = []
+        for i, lo in enumerate(edges):
+            hi = edges[i + 1] if i + 1 < edges.size else np.inf
+            sel = (pv >= lo) & (pv < hi) if edges.size > 1 else pv >= lo
+            if sel.any():
+                parts.append(f"pref>={lo:g}: ${cv[sel].mean():.3f}")
+        print(f"[serve] realized duel cost by pref  " + "  ".join(parts))
     if args.autopilot:
         st = svc.autopilot_status()
         names = [p.name if p is not None else "-" for p in svc.pool]

@@ -27,7 +27,15 @@ from repro.core.fgts import ring_slots
 
 
 class PendingDuels(NamedTuple):
-    """Ring buffer of issued-but-unresolved duels (slot = ticket % C)."""
+    """Ring buffer of issued-but-unresolved duels (slot = ticket % C).
+
+    Tickets and ticks are int32 and *wrap*: all arithmetic on them
+    (slot addressing, ages) is modular, so the buffer survives crossing
+    2^31 issued tickets / service ticks (see ``resolve``). Slot addressing
+    stays collision-free across the wrap when the capacity divides 2^32 —
+    every capacity this repo constructs is a power of two
+    (``RouterService`` rounds up).
+    """
     x: jax.Array            # (C, d) float32 — query features at issue time
     a1: jax.Array           # (C,)  int32   — routed pair
     a2: jax.Array           # (C,)  int32
@@ -35,6 +43,7 @@ class PendingDuels(NamedTuple):
     issued_at: jax.Array    # (C,)  int32   — service tick at issue
     valid: jax.Array        # (C,)  bool    — slot holds an unresolved duel
     next_ticket: jax.Array  # ()    int32   — tickets issued so far
+    pref: jax.Array | None = None  # (C,) f32 — per-duel preference weight
 
 
 class ResolvedDuels(NamedTuple):
@@ -45,8 +54,9 @@ class ResolvedDuels(NamedTuple):
     a1: jax.Array           # (B,)
     a2: jax.Array           # (B,)
     y: jax.Array            # (B,)  caller's votes, passed through
-    age: jax.Array          # (B,)  int32 — now - issued_at
+    age: jax.Array          # (B,)  int32 — now - issued_at (modular)
     ok: jax.Array           # (B,)  bool
+    pref: jax.Array | None = None  # (B,) f32 — pref the duel was served under
 
 
 def init_pending(capacity: int, dim: int) -> PendingDuels:
@@ -59,11 +69,13 @@ def init_pending(capacity: int, dim: int) -> PendingDuels:
         issued_at=z((capacity,), jnp.int32),
         valid=z((capacity,), bool),
         next_ticket=z((), jnp.int32),
+        pref=z((capacity,), jnp.float32),
     )
 
 
 def enqueue(q: PendingDuels, x: jax.Array, a1: jax.Array, a2: jax.Array,
-            now: jax.Array) -> tuple[PendingDuels, jax.Array]:
+            now: jax.Array,
+            pref: jax.Array | None = None) -> tuple[PendingDuels, jax.Array]:
     """Issue a batch of B duels: one scatter per field, tickets returned.
 
     Slots are ``ticket % capacity`` so a full buffer silently overwrites the
@@ -71,13 +83,17 @@ def enqueue(q: PendingDuels, x: jax.Array, a1: jax.Array, a2: jax.Array,
     overwrite). When B itself exceeds the capacity only the last C of the
     batch can survive; the earlier tickets are issued already-expired
     (mirrors ``fgts.ring_slots``, which also keeps the scatter indices
-    unique).
+    unique). ``pref`` records the per-duel preference the routing decision
+    was served under (None = zeros, the untilted default), so the resolved
+    batch can feed preference-conditioned updates.
     """
     b = x.shape[0]
     cap = q.x.shape[0]
     tickets = q.next_ticket + jnp.arange(b, dtype=jnp.int32)
     drop, idx = ring_slots(q.next_ticket, cap, b)
     now = jnp.asarray(now, jnp.int32)
+    if pref is None:
+        pref = jnp.zeros((b,), jnp.float32)
     return q._replace(
         x=q.x.at[idx].set(x[drop:]),
         a1=q.a1.at[idx].set(a1[drop:].astype(jnp.int32)),
@@ -87,6 +103,8 @@ def enqueue(q: PendingDuels, x: jax.Array, a1: jax.Array, a2: jax.Array,
                                                    jnp.int32)),
         valid=q.valid.at[idx].set(True),
         next_ticket=q.next_ticket + b,
+        pref=None if q.pref is None
+        else q.pref.at[idx].set(pref[drop:].astype(jnp.float32)),
     ), tickets
 
 
@@ -109,25 +127,34 @@ def resolve(q: PendingDuels, tickets: jax.Array, y: jax.Array,
     gets the dedup for free inside the jitted program. (Two *different*
     tickets can collide on a slot too, but at most one of them can match the
     stored id, so first-wins-per-slot is exactly first-wins-per-ticket.)
+
+    Ages are wraparound-safe: ``now - issued_at`` in int32 wraps modularly,
+    so a duel issued just before the 2^31 tick boundary still ages normally
+    across it. A *negative* wrapped age means the duel is older than 2^31
+    ticks (unrepresentable) — such rows never validate instead of
+    validating forever, which is the pre-fix int32-overflow bug.
     """
     cap = q.x.shape[0]
     tickets = jnp.asarray(tickets, jnp.int32)
     now = jnp.asarray(now, jnp.int32)
     slots = tickets % cap
-    age = now - q.issued_at[slots]
+    age = now - q.issued_at[slots]          # int32: wraps modularly
     matched = q.valid[slots] & (q.ticket[slots] == tickets)
     rows = jnp.arange(tickets.shape[0], dtype=jnp.int32)
     sentinel = jnp.int32(tickets.shape[0])
     first = jnp.full((cap,), sentinel, jnp.int32).at[slots].min(
         jnp.where(matched, rows, sentinel))
     matched = matched & (first[slots] == rows)
-    ok = matched if max_age is None else matched & (age <= max_age)
+    ok = matched & (age >= 0)               # negative = older than 2^31
+    if max_age is not None:
+        ok = ok & (age <= max_age)
     # Commutative scatter-max marks consumed slots (duplicate-slot writes —
     # an old ticket colliding with the live one — stay order-independent).
     hit = jnp.zeros((cap,), jnp.int32).at[slots].max(
         matched.astype(jnp.int32))
     batch = ResolvedDuels(x=q.x[slots], a1=q.a1[slots], a2=q.a2[slots],
-                          y=jnp.asarray(y), age=age, ok=ok)
+                          y=jnp.asarray(y), age=age, ok=ok,
+                          pref=None if q.pref is None else q.pref[slots])
     return q._replace(valid=q.valid & (hit == 0)), batch
 
 
@@ -135,9 +162,13 @@ def expire(q: PendingDuels, now: jax.Array,
            max_age: int) -> tuple[PendingDuels, jax.Array]:
     """Drop every pending duel older than ``max_age`` ticks; returns the
     count dropped (deployments with a feedback SLA run this periodically —
-    overwrite-expiry alone only kicks in at capacity pressure)."""
+    overwrite-expiry alone only kicks in at capacity pressure). The age is
+    the same modular int32 difference ``resolve`` uses: a negative wrapped
+    age (duel older than 2^31 ticks) expires too, instead of surviving
+    every sweep."""
     now = jnp.asarray(now, jnp.int32)
-    keep = (now - q.issued_at) <= max_age
+    age = now - q.issued_at                 # int32: wraps modularly
+    keep = (age >= 0) & (age <= max_age)
     dropped = jnp.sum(q.valid & ~keep)
     return q._replace(valid=q.valid & keep), dropped
 

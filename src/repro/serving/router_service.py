@@ -57,6 +57,18 @@ def _next_pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
 
 
+def _tick32(tick: int) -> jax.Array:
+    """The service clock as a wrapping int32 device scalar.
+
+    The host-side ``tick`` is an unbounded Python int; a plain
+    ``jnp.asarray(tick, jnp.int32)`` raises OverflowError at 2^31 instead
+    of wrapping like the on-device ticket/age arithmetic does. Reduce
+    modulo 2^32 into the signed range first — all downstream comparisons
+    (``feedback_queue.resolve``/``expire``) are wraparound-safe.
+    """
+    return jnp.asarray(((tick + 2 ** 31) % 2 ** 32) - 2 ** 31, jnp.int32)
+
+
 @dataclasses.dataclass
 class RouterServiceConfig:
     fgts: fgts.FGTSConfig
@@ -96,6 +108,22 @@ class RouterServiceConfig:
     # controller runs inside the jitted act (control ticks compile nothing
     # new); its state replicates with the policy state under a mesh.
     autopilot: Optional[ap.AutopilotConfig] = None
+
+    def __post_init__(self):
+        hl = self.stale_half_life
+        if hl is not None and hl != hl:      # NaN
+            raise ValueError(
+                "stale_half_life=NaN would silently poison every delayed "
+                "update — use None (no staleness wrap), a positive "
+                "half-life, or <= 0 / inf for an explicit no-discount")
+        if self.feedback_capacity < 1:
+            raise ValueError(
+                f"feedback_capacity={self.feedback_capacity} — the pending "
+                f"ring needs at least one slot")
+        if self.feedback_expiry is not None and self.feedback_expiry < 0:
+            raise ValueError(
+                f"feedback_expiry={self.feedback_expiry} must be >= 0 "
+                f"ticks (None disables age expiry)")
 
 
 class RouterService:
@@ -213,6 +241,25 @@ class RouterService:
         else:
             masked_update = None
 
+        # preference-conditioned twins: selection with a (B,) per-request
+        # pref (the policy broadcasts it against live arm costs), feedback
+        # with the pref each duel was served under (same staleness shrink)
+        pol_act_pref = self.policy.act_pref
+        if pol_act_pref is not None:
+            def act_pref(key, state, x, pref, _ap=pol_act_pref):
+                return _ap(key, state, x, None, pref)
+        else:
+            act_pref = None
+        pol_upd_pref = self.policy.update_pref
+        if pol_upd_pref is not None and (self.policy.update_delayed is None
+                                         or self._staleness_wrapped):
+            def masked_update_pref(state, x, a1, a2, y, age, ok, pref):
+                if half_life is not None:
+                    y = y * staleness_weight(age, half_life)
+                return pol_upd_pref(state, x, a1, a2, y, pref, ok)
+        else:
+            masked_update_pref = None
+
         def seed_fn(fn):
             """Seeding program for offline->online replay. Under an
             autopilot the candidate flags are blanked around the fold:
@@ -234,12 +281,16 @@ class RouterService:
         if mesh is None:
             self._n_shards = 1
             self._act = jax.jit(self.policy.act)
+            self._act_pref = (jax.jit(act_pref)
+                              if act_pref is not None else None)
             self._update = jax.jit(self.policy.update)
             self._update_delayed = (jax.jit(self.policy.update_delayed)
                                     if self.policy.update_delayed is not None
                                     else None)
             self._update_masked = (jax.jit(masked_update)
                                    if masked_update is not None else None)
+            self._update_pref = (jax.jit(masked_update_pref)
+                                 if masked_update_pref is not None else None)
             self._update_compact = self._update
             self._update_delayed_compact = self._update_delayed
             self._enqueue = jax.jit(fq.enqueue)
@@ -294,6 +345,23 @@ class RouterService:
                     return _act(key, state, x)
         self._act = jax.jit(act, in_shardings=(rep, rep, qry),
                             out_shardings=(rep, row, row))
+        # the pref operand shards like every per-query vector: each device
+        # tilts only the rows it scores (rr.pref_spec)
+        self._act_pref = None
+        if act_pref is not None:
+            if use_sm:
+                act_p = shard_map(
+                    act_pref, mesh=mesh,
+                    in_specs=(P(), P(), rr.query_batch_spec(mesh),
+                              rr.pref_spec(mesh)),
+                    out_specs=(P(), P(bx), P(bx)), check_rep=False)
+            else:
+                def act_p(key, state, x, pref, _ap=act_pref):
+                    with jax.threefry_partitionable(True):
+                        return _ap(key, state, x, pref)
+            self._act_pref = jax.jit(act_p,
+                                     in_shardings=(rep, rep, qry, row),
+                                     out_shardings=(rep, row, row))
         self._update = jax.jit(
             self.policy.update,
             in_shardings=(rep, qry, row, row, row),
@@ -308,6 +376,11 @@ class RouterService:
             in_shardings=(rep, qry, row, row, row, row, row),
             out_shardings=rep)
             if masked_update is not None else None)
+        self._update_pref = (jax.jit(
+            masked_update_pref,
+            in_shardings=(rep, qry, row, row, row, row, row, row),
+            out_shardings=rep)
+            if masked_update_pref is not None else None)
         # compaction fallback (policies without update_masked): the
         # survivor count is arbitrary, so the compacted batch is replicated
         # — no divisibility constraint — and only the state stays meshed
@@ -320,7 +393,7 @@ class RouterService:
             out_shardings=rep)
             if self.policy.update_delayed is not None else None)
         self._enqueue = jax.jit(
-            fq.enqueue, in_shardings=(pend, qry, row, row, rep),
+            fq.enqueue, in_shardings=(pend, qry, row, row, rep, row),
             out_shardings=(pend, row))
         self._resolve = jax.jit(
             resolve, in_shardings=(pend, row, row, rep),
@@ -368,7 +441,7 @@ class RouterService:
     def embed(self, tokens: jax.Array, mask: jax.Array) -> jax.Array:
         return encode(self.enc_params, tokens, mask, self.enc_cfg)
 
-    def route_batch(self, x: jax.Array):
+    def route_batch(self, x: jax.Array, prefs: jax.Array | None = None):
         """x: (B, d) query features. Returns (a1 (B,), a2 (B,), tickets (B,)).
 
         One policy.act per batch: for FGTS.CDB that amortizes the SGLD
@@ -377,15 +450,40 @@ class RouterService:
         the ``PendingDuels`` ring (one scatter); hand each query's ticket
         back with its responses and redeem it in ``feedback_batch`` whenever
         the vote lands.
+
+        ``prefs`` (B,) float are per-request cost weights: row i is scored
+        under the extra tilt ``prefs[i] * cost_k`` (added to the service's
+        global cost_tilt and, under an autopilot, the governor's lambda),
+        so one service serves every point of the cost-quality front from
+        the same posterior. Prefs are traced operands of one compiled
+        program — distinct values never retrace — and are recorded with
+        each issued duel so the feedback fold conditions on them.
         """
         x = self._shard_batch(x, "route_batch")
-        self.state, a1, a2 = self._act(self._next_key(), self.state, x)
+        if prefs is None:
+            self.state, a1, a2 = self._act(self._next_key(), self.state, x)
+            pref_row = jnp.zeros((x.shape[0],), jnp.float32)
+        else:
+            if self._act_pref is None:
+                raise ValueError(
+                    f"policy '{self.policy.name}' has no act_pref path — "
+                    f"per-request prefs need a preference-aware policy "
+                    f"(the pooled FGTS/eps-greedy/LinUCB families)")
+            pref_row = jnp.asarray(prefs, jnp.float32)
+            if pref_row.shape != (x.shape[0],):
+                raise ValueError(
+                    f"prefs shape {pref_row.shape} != ({x.shape[0]},) — one "
+                    f"scalar cost weight per query row")
+            self.state, a1, a2 = self._act_pref(self._next_key(), self.state,
+                                                x, self._shard_batch(
+                                                    pref_row, "route_batch"))
         # clock first, then issue at the new tick: feedback redeemed before
         # the next routing round reports age 0 (so feedback_expiry=N means
         # "survives N further rounds", matching env.run's lag-D => age-D)
         self.tick += 1
         self.pending, tickets = self._enqueue(
-            self.pending, x, a1, a2, jnp.asarray(self.tick, jnp.int32))
+            self.pending, x, a1, a2, _tick32(self.tick),
+            self._shard_batch(pref_row, "route_batch"))
         self.n_routed += int(x.shape[0])
         return a1, a2, tickets
 
@@ -412,11 +510,27 @@ class RouterService:
                                     "feedback_batch")
         y = self._shard_batch(jnp.asarray(y, jnp.float32), "feedback_batch")
         self.pending, res = self._resolve(
-            self.pending, tickets, y, jnp.asarray(self.tick, jnp.int32))
+            self.pending, tickets, y, _tick32(self.tick))
         ok = np.asarray(res.ok)
         n_ok = int(ok.sum())
         if n_ok == 0:
             return 0
+        if self._update_pref is not None and res.pref is not None:
+            # preference-conditioned fold: each duel updates under the pref
+            # it was served with, so the feel-good term targets the same
+            # tilted objective the selection optimized
+            if self.mesh is not None or n_ok == ok.size:
+                self.state = self._update_pref(
+                    self.state, res.x, res.a1, res.a2, res.y, res.age,
+                    res.ok, res.pref)
+            else:
+                n_pad = min(_next_pow2(n_ok), ok.size)
+                sel = jnp.argsort(res.ok, descending=True, stable=True)
+                sel = sel[:n_pad]
+                self.state = self._update_pref(
+                    self.state, res.x[sel], res.a1[sel], res.a2[sel],
+                    res.y[sel], res.age[sel], res.ok[sel], res.pref[sel])
+            return n_ok
         if self._update_masked is not None:
             if self.mesh is not None or n_ok == ok.size:
                 self.state = self._update_masked(
@@ -466,7 +580,7 @@ class RouterService:
                 self.pending,
                 self._shard_batch(jnp.asarray(tickets, jnp.int32),
                                   "feedback_direct"),
-                y, jnp.asarray(self.tick, jnp.int32))
+                y, _tick32(self.tick))
         self.state = self._update(
             self.state, self._shard_batch(x, "feedback_direct"),
             self._shard_batch(jnp.asarray(a1), "feedback_direct"),
@@ -482,8 +596,7 @@ class RouterService:
         if self.cfg.feedback_expiry is None:
             return 0
         self.pending, dropped = fq.expire(
-            self.pending, jnp.asarray(self.tick, jnp.int32),
-            self.cfg.feedback_expiry)
+            self.pending, _tick32(self.tick), self.cfg.feedback_expiry)
         return int(dropped)
 
     def spend(self, arms: jax.Array, tokens_out: int = 1000) -> float:
@@ -646,9 +759,11 @@ class RouterService:
         """Executable-cache sizes of the service's jitted programs — the
         zero-retrace contract for dynamic pools is asserted against this
         (an add/retire/swap must not grow any act/update entry)."""
-        fns = {"act": self._act, "update": self._update,
+        fns = {"act": self._act, "act_pref": self._act_pref,
+               "update": self._update,
                "update_delayed": self._update_delayed,
                "update_masked": self._update_masked,
+               "update_pref": self._update_pref,
                "enqueue": self._enqueue, "resolve": self._resolve}
         if self.dynamic:
             fns.update(pool_set=self._pool_set,

@@ -64,6 +64,13 @@ def per_query_spec(mesh) -> P:
     return P(batch_axes(mesh))
 
 
+def pref_spec(mesh) -> P:
+    """(B,) per-request preference weights (``route_batch(prefs=...)``) —
+    batch-partitioned like every other per-query vector, so each device
+    tilts only the rows of the batch shard it scores."""
+    return per_query_spec(mesh)
+
+
 def policy_state_spec(mesh) -> P:
     """Replicated policy state (posterior chains, replay ring, counters) —
     used as a pytree *prefix* over whatever state tree the policy carries.
@@ -84,14 +91,15 @@ def pending_specs(mesh) -> PendingDuels:
     so consecutive tickets stripe across devices)."""
     bx = batch_axes(mesh)
     return PendingDuels(x=P(bx, None), a1=P(bx), a2=P(bx), ticket=P(bx),
-                        issued_at=P(bx), valid=P(bx), next_ticket=P())
+                        issued_at=P(bx), valid=P(bx), next_ticket=P(),
+                        pref=P(bx))
 
 
 def resolved_specs(mesh) -> ResolvedDuels:
     """The gathered feedback batch stays batch-sharded end to end."""
     bx = batch_axes(mesh)
     return ResolvedDuels(x=P(bx, None), a1=P(bx), a2=P(bx), y=P(bx),
-                         age=P(bx), ok=P(bx))
+                         age=P(bx), ok=P(bx), pref=P(bx))
 
 
 # ---------------------------------------------------------------------------

@@ -342,6 +342,70 @@ def test_feedback_padded_update_bit_identical_and_bounded_retrace():
         assert cache() <= math.ceil(math.log2(b)) + 1, cache()
 
 
+def test_pending_ring_survives_int32_tick_and_ticket_wraparound():
+    """Tickets and ticks wrap at 2^31: a duel issued just below the
+    boundary and resolved just above it must age normally (modular int32
+    difference), and a duel genuinely older than 2^31 ticks — whose wrapped
+    age comes out negative — must never validate (the pre-fix overflow made
+    ``age <= max_age`` true forever) and must expire."""
+    cfg = _cfg()
+    big = jnp.iinfo(jnp.int32).max                      # 2147483647
+    q = fq.init_pending(8, cfg.dim)
+    q = q._replace(next_ticket=jnp.asarray(big - 1, jnp.int32))
+    x = jnp.arange(4, dtype=jnp.float32)[:, None] * jnp.ones((4, cfg.dim))
+    a = jnp.zeros((4,), jnp.int32)
+    t_issue = jnp.asarray(big - 2, jnp.int32)
+    q, t = fq.enqueue(q, x, a, a, t_issue)
+    # the ticket ids themselves cross the boundary mid-batch
+    assert int(t[0]) == big - 1 and int(t[1]) == big
+    assert int(t[2]) == jnp.iinfo(jnp.int32).min
+    # resolve 5 ticks later — the clock has wrapped to negative territory
+    now = t_issue + jnp.int32(5)
+    assert int(now) < 0
+    q, res = jax.jit(fq.resolve, static_argnames="max_age")(
+        q, t, jnp.ones(4), now, max_age=10)
+    assert np.asarray(res.ok).all()
+    np.testing.assert_array_equal(np.asarray(res.age), np.full(4, 5))
+    np.testing.assert_array_equal(np.asarray(res.x), np.asarray(x))
+    assert int(fq.pending_count(q)) == 0
+
+    # age exactly 2^31: unrepresentable => wrapped-negative => rejected
+    q2 = fq.init_pending(8, cfg.dim)
+    q2, t2 = fq.enqueue(q2, x, a, a, 0)
+    far = jnp.asarray(big, jnp.int32) + jnp.int32(1)    # 2^31 ticks later
+    q3, res = fq.resolve(q2, t2, jnp.ones(4), far)
+    assert not np.asarray(res.ok).any()
+    assert (np.asarray(res.age) < 0).all()
+    assert int(fq.pending_count(q3)) == 0               # matched => consumed
+    # expire() must drop it too, not keep it pending every sweep
+    q4, dropped = fq.expire(q2, far, int(big))
+    assert int(dropped) == 4 and int(fq.pending_count(q4)) == 0
+
+
+def test_service_tick_wraps_through_int32_boundary():
+    """RouterService's host-side tick counter keeps counting past 2^31
+    (Python int); the device-side clock wraps modularly, so routing and
+    feedback keep working across the boundary."""
+    from repro.encoder import EncoderConfig, init_encoder
+    from repro.serving import PoolEntry
+    enc_cfg = EncoderConfig(d_model=16, n_layers=1, n_heads=2, d_ff=32,
+                            max_len=8)
+    enc = init_encoder(KEY, enc_cfg)
+    entries = [PoolEntry(name=f"m{i}", arch="granite-3-2b",
+                         cost_per_1k_tokens=0.1,
+                         embedding=np.random.RandomState(i).randn(16)
+                         .astype(np.float32)) for i in range(3)]
+    svc = _make_service(entries, enc, enc_cfg, _cfg(n_models=3, dim=16))
+    svc.tick = 2 ** 31 - 2
+    x = jax.random.normal(KEY, (4, 16))
+    for _ in range(4):                      # ticks 2^31-1 .. 2^31+2
+        _, _, t = svc.route_batch(x)
+        assert svc.feedback_batch(t, jnp.ones(4)) == 4
+    assert svc.tick == 2 ** 31 + 2          # host count never wraps
+    assert svc.pending_count() == 0
+    assert int(svc.state.t) == 16
+
+
 def test_enqueue_batch_larger_than_capacity_keeps_tail():
     cfg = _cfg()
     q = fq.init_pending(8, cfg.dim)

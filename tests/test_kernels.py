@@ -219,6 +219,55 @@ def test_dueling_select_per_row_mask_parity(b, k, d, distinct):
 
 
 @pytest.mark.parametrize("mask_kind", ["none", "cols", "rows"])
+@pytest.mark.parametrize("distinct", [False, True])
+@pytest.mark.parametrize("b,k", [(16, 6), (5, 12)])   # K > B and B > K
+def test_dueling_select_row_tilt_parity(b, k, distinct, mask_kind):
+    """(B, K) row tilts (per-request preference weights ``pref_i*cost_k``):
+    kernel == XLA reference across mask kinds, pair shapes, and
+    force-distinct — and rows with pref 0 route bit-identically to the
+    untilted kernel (x - 0.0 is the identity, so zero-tilt rows stay on
+    the pinned untilted path)."""
+    from repro.core.policy import pref_tilt, select_pair
+    from repro.kernels.dueling_score import dueling_select
+    d = 64
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, d))
+    a = jax.random.normal(ks[1], (k, d))
+    th = jax.random.normal(ks[2], (2, d))
+    costs = jax.random.uniform(ks[3], (k,))
+    pref = jnp.asarray([0.0, 0.5, 2.0] * b)[:b]       # includes zero rows
+    tilt = pref_tilt(pref, costs)                     # (B, K) row tilt
+    assert tilt.shape == (b, k)
+    if mask_kind == "none":
+        mask = None
+    elif mask_kind == "cols":
+        mask = jnp.arange(k) % 3 != 0
+    else:
+        mask = jnp.ones((b, k), bool).at[::2, 0].set(False)
+    a1k, a2k = dueling_select(x, a, th, tilt=tilt, mask=mask,
+                              distinct=distinct)
+    a1x, a2x = select_pair(x, a, th[0], th[1], tilt=tilt, mask=mask,
+                           distinct=distinct, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(a1k), np.asarray(a1x))
+    np.testing.assert_array_equal(np.asarray(a2k), np.asarray(a2x))
+    if mask_kind == "cols":
+        m = np.asarray(mask)
+        assert m[np.asarray(a1k)].all() and m[np.asarray(a2k)].all()
+    elif mask_kind == "rows":
+        m = np.asarray(mask)
+        rows = np.arange(b)
+        assert m[rows, np.asarray(a1k)].all()
+        assert m[rows, np.asarray(a2k)].all()
+    # pref=0 rows are bit-identical to the untilted call
+    a1u, a2u = dueling_select(x, a, th, mask=mask, distinct=distinct)
+    zero = np.asarray(pref) == 0.0
+    np.testing.assert_array_equal(np.asarray(a1k)[zero],
+                                  np.asarray(a1u)[zero])
+    np.testing.assert_array_equal(np.asarray(a2k)[zero],
+                                  np.asarray(a2u)[zero])
+
+
+@pytest.mark.parametrize("mask_kind", ["none", "cols", "rows"])
 @pytest.mark.parametrize("k", [1100, 2048])
 def test_dueling_select_large_k_fallback_parity(k, mask_kind):
     """K > MAX_K_FUSED falls off the fused epilogue onto the plain-XLA

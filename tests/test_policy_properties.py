@@ -290,6 +290,99 @@ def test_staleness_weight_discounts_towards_uninformative():
     assert w[3] < 0.01
 
 
+@pytest.mark.parametrize("half_life", [0.0, -1.0, float("inf")])
+def test_staleness_weight_degenerate_half_lives_are_no_discount(half_life):
+    """Regression: half_life=0 used to divide by zero (age 0 -> exp2(nan/
+    -inf), poisoning every vote). Non-positive and infinite half-lives are
+    defined as weight 1.0 — no discount — never NaN/inf."""
+    ages = jnp.asarray([0, 1, 8, 1 << 30], jnp.int32)
+    w = np.asarray(policy.staleness_weight(ages, half_life=half_life))
+    np.testing.assert_array_equal(w, np.ones(4, np.float32))
+    assert np.isfinite(w).all()
+
+
+# ---------------------------------------------------------------------------
+# Per-request preference tilts (act_pref / update_pref)
+# ---------------------------------------------------------------------------
+
+# pool-backed policies exposing the preference path
+PREF_POLICIES = {n for n in POLICIES if n.endswith("_pooled")
+                 and POLICIES[n][0].act_pref is not None}
+
+
+def test_pref_policies_cover_the_selection_families():
+    """The preference path must exist for the pooled FGTS / eps-greedy /
+    LinUCB / uniform families (the serving-facing selection policies)."""
+    assert {"fgts_pooled", "eps_greedy_pooled", "linucb_pooled",
+            "uniform_pooled"} <= PREF_POLICIES
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(1, 5), st.integers(0, 10_000))
+def test_act_pref_zero_rows_bit_identical_to_untilted(b, seed):
+    """pref=0 adds the tilt 0*cost_k — bitwise the identity: a zero pref
+    batch must route bit-identically to the plain act (same key), and the
+    post-act state trees must match exactly (the SGLD refresh path is
+    untouched by the pref operand)."""
+    x, _, _, _ = _batch(b, seed)
+    zeros = jnp.zeros((b,), jnp.float32)
+    for name in sorted(PREF_POLICIES):
+        pol = POLICIES[name][0]
+        state = pol.init(KEY)
+        k = jax.random.fold_in(KEY, seed)
+        s_a, a1a, a2a = jax.jit(pol.act)(k, state, x)
+        s_p, a1p, a2p = jax.jit(pol.act_pref)(k, state, x, None, zeros)
+        np.testing.assert_array_equal(np.asarray(a1a), np.asarray(a1p),
+                                      err_msg=name)
+        np.testing.assert_array_equal(np.asarray(a2a), np.asarray(a2p),
+                                      err_msg=name)
+        _leaves_equal(s_a, s_p, exact=True, msg=name)
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(1, 5), st.integers(0, 10_000))
+def test_pref_tilted_acts_never_route_to_inactive_arm(b, seed):
+    """Per-row preference tilts must respect the arm mask: whatever the
+    tilt, neither side of any duel may land on a retired arm (arm 2 in the
+    shared POOL) — a huge negative pref must not resurrect it either."""
+    x, _, _, _ = _batch(b, seed)
+    prefs = (jax.random.normal(jax.random.PRNGKey(seed), (b,)) * 100.0)
+    for name in sorted(PREF_POLICIES):
+        pol = POLICIES[name][0]
+        state = pol.init(KEY)
+        state, a1, a2 = jax.jit(pol.act_pref)(
+            jax.random.fold_in(KEY, seed), state, x, None, prefs)
+        for a in (a1, a2):
+            an = np.asarray(a)
+            assert (an != INACTIVE_ARM).all(), (name, an)
+            assert np.asarray(state.pool.active)[an].all(), name
+
+
+@settings(max_examples=2, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 10_000))
+def test_update_pref_zero_matches_plain_update(b, seed):
+    """A pref=0 feedback fold must be bit-identical to the plain masked/
+    unmasked update — the pref ring entry is the only difference, and it
+    stores zeros either way."""
+    x, a1, a2, y = _batch(b, seed)
+    zeros = jnp.zeros((b,), jnp.float32)
+    ones = jnp.ones((b,), bool)
+    for name in sorted(PREF_POLICIES):
+        pol = POLICIES[name][0]
+        if pol.update_pref is None:
+            continue
+        state = pol.init(KEY)
+        s_plain = (pol.update_masked(state, x, a1, a2, y, ones)
+                   if pol.update_masked is not None
+                   else pol.update(state, x, a1, a2, y))
+        s_pref = pol.update_pref(state, x, a1, a2, y, zeros, ones)
+        # compare everything except the pref ring (absent on one side)
+        ring_a = jax.tree.leaves(s_plain)
+        ring_b = jax.tree.leaves(s_pref)
+        assert len(ring_a) == len(ring_b), name
+        _leaves_equal(s_plain, s_pref, exact=True, msg=name)
+
+
 # ---------------------------------------------------------------------------
 # SGLD backend conformance: the fused kernel is an implementation detail
 # ---------------------------------------------------------------------------

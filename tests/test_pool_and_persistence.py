@@ -100,8 +100,9 @@ def test_router_dryrun_steps_run_on_cpu():
     q = fq.init_pending(16, d)
     q, tickets = fq.enqueue(q, x, a1, a2, 0)
     resolve = rd.make_resolve_step(expiry=8)
-    valid, rx, ra1, ra2, ry, age, ok = resolve(*q, tickets,
-                                               jnp.ones((b,)), 3)
+    valid, rx, ra1, ra2, ry, age, ok, rpref = resolve(*q, tickets,
+                                                      jnp.ones((b,)), 3)
     assert np.asarray(ok).all() and not np.asarray(valid).any()
     np.testing.assert_allclose(np.asarray(rx), np.asarray(x))
     assert (np.asarray(age) == 3).all()
+    assert (np.asarray(rpref) == 0.0).all()    # unprefixed enqueue

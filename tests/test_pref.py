@@ -1,0 +1,229 @@
+"""End-to-end contracts of per-request preference tilts (single device).
+
+The tentpole claim of the pref subsystem is pinned here at the serving and
+env-loop layers (the kernel/policy layers have their own parity and
+property suites, the 8-device twin lives in tests/test_sharded_serving.py):
+
+  * ``RouterService.route_batch(prefs=...)`` validates its operand, routes
+    under the tilt, threads the pref through the pending ring into the
+    preference-conditioned update, and never compiles a new program for a
+    new pref value;
+  * prefs=zeros is *bitwise* the unprefixed service — posterior included;
+  * ``env.run(pref_fn=...)`` validates shapes and policy capability, stays
+    bit-identical to the plain loop for zero/None prefs, and composes with
+    the delayed-feedback ring;
+  * ``RouterServiceConfig`` rejects the NaN half-life / bad-capacity /
+    negative-expiry configs that used to fail silently at serve time.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import env, fgts, policy
+
+KEY = jax.random.PRNGKey(11)
+DIM = 16
+K = 4
+
+
+def _cfg(**kw):
+    d = dict(n_models=K, dim=DIM, horizon=64, sgld_steps=2, sgld_minibatch=4)
+    d.update(kw)
+    return fgts.FGTSConfig(**d)
+
+
+def _service(**cfg_kw):
+    from repro.encoder import EncoderConfig, init_encoder
+    from repro.serving import PoolEntry, RouterService, RouterServiceConfig
+    enc_cfg = EncoderConfig(d_model=DIM, n_layers=1, n_heads=2, d_ff=32,
+                            max_len=8)
+    enc = init_encoder(KEY, enc_cfg)
+    entries = [PoolEntry(name=f"m{i}", arch="granite-3-2b",
+                         cost_per_1k_tokens=0.1 * (i + 1),
+                         embedding=np.random.RandomState(i).randn(DIM)
+                         .astype(np.float32)) for i in range(K)]
+    cfg = RouterServiceConfig(fgts=_cfg(), feedback_capacity=64, **cfg_kw)
+    return RouterService(entries, enc, enc_cfg, cfg)
+
+
+def _leaves_equal(sa, sb):
+    for a, b in zip(jax.tree.leaves(sa), jax.tree.leaves(sb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# RouterService.route_batch(prefs=...)
+# ---------------------------------------------------------------------------
+
+def test_route_batch_prefs_validated():
+    svc = _service()
+    x = jax.random.normal(KEY, (8, DIM))
+    with pytest.raises(ValueError, match="prefs shape"):
+        svc.route_batch(x, prefs=jnp.zeros((5,)))
+    with pytest.raises(ValueError, match="prefs shape"):
+        svc.route_batch(x, prefs=jnp.zeros((8, 1)))
+
+
+def test_route_batch_prefs_need_a_pref_aware_policy():
+    def factory(a_emb, costs, cfg):
+        return policy.fgts_policy(a_emb, cfg.fgts, costs=costs)._replace(
+            act_pref=None, update_pref=None)
+
+    svc = _service(policy_factory=factory)
+    x = jax.random.normal(KEY, (8, DIM))
+    svc.route_batch(x)                                  # plain path still up
+    with pytest.raises(ValueError, match="no act_pref"):
+        svc.route_batch(x, prefs=jnp.zeros((8,)))
+
+
+def test_zero_prefs_bit_identical_to_unprefixed_service():
+    """prefs=zeros rides act_pref/update_pref, prefs=None the plain
+    programs; a zero tilt subtracts 0.0 everywhere, so the two services
+    must never diverge by a single bit."""
+    svc_a, svc_b = _service(), _service()
+    x = jax.random.normal(KEY, (8, DIM))
+    for r in range(3):
+        a1a, a2a, ta = svc_a.route_batch(x)
+        a1b, a2b, tb = svc_b.route_batch(x, prefs=jnp.zeros((8,)))
+        np.testing.assert_array_equal(np.asarray(a1a), np.asarray(a1b))
+        np.testing.assert_array_equal(np.asarray(a2a), np.asarray(a2b))
+        np.testing.assert_array_equal(np.asarray(ta), np.asarray(tb))
+        y = jax.random.choice(jax.random.fold_in(KEY, r),
+                              jnp.asarray([-1.0, 1.0]), (8,))
+        assert svc_a.feedback_batch(ta, y) == 8
+        assert svc_b.feedback_batch(tb, y) == 8
+    _leaves_equal(svc_a.state, svc_b.state)
+
+
+def test_pref_rides_the_pending_ring_into_the_update():
+    """The pref a duel was *served* under is what conditions its update —
+    stored at enqueue, gathered at resolve — even when votes arrive out of
+    order and partially."""
+    svc = _service()
+    x = jax.random.normal(KEY, (8, DIM))
+    prefs0 = jnp.linspace(0.0, 2.0, 8)
+    prefs1 = jnp.full((8,), 0.5)
+    _, _, t0 = svc.route_batch(x, prefs=prefs0)
+    _, _, t1 = svc.route_batch(x, prefs=prefs1)
+    # ring holds both batches' prefs before any resolve
+    assert svc.pending_count() == 16
+    # resolve the second batch first, then half of the first
+    assert svc.feedback_batch(t1, jnp.ones(8)) == 8
+    assert svc.feedback_batch(t0[:4], jnp.ones(4)) == 4
+    st = svc.state
+    n = int(st.t)
+    assert n == 12
+    got = np.sort(np.asarray(st.pref[:n]))
+    want = np.sort(np.concatenate([np.asarray(prefs1),
+                                   np.asarray(prefs0[:4])]))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_distinct_pref_values_compile_nothing_new():
+    """Zero-retrace: prefs are traced operands, so after one warm pref
+    batch every further pref value reuses the same executables (the
+    single-device half of the ISSUE acceptance; the bench and the sharded
+    suite pin the mesh half)."""
+    svc = _service()
+    x = jax.random.normal(KEY, (8, DIM))
+    _, _, t = svc.route_batch(x, prefs=jnp.zeros((8,)))
+    svc.feedback_batch(t, jnp.ones(8))
+    counts = svc.compiled_program_counts()
+    for lam in (0.25, 0.5, 1.0, 2.0, 7.5):
+        _, _, t = svc.route_batch(x, prefs=jnp.full((8,), lam))
+        svc.feedback_batch(t, jnp.ones(8))
+        assert svc.compiled_program_counts() == counts, lam
+    assert svc.pending_count() == 0
+
+
+def test_large_pref_routes_cheaper_than_zero_pref():
+    """Behavioral sanity: with arm costs spread 0.1..0.4, a huge cost
+    weight must pull the routed pairs toward cheaper arms than pref=0 on
+    the same service and queries."""
+    svc = _service()
+    costs = np.asarray([0.1 * (i + 1) for i in range(K)])
+    x = jax.random.normal(KEY, (64, DIM))
+    a1z, a2z, tz = svc.route_batch(x, prefs=jnp.zeros((64,)))
+    svc.feedback_batch(tz, jnp.ones(64))
+    a1p, a2p, tp = svc.route_batch(x, prefs=jnp.full((64,), 100.0))
+    cost_z = 0.5 * (costs[np.asarray(a1z)] + costs[np.asarray(a2z)]).mean()
+    cost_p = 0.5 * (costs[np.asarray(a1p)] + costs[np.asarray(a2p)]).mean()
+    assert cost_p < cost_z
+    # an overwhelming tilt makes every row duel the cheapest arms
+    assert set(np.asarray(a1p).tolist()) | set(np.asarray(a2p).tolist()) \
+        <= {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# env.run(pref_fn=...)
+# ---------------------------------------------------------------------------
+
+def _world(t=24, cfg=None):
+    cfg = cfg or _cfg()
+    ks = jax.random.split(KEY, 3)
+    a_emb = jax.random.normal(ks[0], (cfg.n_models, cfg.dim))
+    e = env.EnvData(x=jax.random.normal(ks[1], (t, cfg.dim)),
+                    utils=jax.random.uniform(ks[2], (t, cfg.n_models)))
+    return e, a_emb, cfg
+
+
+def test_env_run_zero_pref_fn_bit_identical_to_plain_loop():
+    e, a_emb, cfg = _world()
+    costs = jnp.linspace(0.1, 0.4, cfg.n_models)
+    pol = policy.fgts_policy(a_emb, cfg, costs=costs)
+    cum0, st0 = env.run(KEY, e, pol, batch=2)
+    cum, st = env.run(KEY, e, pol, batch=2,
+                      pref_fn=lambda s, xb: jnp.zeros((2,)))
+    np.testing.assert_array_equal(np.asarray(cum0), np.asarray(cum))
+    # the pref run's replay ring records the zeros; everything else equal
+    _leaves_equal(st0._replace(pref=None), st._replace(pref=None))
+    assert np.asarray(st.pref).max() == 0.0
+
+
+def test_env_run_pref_fn_validates():
+    e, a_emb, cfg = _world()
+    costs = jnp.linspace(0.1, 0.4, cfg.n_models)
+    pol = policy.fgts_policy(a_emb, cfg, costs=costs)
+    with pytest.raises(ValueError, match="pref_fn"):
+        env.run(KEY, e, pol, batch=2,
+                pref_fn=lambda s, xb: jnp.zeros((3,)))   # wrong width
+    no_pref = pol._replace(act_pref=None, update_pref=None)
+    with pytest.raises(ValueError, match="act_pref"):
+        env.run(KEY, e, no_pref, batch=2,
+                pref_fn=lambda s, xb: jnp.zeros((2,)))
+
+
+def test_env_run_pref_fn_composes_with_delay():
+    """Prefs ride the same lag ring as the duels they condition: the
+    delayed fold must consume each batch's own recorded pref."""
+    e, a_emb, cfg = _world()
+    costs = jnp.linspace(0.1, 0.4, cfg.n_models)
+    pol = policy.fgts_policy(a_emb, cfg, costs=costs)
+    tilts = jnp.asarray([0.0, 1.5])
+    cum, st = jax.jit(lambda k: env.run(
+        k, e, pol, batch=2, delay=2,
+        pref_fn=lambda s, xb: tilts[(s + jnp.arange(2)) % 2]))(KEY)
+    c = np.asarray(cum)
+    assert c.shape == (24,) and np.isfinite(c).all()
+    assert (np.diff(c) >= -1e-6).all()
+    n = int(st.t)
+    assert n == 24 - 2 * 2                    # tail still in the lag ring
+    assert set(np.unique(np.asarray(st.pref[:n])).tolist()) == {0.0, 1.5}
+
+
+# ---------------------------------------------------------------------------
+# RouterServiceConfig validation
+# ---------------------------------------------------------------------------
+
+def test_service_config_rejects_silent_footguns():
+    from repro.serving import RouterServiceConfig
+    with pytest.raises(ValueError, match="stale_half_life=NaN"):
+        RouterServiceConfig(fgts=_cfg(), stale_half_life=float("nan"))
+    with pytest.raises(ValueError, match="feedback_capacity"):
+        RouterServiceConfig(fgts=_cfg(), feedback_capacity=0)
+    with pytest.raises(ValueError, match="feedback_expiry"):
+        RouterServiceConfig(fgts=_cfg(), feedback_expiry=-1)
+    # the documented degenerate half-lives stay constructible (no-discount)
+    for hl in (0.0, -1.0, float("inf"), None):
+        RouterServiceConfig(fgts=_cfg(), stale_half_life=hl)

@@ -182,6 +182,80 @@ def test_vmap_over_chains_matches_loop():
                                **TOL)
 
 
+@pytest.mark.parametrize("masked", [False, True])
+@pytest.mark.parametrize("j", [1, 2])
+def test_pref_conditioned_potential_matches_reference(j, masked):
+    """The per-row preference tilt t_ik = pref_i * cost_k through the
+    kernel: forward and gradient vs. jax.grad through ``likelihood_batch``
+    with the same pref/costs operands (fp32 tol), fused == xla bitwise on
+    CPU, and pref=None == pref=zeros == costs=None bit-for-bit (the tilt
+    only ever subtracts, so a zero tilt is a no-op, not a near-no-op)."""
+    m, k, d = 100, 11, 48
+    theta, x, a1, a2, y, valid, a_emb, mask = _data(m, k, d, seed=21)
+    am = mask if masked else None
+    costs = jnp.linspace(0.0, 2.5, k)
+    pref = jax.random.uniform(jax.random.fold_in(KEY, 22), (m,),
+                              minval=0.0, maxval=2.0)
+    cfg = _cfg(k, d, m)
+
+    def ref(t):
+        return jnp.sum(fgts.likelihood_batch(t, x, a1, a2, y, a_emb, j, cfg,
+                                             am, pref=pref, costs=costs)
+                       * valid)
+
+    def pot(t, b, p=pref, c=costs):
+        return su.sgld_potential(t, x, a1, a2, y, valid, a_emb, am,
+                                 pref=p, costs=c, j=j, eta=cfg.eta,
+                                 mu=cfg.mu, backend=b)
+
+    fused, xla = pot(theta, "fused"), pot(theta, "xla")
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref(theta)),
+                               **TOL)
+    g_fused = jax.grad(lambda t: pot(t, "fused"))(theta)
+    g_xla = jax.grad(lambda t: pot(t, "xla"))(theta)
+    np.testing.assert_allclose(np.asarray(g_fused),
+                               np.asarray(jax.grad(ref)(theta)), **TOL)
+    if jax.default_backend() == "cpu":
+        assert np.asarray(fused).tobytes() == np.asarray(xla).tobytes()
+        assert np.asarray(g_fused).tobytes() == np.asarray(g_xla).tobytes()
+    else:
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(xla),
+                                   **TOL)
+        np.testing.assert_allclose(np.asarray(g_fused), np.asarray(g_xla),
+                                   **TOL)
+    # the untilted potential is one object, however you spell "no tilt"
+    base = pot(theta, "xla", p=None, c=None).tobytes()
+    for p, c in ((jnp.zeros((m,)), costs), (None, costs),
+                 (jnp.zeros((m,)), None)):
+        assert pot(theta, "xla", p=p, c=c).tobytes() == base
+
+
+def test_pref_conditioned_chain_matches_autodiff_chain():
+    """Whole SGLD chains with a pref-carrying replay ring: the kernel path
+    and the autodiff path agree at the chain level (the pref reaches the
+    potential through state.pref, not a side channel)."""
+    cfg = _cfg(8, 24, 64, sgld_steps=4, sgld_minibatch=8)
+    a_emb = jax.random.normal(jax.random.fold_in(KEY, 23), (8, 24))
+    costs = jnp.linspace(0.0, 2.0, 8)
+    m = cfg.horizon
+    _, x, a1, a2, y, _, _, _ = _data(m, cfg.n_models, cfg.dim, seed=24)
+    pref = jax.random.uniform(jax.random.fold_in(KEY, 25), (40,),
+                              minval=0.0, maxval=2.0)
+    st = fgts.init_state(cfg, KEY)
+    for i in range(40):
+        st = fgts.observe(st, x[i], a1[i], a2[i], y[i], pref=pref[i])
+    np.testing.assert_allclose(np.asarray(st.pref[:40]), np.asarray(pref),
+                               rtol=0, atol=0)
+    k = jax.random.fold_in(KEY, 26)
+    out = {b: fgts.sgld_sample(
+        k, st.theta1, st, a_emb, 1,
+        dataclasses.replace(cfg, sgld_backend=b), costs=costs)
+        for b in ("xla", "autodiff")}
+    np.testing.assert_allclose(np.asarray(out["xla"]),
+                               np.asarray(out["autodiff"]), rtol=1e-3,
+                               atol=1e-3)
+
+
 def test_mixed_potential_matches_reference():
     """The mixed duel+click estimator (core/extensions) through the kernel:
     forward and gradient vs. the explicit phi-feature reference."""

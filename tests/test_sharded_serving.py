@@ -140,6 +140,58 @@ def test_serve_loop_512_query_parity():
     _assert_state_close(svc_s.state, svc_m.state, rtol=1e-4, atol=1e-4)
 
 
+def test_route_batch_pref_parity_and_retrace_flat():
+    """Per-request prefs on the mesh: the pref-tilted sharded service
+    reproduces the unsharded routed pairs, tickets and posterior, and
+    distinct pref values compile nothing new — prefs are traced operands
+    of one partitioned program on the 8-device lane too (the ISSUE's
+    zero-retrace acceptance, mesh half)."""
+    svc_s, svc_m = _service(), _service(mesh=_mesh())
+    x = jax.random.normal(KEY, (BATCH, DIM))
+    for svc in (svc_s, svc_m):                # warm every program once
+        _, _, t = svc.route_batch(x, prefs=jnp.zeros((BATCH,)))
+        assert svc.feedback_batch(t, jnp.ones((BATCH,))) == BATCH
+    counts = svc_m.compiled_program_counts()
+    rows = jnp.linspace(0.0, 2.0, BATCH)      # per-row spread, not scalar
+    for i, lam in enumerate((0.25, 1.0, 3.0)):
+        prefs = rows * lam
+        y = jax.random.choice(jax.random.fold_in(KEY, 40 + i),
+                              jnp.asarray([-1.0, 1.0]), (BATCH,))
+        outs = []
+        for svc in (svc_s, svc_m):
+            a1, a2, t = svc.route_batch(x, prefs=prefs)
+            assert svc.feedback_batch(t, y) == BATCH
+            outs.append((np.asarray(a1), np.asarray(a2), np.asarray(t)))
+        np.testing.assert_array_equal(outs[0][0], outs[1][0])
+        np.testing.assert_array_equal(outs[0][1], outs[1][1])
+        np.testing.assert_array_equal(outs[0][2], outs[1][2])
+        assert svc_m.compiled_program_counts() == counts, lam
+    assert int(svc_s.state.t) == int(svc_m.state.t) == 4 * BATCH
+    _assert_state_close(svc_s.state, svc_m.state, rtol=1e-4, atol=1e-4)
+
+
+def test_zero_prefs_bit_identical_to_unprefixed_route_on_mesh():
+    """prefs=zeros rides the act_pref program, prefs=None the plain act —
+    same mesh, same keys, and a zero tilt only ever subtracts 0.0, so the
+    two services must stay *bitwise* identical, posterior included."""
+    mesh = _mesh()
+    svc_a, svc_b = _service(mesh=mesh), _service(mesh=mesh)
+    x = jax.random.normal(KEY, (BATCH, DIM))
+    for r in range(2):
+        a1a, a2a, ta = svc_a.route_batch(x)
+        a1b, a2b, tb = svc_b.route_batch(x, prefs=jnp.zeros((BATCH,)))
+        np.testing.assert_array_equal(np.asarray(a1a), np.asarray(a1b))
+        np.testing.assert_array_equal(np.asarray(a2a), np.asarray(a2b))
+        np.testing.assert_array_equal(np.asarray(ta), np.asarray(tb))
+        y = jax.random.choice(jax.random.fold_in(KEY, 60 + r),
+                              jnp.asarray([-1.0, 1.0]), (BATCH,))
+        assert svc_a.feedback_batch(ta, y) == BATCH
+        assert svc_b.feedback_batch(tb, y) == BATCH
+    for a, b in zip(jax.tree.leaves(svc_a.state),
+                    jax.tree.leaves(svc_b.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_duplicate_ticket_single_sharded_resolve_folds_once():
     """The dedup lives inside the jitted resolve, sharded included: one
     duplicated ticket in one call validates exactly one row."""
