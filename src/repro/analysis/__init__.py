@@ -1,0 +1,18 @@
+"""repro-lint: JAX-aware static analysis for the routing reproduction.
+
+Stdlib-only (``ast`` + ``json``) so the CLI runs in environments without
+jax installed — the CI ``analysis`` lane deliberately skips the heavy
+requirements.  The runtime helper :mod:`repro.analysis.retrace` is the one
+submodule that touches live jitted callables; it is imported lazily so
+``python -m repro.analysis`` never pulls it in.
+
+Layout
+------
+``engine``          Finding dataclass, module loader, baseline matching.
+``jaxast``          Alias resolution + jit-reachability approximation.
+``passes``          The five registered passes (see ``passes.REGISTRY``).
+``retrace``         Runtime ``assert_flat`` context manager (needs jax).
+"""
+from .engine import AnalysisContext, Finding, load_modules, run_passes
+
+__all__ = ["AnalysisContext", "Finding", "load_modules", "run_passes"]

@@ -1,0 +1,184 @@
+"""Pass 2 — PRNG hygiene: linear use of jax PRNG keys.
+
+A PRNG key is a linear resource: after it seeds one sampler or one
+``split``, reusing the *same* key value silently correlates draws.  The
+legitimate non-consuming reuse is ``jax.random.fold_in(key, data)`` —
+deriving per-step subkeys from a base key.
+
+Tracked keys: locals assigned from ``PRNGKey``/``key``/``split``/
+``fold_in``/``clone`` calls, plus parameters literally named ``key`` or
+``rng`` (names like ``k`` are too overloaded to taint).  Each *consuming*
+occurrence (appearing anywhere except as ``fold_in``'s base argument)
+bumps a use counter; the second consumption of the same name without an
+intervening re-assignment is flagged as ``prng/key-reuse``.
+
+Control flow: ``if``/``else`` branches fork the counter state and merge
+with max (a use on either branch counts).  Loop bodies are processed
+twice so a consumption that is fine once but repeats every iteration —
+``for i in ...: sample(key)`` — trips on the second sweep.  ``for sub in
+split(key, n)`` re-binds ``sub`` fresh each iteration and stays clean.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from ..engine import AnalysisContext, Finding
+from ..jaxast import PRNG_SOURCES, alias_map, collect_functions, resolves_to
+
+RULE = "prng/key-reuse"
+KEY_PARAM_NAMES = {"key", "rng", "prng_key", "rng_key"}
+FOLD_IN = {"jax.random.fold_in"}
+SPLIT = {"jax.random.split"}
+
+
+def _terminates(stmts: list) -> bool:
+    return bool(stmts) and isinstance(
+        stmts[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+
+class _FuncScan:
+    def __init__(self, mod, fn, aliases):
+        self.mod = mod
+        self.fn = fn
+        self.aliases = aliases
+        self.findings: list[Finding] = []
+        self.emitted: set[tuple[str, int]] = set()
+
+    # -- expression side: count consuming uses ------------------------------
+
+    def _consume(self, name: str, line: int, state: dict[str, int]):
+        if name not in state:
+            return
+        state[name] += 1
+        if state[name] >= 2 and (name, line) not in self.emitted:
+            self.emitted.add((name, line))
+            self.findings.append(Finding(
+                self.mod.rel, line, RULE, self.fn.qualname,
+                f"key `{name}` consumed again without split/fold_in — "
+                "draws will be correlated"))
+
+    def _uses(self, node: ast.AST, state: dict[str, int]):
+        """Walk an expression, counting consuming key occurrences."""
+        if isinstance(node, ast.Call):
+            if resolves_to(node.func, self.aliases, FOLD_IN) and node.args:
+                # base key of fold_in is the blessed non-consuming reuse
+                for extra in node.args[1:]:
+                    self._uses(extra, state)
+                for kw in node.keywords:
+                    self._uses(kw.value, state)
+                return
+            for child in list(node.args) + [kw.value for kw in node.keywords]:
+                self._uses(child, state)
+            self._uses(node.func, state)
+            return
+        if isinstance(node, ast.Subscript) and isinstance(node.value,
+                                                          ast.Name):
+            # ks[i] picks one subkey out of a split batch — indices are
+            # beyond a syntactic pass, so indexing never consumes the base.
+            self._uses(node.slice, state)
+            return
+        if isinstance(node, ast.Name):
+            self._consume(node.id, node.lineno, state)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            return   # separate scope, scanned on its own
+        for child in ast.iter_child_nodes(node):
+            self._uses(child, state)
+
+    # -- statement side ------------------------------------------------------
+
+    def _assign_targets(self, targets, fresh: bool, state):
+        for t in targets:
+            if isinstance(t, (ast.Tuple, ast.List)):
+                self._assign_targets(t.elts, fresh, state)
+            elif isinstance(t, ast.Starred):
+                self._assign_targets([t.value], fresh, state)
+            elif isinstance(t, ast.Name):
+                if fresh:
+                    state[t.id] = 0
+                else:
+                    state.pop(t.id, None)
+            # Attribute/Subscript targets (self._key = ...) are not tracked:
+            # attribute lifetimes cross method boundaries.
+
+    def block(self, stmts, state: dict[str, int]):
+        for st in stmts:
+            self.stmt(st, state)
+
+    def stmt(self, st: ast.stmt, state: dict[str, int]):
+        if isinstance(st, ast.If):
+            self._uses(st.test, state)
+            s1, s2 = dict(state), dict(state)
+            self.block(st.body, s1)
+            self.block(st.orelse, s2)
+            # A branch that leaves the function (early return/raise) never
+            # reaches the fall-through code: its counts stay out of the
+            # merge (uses *inside* it were already checked above).
+            live = []
+            if not _terminates(st.body):
+                live.append(s1)
+            if not _terminates(st.orelse):
+                live.append(s2)
+            if not live:
+                live = [s2]    # both exit; fall-through is unreachable
+            for n in set().union(*(set(s) for s in live)):
+                state[n] = max(s.get(n, 0) for s in live)
+        elif isinstance(st, (ast.For, ast.AsyncFor)):
+            self._uses(st.iter, state)
+            iter_is_split = (isinstance(st.iter, ast.Call) and
+                             resolves_to(st.iter.func, self.aliases, SPLIT))
+            for _sweep in range(2):
+                # the loop target re-binds every iteration (fresh subkey
+                # when iterating a split batch, untracked otherwise)
+                self._assign_targets(
+                    [st.target], fresh=bool(iter_is_split), state=state)
+                self.block(st.body, state)
+            self.block(st.orelse, state)
+        elif isinstance(st, ast.While):
+            for _sweep in range(2):
+                self._uses(st.test, state)
+                self.block(st.body, state)
+            self.block(st.orelse, state)
+        elif isinstance(st, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = st.value
+            if value is None:
+                return
+            targets = (st.targets if isinstance(st, ast.Assign)
+                       else [st.target])
+            fresh = (isinstance(value, ast.Call)
+                     and resolves_to(value.func, self.aliases, PRNG_SOURCES))
+            self._uses(value, state)
+            self._assign_targets(targets, fresh=bool(fresh), state=state)
+        elif isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return   # nested scope scanned separately
+        elif isinstance(st, (ast.With, ast.AsyncWith)):
+            for item in st.items:
+                self._uses(item.context_expr, state)
+            self.block(st.body, state)
+        elif isinstance(st, ast.Try):
+            self.block(st.body, state)
+            for h in st.handlers:
+                self.block(h.body, state)
+            self.block(st.orelse, state)
+            self.block(st.finalbody, state)
+        else:
+            for child in ast.iter_child_nodes(st):
+                if isinstance(child, ast.expr):
+                    self._uses(child, state)
+                elif isinstance(child, ast.stmt):
+                    self.stmt(child, state)
+
+
+def run(ctx: AnalysisContext) -> Iterable[Finding]:
+    out: list[Finding] = []
+    for mod in ctx.modules:
+        aliases = alias_map(mod.tree)
+        for fn in collect_functions(mod.tree):
+            scan = _FuncScan(mod, fn, aliases)
+            state = {p: 0 for p in fn.pos_params + sorted(fn.kwonly)
+                     if p in KEY_PARAM_NAMES}
+            scan.block(fn.node.body, state)
+            out.extend(scan.findings)
+    return out

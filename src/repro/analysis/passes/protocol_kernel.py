@@ -1,0 +1,314 @@
+"""Pass 5 — protocol conformance + Pallas kernel budget.
+
+Protocol half (``protocol/*``): every ``RoutingPolicy(...)`` construction
+is checked against the protocol's slot arities, and every policy factory
+must take the pool description first (ROADMAP: "must accept a ModelPool
+first argument").
+
+* ``protocol/registry-drift`` — the ``RoutingPolicy`` NamedTuple grew or
+  renamed a slot this pass doesn't know; the arity table below must be
+  updated in the same PR (this is deliberate: protocol changes should
+  touch the lint).
+* ``protocol/arity`` — a callable bound to a slot whose positional-arg
+  count differs from the protocol arity (resolved against same-module
+  ``def``s; ``*args`` and unresolvable names are skipped).
+* ``protocol/pool-first`` — a factory (a function that directly returns
+  or builds a ``RoutingPolicy(...)``) whose first parameter is neither
+  pool-like by name nor annotated with a pool/array type.  Combinators
+  taking an existing ``RoutingPolicy`` first are exempt.
+
+Kernel half (``kernel/*``), scoped to modules with a ``pallas_call``:
+
+* ``kernel/maxk-duplicate-definition`` — ``MAX_K_FUSED`` assigned in more
+  than one scanned module; the single source of truth is
+  ``repro.kernels.MAX_K_FUSED`` and every kernel must import it.
+* ``kernel/tile-alignment`` — module-level block constants
+  (``DEFAULT_B*``) not multiples of 8 (f32 sublane), or ``MAX_K_FUSED``
+  not a multiple of 128 (lane width).
+* ``kernel/vmem-budget`` — sum of BlockSpec block sizes at the declared
+  bench shapes (K = MAX_K_FUSED ≤ 2048, B = 65536, d = 768), double
+  buffered, exceeding the ~16 MiB/core VMEM budget.  Specs whose shape
+  expressions reference symbols the evaluator can't bind are skipped
+  (checked = only what is provably sized).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from ..engine import AnalysisContext, Finding
+from ..jaxast import (alias_map, collect_functions, dotted_name,
+                      module_int_constants, resolves_to)
+
+R_DRIFT = "protocol/registry-drift"
+R_ARITY = "protocol/arity"
+R_POOL = "protocol/pool-first"
+R_MAXK = "kernel/maxk-duplicate-definition"
+R_TILE = "kernel/tile-alignment"
+R_VMEM = "kernel/vmem-budget"
+
+# RoutingPolicy slot -> positional arity of the bound callable.  Must track
+# src/repro/core/policy.py; registry-drift fires when it doesn't.
+PROTOCOL_ARITY = {
+    "init": 1,            # (key)
+    "act": 3,             # (state, key, x)
+    "update": 5,          # (state, x, a1, a2, y)
+    "update_delayed": 6,  # (state, x, a1, a2, y, age)
+    "update_masked": 6,   # (state, x, a1, a2, y, ok)
+    "act_masked": 5,      # (state, key, x, a1, a2)  [forced-pair variant]
+    "act_pref": 5,        # (state, key, x, prefs, ...)
+    "update_pref": 7,     # (state, x, a1, a2, y, age, prefs)
+}
+NON_CALLABLE_SLOTS = {"name"}
+
+POOLISH_PARAM_NAMES = {"a_emb", "pool", "pool0", "arms", "model_pool",
+                       "n_models", "entries"}
+POOLISH_ANNOTATIONS = ("ModelPool", "Array", "ndarray")
+
+VMEM_BYTES = 16 * 1024 * 1024   # ~16 MiB/core (TPU v4/v5 class)
+BENCH_ENV = {
+    "b": 65536, "bsz": 65536, "m": 65536, "n": 65536,
+    "d": 768, "dim": 768, "j": 2, "n_theta": 2, "n_chains": 2,
+}
+MAXK_DEFAULT = 2048   # bench ceiling when MAX_K_FUSED isn't resolvable
+
+
+# ---------------------------------------------------------------------------
+# protocol half
+# ---------------------------------------------------------------------------
+
+def _routing_policy_fields(ctx: AnalysisContext) -> tuple[list[str], str, int]:
+    for mod in ctx.modules:
+        for node in ast.walk(mod.tree):
+            if (isinstance(node, ast.ClassDef)
+                    and node.name == "RoutingPolicy"):
+                fields = [st.target.id for st in node.body
+                          if isinstance(st, ast.AnnAssign)
+                          and isinstance(st.target, ast.Name)]
+                return fields, mod.rel, node.lineno
+    return [], "", 0
+
+
+def _local_defs(tree: ast.Module) -> dict[str, list[ast.FunctionDef]]:
+    out: dict[str, list[ast.FunctionDef]] = {}
+    for fn in collect_functions(tree):
+        if isinstance(fn.node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.setdefault(fn.node.name, []).append(fn.node)
+    return out
+
+
+def _slot_callables(value: ast.AST) -> Iterable[str]:
+    """Candidate local-def names bound to a slot (through IfExp/BoolOp)."""
+    if isinstance(value, ast.Name) and value.id != "None":
+        yield value.id
+    elif isinstance(value, ast.IfExp):
+        yield from _slot_callables(value.body)
+        yield from _slot_callables(value.orelse)
+    elif isinstance(value, ast.BoolOp):
+        for v in value.values:
+            yield from _slot_callables(v)
+
+
+def _check_protocol(ctx: AnalysisContext) -> Iterable[Finding]:
+    fields, def_path, def_line = _routing_policy_fields(ctx)
+    if fields:
+        known = set(PROTOCOL_ARITY) | NON_CALLABLE_SLOTS
+        for f in fields:
+            if f not in known:
+                yield Finding(def_path, def_line, R_DRIFT, "RoutingPolicy",
+                              f"protocol slot `{f}` unknown to repro-lint — "
+                              "update PROTOCOL_ARITY in "
+                              "analysis/passes/protocol_kernel.py")
+        for f in PROTOCOL_ARITY:
+            if f not in fields:
+                yield Finding(def_path, def_line, R_DRIFT, "RoutingPolicy",
+                              f"repro-lint expects slot `{f}` which the "
+                              "protocol no longer declares — update "
+                              "PROTOCOL_ARITY")
+
+    for mod in ctx.modules:
+        defs = _local_defs(mod.tree)
+        factory_fns: set[ast.AST] = set()
+        fn_of: dict[ast.AST, ast.FunctionDef] = {}
+        for fn in collect_functions(mod.tree):
+            if isinstance(fn.node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for sub in ast.walk(fn.node):
+                    fn_of.setdefault(sub, fn.node)
+        for call in ast.walk(mod.tree):
+            if not (isinstance(call, ast.Call)
+                    and (dotted_name(call.func) or "").split(".")[-1]
+                    == "RoutingPolicy"
+                    and call.keywords):
+                continue
+            owner = fn_of.get(call)
+            if owner is not None:
+                factory_fns.add(owner)
+            pos_fields = fields or list(PROTOCOL_ARITY)
+            slot_values = {kw.arg: kw.value for kw in call.keywords
+                           if kw.arg is not None}
+            for i, arg in enumerate(call.args):
+                if i < len(pos_fields):
+                    slot_values.setdefault(pos_fields[i], arg)
+            for slot, value in slot_values.items():
+                want = PROTOCOL_ARITY.get(slot)
+                if want is None:
+                    continue
+                for name in _slot_callables(value):
+                    for d in defs.get(name, []):
+                        a = d.args
+                        if a.vararg is not None:
+                            continue
+                        got = len(a.posonlyargs) + len(a.args)
+                        if got != want:
+                            yield Finding(
+                                mod.rel, call.lineno, R_ARITY, name,
+                                f"slot `{slot}` wants {want} positional "
+                                f"args, `{name}` takes {got} — the policy "
+                                "will fail at trace time under the generic "
+                                "loop")
+        for owner in factory_fns:
+            args = owner.args
+            params = [p.arg for p in args.posonlyargs + args.args]
+            params = [p for p in params if p != "self"]
+            if not params:
+                continue
+            first = args.posonlyargs + args.args
+            first = [p for p in first if p.arg != "self"][0]
+            ann = ast.unparse(first.annotation) if first.annotation else ""
+            if "RoutingPolicy" in ann:
+                continue   # combinator wrapping an existing policy
+            if first.arg in POOLISH_PARAM_NAMES:
+                continue
+            if any(tok in ann for tok in POOLISH_ANNOTATIONS):
+                continue
+            yield Finding(
+                mod.rel, owner.lineno, R_POOL, owner.name,
+                f"policy factory's first parameter `{first.arg}` is not "
+                "the pool/embedding table — ROADMAP requires pool-first "
+                "factories")
+
+
+# ---------------------------------------------------------------------------
+# kernel half
+# ---------------------------------------------------------------------------
+
+def _eval_dim(node: ast.AST, env: dict[str, int]) -> int | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    if isinstance(node, ast.Name):
+        return env.get(node.id)
+    if isinstance(node, ast.BinOp):
+        lo, hi = _eval_dim(node.left, env), _eval_dim(node.right, env)
+        if lo is None or hi is None:
+            return None
+        if isinstance(node.op, ast.Add):
+            return lo + hi
+        if isinstance(node.op, ast.Sub):
+            return lo - hi
+        if isinstance(node.op, ast.Mult):
+            return lo * hi
+        if isinstance(node.op, ast.FloorDiv) and hi:
+            return lo // hi
+    if isinstance(node, ast.Call):
+        name = (dotted_name(node.func) or "").split(".")[-1]
+        if name in ("min", "max") and node.args:
+            vals = [_eval_dim(a, env) for a in node.args]
+            if all(v is not None for v in vals):
+                return (min if name == "min" else max)(vals)  # type: ignore
+    return None
+
+
+def _block_shapes(call: ast.Call) -> Iterable[tuple[int, ast.AST]]:
+    """(lineno, shape-tuple-node) for each BlockSpec in in/out_specs."""
+    for kw in call.keywords:
+        if kw.arg not in ("in_specs", "out_specs"):
+            continue
+        specs = kw.value
+        elems = specs.elts if isinstance(specs, (ast.List, ast.Tuple)) \
+            else [specs]
+        for e in elems:
+            if (isinstance(e, ast.Call)
+                    and (dotted_name(e.func) or "").endswith("BlockSpec")
+                    and e.args and isinstance(e.args[0], ast.Tuple)):
+                yield e.lineno, e.args[0]
+
+
+def _check_kernels(ctx: AnalysisContext) -> Iterable[Finding]:
+    maxk_defs: list[tuple[str, int, int]] = []   # (rel, line, value)
+    for mod in ctx.modules:
+        for node in mod.tree.body:
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and node.targets[0].id == "MAX_K_FUSED"
+                    and isinstance(node.value, ast.Constant)):
+                maxk_defs.append((mod.rel, node.lineno, node.value.value))
+    if len(maxk_defs) > 1:
+        sites = ", ".join(f"{p}:{ln}" for p, ln, _ in maxk_defs)
+        for rel, line, _v in maxk_defs:
+            yield Finding(rel, line, R_MAXK, "MAX_K_FUSED",
+                          f"MAX_K_FUSED defined at {sites} — keep the "
+                          "single source of truth in repro/kernels/"
+                          "__init__.py and import it everywhere")
+    maxk = maxk_defs[0][2] if maxk_defs else MAXK_DEFAULT
+
+    for mod in ctx.modules:
+        aliases = alias_map(mod.tree)
+        pallas_calls = [
+            n for n in ast.walk(mod.tree)
+            if isinstance(n, ast.Call)
+            and resolves_to(n.func, aliases,
+                            {"jax.experimental.pallas.pallas_call"})]
+        if not pallas_calls:
+            continue
+        consts = module_int_constants(mod.tree)
+        for name, val in consts.items():
+            if name.startswith("DEFAULT_B") and val % 8 != 0:
+                line = next(
+                    (n.lineno for n in mod.tree.body
+                     if isinstance(n, ast.Assign)
+                     and isinstance(n.targets[0], ast.Name)
+                     and n.targets[0].id == name), 1)
+                yield Finding(mod.rel, line, R_TILE, name,
+                              f"block constant {name}={val} is not a "
+                              "multiple of 8 (f32 sublane) — tiles will "
+                              "pad and waste VMEM bandwidth")
+        if "MAX_K_FUSED" in consts and consts["MAX_K_FUSED"] % 128 != 0:
+            yield Finding(mod.rel, 1, R_TILE, "MAX_K_FUSED",
+                          f"MAX_K_FUSED={consts['MAX_K_FUSED']} is not a "
+                          "multiple of 128 (lane width)")
+
+        env = dict(BENCH_ENV)
+        env.update(consts)
+        for alias, const in (("bb", "DEFAULT_BB"), ("bk", "DEFAULT_BK"),
+                             ("bm", "DEFAULT_BM")):
+            if const in consts:
+                env.setdefault(alias, consts[const])
+        for k_name in ("k", "kp", "k_pad", "k_max", "kmax", "k_valid"):
+            env.setdefault(k_name, maxk)
+
+        for call in pallas_calls:
+            total = 0
+            checked = 0
+            for _line, tup in _block_shapes(call):
+                dims = [_eval_dim(el, env) for el in tup.elts]
+                if any(d is None for d in dims):
+                    continue    # symbol outside the bench env — skip spec
+                nelem = 1
+                for d in dims:
+                    nelem *= max(int(d), 1)
+                total += nelem * 4
+                checked += 1
+            if checked and total * 2 > VMEM_BYTES:   # double buffering
+                yield Finding(
+                    mod.rel, call.lineno, R_VMEM, "",
+                    f"pallas_call blocks need ~{total * 2 // 1024 // 1024} "
+                    f"MiB VMEM double-buffered at bench shapes "
+                    f"(K={maxk}, B=65536, d=768) — exceeds the "
+                    f"{VMEM_BYTES // 1024 // 1024} MiB/core budget; "
+                    "shrink the block constants")
+
+
+def run(ctx: AnalysisContext) -> Iterable[Finding]:
+    out = list(_check_protocol(ctx))
+    out.extend(_check_kernels(ctx))
+    return out

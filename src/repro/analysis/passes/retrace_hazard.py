@@ -1,0 +1,155 @@
+"""Pass 3 — retrace-hazard: per-call-varying host values hitting jit.
+
+Two rules:
+
+* ``retrace/jit-in-loop`` — constructing a compiled program
+  (``jax.jit`` / ``pallas_call`` / ``shard_map`` / ``pmap``) inside a
+  Python ``for``/``while`` body.  Each iteration builds a distinct
+  callable with an empty cache, so nothing is ever reused.  (Calling an
+  already-jitted function in a loop is fine; it's the *wrapping* in the
+  loop that leaks.)
+
+* ``retrace/varying-host-operand`` — a class whose method passes a
+  *varying* instance attribute (one the class mutates with ``+= `` or a
+  self-referential reassignment, e.g. a tick counter) as a bare operand
+  into one of its jitted callables (attributes assigned from
+  ``jax.jit(...)``).  Bare python ints retrace per value; the fix is the
+  ``_tick32``-style wrap that converts to a device array *before* the
+  call boundary, which this rule recognizes as any wrapping call on the
+  operand path.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from ..engine import AnalysisContext, Finding
+from ..jaxast import PROGRAM_BUILDERS, alias_map, resolves_to
+
+R_LOOP = "retrace/jit-in-loop"
+R_VARY = "retrace/varying-host-operand"
+
+
+def _jit_in_loops(mod, aliases) -> Iterable[Finding]:
+    class V(ast.NodeVisitor):
+        def __init__(self):
+            self.loop_depth = 0
+            self.findings: list[Finding] = []
+
+        def visit_For(self, node):
+            self._loop(node)
+
+        def visit_AsyncFor(self, node):
+            self._loop(node)
+
+        def visit_While(self, node):
+            self._loop(node)
+
+        def _loop(self, node):
+            self.loop_depth += 1
+            self.generic_visit(node)
+            self.loop_depth -= 1
+
+        def visit_Call(self, node):
+            if self.loop_depth > 0:
+                hit = resolves_to(node.func, aliases, PROGRAM_BUILDERS)
+                if hit:
+                    self.findings.append(Finding(
+                        mod.rel, node.lineno, R_LOOP, "",
+                        f"{hit.rsplit('.', 1)[-1]}(...) constructed inside "
+                        "a python loop — every iteration compiles from "
+                        "scratch; hoist the wrapper out of the loop"))
+            self.generic_visit(node)
+
+    v = V()
+    v.visit(mod.tree)
+    return v.findings
+
+
+def _varying_attrs(cls: ast.ClassDef) -> set[str]:
+    """Attrs the class mutates per call: ``self.x += ...`` or
+    ``self.x = <expr mentioning self.x>``."""
+    varying: set[str] = set()
+    for node in ast.walk(cls):
+        if (isinstance(node, ast.AugAssign)
+                and isinstance(node.target, ast.Attribute)
+                and isinstance(node.target.value, ast.Name)
+                and node.target.value.id == "self"):
+            varying.add(node.target.attr)
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1:
+            t = node.targets[0]
+            if (isinstance(t, ast.Attribute)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id == "self"):
+                for ref in ast.walk(node.value):
+                    if (isinstance(ref, ast.Attribute)
+                            and isinstance(ref.value, ast.Name)
+                            and ref.value.id == "self"
+                            and ref.attr == t.attr
+                            and not isinstance(node.value, ast.Call)):
+                        varying.add(t.attr)
+    return varying
+
+
+def _jitted_attrs(cls: ast.ClassDef, aliases) -> set[str]:
+    """Attrs bound to compiled callables: ``self.x = jax.jit(...)``."""
+    jitted: set[str] = set()
+    for node in ast.walk(cls):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Attribute)
+                and isinstance(node.targets[0].value, ast.Name)
+                and node.targets[0].value.id == "self"
+                and isinstance(node.value, ast.Call)
+                and resolves_to(node.value.func, aliases, PROGRAM_BUILDERS)):
+            jitted.add(node.targets[0].attr)
+    return jitted
+
+
+def _bare_self_attrs(node: ast.AST) -> Iterable[ast.Attribute]:
+    """self.X occurrences not wrapped by any call on the path from the
+    operand root — a wrapping call (jnp.asarray, _tick32, ...) converts
+    before the jit boundary and is the sanctioned pattern."""
+    if isinstance(node, ast.Call):
+        return
+    if (isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        yield node
+        return
+    for child in ast.iter_child_nodes(node):
+        yield from _bare_self_attrs(child)
+
+
+def _varying_operands(mod, aliases) -> Iterable[Finding]:
+    for cls in ast.walk(mod.tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        varying = _varying_attrs(cls)
+        jitted = _jitted_attrs(cls, aliases)
+        if not varying or not jitted:
+            continue
+        for call in ast.walk(cls):
+            if not (isinstance(call, ast.Call)
+                    and isinstance(call.func, ast.Attribute)
+                    and isinstance(call.func.value, ast.Name)
+                    and call.func.value.id == "self"
+                    and call.func.attr in jitted):
+                continue
+            operands = list(call.args) + [kw.value for kw in call.keywords]
+            for op in operands:
+                for attr in _bare_self_attrs(op):
+                    if attr.attr in varying:
+                        yield Finding(
+                            mod.rel, call.lineno, R_VARY, cls.name,
+                            f"per-call-varying `self.{attr.attr}` passed "
+                            f"bare into jitted `self.{call.func.attr}` — "
+                            "retraces on every new value; wrap it in a "
+                            "device array (see the _tick32 idiom) first")
+
+
+def run(ctx: AnalysisContext) -> Iterable[Finding]:
+    out: list[Finding] = []
+    for mod in ctx.modules:
+        aliases = alias_map(mod.tree)
+        out.extend(_jit_in_loops(mod, aliases))
+        out.extend(_varying_operands(mod, aliases))
+    return out

@@ -1,0 +1,214 @@
+"""Pass 1 — trace-hazard: host syncs and Python control flow under a trace.
+
+Two rule families:
+
+* Inside jit/scan/shard_map-reachable functions (per the module-local
+  reachability approximation in :mod:`repro.analysis.jaxast`):
+
+  - ``trace-hazard/host-sync``     ``.item()`` / ``.tolist()`` anywhere, and
+    ``np.asarray`` / ``np.array`` on a value derived from a traced operand.
+  - ``trace-hazard/host-cast``     ``int()``/``float()``/``bool()`` on a
+    value derived from a traced operand (shape/static expressions exempt).
+  - ``trace-hazard/python-control-flow``  ``if``/``while`` whose test
+    depends on a traced operand (``is None`` / isinstance / string-compare
+    guards exempt — those are static dispatch, not data-dependent flow).
+
+* In every function of a ``serving/`` module, traced or not
+  (``trace-hazard/serving-host-sync``): the serving hot path must stay
+  dispatch-async, so any ``.item()``, ``np.asarray``-style conversion, or
+  ``int(...)``/``float(...)`` wrapping a call result forces a device sync
+  per batch and gets flagged.  Shape reads like ``int(x.shape[0])`` stay
+  legal.  Findings here are expected to be either fixed or carried in
+  ``analysis/baseline.json`` with a reason (e.g. checkpoint restore).
+
+Traced-ness is a syntactic taint: positional parameters of a reachable
+function seed the set, assignments whose right-hand side mentions a
+tainted name extend it.  Keyword-only parameters are treated as static —
+the repo's idiom is to partial-bind configuration kw-only and close over
+it before jitting.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from ..engine import AnalysisContext, Finding
+from ..jaxast import (FuncInfo, alias_map, collect_functions, contains_call,
+                      jit_reachable, resolves_to)
+
+R_SYNC = "trace-hazard/host-sync"
+R_CAST = "trace-hazard/host-cast"
+R_FLOW = "trace-hazard/python-control-flow"
+R_SERVE = "trace-hazard/serving-host-sync"
+
+NUMPY_HOST = {"numpy.asarray", "numpy.array", "numpy.ascontiguousarray"}
+STATIC_CALLS = {"len", "isinstance", "type", "hasattr", "getattr",
+                "jax.numpy.shape", "numpy.shape", "jax.numpy.ndim"}
+SHAPE_ATTRS = {"shape", "ndim", "size", "dtype", "itemsize", "nbytes"}
+HOST_METHODS = {"item", "tolist"}
+
+
+def _is_static(node: ast.AST, tainted: set[str],
+               aliases: dict[str, str]) -> bool:
+    """True when evaluating ``node`` cannot touch a traced value."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Name):
+        return node.id not in tainted
+    if isinstance(node, ast.Attribute):
+        if node.attr in SHAPE_ATTRS:
+            return True          # shapes/dtypes are static under tracing
+        return _is_static(node.value, tainted, aliases)
+    if isinstance(node, ast.Subscript):
+        return (_is_static(node.value, tainted, aliases)
+                and _is_static(node.slice, tainted, aliases))
+    if isinstance(node, ast.Call):
+        # len() of a traced array is its (static) leading dim; isinstance
+        # and friends never trace.  int(x.shape[0])-style casts of static
+        # expressions stay static.  Anything else is assumed dynamic.
+        if (isinstance(node.func, ast.Name)
+                and node.func.id in ("int", "float", "bool")):
+            return all(_is_static(a, tainted, aliases) for a in node.args)
+        return resolves_to(node.func, aliases, STATIC_CALLS) is not None
+    if isinstance(node, (ast.BinOp, ast.BoolOp, ast.Compare, ast.UnaryOp,
+                         ast.IfExp, ast.Tuple, ast.List, ast.Set)):
+        return all(_is_static(c, tainted, aliases)
+                   for c in ast.iter_child_nodes(node)
+                   if not isinstance(c, (ast.operator, ast.boolop,
+                                         ast.cmpop, ast.unaryop,
+                                         ast.expr_context)))
+    return False
+
+
+def _taint_set(fn: FuncInfo) -> set[str]:
+    tainted = {p for p in fn.pos_params if p != "self"}
+    # One forward sweep: an assignment whose RHS mentions taint taints its
+    # targets, unless the RHS is a static (shape-like) expression.
+    for node in ast.walk(fn.node):
+        if isinstance(node, ast.Assign):
+            value, targets = node.value, node.targets
+        elif isinstance(node, ast.AugAssign):
+            value, targets = node.value, [node.target]
+        else:
+            continue
+        names = {n.id for n in ast.walk(value) if isinstance(n, ast.Name)}
+        if not (names & tainted):
+            continue
+        if _is_static(value, tainted, {}):
+            continue
+        for t in targets:
+            for leaf in ast.walk(t):
+                if isinstance(leaf, ast.Name):
+                    tainted.add(leaf.id)
+    return tainted
+
+
+def _exempt_test(test: ast.AST) -> bool:
+    """Static-dispatch guards that look tainted but never trace."""
+    if isinstance(test, ast.Compare):
+        if any(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops):
+            return True
+        operands = [test.left, *test.comparators]
+        if any(isinstance(o, ast.Constant) and isinstance(o.value, str)
+               for o in operands):
+            return True
+    if isinstance(test, ast.Call):
+        return True    # callable(..)/isinstance(..)-style predicate guards
+    if isinstance(test, ast.BoolOp):
+        return all(_exempt_test(v) for v in test.values)
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _exempt_test(test.operand)
+    return False
+
+
+def _scan_reachable(mod, fn: FuncInfo, aliases) -> Iterable[Finding]:
+    if isinstance(fn.node, ast.Lambda):
+        return
+    tainted = _taint_set(fn)
+    own_nested = {n for n in ast.walk(fn.node)
+                  if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                  and n is not fn.node}
+
+    def walk(node):
+        for child in ast.iter_child_nodes(node):
+            if child in own_nested:
+                continue          # nested defs are scanned as themselves
+            yield child
+            yield from walk(child)
+
+    for node in walk(fn.node):
+        if isinstance(node, ast.Call):
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in HOST_METHODS
+                    and not node.args):
+                yield Finding(mod.rel, node.lineno, R_SYNC, fn.qualname,
+                              f".{node.func.attr}() forces a host sync "
+                              "inside traced code")
+            elif resolves_to(node.func, aliases, NUMPY_HOST):
+                if any(not _is_static(a, tainted, aliases)
+                       for a in node.args):
+                    yield Finding(mod.rel, node.lineno, R_SYNC, fn.qualname,
+                                  "numpy conversion of a traced value pulls "
+                                  "it to host")
+            elif (isinstance(node.func, ast.Name)
+                  and node.func.id in ("int", "float", "bool")
+                  and node.args
+                  and not _is_static(node.args[0], tainted, aliases)):
+                yield Finding(mod.rel, node.lineno, R_CAST, fn.qualname,
+                              f"{node.func.id}() on a traced value forces "
+                              "concretization")
+        elif isinstance(node, (ast.If, ast.While)):
+            test = node.test
+            if (not _is_static(test, tainted, aliases)
+                    and not _exempt_test(test)):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                yield Finding(mod.rel, node.lineno, R_FLOW, fn.qualname,
+                              f"python `{kind}` on a traced value — use "
+                              "lax.cond/select/while_loop")
+
+
+def _scan_serving(mod, fn: FuncInfo, aliases,
+                  already: set) -> Iterable[Finding]:
+    if isinstance(fn.node, ast.Lambda):
+        return
+    for node in ast.walk(fn.node):
+        if not isinstance(node, ast.Call):
+            continue
+        key = (node.lineno, node.col_offset)
+        if key in already:
+            continue
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr in HOST_METHODS and not node.args):
+            already.add(key)
+            yield Finding(mod.rel, node.lineno, R_SERVE, fn.qualname,
+                          f".{node.func.attr}() syncs the serving loop "
+                          "with the device")
+        elif resolves_to(node.func, aliases, NUMPY_HOST):
+            already.add(key)
+            yield Finding(mod.rel, node.lineno, R_SERVE, fn.qualname,
+                          "np conversion materializes device results in "
+                          "the serving path")
+        elif (isinstance(node.func, ast.Name)
+              and node.func.id in ("int", "float", "bool")
+              and node.args and contains_call(node.args[0])):
+            already.add(key)
+            yield Finding(mod.rel, node.lineno, R_SERVE, fn.qualname,
+                          f"{node.func.id}(...) around a computed value "
+                          "blocks on the device per call")
+
+
+def run(ctx: AnalysisContext) -> Iterable[Finding]:
+    out: list[Finding] = []
+    for mod in ctx.modules:
+        aliases = alias_map(mod.tree)
+        reachable = jit_reachable(mod.tree, aliases)
+        for fn in reachable.values():
+            out.extend(_scan_reachable(mod, fn, aliases))
+        if "serving/" in mod.rel or mod.rel.startswith("serving"):
+            reach_lines = {f.line for f in out if f.path == mod.rel}
+            already: set = set()
+            for fn in collect_functions(mod.tree):
+                for f in _scan_serving(mod, fn, aliases, already):
+                    if f.line not in reach_lines:
+                        out.append(f)
+    return out

@@ -36,9 +36,9 @@ from jax.experimental import pallas as pl
 
 DEFAULT_BB = 128
 DEFAULT_BK = 128
-# K above this no longer fits one VMEM tile for the argmax epilogue; fall
-# back to scores + XLA argmax (router pools are K <= ~100 in practice).
-MAX_K_FUSED = 1024
+# The fused-epilogue K ceiling lives on the package (single source of
+# truth, asserted by repro-lint's kernel-budget pass).
+from repro.kernels import MAX_K_FUSED  # noqa: E402
 
 _ACCEL_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
 

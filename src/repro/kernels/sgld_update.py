@@ -64,7 +64,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from .dueling_score import MAX_K_FUSED, _resolve_interpret, default_interpret
+from repro.kernels import MAX_K_FUSED
+
+from .dueling_score import _resolve_interpret, default_interpret
 
 DEFAULT_BM = 128
 

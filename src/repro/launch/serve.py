@@ -349,9 +349,12 @@ def main():
               f"{ap_note} ({time.time()-t0:.1f}s)")
     early = np.mean(regrets[:max(args.rounds // 4, 1)])
     late = np.mean(regrets[-max(args.rounds // 4, 1):])
+    stats = svc.service_stats()     # one sync for all traffic counters
     print(f"[serve] regret early={early:.4f} late={late:.4f} "
           f"(adaptive: {'yes' if late < early else 'no'}) "
-          f"unresolved={svc.pending_count()}")
+          f"routed={stats['n_routed']} folded={stats['n_folded']} "
+          f"duel-cost=${stats['duel_cost']:.2f} "
+          f"unresolved={stats['pending']}")
     if pref_log:
         # realized duel cost bucketed by the pref each request carried:
         # higher tilts should buy cheaper duels — the cost-quality knob

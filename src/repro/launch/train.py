@@ -34,8 +34,11 @@ def synthetic_batch(key, cfg, batch: int, seq: int):
             kp, (batch, cfg.n_frontend_tokens, cfg.d_model),
             jnp.dtype(cfg.dtype))
     if cfg.is_encdec:
+        # distinct subkey: a vision+encdec arch must not correlate its
+        # patch and frame draws
         out["frames"] = jax.random.normal(
-            kp, (batch, cfg.enc_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+            jax.random.fold_in(kp, 1),
+            (batch, cfg.enc_frames, cfg.d_model), jnp.dtype(cfg.dtype))
     out["tokens"] = jax.random.randint(kt, (batch, text), 0, cfg.vocab_size)
     out["labels"] = jax.random.randint(kl, (batch, text), 0, cfg.vocab_size)
     return out

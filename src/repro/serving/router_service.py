@@ -53,10 +53,6 @@ from repro.sharding import routing_rules as rr
 from . import feedback_queue as fq
 
 
-def _next_pow2(n: int) -> int:
-    return 1 << max(n - 1, 0).bit_length()
-
-
 def _tick32(tick: int) -> jax.Array:
     """The service clock as a wrapping int32 device scalar.
 
@@ -205,6 +201,12 @@ class RouterService:
         self.pending = fq.init_pending(capacity, self.a_emb.shape[1])
         self.tick = 0                  # route_batch calls (the service clock)
         self.n_routed = 0
+        # on-device stats accumulators: the hot path only *adds* to these
+        # (lazy, no host sync); service_stats() materializes them in one
+        # deliberate device_get. Process-local by design — not part of the
+        # checkpoint payload, so they reset to zero on restore().
+        self._n_folded = jnp.zeros((), jnp.int32)
+        self._duel_cost = jnp.zeros((), jnp.float32)
         self._build_programs()
 
     def _build_programs(self):
@@ -420,6 +422,8 @@ class RouterService:
         # replicate / shard the live buffers onto the mesh
         self.state = jax.device_put(self.state, rep)
         self.pending = jax.device_put(self.pending, pend)
+        self._n_folded = jax.device_put(self._n_folded, rep)
+        self._duel_cost = jax.device_put(self._duel_cost, rep)
 
     def _shard_batch(self, x: jax.Array, what: str = "batch") -> jax.Array:
         """Mesh mode: place a (B, ...) array batch-sharded (no-op on a
@@ -484,10 +488,12 @@ class RouterService:
         self.pending, tickets = self._enqueue(
             self.pending, x, a1, a2, _tick32(self.tick),
             self._shard_batch(pref_row, "route_batch"))
-        self.n_routed += int(x.shape[0])
+        self.n_routed += int(x.shape[0])     # static shape: no device sync
+        # realized duel cost rides on-device; spend() is lazy
+        self._duel_cost = self._duel_cost + self.spend(a1) + self.spend(a2)
         return a1, a2, tickets
 
-    def feedback_batch(self, tickets: jax.Array, y: jax.Array) -> int:
+    def feedback_batch(self, tickets: jax.Array, y: jax.Array):
         """Resolve a batch of votes by ticket id and fold them in.
 
         Out-of-order, partial, and duplicate deliveries are all fine:
@@ -497,59 +503,57 @@ class RouterService:
         expired, or overwritten under capacity pressure) are dropped, and
         the surviving duels enter the policy with one jitted batched update
         (the staleness-aware ``update_delayed`` path when the policy has
-        one). Returns the number of duels actually folded in.
+        one). Returns the number of duels actually folded in — a *lazy*
+        device scalar on the masked/pref paths (compare or ``int()`` it at
+        the edge; the hot loop never blocks on it), a host int only on the
+        compaction fallback.
 
-        Recompilation is bounded: policies with an ``update_masked`` fold
-        rejects through a shape-stable masked update — the full batch shape
-        under a mesh (nothing gathered to one device), or the kept rows
-        padded up to the next power of two on a single device, so distinct
-        survivor counts cost O(log B) retraces instead of O(B). Policies
-        without one keep the host-side compaction path.
+        Policies with an ``update_masked`` fold rejects through the
+        shape-stable masked update on the full resolved batch — rejected
+        rows scatter out of bounds (``mode="drop"``) and contribute
+        nothing, so the fold is bit-identical to compacting first, every
+        survivor count reuses ONE compiled program, and the whole path
+        runs without a single host sync. Policies without one keep the
+        host-side compaction path (which must concretize the survivor
+        count to shape the batch — each new count retraces once).
         """
-        tickets = self._shard_batch(jnp.asarray(tickets, jnp.int32),
-                                    "feedback_batch")
-        y = self._shard_batch(jnp.asarray(y, jnp.float32), "feedback_batch")
+        tickets = jnp.asarray(tickets, jnp.int32)
+        y = jnp.asarray(y, jnp.float32)
+        if tickets.shape != y.shape:
+            # the old gather path silently sliced an oversized y; fail loud
+            raise ValueError(
+                f"feedback_batch: tickets shape {tickets.shape} != votes "
+                f"shape {y.shape} — one vote per delivered ticket")
+        tickets = self._shard_batch(tickets, "feedback_batch")
+        y = self._shard_batch(y, "feedback_batch")
         self.pending, res = self._resolve(
             self.pending, tickets, y, _tick32(self.tick))
-        ok = np.asarray(res.ok)
-        n_ok = int(ok.sum())
-        if n_ok == 0:
-            return 0
+        n_ok = jnp.sum(res.ok).astype(jnp.int32)    # lazy device count
         if self._update_pref is not None and res.pref is not None:
             # preference-conditioned fold: each duel updates under the pref
             # it was served with, so the feel-good term targets the same
             # tilted objective the selection optimized
-            if self.mesh is not None or n_ok == ok.size:
-                self.state = self._update_pref(
-                    self.state, res.x, res.a1, res.a2, res.y, res.age,
-                    res.ok, res.pref)
-            else:
-                n_pad = min(_next_pow2(n_ok), ok.size)
-                sel = jnp.argsort(res.ok, descending=True, stable=True)
-                sel = sel[:n_pad]
-                self.state = self._update_pref(
-                    self.state, res.x[sel], res.a1[sel], res.a2[sel],
-                    res.y[sel], res.age[sel], res.ok[sel], res.pref[sel])
+            self.state = self._update_pref(
+                self.state, res.x, res.a1, res.a2, res.y, res.age,
+                res.ok, res.pref)
+            self._n_folded = self._n_folded + n_ok
             return n_ok
         if self._update_masked is not None:
-            if self.mesh is not None or n_ok == ok.size:
-                self.state = self._update_masked(
-                    self.state, res.x, res.a1, res.a2, res.y, res.age,
-                    res.ok)
-            else:
-                # kept rows to the front (stable, preserving fold order),
-                # padded with masked reject rows up to the next power of two
-                n_pad = min(_next_pow2(n_ok), ok.size)
-                sel = jnp.argsort(res.ok, descending=True, stable=True)
-                sel = sel[:n_pad]
-                self.state = self._update_masked(
-                    self.state, res.x[sel], res.a1[sel], res.a2[sel],
-                    res.y[sel], res.age[sel], res.ok[sel])
+            self.state = self._update_masked(
+                self.state, res.x, res.a1, res.a2, res.y, res.age, res.ok)
+            self._n_folded = self._n_folded + n_ok
             return n_ok
         # host-side compaction fallback: each new surviving count retraces
         # the jitted update once (the update is the ring scatter; the SGLD
-        # refresh lives in act)
-        if n_ok == ok.size:
+        # refresh lives in act). Shaping the compacted batch forces the one
+        # host sync this path is named for (baselined in
+        # analysis/baseline.json).
+        ok = np.asarray(res.ok)
+        n_host = int(ok.sum())
+        self._n_folded = self._n_folded + n_host
+        if n_host == 0:
+            return 0
+        if n_host == ok.size:
             x, a1, a2, yv, age = res.x, res.a1, res.a2, res.y, res.age
         else:
             keep = np.flatnonzero(ok)
@@ -564,7 +568,7 @@ class RouterService:
                                                       yv, age)
         else:
             self.state = self._update_compact(self.state, x, a1, a2, yv)
-        return n_ok
+        return n_host
 
     def feedback_direct(self, x: jax.Array, a1: jax.Array, a2: jax.Array,
                         y: jax.Array, tickets: jax.Array | None = None):
@@ -599,9 +603,25 @@ class RouterService:
             self.pending, _tick32(self.tick), self.cfg.feedback_expiry)
         return int(dropped)
 
-    def spend(self, arms: jax.Array, tokens_out: int = 1000) -> float:
-        """Cost accounting for a batch of dispatches."""
-        return float(jnp.sum(self.costs[arms]) * tokens_out / 1000.0)
+    def spend(self, arms: jax.Array, tokens_out: int = 1000) -> jax.Array:
+        """Cost accounting for a batch of dispatches — a lazy device
+        scalar, so route_batch can accumulate it without blocking; callers
+        that need a host number ``float()`` it at the edge (a print, a
+        summary), not per batch."""
+        return jnp.sum(self.costs[arms]) * (tokens_out / 1000.0)
+
+    def service_stats(self) -> dict:
+        """Materialize the on-device traffic accumulators in ONE deliberate
+        host sync: routed/folded duel counts, realized duel cost (both
+        sides of every issued pair at the pool's per-1k rates), in-flight
+        pending count. This is the summary call the hot path defers to —
+        route_batch/feedback_batch only ever add lazily."""
+        n_folded, duel_cost, pending = jax.device_get(
+            (self._n_folded, self._duel_cost,
+             fq.pending_count(self.pending)))
+        return {"tick": self.tick, "n_routed": self.n_routed,
+                "n_folded": int(n_folded), "duel_cost": float(duel_cost),
+                "pending": int(pending)}
 
     # -- dynamic pool membership (requires cfg.k_max) ------------------------
 

@@ -1,0 +1,40 @@
+"""Seeded Pallas kernel-budget violations + clean twins.
+
+Parsed by tests/test_analysis.py, never executed.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MAX_K_FUSED = 1024  # PLANT: kernel/maxk-duplicate-definition
+DEFAULT_BB = 130  # PLANT: kernel/tile-alignment
+DEFAULT_BK = 128
+# a second source of truth — exactly the drift the dedup rule exists for
+MAX_K_FUSED = 1024  # PLANT: kernel/maxk-duplicate-definition
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def bad_big_blocks(x):
+    # (4096, 768) f32 blocks, double-buffered: ~48 MiB against ~16 MiB/core
+    return pl.pallas_call(  # PLANT: kernel/vmem-budget
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((65536, 768), jnp.float32),
+        grid=(16,),
+        in_specs=[pl.BlockSpec((4096, 768), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((4096, 768), lambda i: (i, 0)),
+    )(x)
+
+
+# --------------------------- clean twins -----------------------------------
+
+def ok_small_blocks(x):
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((65536, 768), jnp.float32),
+        grid=(512,),
+        in_specs=[pl.BlockSpec((DEFAULT_BK, 768), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((DEFAULT_BK, 768), lambda i: (i, 0)),
+    )(x)

@@ -1,0 +1,50 @@
+"""Seeded partition-spec coverage drift + clean twins.
+
+Parsed by tests/test_analysis.py, never executed.
+"""
+from typing import NamedTuple
+
+from jax.sharding import PartitionSpec as P
+
+
+class DuelState(NamedTuple):
+    theta: object
+    mom: object
+    pref: object
+    t: object
+
+
+def specs_missing():
+    # `pref` grew on the record but the spec map was never updated
+    return DuelState(  # PLANT: partition/missing-field
+        theta=P("model", None),
+        mom=P("model", None),
+        t=None,
+    )
+
+
+def specs_stale_rename():
+    # classic rename drift: the record says `pref`, the map says `prefs`
+    return DuelState(  # PLANT: partition/missing-field partition/unknown-field
+        theta=P("model", None),
+        mom=P("model", None),
+        prefs=P("data"),
+        t=None,
+    )
+
+
+# --------------------------- clean twins -----------------------------------
+
+def specs_ok():
+    batch = P("data")
+    return DuelState(
+        theta=P("model", None),
+        mom=P("model", None),
+        pref=batch,
+        t=None,
+    )
+
+
+def data_ok(theta, mom, pref, t):
+    # ordinary data construction: not a spec map, never checked
+    return DuelState(theta=theta, mom=mom, pref=pref, t=t)

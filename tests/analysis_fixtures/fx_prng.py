@@ -1,0 +1,50 @@
+"""Seeded PRNG key-reuse violations + clean twins.
+
+Parsed by tests/test_analysis.py, never executed.
+"""
+import jax
+
+
+def bad_double_sample(key, x):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.normal(key, (4,))  # PLANT: prng/key-reuse
+    return a + b + x
+
+
+def bad_loop_sample(key, xs):
+    total = 0.0
+    for x in xs:
+        total += x * jax.random.uniform(key)  # PLANT: prng/key-reuse
+    return total
+
+
+def bad_split_then_reuse(rng):
+    k1, k2 = jax.random.split(rng)
+    a = jax.random.normal(k1, (2,))
+    b = jax.random.normal(rng, (2,))  # PLANT: prng/key-reuse
+    return a + b + k2.sum()
+
+
+# --------------------------- clean twins -----------------------------------
+
+def ok_fold_in(key, steps):
+    # fold_in's base argument is the blessed non-consuming reuse
+    total = 0.0
+    for i in range(steps):
+        total += jax.random.uniform(jax.random.fold_in(key, i))
+    return total
+
+
+def ok_split_iteration(key, n):
+    # each loop iteration re-binds a fresh subkey from the split batch
+    out = []
+    for sub in jax.random.split(key, n):
+        out.append(jax.random.normal(sub, (2,)))
+    return out
+
+
+def ok_early_return(key, flag):
+    # the early-return branch never reaches the fall-through draw
+    if flag:
+        return jax.random.normal(key, (2,))
+    return jax.random.uniform(key)

@@ -1,0 +1,80 @@
+"""Seeded protocol-conformance violations + clean twins.
+
+Parsed by tests/test_analysis.py, never executed.  The RoutingPolicy
+defined here shadows the real one only inside the fixture context.
+"""
+from typing import NamedTuple
+
+
+class RoutingPolicy(NamedTuple):  # PLANT: protocol/registry-drift
+    name: str
+    init: object
+    act: object
+    update: object
+    update_delayed: object
+    update_masked: object
+    act_masked: object
+    act_pref: object
+    update_pref: object
+    act_greedy: object   # rogue slot the lint's arity table doesn't know
+
+
+def _init(key):
+    return {"t": 0}
+
+
+def _act_ok(state, key, x):
+    return 0, 1
+
+
+def _act_bad(state, x):
+    # missing the key slot: 2 positional args where the protocol wants 3
+    return 0, 1
+
+
+def make_bad_policy(temperature, a_emb):  # PLANT: protocol/pool-first
+    return RoutingPolicy(  # PLANT: protocol/arity
+        name="bad",
+        init=_init,
+        act=_act_bad,
+        update=None,
+        update_delayed=None,
+        update_masked=None,
+        act_masked=None,
+        act_pref=None,
+        update_pref=None,
+        act_greedy=None,
+    )
+
+
+# --------------------------- clean twins -----------------------------------
+
+def make_ok_policy(a_emb, temperature=1.0):
+    return RoutingPolicy(
+        name="ok",
+        init=_init,
+        act=_act_ok,
+        update=None,
+        update_delayed=None,
+        update_masked=None,
+        act_masked=None,
+        act_pref=None,
+        update_pref=None,
+        act_greedy=None,
+    )
+
+
+def with_logging(inner: RoutingPolicy):
+    # combinator over an existing policy: exempt from pool-first
+    return RoutingPolicy(
+        name="logged",
+        init=inner.init,
+        act=inner.act,
+        update=inner.update,
+        update_delayed=None,
+        update_masked=None,
+        act_masked=None,
+        act_pref=None,
+        update_pref=None,
+        act_greedy=None,
+    )

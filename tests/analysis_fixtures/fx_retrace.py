@@ -1,0 +1,45 @@
+"""Seeded retrace hazards + clean twins.
+
+Parsed by tests/test_analysis.py, never executed.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def bad_jit_per_step(fns, xs):
+    outs = []
+    for f, x in zip(fns, xs):
+        outs.append(jax.jit(f)(x))  # PLANT: retrace/jit-in-loop
+    return outs
+
+
+class BadTicker:
+    def __init__(self, fn):
+        self.tick = 0
+        self._step = jax.jit(fn)
+
+    def step(self, x):
+        self.tick += 1
+        return self._step(x, self.tick)  # PLANT: retrace/varying-host-operand
+
+
+# --------------------------- clean twins -----------------------------------
+
+def _tick32(t):
+    # device-array wrap: new tick values reuse the same compiled program
+    return jnp.asarray(t, jnp.int32)
+
+
+def ok_jit_once(f, xs):
+    g = jax.jit(f)               # hoisted: one program, reused per item
+    return [g(x) for x in xs]
+
+
+class OkTicker:
+    def __init__(self, fn):
+        self.tick = 0
+        self._step = jax.jit(fn)
+
+    def step(self, x):
+        self.tick += 1
+        return self._step(x, _tick32(self.tick))

@@ -1,0 +1,69 @@
+"""Seeded trace-hazard violations (jit-reachable rules) + clean twins.
+
+Parsed by tests/test_analysis.py, never executed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def bad_item(x):
+    s = x.sum()
+    return s.item()  # PLANT: trace-hazard/host-sync
+
+
+@jax.jit
+def bad_cast(x):
+    return int(x.sum()) + 1  # PLANT: trace-hazard/host-cast
+
+
+@jax.jit
+def bad_numpy(x):
+    y = x * 2.0
+    return np.asarray(y)  # PLANT: trace-hazard/host-sync
+
+
+@jax.jit
+def bad_branch(x):
+    if x.sum() > 0:  # PLANT: trace-hazard/python-control-flow
+        return x
+    return -x
+
+
+def _helper(x):
+    # reachable only through bad_via_callee's jit: the fixpoint must
+    # carry taint across the bare-name call edge.
+    return float(x.mean())  # PLANT: trace-hazard/host-cast
+
+
+@jax.jit
+def bad_via_callee(x):
+    return _helper(x)
+
+
+# --------------------------- clean twins -----------------------------------
+
+@jax.jit
+def ok_shape_branch(x):
+    n = int(x.shape[0])       # shape reads are static under tracing
+    if n > 4:
+        return x[:4]
+    return x
+
+
+@jax.jit
+def ok_static_kwonly(x, *, mode="fast"):
+    if mode == "fast":        # kw-only config param: static dispatch
+        return x
+    return x * 2.0
+
+
+@jax.jit
+def ok_select(x):
+    return jnp.where(x > 0, x, -x)
+
+
+def ok_host_outside(x):
+    # not jit-reachable: host materialization is legal here
+    return np.asarray(x)

@@ -1,0 +1,28 @@
+"""Seeded serving-host-sync violations + clean twins.
+
+Lives under a ``serving/`` path on purpose: every function in a serving
+module is held to the dispatch-async rule, traced or not.  Parsed by
+tests/test_analysis.py, never executed.
+"""
+import numpy as np
+
+
+class FakeService:
+    def route(self, x):
+        stats = self.counts.sum()
+        return int(stats.item())  # PLANT: trace-hazard/serving-host-sync
+
+    def drain(self, res):
+        ok = np.asarray(res.ok)  # PLANT: trace-hazard/serving-host-sync
+        return ok
+
+    def spend_total(self, arms):
+        return float(self.costs[arms].sum())  # PLANT: trace-hazard/serving-host-sync
+
+    # ------------------------- clean twins ---------------------------------
+
+    def batch_size(self, x):
+        return int(x.shape[0])    # shape read: no device sync
+
+    def tick_label(self, n):
+        return int(n)             # plain name, nothing computed per call

@@ -6,8 +6,24 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def assert_flat():
+    """Retrace-flatness context manager (repro.analysis.retrace).
+
+    Injected as a fixture so test modules assert the zero-new-programs
+    contract without importing from ``src`` paths directly::
+
+        with assert_flat(svc):
+            svc.route_batch(x, prefs=...)
+    """
+    from repro.analysis.retrace import assert_flat as _assert_flat
+
+    return _assert_flat
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,224 @@
+"""repro-lint: fixture-corpus exactness, repo cleanliness, baseline
+mechanics, CLI exit codes, and the runtime ``assert_flat`` twin.
+
+The fixture protocol (tests/analysis_fixtures/README.md): every planted
+violation line carries ``# PLANT: <rule> [<rule>...]``; a pass must
+report exactly the planted ``(file, line, rule)`` set over its fixtures —
+clean twins in the same files pin the false-positive boundary.
+"""
+import json
+import pathlib
+
+import pytest
+
+from repro.analysis.__main__ import main as lint_main
+from repro.analysis.engine import (Finding, load_baseline, load_modules,
+                                   run_passes, split_against_baseline)
+from repro.analysis.passes import REGISTRY
+from repro.analysis.retrace import assert_flat
+
+HERE = pathlib.Path(__file__).resolve().parent
+REPO = HERE.parent
+FIXDIR = HERE / "analysis_fixtures"
+
+PASS_FIXTURES = {
+    "trace-hazard": ["fx_trace_hazard.py", "serving/fx_serving.py"],
+    "prng-hygiene": ["fx_prng.py"],
+    "retrace-hazard": ["fx_retrace.py"],
+    "partition-coverage": ["fx_partition.py"],
+    "protocol-kernel": ["fx_protocol.py", "fx_kernel.py"],
+}
+
+
+def _planted(path: pathlib.Path) -> set:
+    """(rel, line, rule) triples from the ``# PLANT:`` markers."""
+    rel = path.relative_to(FIXDIR).as_posix()
+    out = set()
+    for i, line in enumerate(path.read_text().splitlines(), 1):
+        if "# PLANT:" in line:
+            for rule in line.split("# PLANT:", 1)[1].split():
+                out.add((rel, i, rule))
+    return out
+
+
+def _run_pass(name: str, files: list) -> list:
+    ctx = load_modules([FIXDIR / f for f in files], root=FIXDIR)
+    fns = [(n, f) for n, f in REGISTRY if n == name]
+    assert fns, f"unknown pass {name}"
+    return run_passes(ctx, fns)
+
+
+# ---------------------------------------------------------------------------
+# fixture corpus: planted bugs reported, clean twins silent
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pass_name", sorted(PASS_FIXTURES))
+def test_fixture_findings_match_plants_exactly(pass_name):
+    files = PASS_FIXTURES[pass_name]
+    want = set()
+    for f in files:
+        want |= _planted(FIXDIR / f)
+    assert want, f"fixtures for {pass_name} plant nothing"
+    got = {(f.path, f.line, f.rule) for f in _run_pass(pass_name, files)}
+    assert got == want, (
+        f"{pass_name}: spurious={sorted(got - want)} "
+        f"missed={sorted(want - got)}")
+
+
+def test_kernel_maxk_lane_alignment(tmp_path):
+    # not in the corpus: a single (non-duplicate) MAX_K_FUSED off the
+    # 128-lane grid must still trip tile-alignment
+    p = tmp_path / "mod.py"
+    p.write_text(
+        "from jax.experimental import pallas as pl\n"
+        "MAX_K_FUSED = 960\n"
+        "def f(x, g):\n"
+        "    return pl.pallas_call(g,\n"
+        "        in_specs=[pl.BlockSpec((8, 8), lambda i: i)],\n"
+        "        out_specs=pl.BlockSpec((8, 8), lambda i: i))(x)\n")
+    ctx = load_modules([p], root=tmp_path)
+    fns = [(n, f) for n, f in REGISTRY if n == "protocol-kernel"]
+    got = {f.rule for f in run_passes(ctx, fns)}
+    assert got == {"kernel/tile-alignment"}
+
+
+def test_syntax_error_becomes_finding(tmp_path):
+    p = tmp_path / "broken.py"
+    p.write_text("def f(:\n")
+    ctx = load_modules([p], root=tmp_path)
+    got = run_passes(ctx, REGISTRY)
+    assert [f.rule for f in got] == ["engine/syntax-error"]
+
+
+# ---------------------------------------------------------------------------
+# the repo itself: lint-clean modulo the reasoned baseline
+# ---------------------------------------------------------------------------
+
+def test_repo_lint_clean_with_baseline():
+    ctx = load_modules([REPO / "src"], root=REPO)
+    findings = run_passes(ctx, REGISTRY)
+    entries = load_baseline(REPO / "analysis" / "baseline.json")
+    new, suppressed, unused = split_against_baseline(findings, entries)
+    assert new == [], "\n".join(f.format() for f in new)
+    assert unused == [], f"stale baseline entries: {unused}"
+    assert suppressed, "expected the deliberate observability syncs"
+
+
+# ---------------------------------------------------------------------------
+# baseline mechanics
+# ---------------------------------------------------------------------------
+
+def test_baseline_requires_reason(tmp_path):
+    p = tmp_path / "baseline.json"
+    p.write_text(json.dumps([{"rule": "r", "path": "p"}]))
+    with pytest.raises(ValueError, match="reason"):
+        load_baseline(p)
+
+
+def test_baseline_matching_ignores_lines_and_respects_symbol():
+    f = Finding("src/x.py", 123, "prng/key-reuse", "Svc.step", "key `k`")
+    by_path = {"rule": "prng/key-reuse", "path": "src/x.py", "reason": "ok"}
+    new, supp, unused = split_against_baseline([f], [by_path])
+    assert (new, supp, unused) == ([], [f], [])
+    other_sym = dict(by_path, symbol="Svc.other")
+    new, supp, unused = split_against_baseline([f], [other_sym])
+    assert new == [f] and supp == [] and unused == [other_sym]
+
+
+# ---------------------------------------------------------------------------
+# CLI: the ISSUE acceptance — green on the repo, red on every fixture
+# ---------------------------------------------------------------------------
+
+def test_cli_repo_gate_is_green(capsys):
+    assert lint_main(["--root", str(REPO), "--fail-on-new"]) == 0
+    assert "repro-lint:" in capsys.readouterr().out
+
+
+@pytest.mark.parametrize("pass_name", sorted(PASS_FIXTURES))
+def test_cli_fail_on_new_trips_on_every_fixture(pass_name, capsys):
+    files = [str(FIXDIR / f) for f in PASS_FIXTURES[pass_name]]
+    rc = lint_main(files + ["--root", str(FIXDIR), "--no-baseline",
+                            "--fail-on-new", "--passes", pass_name])
+    capsys.readouterr()
+    assert rc == 1, pass_name
+
+
+def test_cli_json_output(capsys):
+    rc = lint_main([str(FIXDIR / "fx_prng.py"), "--root", str(FIXDIR),
+                    "--no-baseline", "--json", "--passes", "prng-hygiene"])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 0            # reporting mode: no --fail-on-new
+    assert {f["rule"] for f in out["new"]} == {"prng/key-reuse"}
+    assert out["modules_scanned"] == 1
+
+
+def test_cli_unknown_pass_is_usage_error(capsys):
+    rc = lint_main(["--root", str(REPO), "--passes", "nope"])
+    capsys.readouterr()
+    assert rc == 2
+
+
+def test_cli_missing_path_is_usage_error(capsys):
+    rc = lint_main([str(REPO / "definitely_not_here.py"),
+                    "--root", str(REPO)])
+    capsys.readouterr()
+    assert rc == 2
+
+
+# ---------------------------------------------------------------------------
+# assert_flat: the runtime twin
+# ---------------------------------------------------------------------------
+
+class _Counter:
+    """Stands in for RouterService.compiled_program_counts()."""
+
+    def __init__(self):
+        self.counts = {"act": 1}
+
+    def compiled_program_counts(self):
+        return dict(self.counts)
+
+
+def test_assert_flat_passes_when_flat():
+    c = _Counter()
+    with assert_flat(c):
+        pass
+
+
+def test_assert_flat_raises_with_program_diff():
+    c = _Counter()
+    with pytest.raises(AssertionError, match=r"act: 1 -> 2 \(\+1\)"):
+        with assert_flat(c, note="hot path"):
+            c.counts["act"] += 1
+
+
+def test_assert_flat_check_midblock():
+    c = _Counter()
+    with assert_flat(c) as flat:
+        flat.check("before")
+        c.counts["new_prog"] = 1
+        with pytest.raises(AssertionError, match=r"new_prog: 0 -> 1"):
+            flat.check("after")
+        del c.counts["new_prog"]   # recover so __exit__ stays green
+
+
+def test_assert_flat_does_not_mask_exceptions():
+    c = _Counter()
+    with pytest.raises(RuntimeError, match="boom"):
+        with assert_flat(c):
+            c.counts["act"] += 1   # a retrace AND an exception: exception wins
+            raise RuntimeError("boom")
+
+
+def test_assert_flat_accepts_callable_target():
+    counts = {"p": 3}
+    with pytest.raises(AssertionError):
+        with assert_flat(lambda: counts):
+            counts["p"] = 4
+
+
+def test_assert_flat_rejects_bad_targets():
+    with pytest.raises(TypeError):
+        assert_flat()
+    with pytest.raises(TypeError):
+        assert_flat(object()).__enter__()

@@ -496,7 +496,7 @@ def test_service_age_zero_duplicates_and_direct_path(tmp_path):
                          RouterServiceConfig(fgts=fcfg, feedback_capacity=32))
     a1, a2, t = svc2.route_batch(x)
     dup = jnp.concatenate([t[:2], t[:2], t[2:]])        # retried votes
-    yd = jnp.ones((8,))
+    yd = jnp.ones((6,))                 # one vote per delivered ticket
     assert svc2.feedback_batch(dup, yd) == 4            # first delivery wins
     assert int(svc2.state.t) == 4
 

@@ -265,7 +265,7 @@ def test_add_model_warm_start_beats_cold_start():
     assert warm < cold, (warm, cold)
 
 
-def test_service_add_retire_swap_zero_new_compilations():
+def test_service_add_retire_swap_zero_new_compilations(assert_flat):
     """Membership changes are data updates: after one warm-up cycle, a
     fresh add/retire/swap + serve round compiles nothing new."""
     embs = np.random.RandomState(0).randn(K, DIM).astype(np.float32)
@@ -283,15 +283,15 @@ def test_service_add_retire_swap_zero_new_compilations():
     svc.swap_model(0, extra[0])
     _, _, t = svc.route_batch(x)
     svc.feedback_batch(t, jnp.ones((BATCH,)))
-    counts = svc.compiled_program_counts()
     # the cycle again: new slot, different retiree, same batch shapes
-    svc.add_model(extra[1], replay=replay)
-    svc.retire_model(1)
-    svc.swap_model(2, extra[1])
-    for _ in range(2):
-        _, _, t = svc.route_batch(x)
-        svc.feedback_batch(t, jnp.ones((BATCH,)))
-    assert svc.compiled_program_counts() == counts
+    with assert_flat(svc, note="add/retire/swap cycle") as flat:
+        svc.add_model(extra[1], replay=replay)
+        svc.retire_model(1)
+        svc.swap_model(2, extra[1])
+        flat.check("membership changes")
+        for _ in range(2):
+            _, _, t = svc.route_batch(x)
+            svc.feedback_batch(t, jnp.ones((BATCH,)))
     # and the pool actually changed
     assert svc.active_mask().sum() == K + 1   # K - 1 retired + 2 added
 
@@ -299,7 +299,7 @@ def test_service_add_retire_swap_zero_new_compilations():
 @pytest.mark.skipif(
     len(jax.devices()) < 8,
     reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
-def test_service_add_retire_zero_new_compilations_mesh():
+def test_service_add_retire_zero_new_compilations_mesh(assert_flat):
     """Same zero-retrace contract on an 8-device (4, 2) mesh: the pool is
     replicated policy state, so a membership change stays one compiled
     program there too."""
@@ -318,12 +318,11 @@ def test_service_add_retire_zero_new_compilations_mesh():
     svc.retire_model(0)
     _, _, t = svc.route_batch(x)
     svc.feedback_batch(t, jnp.ones((32,)))
-    counts = svc.compiled_program_counts()
-    svc.add_model(extra[1], replay=replay)
-    svc.retire_model(1)
-    a1, a2, t = svc.route_batch(x)
-    svc.feedback_batch(t, jnp.ones((32,)))
-    assert svc.compiled_program_counts() == counts
+    with assert_flat(svc, note="mesh add/retire"):
+        svc.add_model(extra[1], replay=replay)
+        svc.retire_model(1)
+        a1, a2, t = svc.route_batch(x)
+        svc.feedback_batch(t, jnp.ones((32,)))
     # routed arms always active
     act = svc.active_mask()
     assert act[np.asarray(a1)].all() and act[np.asarray(a2)].all()

@@ -120,7 +120,7 @@ def test_pref_rides_the_pending_ring_into_the_update():
     np.testing.assert_allclose(got, want, rtol=0, atol=0)
 
 
-def test_distinct_pref_values_compile_nothing_new():
+def test_distinct_pref_values_compile_nothing_new(assert_flat):
     """Zero-retrace: prefs are traced operands, so after one warm pref
     batch every further pref value reuses the same executables (the
     single-device half of the ISSUE acceptance; the bench and the sharded
@@ -129,11 +129,11 @@ def test_distinct_pref_values_compile_nothing_new():
     x = jax.random.normal(KEY, (8, DIM))
     _, _, t = svc.route_batch(x, prefs=jnp.zeros((8,)))
     svc.feedback_batch(t, jnp.ones(8))
-    counts = svc.compiled_program_counts()
-    for lam in (0.25, 0.5, 1.0, 2.0, 7.5):
-        _, _, t = svc.route_batch(x, prefs=jnp.full((8,), lam))
-        svc.feedback_batch(t, jnp.ones(8))
-        assert svc.compiled_program_counts() == counts, lam
+    with assert_flat(svc, note="pref sweep") as flat:
+        for lam in (0.25, 0.5, 1.0, 2.0, 7.5):
+            _, _, t = svc.route_batch(x, prefs=jnp.full((8,), lam))
+            svc.feedback_batch(t, jnp.ones(8))
+            flat.check(f"lam={lam}")
     assert svc.pending_count() == 0
 
 

@@ -31,8 +31,7 @@ import pytest
 from repro.core import fgts
 from repro.core.btl import logistic_loss
 from repro.core.ccft import phi, scores_all
-from repro.kernels import sgld_update as su
-from repro.kernels.dueling_score import MAX_K_FUSED
+from repro.kernels import MAX_K_FUSED, sgld_update as su
 
 KEY = jax.random.PRNGKey(6)
 

@@ -140,7 +140,7 @@ def test_serve_loop_512_query_parity():
     _assert_state_close(svc_s.state, svc_m.state, rtol=1e-4, atol=1e-4)
 
 
-def test_route_batch_pref_parity_and_retrace_flat():
+def test_route_batch_pref_parity_and_retrace_flat(assert_flat):
     """Per-request prefs on the mesh: the pref-tilted sharded service
     reproduces the unsharded routed pairs, tickets and posterior, and
     distinct pref values compile nothing new — prefs are traced operands
@@ -151,21 +151,21 @@ def test_route_batch_pref_parity_and_retrace_flat():
     for svc in (svc_s, svc_m):                # warm every program once
         _, _, t = svc.route_batch(x, prefs=jnp.zeros((BATCH,)))
         assert svc.feedback_batch(t, jnp.ones((BATCH,))) == BATCH
-    counts = svc_m.compiled_program_counts()
     rows = jnp.linspace(0.0, 2.0, BATCH)      # per-row spread, not scalar
-    for i, lam in enumerate((0.25, 1.0, 3.0)):
-        prefs = rows * lam
-        y = jax.random.choice(jax.random.fold_in(KEY, 40 + i),
-                              jnp.asarray([-1.0, 1.0]), (BATCH,))
-        outs = []
-        for svc in (svc_s, svc_m):
-            a1, a2, t = svc.route_batch(x, prefs=prefs)
-            assert svc.feedback_batch(t, y) == BATCH
-            outs.append((np.asarray(a1), np.asarray(a2), np.asarray(t)))
-        np.testing.assert_array_equal(outs[0][0], outs[1][0])
-        np.testing.assert_array_equal(outs[0][1], outs[1][1])
-        np.testing.assert_array_equal(outs[0][2], outs[1][2])
-        assert svc_m.compiled_program_counts() == counts, lam
+    with assert_flat(svc_m, note="mesh pref sweep") as flat:
+        for i, lam in enumerate((0.25, 1.0, 3.0)):
+            prefs = rows * lam
+            y = jax.random.choice(jax.random.fold_in(KEY, 40 + i),
+                                  jnp.asarray([-1.0, 1.0]), (BATCH,))
+            outs = []
+            for svc in (svc_s, svc_m):
+                a1, a2, t = svc.route_batch(x, prefs=prefs)
+                assert svc.feedback_batch(t, y) == BATCH
+                outs.append((np.asarray(a1), np.asarray(a2), np.asarray(t)))
+            np.testing.assert_array_equal(outs[0][0], outs[1][0])
+            np.testing.assert_array_equal(outs[0][1], outs[1][1])
+            np.testing.assert_array_equal(outs[0][2], outs[1][2])
+            flat.check(f"lam={lam}")
     assert int(svc_s.state.t) == int(svc_m.state.t) == 4 * BATCH
     _assert_state_close(svc_s.state, svc_m.state, rtol=1e-4, atol=1e-4)
 
@@ -288,7 +288,7 @@ def test_route_batch_rejects_indivisible_batch():
         svc.route_batch(jax.random.normal(KEY, (BATCH + 1, DIM)))
 
 
-def test_sgld_backend_flip_no_retrace_on_mesh(monkeypatch):
+def test_sgld_backend_flip_no_retrace_on_mesh(monkeypatch, assert_flat):
     """The SGLD backend env override is trace-time-only on the mesh lane
     too: a mid-process flip compiles nothing new while the sharded service
     keeps routing and folding feedback. (Mesh mode itself pins "auto" to
@@ -300,10 +300,10 @@ def test_sgld_backend_flip_no_retrace_on_mesh(monkeypatch):
     for _ in range(2):                        # warm every program once
         _, _, t = svc.route_batch(x)
         svc.feedback_batch(t, jnp.ones((BATCH,)))
-    counts = svc.compiled_program_counts()
-    for backend in ("fused", "xla", "autodiff"):
-        monkeypatch.setenv("REPRO_SGLD_BACKEND", backend)
-        a1, a2, t = svc.route_batch(x)
-        svc.feedback_batch(t, jnp.ones((BATCH,)))
-        assert svc.compiled_program_counts() == counts, backend
+    with assert_flat(svc, note="backend flip") as flat:
+        for backend in ("fused", "xla", "autodiff"):
+            monkeypatch.setenv("REPRO_SGLD_BACKEND", backend)
+            a1, a2, t = svc.route_batch(x)
+            svc.feedback_batch(t, jnp.ones((BATCH,)))
+            flat.check(backend)
     assert svc.pending_count() == 0
