@@ -1,0 +1,265 @@
+"""Event-time streaming serving: sustained QPS + latency tails vs devices
+x bucket policy x arrival process, and AOT+donation vs lazy-jit dispatch.
+
+Drives the full streaming serving core end to end: simulated arrival
+streams (poisson / bursty / diurnal) are cut into dynamic batches by the
+``max_wait`` deadline former, padded onto the pow2 bucket ladder, and
+routed through the AOT-compiled bucket programs with buffer donation and
+the shard-local pending ring (feedback redeemed one batch late — the
+async serving shape). Reported per combo:
+
+* **qps** — sustained service throughput: requests routed+resolved per
+  wall-clock second with syncs only at measurement boundaries;
+* **p50/p99 latency** — per-request event-time queueing wait (batch form
+  time minus arrival time, from the simulated clock) plus the *measured*
+  per-batch service time, tails over every request in the stream;
+* **pad** — padding efficiency, live rows / padded rows (the bucket-ladder
+  vs single-bucket trade the ``policy`` axis exists to show).
+
+The ``aot_vs_jit`` rows time the same service loop at one fixed shape
+through the streaming programs vs a ``buckets=None`` twin on the legacy
+lazy-jit path — the dispatch-overhead win of AOT + donation. The whole
+sweep runs under a compiled-program-count guard: any retrace after
+construction fails the bench (``streaming/retrace_flat`` row).
+
+    PYTHONPATH=src python -m benchmarks.bench_streaming [--smoke]
+    (forces --xla_force_host_platform_device_count=8 when run standalone)
+
+A full run merges a ``"streaming"`` record into ``BENCH_9.json``;
+``--smoke`` (the CI interpret lane) shrinks the stream and skips the
+artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+if __name__ == "__main__" and "host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fgts
+from repro.encoder.model import EncoderConfig, init_encoder
+from repro.launch import mesh as mesh_lib
+from repro.serving import stream
+from repro.serving.router_service import (PoolEntry, RouterService,
+                                          RouterServiceConfig)
+
+from .common import emit, merge_bench_json
+
+DIM = 32
+K_MODELS = 8
+B_MAX = 64
+MAX_WAIT = 0.01
+RATE = 2000.0                     # mean arrivals/sec: ~20 per deadline
+SEED = 0
+
+# the bucket-policy axis: one big program (max padding, one compile) vs
+# the pow2 ladder (bounded padding, len(ladder) compiles)
+POLICIES = {"fixed": (B_MAX,), "ladder": (8, 16, 32, B_MAX)}
+ARRIVALS = {"poisson": f"poisson:{RATE:g}",
+            "bursty": f"bursty:{RATE:g},24",
+            "diurnal": f"diurnal:{RATE:g},0.9,1.0"}
+
+N_FULL, N_SMOKE = 2048, 256       # arrivals per stream
+R_FULL, R_SMOKE = 24, 6           # rounds for the aot-vs-jit shape loop
+
+
+def _service(buckets, mesh) -> RouterService:
+    key = jax.random.PRNGKey(SEED)
+    enc_cfg = EncoderConfig(d_model=DIM, n_layers=1, n_heads=2, d_ff=64,
+                            max_len=8)
+    enc = init_encoder(key, enc_cfg)
+    rng = np.random.RandomState(SEED)
+    pool = [PoolEntry(name=f"m{i}", arch="granite-3-2b",
+                      cost_per_1k_tokens=0.1 * (i + 1),
+                      embedding=rng.randn(DIM).astype(np.float32))
+            for i in range(K_MODELS)]
+    fcfg = fgts.FGTSConfig(n_models=K_MODELS, dim=DIM, horizon=8192,
+                           sgld_steps=3, sgld_minibatch=16)
+    return RouterService(pool, enc, enc_cfg,
+                         RouterServiceConfig(fgts=fcfg,
+                                             feedback_capacity=256,
+                                             buckets=buckets), mesh=mesh)
+
+
+def _batches(arrival: str, buckets, n: int):
+    spec = stream.parse_arrival(ARRIVALS[arrival])
+    times = stream.arrival_times(spec, n, seed=SEED)
+    return times, stream.form_batches(times, buckets, MAX_WAIT)
+
+
+def _x_for(batches, key):
+    return [jax.random.normal(jax.random.fold_in(key, i), (fb.n, DIM))
+            for i, fb in enumerate(batches)]
+
+
+def _stream_qps(svc: RouterService, xs, total: int) -> float:
+    """Sustained throughput over the route -> feedback(lag 1) loop: every
+    call dispatches async, sync only at the measurement boundaries."""
+    pending = None
+    jax.block_until_ready(svc.state)
+    t0 = time.time()
+    for x in xs:
+        _, _, tickets = svc.route_stream(x)
+        if pending is not None:
+            svc.feedback_stream(pending, jnp.ones((pending.shape[0],)))
+        pending = tickets
+    if pending is not None:
+        svc.feedback_stream(pending, jnp.ones((pending.shape[0],)))
+    jax.block_until_ready(svc.state)
+    return total / (time.time() - t0)
+
+
+def _stream_latency(svc: RouterService, xs, times, batches):
+    """Per-request latency: simulated queueing wait (event time) + measured
+    per-batch route service time (each call blocked for a true sample)."""
+    lat = []
+    for x, fb in zip(xs, batches):
+        t0 = time.time()
+        _, _, tickets = svc.route_stream(x)
+        jax.block_until_ready(tickets)
+        service = time.time() - t0
+        wait = fb.t_form - times[fb.start:fb.start + fb.n]
+        lat.append(wait + service)
+        svc.feedback_stream(tickets, jnp.ones((fb.n,)))
+    jax.block_until_ready(svc.state)
+    return np.concatenate(lat)
+
+
+def _shape_loop_qps(route, feedback, batch: int, rounds: int, key,
+                    state_ref, warmup: int = 2) -> float:
+    """Fixed-shape route+feedback loop (the aot-vs-jit comparison): same
+    traffic through either dispatch path, boundary syncs only. The warmup
+    rounds let the lazy-jit twin pay its compiles outside the clock — the
+    comparison is steady-state dispatch, not compilation."""
+    xs = [jax.random.normal(jax.random.fold_in(key, i), (batch, DIM))
+          for i in range(rounds + warmup)]
+    pending = None
+    t0 = None
+    for i, x in enumerate(xs):
+        if i == warmup:
+            jax.block_until_ready(state_ref())
+            t0 = time.time()
+        _, _, tickets = route(x)
+        if pending is not None:
+            feedback(pending, jnp.ones((batch,)))
+        pending = tickets
+    feedback(pending, jnp.ones((batch,)))
+    jax.block_until_ready(state_ref())
+    return rounds * batch / (time.time() - t0)
+
+
+def run(smoke: bool = False, out: str | None = "BENCH_9.json"):
+    smoke = smoke or bool(int(os.environ.get("REPRO_STREAM_SMOKE", "0")))
+    n = N_SMOKE if smoke else N_FULL
+    rounds = R_SMOKE if smoke else R_FULL
+    key = jax.random.PRNGKey(SEED + 21)
+    n_dev = len(jax.devices())
+    grids = [("1", None)]
+    if n_dev > 1:
+        shape = (n_dev // 2, 2) if n_dev % 2 == 0 else (n_dev, 1)
+        grids.append((str(n_dev), mesh_lib.make_debug_mesh(*shape)))
+    else:
+        print("[streaming] only 1 host device visible — mesh column "
+              "SKIPPED; run `PYTHONPATH=src python -m benchmarks."
+              "bench_streaming` standalone (it forces 8 host devices) for "
+              "the 1-vs-N comparison")
+
+    rows, combos, table = [], {}, {}
+    for dev, mesh in grids:
+        for pol, buckets in POLICIES.items():
+            svc = _service(buckets, mesh)
+            counts0 = svc.compiled_program_counts()
+            for arr in ARRIVALS:
+                times, batches = _batches(arr, buckets, n)
+                xs = _x_for(batches, jax.random.fold_in(key, hash(arr) % 97))
+                qps = _stream_qps(svc, xs, n)
+                lat = _stream_latency(svc, xs, times, batches)
+                p50, p99 = (float(np.percentile(lat, q) * 1e3)
+                            for q in (50, 99))
+                pad = n / sum(fb.bucket for fb in batches)
+                name = f"dev{dev}/{pol}/{arr}"
+                combos[name] = dict(qps=qps, p50_ms=p50, p99_ms=p99,
+                                    pad_efficiency=pad,
+                                    n_batches=len(batches))
+                table[(dev, pol, arr)] = combos[name]
+                rows.append(emit(
+                    f"streaming/{name}", 1.0 / qps,
+                    f"qps={qps:.0f};p50_ms={p50:.2f};p99_ms={p99:.2f};"
+                    f"pad={pad:.2f}"))
+            counts1 = svc.compiled_program_counts()
+            assert counts0 == counts1, (
+                f"streaming retraced mid-sweep ({dev}/{pol}): "
+                f"{counts0} -> {counts1}")
+
+    # AOT+donation vs the legacy lazy-jit dispatch path, same shape
+    aot_vs_jit = {}
+    for dev, mesh in grids:
+        svc_aot = _service((B_MAX,), mesh)
+        svc_jit = _service(None, mesh)
+        qps_aot = _shape_loop_qps(svc_aot.route_stream,
+                                  svc_aot.feedback_stream, B_MAX, rounds,
+                                  key, lambda: svc_aot.state)
+        qps_jit = _shape_loop_qps(svc_jit.route_batch,
+                                  svc_jit.feedback_batch, B_MAX, rounds,
+                                  key, lambda: svc_jit.state)
+        speedup = qps_aot / qps_jit
+        aot_vs_jit[f"dev{dev}"] = dict(qps_aot=qps_aot, qps_jit=qps_jit,
+                                       speedup=speedup)
+        rows.append(emit(f"streaming/aot_vs_jit_dev{dev}:kernel",
+                         1.0 / qps_aot, f"qps={qps_aot:.0f}"))
+        rows.append(emit(f"streaming/aot_vs_jit_dev{dev}:xla",
+                         1.0 / qps_jit, f"qps={qps_jit:.0f}"))
+    rows.append(emit("streaming/retrace_flat", 0.0, "flat=1"))
+
+    dev_cols = [g[0] for g in grids]
+    print(f"\nstreaming serving (n={n} arrivals @ {RATE:g}/s, max_wait="
+          f"{MAX_WAIT * 1e3:g}ms, buckets fixed={POLICIES['fixed']} vs "
+          f"ladder={POLICIES['ladder']}; cells: qps / p99 ms / pad eff)")
+    print(f"{'policy/arrival':<18}" + "".join(f"{'dev=' + c:>26}"
+                                              for c in dev_cols))
+    for pol in POLICIES:
+        for arr in ARRIVALS:
+            cells = ""
+            for dev in dev_cols:
+                c = table[(dev, pol, arr)]
+                cells += (f"{c['qps']:>10.0f} /{c['p99_ms']:>7.2f} "
+                          f"/{c['pad_efficiency']:>5.2f}")
+            print(f"{pol + '/' + arr:<18}" + cells)
+    for dev in dev_cols:
+        c = aot_vs_jit[f"dev{dev}"]
+        print(f"# streaming dev={dev}: AOT+donation {c['qps_aot']:.0f} qps "
+              f"vs lazy-jit {c['qps_jit']:.0f} qps -> "
+              f"{c['speedup']:.2f}x (acceptance > 1.0x)")
+
+    if not smoke and out:
+        payload = dict(backend=jax.default_backend(), n_arrivals=n,
+                       rate=RATE, max_wait=MAX_WAIT,
+                       policies={k: list(v) for k, v in POLICIES.items()},
+                       arrivals=dict(ARRIVALS), combos=combos,
+                       aot_vs_jit=aot_vs_jit, retrace_flat=True)
+        merge_bench_json(out, "streaming", payload, pr=9)
+        print(f"# bench_streaming: wrote {out}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short streams, no JSON artifact (CI lane)")
+    ap.add_argument("--out", default="BENCH_9.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

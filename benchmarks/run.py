@@ -14,7 +14,12 @@ results/bench.csv). Mapping to the paper:
     delayed   bench_delayed         regret vs feedback delay (async, beyond
                                     the paper's synchronous protocol)
     sharded   bench_sharded_serving mesh-sharded serving queries/sec vs
-                                    devices vs batch
+                                    devices vs batch (+ dispatch/compute
+                                    split)
+    streaming bench_streaming       event-time streaming serving: QPS +
+                                    p50/p99 latency vs devices x bucket
+                                    policy x arrival process; AOT+donation
+                                    vs lazy jit
     dynamic_pool bench_dynamic_pool regret recovery after a mid-stream
                                     model arrival (warm vs cold hot-add)
     autopilot bench_autopilot       closed-loop pool management: dominance
@@ -53,7 +58,7 @@ def main() -> None:
                    bench_dynamic_pool, bench_generalization, bench_kernels,
                    bench_mixinstruct, bench_mmlu_naive, bench_pareto,
                    bench_routerbench, bench_scores_table, bench_sgld,
-                   bench_sharded_serving, roofline)
+                   bench_sharded_serving, bench_streaming, roofline)
     benches = {
         "tab1": bench_scores_table.run,
         "kernels": bench_kernels.run,
@@ -66,6 +71,7 @@ def main() -> None:
         "b3": bench_baselines.run,
         "delayed": bench_delayed.run,
         "sharded": bench_sharded_serving.run,
+        "streaming": bench_streaming.run,
         "dynamic_pool": bench_dynamic_pool.run,
         "autopilot": bench_autopilot.run,
         "roofline": roofline.run,

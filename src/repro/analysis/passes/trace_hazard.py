@@ -21,6 +21,23 @@ Two rule families:
   legal.  Findings here are expected to be either fixed or carried in
   ``analysis/baseline.json`` with a reason (e.g. checkpoint restore).
 
+* Buffer donation on the streaming AOT programs (``serving/`` modules with
+  a module-level ``STREAM_DONATION`` table):
+
+  - ``trace-hazard/use-after-donate``  a symbol passed into a donated
+    argnum of an AOT bucket program (``self._s_route[b](...)``, or a local
+    alias of one) is read again before being rebound — its buffer was
+    handed to XLA and deleted. Rebinding in the same assignment statement
+    (``self.state, ... = prog(..., self.state, ...)``) is the sanctioned
+    idiom.
+  - ``trace-hazard/donation-drift``    the donation wiring disagrees with
+    itself: a donating assignment site whose ``donate_argnums`` literal
+    contradicts the module's ``STREAM_DONATION`` entry (or binds a program
+    under a different key), a table key with no donating site, or — for
+    the real ``serving/router_service.py`` — a table that disagrees with
+    this pass's ``DONATED_ARGNUMS`` mirror (the PROTOCOL_ARITY pattern:
+    both copies must change in the same PR).
+
 Traced-ness is a syntactic taint: positional parameters of a reachable
 function seed the set, assignments whose right-hand side mentions a
 tainted name extend it.  Keyword-only parameters are treated as static —
@@ -40,6 +57,21 @@ R_SYNC = "trace-hazard/host-sync"
 R_CAST = "trace-hazard/host-cast"
 R_FLOW = "trace-hazard/python-control-flow"
 R_SERVE = "trace-hazard/serving-host-sync"
+R_DONATE = "trace-hazard/use-after-donate"
+R_DRIFT = "trace-hazard/donation-drift"
+
+# Mirror of serving/router_service.py's STREAM_DONATION (the donated
+# argnums of each AOT bucket program). Like the protocol-kernel pass's
+# PROTOCOL_ARITY table, the lint carries its own copy of the wiring so a
+# signature change that forgets one side is itself a finding
+# (donation-drift) — keep both tables in the same PR.
+DONATED_ARGNUMS = {
+    "_s_route": (1, 2, 6, 8),
+    "_s_route_pref": (1, 2, 6, 8),
+    "_s_feedback": (0, 1, 5, 6),
+    "_s_resolve": (0, 4),
+}
+DONATION_TABLE = "STREAM_DONATION"
 
 NUMPY_HOST = {"numpy.asarray", "numpy.array", "numpy.ascontiguousarray"}
 STATIC_CALLS = {"len", "isinstance", "type", "hasattr", "getattr",
@@ -197,6 +229,211 @@ def _scan_serving(mod, fn: FuncInfo, aliases,
                           "blocks on the device per call")
 
 
+def _int_tuple(node: ast.AST):
+    """A literal tuple of ints (or a bare int) -> tuple; else None."""
+    if isinstance(node, ast.Tuple) and node.elts and all(
+            isinstance(e, ast.Constant) and isinstance(e.value, int)
+            for e in node.elts):
+        return tuple(e.value for e in node.elts)
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    return None
+
+
+def _donation_table(tree: ast.Module):
+    """Parse a module-level ``STREAM_DONATION = {...}`` literal. Returns
+    (table, key_lines); (None, {}) when the module declares none."""
+    for node in tree.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == DONATION_TABLE
+                and isinstance(node.value, ast.Dict)):
+            table, lines = {}, {}
+            for k, v in zip(node.value.keys, node.value.values):
+                tup = _int_tuple(v)
+                if (isinstance(k, ast.Constant) and isinstance(k.value, str)
+                        and tup is not None):
+                    table[k.value] = tup
+                    lines[k.value] = v.lineno
+            return table, lines
+    return None, {}
+
+
+def _scan_donation_drift(mod, table, key_lines) -> Iterable[Finding]:
+    """Donating assignment sites (``self.X = ... donate_argnums=...``) must
+    agree with the module's STREAM_DONATION table, and every table key
+    must have a site."""
+    seen = set()
+    for st in ast.walk(mod.tree):
+        if not (isinstance(st, ast.Assign) and len(st.targets) == 1):
+            continue
+        tgt = st.targets[0]
+        if not (isinstance(tgt, ast.Attribute)
+                and isinstance(tgt.value, ast.Name)
+                and tgt.value.id == "self"):
+            continue
+        attr = tgt.attr
+        for call in (n for n in ast.walk(st.value)
+                     if isinstance(n, ast.Call)):
+            kw = next((k for k in call.keywords
+                       if k.arg == "donate_argnums"), None)
+            if kw is None:
+                continue
+            if (isinstance(kw.value, ast.Subscript)
+                    and isinstance(kw.value.value, ast.Name)
+                    and kw.value.value.id == DONATION_TABLE
+                    and isinstance(kw.value.slice, ast.Constant)):
+                key = kw.value.slice.value
+                seen.add(key)
+                if table is None or key not in table:
+                    yield Finding(mod.rel, kw.value.lineno, R_DRIFT, attr,
+                                  f"donate_argnums reads "
+                                  f"{DONATION_TABLE}[{key!r}] but the "
+                                  f"table has no such key")
+                elif key != attr:
+                    yield Finding(mod.rel, kw.value.lineno, R_DRIFT, attr,
+                                  f"program bound to self.{attr} donates "
+                                  f"under table key {key!r} — keys name "
+                                  f"the attribute they wire")
+                continue
+            tup = _int_tuple(kw.value)
+            if tup is None:
+                continue              # computed argnums: out of scope
+            seen.add(attr)
+            if table is None or attr not in table:
+                yield Finding(mod.rel, kw.value.lineno, R_DRIFT, attr,
+                              f"donating program self.{attr} has no "
+                              f"{DONATION_TABLE} entry — declare the "
+                              f"argnums in the module table")
+            elif tup != table[attr]:
+                yield Finding(mod.rel, kw.value.lineno, R_DRIFT, attr,
+                              f"donate_argnums {tup} disagree with "
+                              f"{DONATION_TABLE}[{attr!r}] = {table[attr]}")
+    for key, line in key_lines.items():
+        if key not in seen:
+            yield Finding(mod.rel, line, R_DRIFT, DONATION_TABLE,
+                          f"stale {DONATION_TABLE} key {key!r}: no "
+                          f"donating assignment in this module uses it")
+
+
+def _scan_mirror(mod, table, key_lines) -> Iterable[Finding]:
+    """The real serving module's table must match this pass's mirror."""
+    for key, val in table.items():
+        want = DONATED_ARGNUMS.get(key)
+        if want is None:
+            yield Finding(mod.rel, key_lines[key], R_DRIFT, DONATION_TABLE,
+                          f"{DONATION_TABLE} key {key!r} is not mirrored "
+                          f"in repro-lint's DONATED_ARGNUMS — update "
+                          f"analysis/passes/trace_hazard.py in the same "
+                          f"PR")
+        elif want != val:
+            yield Finding(mod.rel, key_lines[key], R_DRIFT, DONATION_TABLE,
+                          f"{DONATION_TABLE}[{key!r}] = {val} disagrees "
+                          f"with repro-lint's DONATED_ARGNUMS mirror "
+                          f"{want} — change both in the same PR")
+
+
+def _scan_use_after_donate(mod, fn: FuncInfo, table) -> Iterable[Finding]:
+    """Reads of a symbol after it went into a donated argnum of an AOT
+    bucket program. Linearizes simple statements in source order — the
+    sanctioned idiom rebinds every donated operand in the very assignment
+    that makes the call."""
+    if isinstance(fn.node, ast.Lambda):
+        return
+    prog_alias: dict[str, str] = {}   # local name -> donation-table key
+
+    def sym(node):
+        if isinstance(node, ast.Name):
+            return node.id
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"):
+            return "self." + node.attr
+        return None
+
+    def donation_key(func):
+        node = func.value if isinstance(func, ast.Subscript) else func
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self" and node.attr in table):
+            return node.attr
+        if isinstance(func, ast.Name):
+            return prog_alias.get(func.id)
+        return None
+
+    def target_syms(targets):
+        out, stack = set(), list(targets)
+        while stack:
+            t = stack.pop()
+            if isinstance(t, (ast.Tuple, ast.List)):
+                stack.extend(t.elts)
+            elif isinstance(t, ast.Starred):
+                stack.append(t.value)
+            else:
+                s = sym(t)
+                if s is not None:
+                    out.add(s)
+        return out
+
+    def track_alias(st):
+        tgt = st.targets[0] if len(st.targets) == 1 else None
+        if isinstance(tgt, ast.Name):
+            pairs = [(tgt, st.value)]
+        elif (isinstance(tgt, (ast.Tuple, ast.List))
+              and isinstance(st.value, (ast.Tuple, ast.List))
+              and len(tgt.elts) == len(st.value.elts)):
+            pairs = list(zip(tgt.elts, st.value.elts))
+        else:
+            return
+        for t, v in pairs:
+            if not isinstance(t, ast.Name):
+                continue
+            node = v.value if isinstance(v, ast.Subscript) else v
+            if (isinstance(node, ast.Attribute)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id == "self" and node.attr in table):
+                prog_alias[t.id] = node.attr
+            else:
+                prog_alias.pop(t.id, None)
+
+    dead: dict[str, int] = {}         # symbol -> line it was donated
+    simple = sorted((st for st in ast.walk(fn.node)
+                     if isinstance(st, (ast.Assign, ast.AugAssign,
+                                        ast.AnnAssign, ast.Expr,
+                                        ast.Return))),
+                    key=lambda st: (st.lineno, st.col_offset))
+    for st in simple:
+        for node in ast.walk(st):      # 1. reads of dead symbols
+            if (isinstance(node, (ast.Name, ast.Attribute))
+                    and isinstance(getattr(node, "ctx", None), ast.Load)):
+                s = sym(node)
+                if s is not None and s in dead:
+                    yield Finding(
+                        mod.rel, node.lineno, R_DONATE, fn.qualname,
+                        f"`{s}` was donated to an AOT program on line "
+                        f"{dead.pop(s)} — its buffer is deleted; rebind "
+                        f"it from the program's outputs before reading")
+        donated = set()                # 2. donations made by this statement
+        for call in (n for n in ast.walk(st) if isinstance(n, ast.Call)):
+            key = donation_key(call.func)
+            if key is None:
+                continue
+            for i in table[key]:
+                if i < len(call.args):
+                    s = sym(call.args[i])
+                    if s is not None:
+                        donated.add(s)
+        rebound = set()                # 3. same-statement rebinds sanction
+        if isinstance(st, ast.Assign):
+            rebound = target_syms(st.targets)
+            track_alias(st)
+        elif isinstance(st, (ast.AugAssign, ast.AnnAssign)):
+            rebound = target_syms([st.target])
+        for s in rebound:
+            dead.pop(s, None)
+        dead.update({s: st.lineno for s in donated if s not in rebound})
+
+
 def run(ctx: AnalysisContext) -> Iterable[Finding]:
     out: list[Finding] = []
     for mod in ctx.modules:
@@ -211,4 +448,11 @@ def run(ctx: AnalysisContext) -> Iterable[Finding]:
                 for f in _scan_serving(mod, fn, aliases, already):
                     if f.line not in reach_lines:
                         out.append(f)
+            table, key_lines = _donation_table(mod.tree)
+            out.extend(_scan_donation_drift(mod, table, key_lines))
+            if table and mod.rel.endswith("serving/router_service.py"):
+                out.extend(_scan_mirror(mod, table, key_lines))
+            donate_table = table if table is not None else DONATED_ARGNUMS
+            for fn in collect_functions(mod.tree):
+                out.extend(_scan_use_after_donate(mod, fn, donate_table))
     return out

@@ -50,11 +50,24 @@ class DelaySpec:
     with small ``geom_p`` a sizeable tail of Geometric(p) draws exceeds 16
     and is clipped to the cap, so set ``max_lag`` explicitly (e.g. a few
     multiples of 1/p) when the tail matters.
+
+    ``per_item=True`` draws one lag per *query* instead of one per tick —
+    event-time feedback, where each item of a batch resolves on its own
+    clock (the streaming serving model). The same lag ring carries it with
+    per-(slot, row) validity, and each due slot folds through the policy's
+    shape-stable masked update (``update_masked`` / ``update_pref``), so
+    the loop stays one scan; policies without a masked path raise.
+    ``delay=0`` and per-tick-constant lags (``geom_p=0``) remain
+    bit-identical to the per-tick mode for masked-fold policies. A
+    policy's own ``update_delayed`` path is not consulted in per-item mode
+    (survivor rows carry heterogeneous ages; the masked fold is the
+    contract).
     """
     delay: int = 0              # deterministic lag component (ticks)
     geom_p: float = 0.0         # >0: extra Geometric(p) lag per tick
     max_lag: int | None = None  # lag cap; ring holds max_lag + 1 slots
                                 # (default: delay, or delay+16 if geom)
+    per_item: bool = False      # one lag draw per query, not per tick
 
     @property
     def trivial(self) -> bool:
@@ -230,6 +243,22 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
         return unpack(state, ys)
 
     # -- delayed path: resolve(ring head) -> act -> schedule, one scan ------
+    per_item = spec.per_item
+    if per_item:
+        # event-time lags produce partially-due slots: the fold must be the
+        # policy's shape-stable masked update (ok=False rows contribute
+        # nothing), not the all-or-nothing per-tick cond
+        if prefs is not None:
+            if policy.update_pref is None:
+                raise ValueError(
+                    f"DelaySpec(per_item=True) with pref_fn folds each "
+                    f"slot's survivors through update_pref; policy "
+                    f"'{policy.name}' has none")
+        elif policy.update_masked is None:
+            raise ValueError(
+                f"DelaySpec(per_item=True) folds each slot's survivors "
+                f"through the policy's masked update; '{policy.name}' has "
+                f"no update_masked path")
     r = spec.cap + 1                       # ring slots, addressed by due tick
     dim = env.x.shape[-1]
     ring0 = dict(
@@ -237,8 +266,8 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
         a1=jnp.zeros((r, batch), jnp.int32),
         a2=jnp.zeros((r, batch), jnp.int32),
         y=jnp.zeros((r, batch), jnp.float32),
-        issued=jnp.zeros((r,), jnp.int32),
-        valid=jnp.zeros((r,), bool),
+        issued=jnp.zeros((r, batch) if per_item else (r,), jnp.int32),
+        valid=jnp.zeros((r, batch) if per_item else (r,), bool),
     )
     if prefs is not None:
         # the pref a duel was served under rides the lag ring with it, so
@@ -260,18 +289,34 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
         #    valid entry here was scheduled for exactly this tick)
         slot = s % r
 
-        def fold(st):
-            args = (st, ring["x"][slot], ring["a1"][slot], ring["a2"][slot],
-                    ring["y"][slot])
-            if prefs is not None and policy.update_pref is not None:
-                return policy.update_pref(*args, ring["pref"][slot], ones_b)
-            if policy.update_delayed is not None:
-                age = jnp.full((batch,), s - ring["issued"][slot], jnp.int32)
-                return policy.update_delayed(*args, age)
-            return policy.update(*args)
+        if per_item:
+            # masked fold of whatever rows came due this tick (a zero mask
+            # folds nothing and leaves the state untouched — no cond)
+            m = ring["valid"][slot]
+            args = (state, ring["x"][slot], ring["a1"][slot],
+                    ring["a2"][slot], ring["y"][slot])
+            if prefs is not None:
+                state = policy.update_pref(*args, ring["pref"][slot], m)
+            else:
+                state = policy.update_masked(*args, m)
+            ring = dict(ring, valid=ring["valid"].at[slot].set(
+                jnp.zeros((batch,), bool)))
+        else:
+            def fold(st):
+                args = (st, ring["x"][slot], ring["a1"][slot],
+                        ring["a2"][slot], ring["y"][slot])
+                if prefs is not None and policy.update_pref is not None:
+                    return policy.update_pref(*args, ring["pref"][slot],
+                                              ones_b)
+                if policy.update_delayed is not None:
+                    age = jnp.full((batch,), s - ring["issued"][slot],
+                                   jnp.int32)
+                    return policy.update_delayed(*args, age)
+                return policy.update(*args)
 
-        state = jax.lax.cond(ring["valid"][slot], fold, lambda st: st, state)
-        ring = dict(ring, valid=ring["valid"].at[slot].set(False))
+            state = jax.lax.cond(ring["valid"][slot], fold, lambda st: st,
+                                 state)
+            ring = dict(ring, valid=ring["valid"].at[slot].set(False))
 
         # 2. act (regret charged now, whenever the feedback lands)
         state, a1, a2 = do_act(k_act, state, x_b, p_b)
@@ -279,24 +324,41 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
                               env.feedback_scale * u_b[rows, a2])
 
         # 3. schedule at s + L; an occupied slot is overwritten (the older
-        #    batch's feedback expires — capacity pressure, as in serving)
-        lag = jnp.asarray(spec.delay, jnp.int32)
+        #    batch's feedback expires — capacity pressure, as in serving).
+        #    per_item draws one lag per row: rows of this batch land on
+        #    their own due ticks (1 <= L <= cap < r, so a row is always
+        #    read before its slot can be rewritten)
+        if per_item:
+            lag = jnp.full((batch,), spec.delay, jnp.int32)
+        else:
+            lag = jnp.asarray(spec.delay, jnp.int32)
         if spec.geom_p > 0.0:
-            u = jax.random.uniform(k_lag, ())
+            u = jax.random.uniform(k_lag, (batch,) if per_item else ())
             lag = lag + jnp.floor(jnp.log1p(-u)
                                   / jnp.log1p(-spec.geom_p)).astype(jnp.int32)
         lag = jnp.clip(lag, 1, spec.cap)
         w = (s + lag) % r
-        wrote = dict(
-            x=ring["x"].at[w].set(x_b),
-            a1=ring["a1"].at[w].set(a1),
-            a2=ring["a2"].at[w].set(a2),
-            y=ring["y"].at[w].set(y),
-            issued=ring["issued"].at[w].set(s),
-            valid=ring["valid"].at[w].set(True),
-        )
+        if per_item:
+            wrote = dict(
+                x=ring["x"].at[w, rows].set(x_b),
+                a1=ring["a1"].at[w, rows].set(a1),
+                a2=ring["a2"].at[w, rows].set(a2),
+                y=ring["y"].at[w, rows].set(y),
+                issued=ring["issued"].at[w, rows].set(s),
+                valid=ring["valid"].at[w, rows].set(True),
+            )
+        else:
+            wrote = dict(
+                x=ring["x"].at[w].set(x_b),
+                a1=ring["a1"].at[w].set(a1),
+                a2=ring["a2"].at[w].set(a2),
+                y=ring["y"].at[w].set(y),
+                issued=ring["issued"].at[w].set(s),
+                valid=ring["valid"].at[w].set(True),
+            )
         if prefs is not None:
-            wrote["pref"] = ring["pref"].at[w].set(p_b)
+            wrote["pref"] = (ring["pref"].at[w, rows].set(p_b) if per_item
+                             else ring["pref"].at[w].set(p_b))
         ring = wrote
         active = mp.get_pool(state).active if pool_schedule is not None \
             else None

@@ -70,6 +70,7 @@ from repro.data.synth import CorpusConfig, make_split
 from repro.encoder.model import EncoderConfig, init_encoder
 from repro.launch import mesh as mesh_lib
 from repro.models import lm
+from repro.serving import stream
 from repro.serving.router_service import RouterService, RouterServiceConfig
 
 # Any RoutingPolicy can serve — the service just drives act/update. Every
@@ -150,6 +151,22 @@ def main():
                          "duel cost ($/1k tok) to hold via the lambda tilt")
     ap.add_argument("--autopilot-every", type=int, default=4,
                     help="rounds between autopilot control ticks")
+    ap.add_argument("--arrival", default=None, metavar="SPEC",
+                    help="serve an event-time arrival stream instead of "
+                         "fixed synchronous rounds: 'poisson:RATE', "
+                         "'bursty:RATE[,BURST]' or "
+                         "'diurnal:RATE[,DEPTH[,PERIOD]]' (requests/sec). "
+                         "Requests are cut into dynamic batches (see "
+                         "--max-wait), padded onto the --buckets ladder and "
+                         "served through the AOT streaming path; total "
+                         "requests = --rounds * --batch")
+    ap.add_argument("--buckets", default="8,16,32,64", metavar="B1,B2,...",
+                    help="pow2 padding-bucket ladder for --arrival "
+                         "streaming (one AOT-compiled program per bucket)")
+    ap.add_argument("--max-wait", type=float,
+                    default=stream.DEFAULT_MAX_WAIT, metavar="SECONDS",
+                    help="longest a request may wait for batchmates before "
+                         "its batch is cut (the latency/padding knob)")
     ap.add_argument("--pref-dist", default=None, metavar="SPEC",
                     help="per-request preference tilts: 'grid:V1,V2,...' "
                          "cycles the listed cost weights over batch rows, "
@@ -181,6 +198,23 @@ def main():
             raise SystemExit(
                 f"--pref-dist {args.pref_dist!r} must be 'grid:V1,V2,...' "
                 f"or 'uniform:LO,HI'")
+
+    buckets = spec = None
+    if args.arrival:
+        for flag, bad in (("--pool-schedule", args.pool_schedule),
+                          ("--autopilot", args.autopilot),
+                          ("--with-generation", args.with_generation),
+                          ("--feedback-delay", args.feedback_delay)):
+            if bad:
+                raise SystemExit(
+                    f"--arrival streams the core routing loop; {flag} is a "
+                    f"synchronous-rounds feature")
+        try:
+            spec = stream.parse_arrival(args.arrival)
+            buckets = stream.validate_buckets(
+                int(v) for v in args.buckets.split(","))
+        except ValueError as e:
+            raise SystemExit(f"[serve] {e}") from None
 
     events = []
     if args.pool_schedule:
@@ -244,7 +278,8 @@ def main():
                                             feedback_expiry=args.feedback_expiry,
                                             stale_half_life=args.stale_half_life,
                                             k_max=k_max,
-                                            autopilot=ap_cfg),
+                                            autopilot=ap_cfg,
+                                            buckets=buckets),
                         mesh=mesh)
 
     # reduced candidate models (actual generation path)
@@ -255,6 +290,11 @@ def main():
             gen_models[name] = (cfg, lm.init_params(ks[2], cfg))
 
     cc = CorpusConfig(n_categories=n_cats, seq_len=32)
+    if args.arrival:
+        row_of_slot = np.arange(n_models) % skills.shape[0]
+        _serve_stream(args, spec, buckets, svc, skills, row_of_slot, cc,
+                      n_cats, ks, pref_sampler)
+        return
     regrets = []
     pref_log, duel_cost_log = [], []   # realized-cost readout per tilt
     in_flight = []            # (due_round, tickets, y) — votes on their way
@@ -379,6 +419,64 @@ def main():
         print(f"[serve] autopilot: lam={st['lambda']:.3f} "
               f"cost_ema={st['cost_ema']:.3f} active={alive} "
               f"candidates={cands}")
+
+
+def _serve_stream(args, spec, buckets, svc, skills, row_of_slot, cc,
+                  n_cats, ks, pref_sampler):
+    """Event-time streaming serving: cut the simulated arrival stream into
+    dynamic batches (``--max-wait`` deadline forming) and drive them through
+    the AOT bucket programs, reporting sustained QPS and per-request latency
+    tails — simulated queueing wait plus measured route service time."""
+    from repro.data.synth import sample_queries
+    n_total = args.rounds * args.batch
+    times = stream.arrival_times(spec, n_total, seed=0)
+    batches = stream.form_batches(times, buckets, args.max_wait)
+    print(f"[serve] streaming {args.arrival}: {n_total} requests -> "
+          f"{len(batches)} batches on buckets {buckets} "
+          f"(max_wait {args.max_wait * 1e3:g}ms)")
+    lat, regrets = [], []
+    report = max(len(batches) // 8, 1)
+    t0 = time.time()
+    for i, fb in enumerate(batches):
+        kq, kc, kf = jax.random.split(jax.random.fold_in(ks[3], i), 3)
+        cats = jax.random.randint(kc, (fb.n,), 0, n_cats)
+        toks, mask = sample_queries(kq, cats, cc)
+        # embed at bucket width: one encoder shape per bucket, not per n
+        x = svc.embed(stream.pad_rows(toks, fb.bucket),
+                      stream.pad_rows(mask, fb.bucket))[:fb.n]
+        prefs = None if pref_sampler is None else pref_sampler(
+            jax.random.fold_in(ks[5], i), i, fb.n)
+        t_r = time.time()
+        a1, a2, tickets = svc.route_stream(x, prefs=prefs)
+        jax.block_until_ready(tickets)
+        service = time.time() - t_r
+        lat.append(fb.t_form - times[fb.start:fb.start + fb.n] + service)
+        utils = skills[row_of_slot][:, cats].T           # (n, K slots)
+        rows = jnp.arange(fb.n)
+        y = sample_preference(kf, 8.0 * utils[rows, a1],
+                              8.0 * utils[rows, a2])
+        svc.feedback_stream(tickets, y)
+        reg = jnp.mean(jnp.max(utils, axis=-1)
+                       - 0.5 * (utils[rows, a1] + utils[rows, a2]))
+        regrets.append(float(reg))
+        if i % report == 0:
+            print(f"[serve] batch {i}: n={fb.n} bucket={fb.bucket} "
+                  f"wait_ms={(fb.t_form - times[fb.start]) * 1e3:.1f} "
+                  f"regret={regrets[-1]:.4f} ({time.time() - t0:.1f}s)")
+    jax.block_until_ready(svc.state)
+    wall = time.time() - t0
+    lat = np.concatenate(lat)
+    stats = svc.service_stats()
+    early = np.mean(regrets[:max(len(regrets) // 4, 1)])
+    late = np.mean(regrets[-max(len(regrets) // 4, 1):])
+    pad_eff = n_total / sum(fb.bucket for fb in batches)
+    print(f"[serve] streaming done: qps={n_total / wall:.0f} "
+          f"p50={np.percentile(lat, 50) * 1e3:.2f}ms "
+          f"p99={np.percentile(lat, 99) * 1e3:.2f}ms pad={pad_eff:.2f} "
+          f"regret early={early:.4f} late={late:.4f} "
+          f"(adaptive: {'yes' if late < early else 'no'}) "
+          f"routed={stats['n_routed']} folded={stats['n_folded']} "
+          f"unresolved={stats['pending']}")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,20 @@ explicit age-based expiry for deployments with a feedback SLA.
 
 Everything here is shape-static pure pytree code: it jits, shards, vmaps,
 and checkpoints exactly like the policy state it sits next to.
+
+Two addressing modes share the ``PendingDuels`` pytree:
+
+* **global** (``enqueue``/``resolve``): one monotone ticket counter, slot =
+  ``ticket % capacity``. The legacy serving path; under a mesh the capacity
+  axis is GSPMD-sharded and a resolve gathers across devices.
+* **shard-local** (``enqueue_stream``/``resolve_stream``): the streaming
+  serving path. ``next_ticket`` is a per-shard ``(S,)`` counter and tickets
+  are strided — ``ticket = seq * n_shards + shard`` — so a ticket encodes
+  the shard that issued it and every enqueue/resolve touches only that
+  shard's rows of the ring. Under ``shard_map`` the whole feedback path
+  lowers without a single cross-device collective. Both rows and the
+  capacity must be powers of two for the strided arithmetic to stay exact
+  across the int32 ticket wrap.
 """
 from __future__ import annotations
 
@@ -26,15 +40,21 @@ import jax.numpy as jnp
 from repro.core.fgts import ring_slots
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= max(n, 1)."""
+    return 1 << max(n - 1, 0).bit_length()
+
+
 class PendingDuels(NamedTuple):
     """Ring buffer of issued-but-unresolved duels (slot = ticket % C).
 
     Tickets and ticks are int32 and *wrap*: all arithmetic on them
     (slot addressing, ages) is modular, so the buffer survives crossing
     2^31 issued tickets / service ticks (see ``resolve``). Slot addressing
-    stays collision-free across the wrap when the capacity divides 2^32 —
-    every capacity this repo constructs is a power of two
-    (``RouterService`` rounds up).
+    stays collision-free across the wrap only when the capacity divides
+    2^32, so ``init_pending`` *enforces* a power-of-two capacity
+    (``RouterService`` rounds its configured capacity up via
+    ``next_pow2``; direct callers must pass one).
     """
     x: jax.Array            # (C, d) float32 — query features at issue time
     a1: jax.Array           # (C,)  int32   — routed pair
@@ -42,7 +62,9 @@ class PendingDuels(NamedTuple):
     ticket: jax.Array       # (C,)  int32   — full ticket id holding the slot
     issued_at: jax.Array    # (C,)  int32   — service tick at issue
     valid: jax.Array        # (C,)  bool    — slot holds an unresolved duel
-    next_ticket: jax.Array  # ()    int32   — tickets issued so far
+    next_ticket: jax.Array  # ()    int32   — tickets issued so far; in the
+    #                         shard-local streaming mode a (S,) per-shard
+    #                         sequence counter instead (see enqueue_stream)
     pref: jax.Array | None = None  # (C,) f32 — per-duel preference weight
 
 
@@ -59,7 +81,34 @@ class ResolvedDuels(NamedTuple):
     pref: jax.Array | None = None  # (B,) f32 — pref the duel was served under
 
 
-def init_pending(capacity: int, dim: int) -> PendingDuels:
+def init_pending(capacity: int, dim: int,
+                 shards: int | None = None) -> PendingDuels:
+    """Empty ring. ``capacity`` must be a power of two: slot addressing is
+    ``ticket % capacity`` on a *wrapping* int32 ticket, and only a
+    power-of-two capacity divides 2^32 — any other size silently breaks
+    the collision-free-across-wrap contract (two live tickets mapping to
+    one slot after 2^31 issues). ``shards`` switches the ring to the
+    shard-local streaming layout: a (shards,) per-shard ``next_ticket``
+    for the strided tickets of ``enqueue_stream`` (shards must also be a
+    power of two, and divide the capacity)."""
+    if capacity < 1 or capacity & (capacity - 1):
+        raise ValueError(
+            f"PendingDuels capacity must be a power of two for "
+            f"collision-free slot addressing across the int32 ticket wrap "
+            f"(slot = ticket % capacity only stays injective on live "
+            f"tickets when capacity divides 2^32); got {capacity} — round "
+            f"up with feedback_queue.next_pow2")
+    if shards is not None:
+        if shards < 1 or shards & (shards - 1):
+            raise ValueError(
+                f"shard-local ring: shards must be a power of two so the "
+                f"strided ticket encoding (ticket = seq * shards + shard) "
+                f"is exactly invertible across the int32 wrap; got "
+                f"{shards}")
+        if capacity % shards:
+            raise ValueError(
+                f"shard-local ring: capacity {capacity} must divide over "
+                f"{shards} shards")
     z = jnp.zeros
     return PendingDuels(
         x=z((capacity, dim), jnp.float32),
@@ -68,7 +117,7 @@ def init_pending(capacity: int, dim: int) -> PendingDuels:
         ticket=jnp.full((capacity,), -1, jnp.int32),
         issued_at=z((capacity,), jnp.int32),
         valid=z((capacity,), bool),
-        next_ticket=z((), jnp.int32),
+        next_ticket=z((() if shards is None else (shards,)), jnp.int32),
         pref=z((capacity,), jnp.float32),
     )
 
@@ -176,3 +225,105 @@ def expire(q: PendingDuels, now: jax.Array,
 def pending_count(q: PendingDuels) -> jax.Array:
     """Number of in-flight (issued, unresolved, unexpired) duels."""
     return jnp.sum(q.valid)
+
+
+# ---------------------------------------------------------------------------
+# Shard-local streaming mode: masked enqueue, strided tickets, local resolve
+# ---------------------------------------------------------------------------
+#
+# These functions are written to run *inside* shard_map: every array they
+# touch is the local shard — the (C/S, d) rows of the ring this device owns,
+# the (1,) element of the per-shard ticket counter, the (B/S,) rows of the
+# batch this device routed. ``shard`` is the device's flat batch-shard index
+# (jax.lax.axis_index over the batch axes) and ``n_shards`` the static shard
+# count; on a single device pass shard=0, n_shards=1 and they run unsharded
+# on the full arrays. Because a ticket encodes its issuing shard
+# (``ticket = seq * n_shards + shard``), enqueue and resolve never address
+# another device's rows — the lowering contains no scatter collectives.
+
+def enqueue_stream(q: PendingDuels, x: jax.Array, a1: jax.Array,
+                   a2: jax.Array, now: jax.Array, pref: jax.Array,
+                   mask: jax.Array, shard, n_shards: int
+                   ) -> tuple[PendingDuels, jax.Array]:
+    """Masked shard-local issue: rows where ``mask`` is False (bucket
+    padding) are never written and get ticket -1.
+
+    Valid rows take consecutive per-shard sequence numbers (a cumsum rank,
+    so the slots written are exactly the slots a compacted batch would
+    write — bit-identical ring either way) and their tickets are strided
+    by the shard count. ``slot = seq % cap`` with a power-of-two local
+    ``cap`` stays collision-free across the int32 wrap (init_pending
+    enforces the capacity contract); when more valid rows than slots
+    arrive in one call only the last ``cap`` survive, mirroring
+    ``enqueue``'s expiry-by-overwrite.
+    """
+    cap = q.x.shape[0]
+    mask = mask.astype(bool)
+    mask_i = mask.astype(jnp.int32)
+    rank = jnp.cumsum(mask_i) - 1                 # per-valid-row 0..n-1
+    n = jnp.sum(mask_i)
+    seq = q.next_ticket[0] + rank if q.next_ticket.ndim else \
+        q.next_ticket + rank
+    shard = jnp.asarray(shard, jnp.int32)
+    tickets = jnp.where(mask, seq * n_shards + shard, jnp.int32(-1))
+    write = mask & (rank >= n - cap)              # over-capacity: keep last C
+    idx = jnp.where(write, seq % cap, cap)        # cap = OOB -> mode="drop"
+    now = jnp.asarray(now, jnp.int32)
+    return q._replace(
+        x=q.x.at[idx].set(x, mode="drop"),
+        a1=q.a1.at[idx].set(a1.astype(jnp.int32), mode="drop"),
+        a2=q.a2.at[idx].set(a2.astype(jnp.int32), mode="drop"),
+        ticket=q.ticket.at[idx].set(tickets, mode="drop"),
+        issued_at=q.issued_at.at[idx].set(
+            jnp.full(mask.shape, now, jnp.int32), mode="drop"),
+        valid=q.valid.at[idx].set(True, mode="drop"),
+        next_ticket=q.next_ticket + n,
+        pref=None if q.pref is None
+        else q.pref.at[idx].set(pref.astype(jnp.float32), mode="drop"),
+    ), tickets
+
+
+def resolve_stream(q: PendingDuels, tickets: jax.Array, y: jax.Array,
+                   mask: jax.Array, now: jax.Array, shard, n_shards: int,
+                   max_age: int | None = None
+                   ) -> tuple[PendingDuels, ResolvedDuels]:
+    """Shard-local twin of ``resolve`` with a padding mask.
+
+    A delivered ticket is *owned* by shard ``ticket % n_shards``; rows this
+    shard does not own (or padding rows, mask False) never validate, so
+    each device clears and gathers only its own slots. The issuing
+    sequence number is recovered exactly — ``(ticket - shard) // n_shards``
+    is an arithmetic shift since n_shards is a power of two — and the full
+    stored ticket is compared, so the validation semantics (stale,
+    overwritten, duplicate deliveries) match ``resolve`` bit for bit.
+
+    Shard affinity is a *contract*: a ticket delivered to a different
+    shard than the one that issued it simply fails the ownership test and
+    reports ``ok=False`` — route feedback back through the shard that
+    routed the query (the streaming batch former keeps this alignment
+    for free, since votes ride the same row order as the routed batch).
+    """
+    cap = q.x.shape[0]
+    tickets = jnp.asarray(tickets, jnp.int32)
+    now = jnp.asarray(now, jnp.int32)
+    shard = jnp.asarray(shard, jnp.int32)
+    owner = (tickets % n_shards) == shard
+    seq = (tickets - shard) // n_shards           # exact: n_shards = 2^k
+    slots = seq % cap
+    age = now - q.issued_at[slots]                # int32: wraps modularly
+    matched = (owner & mask.astype(bool) & q.valid[slots]
+               & (q.ticket[slots] == tickets))
+    rows = jnp.arange(tickets.shape[0], dtype=jnp.int32)
+    sentinel = jnp.int32(tickets.shape[0])
+    first = jnp.full((cap,), sentinel, jnp.int32).at[slots].min(
+        jnp.where(matched, rows, sentinel))
+    matched = matched & (first[slots] == rows)
+    ok = matched & (age >= 0)                     # negative = older than 2^31
+    if max_age is not None:
+        ok = ok & (age <= max_age)
+    hit = jnp.zeros((cap,), jnp.int32).at[slots].max(
+        matched.astype(jnp.int32))
+    batch = ResolvedDuels(x=q.x[slots], a1=q.a1[slots], a2=q.a2[slots],
+                          y=jnp.asarray(y), age=age, ok=ok,
+                          pref=None if q.pref is None else q.pref[slots])
+    return q._replace(valid=q.valid & (hit == 0)), batch

@@ -51,6 +51,22 @@ from repro.data.pool import PoolEntry
 from repro.encoder.model import EncoderConfig, encode
 from repro.sharding import routing_rules as rr
 from . import feedback_queue as fq
+from . import stream
+
+# Donated argnums of the streaming AOT bucket programs (``buckets=...``):
+# buffer donation on the pending ring, the policy/posterior state, the tick
+# scalar and the traffic accumulators is what removes the per-dispatch
+# copies of the (C, d) ring and the replay buffers. repro-lint's
+# trace-hazard pass mirrors this table (``DONATED_ARGNUMS``) and flags both
+# reads-after-donation and drift between the wiring here and the lint's
+# copy — changing a signature below means updating the lint table in the
+# same PR.
+STREAM_DONATION = {
+    "_s_route": (1, 2, 6, 8),       # state, ring, tick, duel-cost acc
+    "_s_route_pref": (1, 2, 6, 8),  # state, ring, tick, duel-cost acc
+    "_s_feedback": (0, 1, 5, 6),    # state, ring, tick, folded-count acc
+    "_s_resolve": (0, 4),           # ring, tick
+}
 
 
 def _tick32(tick: int) -> jax.Array:
@@ -96,6 +112,15 @@ class RouterServiceConfig:
     feedback_capacity: int = 1024  # max in-flight duels (ring: oldest expire)
     feedback_expiry: Optional[int] = None   # max age in ticks; None = never
     stale_half_life: Optional[float] = None  # age-discount stale votes
+    # -- streaming serving --------------------------------------------------
+    # Padding-bucket ladder (sorted powers of two). Setting this flips the
+    # service into event-time streaming mode: route/feedback run through
+    # fused AOT programs compiled per bucket at construction (buffer
+    # donation on the ring/state/tick — see STREAM_DONATION), arbitrary
+    # formed-batch sizes pad to the next bucket with masked rows, and the
+    # pending ring switches to shard-local ticket addressing under a mesh.
+    # None = the legacy tick-batch surface (lazy jit, one batch shape).
+    buckets: Optional[tuple] = None
     # -- pool autopilot -----------------------------------------------------
     # Closed-loop population management (requires k_max): the policy is
     # wrapped with repro.autopilot — posterior-dominance auto-retirement,
@@ -196,9 +221,19 @@ class RouterService:
                 f"dynamic service needs a pool-backed policy (state must "
                 f"be a PooledState) — build it from the ModelPool first "
                 f"argument the factory receives")
-        capacity = cfg.feedback_capacity if mesh is None \
+        # the ring's wrapping slot arithmetic needs a power-of-two capacity
+        # (feedback_queue.init_pending raises on anything else): round the
+        # requested capacity up here so configs stay free-form
+        capacity = fq.next_pow2(cfg.feedback_capacity) if mesh is None \
             else rr.round_capacity(cfg.feedback_capacity, mesh)
-        self.pending = fq.init_pending(capacity, self.a_emb.shape[1])
+        self.streaming = cfg.buckets is not None
+        if self.streaming:
+            shards = 1 if mesh is None else rr.n_batch_shards(mesh)
+            self.buckets = stream.validate_buckets(cfg.buckets, shards)
+            self.pending = fq.init_pending(capacity, self.a_emb.shape[1],
+                                           shards=shards)
+        else:
+            self.pending = fq.init_pending(capacity, self.a_emb.shape[1])
         self.tick = 0                  # route_batch calls (the service clock)
         self.n_routed = 0
         # on-device stats accumulators: the hot path only *adds* to these
@@ -208,6 +243,8 @@ class RouterService:
         self._n_folded = jnp.zeros((), jnp.int32)
         self._duel_cost = jnp.zeros((), jnp.float32)
         self._build_programs()
+        if self.streaming:
+            self._build_stream_programs()
 
     def _build_programs(self):
         """Jit (and, under a mesh, shard) the service's four programs: act,
@@ -261,6 +298,13 @@ class RouterService:
                 return pol_upd_pref(state, x, a1, a2, y, pref, ok)
         else:
             masked_update_pref = None
+
+        # raw (un-jitted) traceables, reused by the streaming AOT builder so
+        # both surfaces fold feedback through literally the same closures
+        self._traceables = {"masked_update": masked_update,
+                            "masked_update_pref": masked_update_pref,
+                            "act_pref": act_pref, "act_mesh": None,
+                            "act_pref_mesh": None}
 
         def seed_fn(fn):
             """Seeding program for offline->online replay. Under an
@@ -318,7 +362,11 @@ class RouterService:
         sh = functools.partial(NamedSharding, mesh)
         rep, row, qry = sh(P()), sh(rr.per_query_spec(mesh)), \
             sh(rr.query_batch_spec(mesh))
-        pend = rr.to_shardings(mesh, rr.pending_specs(mesh))
+        # streaming mode reshapes the ring's ticket counter to (S,) per
+        # shard; its spec tree (and the live buffer's placement) follow
+        pend = rr.to_shardings(
+            mesh, rr.stream_pending_specs(mesh) if self.streaming
+            else rr.pending_specs(mesh))
         res_sh = rr.to_shardings(mesh, rr.resolved_specs(mesh))
         self._x_sh, self._row_sh, self._rep_sh = qry, row, rep
 
@@ -345,6 +393,7 @@ class RouterService:
             def act(key, state, x, _act=self.policy.act):
                 with jax.threefry_partitionable(True):
                     return _act(key, state, x)
+        self._traceables["act_mesh"] = act
         self._act = jax.jit(act, in_shardings=(rep, rep, qry),
                             out_shardings=(rep, row, row))
         # the pref operand shards like every per-query vector: each device
@@ -361,6 +410,7 @@ class RouterService:
                 def act_p(key, state, x, pref, _ap=act_pref):
                     with jax.threefry_partitionable(True):
                         return _ap(key, state, x, pref)
+            self._traceables["act_pref_mesh"] = act_p
             self._act_pref = jax.jit(act_p,
                                      in_shardings=(rep, rep, qry, row),
                                      out_shardings=(rep, row, row))
@@ -425,6 +475,372 @@ class RouterService:
         self._n_folded = jax.device_put(self._n_folded, rep)
         self._duel_cost = jax.device_put(self._duel_cost, rep)
 
+    # -- streaming serving (cfg.buckets) -------------------------------------
+
+    @staticmethod
+    def _avals(tree):
+        """Array pytree -> ShapeDtypeStruct pytree (AOT lowering operands)."""
+        return jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(jnp.shape(a), jnp.result_type(a)),
+            tree)
+
+    def _aot(self, fn, *, donate_argnums, avals, shardings=None):
+        """Ahead-of-time compile one bucket program. The trace happens here,
+        at construction, against abstract operands — first-request latency
+        pays zero compile time — and the compiled executable can never
+        retrace: an off-ladder operand shape is a loud arity error, not a
+        silent recompile. ``donate_argnums`` hands the hot buffers (ring,
+        posterior state, tick, accumulators) to XLA for in-place reuse."""
+        if shardings is None:
+            jitted = jax.jit(fn, donate_argnums=donate_argnums)
+        else:
+            jitted = jax.jit(fn, in_shardings=shardings[0],
+                             out_shardings=shardings[1],
+                             donate_argnums=donate_argnums)
+        return jitted.lower(*avals).compile()
+
+    def _stream_avals(self, b: int) -> dict:
+        f32, i32 = jnp.float32, jnp.int32
+        d = self.a_emb.shape[1]
+        s = jax.ShapeDtypeStruct
+        return {"key": self._avals(self._key),
+                "state": self._avals(self.state),
+                "q": self._avals(self.pending),
+                "x": s((b, d), f32), "mask": s((b,), jnp.bool_),
+                "pref": s((b,), f32), "now": s((), i32),
+                "costs": self._avals(self.costs),
+                "acc_f": s((), f32), "acc_i": s((), i32),
+                "tickets": s((b,), i32), "y": s((b,), f32)}
+
+    def _build_stream_programs(self):
+        """AOT-compile the streaming surface: per padding bucket, one fused
+        route program (selection + masked shard-local ring enqueue + cost
+        accounting) and one fused feedback program (shard-local resolve +
+        masked posterior fold), with the ring, the policy state, the device
+        tick and the traffic accumulators donated (``STREAM_DONATION``) so
+        every step updates them in place instead of copying the (C, d) ring
+        and replay buffers.
+
+        Masking contract: padded rows never enter the ring (ticket -1,
+        nothing scattered) and never reach the posterior (``ok=False`` rows
+        scatter out of bounds in the masked update), and selection runs
+        under partitionable threefry, whose per-row draws depend only on
+        (key, row) — so a batch padded to the next bucket is bit-identical
+        to the unpadded batch (pinned in tests/test_streaming.py).
+
+        Policies without a masked update cannot fold feedback shape-stably:
+        they get a donated AOT resolve per bucket and fall back to the
+        legacy host-compaction fold.
+        """
+        cfg, mesh, policy = self.cfg, self.mesh, self.policy
+        n_shards = self._n_shards
+        tr = self._traceables
+        masked_update = tr["masked_update"]
+        masked_update_pref = tr["masked_update_pref"]
+
+        # selection cores. Mesh mode reuses the exact closures the legacy
+        # surface jits (shard_map for the FGTS default, partitionable GSPMD
+        # otherwise); single-device act is re-wrapped under partitionable
+        # threefry — the default threefry lowering folds the batch shape
+        # into the stream and is NOT padding-stable.
+        if mesh is None:
+            def s_act(key, state, x, _act=policy.act):
+                with jax.threefry_partitionable(True):
+                    return _act(key, state, x)
+            s_act_pref = None
+            if tr["act_pref"] is not None:
+                def s_act_pref(key, state, x, pref, _ap=tr["act_pref"]):
+                    with jax.threefry_partitionable(True):
+                        return _ap(key, state, x, pref)
+        else:
+            s_act, s_act_pref = tr["act_mesh"], tr["act_pref_mesh"]
+
+        # ring cores: shard-local ticket addressing. Under a mesh each
+        # device owns a (C/S,)-row ring slice plus its own (1,) sequence
+        # counter, and tickets are strided by shard (ticket = seq*S +
+        # shard) — enqueue and resolve never leave the device that routed
+        # the row, so the feedback path lowers with zero collectives
+        # (asserted against the compiled HLO in tests).
+        if mesh is None:
+            def enq(q, x, a1, a2, now, pref, mask):
+                return fq.enqueue_stream(q, x, a1, a2, now, pref, mask,
+                                         0, n_shards)
+
+            def rsv(q, tickets, y, mask, now):
+                return fq.resolve_stream(q, tickets, y, mask, now, 0,
+                                         n_shards,
+                                         max_age=cfg.feedback_expiry)
+        else:
+            sidx = rr.shard_index(mesh)
+            pspec = rr.stream_pending_specs(mesh)
+            rowp = rr.per_query_spec(mesh)
+            qryp = rr.query_batch_spec(mesh)
+
+            def enq_local(q, x, a1, a2, now, pref, mask):
+                return fq.enqueue_stream(q, x, a1, a2, now, pref, mask,
+                                         sidx(), n_shards)
+
+            enq = shard_map(enq_local, mesh=mesh,
+                            in_specs=(pspec, qryp, rowp, rowp, P(), rowp,
+                                      rowp),
+                            out_specs=(pspec, rowp), check_rep=False)
+
+            def rsv_local(q, tickets, y, mask, now):
+                return fq.resolve_stream(q, tickets, y, mask, now, sidx(),
+                                         n_shards,
+                                         max_age=cfg.feedback_expiry)
+
+            rsv = shard_map(rsv_local, mesh=mesh,
+                            in_specs=(pspec, rowp, rowp, rowp, P()),
+                            out_specs=(pspec, rr.resolved_specs(mesh)),
+                            check_rep=False)
+
+        # fused per-bucket programs. The tick advances ON DEVICE (now + 1)
+        # and is threaded through every program as a donated passthrough,
+        # so the hot path never ships the clock from the host; the host
+        # ``self.tick`` mirror advances in lockstep for checkpoints/expiry
+        # (both wrap int32-identically).
+        def route_fused(key, state, q, x, mask, pref, now, costs, acc):
+            state, a1, a2 = s_act(key, state, x)
+            now = now + 1
+            q, tickets = enq(q, x, a1, a2, now, pref, mask)
+            live = jnp.where(mask, costs[a1] + costs[a2], 0.0)
+            return state, q, now, a1, a2, tickets, acc + jnp.sum(live)
+
+        route_pref_fused = None
+        if s_act_pref is not None:
+            def route_pref_fused(key, state, q, x, mask, pref, now, costs,
+                                 acc):
+                state, a1, a2 = s_act_pref(key, state, x, pref)
+                now = now + 1
+                q, tickets = enq(q, x, a1, a2, now, pref, mask)
+                live = jnp.where(mask, costs[a1] + costs[a2], 0.0)
+                return state, q, now, a1, a2, tickets, acc + jnp.sum(live)
+
+        # Canonicalize the fold layout on the mesh: gather the resolved
+        # batch to every device *before* the posterior update. The fold
+        # pays an all-gather/all-reduce either way (row-sharded duels into
+        # a replicated posterior); constraining it here pins the reduction
+        # grouping to the canonical row order, so the folded posterior is
+        # bitwise invariant to how much padding the bucket added (free
+        # per-shard partial sums would regroup as padding shifts live rows
+        # across devices). The resolve program itself stays collective-free
+        # — the constraint lives in the feedback program only, after the
+        # shard-local ring lookup.
+        if mesh is None:
+            def canon(res):
+                return res
+        else:
+            rep_sh = self._rep_sh
+
+            def canon(res):
+                return jax.tree.map(
+                    lambda a: jax.lax.with_sharding_constraint(a, rep_sh),
+                    res)
+
+        feedback_fused = None
+        if masked_update_pref is not None:
+            # preference-conditioned fold (same precedence as
+            # feedback_batch: the ring records the pref each duel was
+            # served under, zeros when the caller passed none)
+            def feedback_fused(state, q, tickets, y, mask, now, acc):
+                q, res = rsv(q, tickets, y, mask, now)
+                res = canon(res)
+                n_ok = jnp.sum(res.ok).astype(jnp.int32)
+                state = masked_update_pref(state, res.x, res.a1, res.a2,
+                                           res.y, res.age, res.ok, res.pref)
+                return state, q, now, acc + n_ok, n_ok
+        elif masked_update is not None:
+            def feedback_fused(state, q, tickets, y, mask, now, acc):
+                q, res = rsv(q, tickets, y, mask, now)
+                res = canon(res)
+                n_ok = jnp.sum(res.ok).astype(jnp.int32)
+                state = masked_update(state, res.x, res.a1, res.a2, res.y,
+                                      res.age, res.ok)
+                return state, q, now, acc + n_ok, n_ok
+
+        def resolve_fused(q, tickets, y, mask, now):
+            q, res = rsv(q, tickets, y, mask, now)
+            return q, now, res
+
+        if mesh is None:
+            r_sh = f_sh = v_sh = None
+        else:
+            rep, row, qry = self._rep_sh, self._row_sh, self._x_sh
+            pend = rr.to_shardings(mesh, rr.stream_pending_specs(mesh))
+            res_sh = rr.to_shardings(mesh, rr.resolved_specs(mesh))
+            r_sh = ((rep, rep, pend, qry, row, row, rep, rep, rep),
+                    (rep, pend, rep, row, row, row, rep))
+            f_sh = ((rep, pend, row, row, row, rep, rep),
+                    (rep, pend, rep, rep, rep))
+            v_sh = ((pend, row, row, row, rep), (pend, rep, res_sh))
+
+        av = {b: self._stream_avals(b) for b in self.buckets}
+
+        def r_avals(b):
+            a = av[b]
+            return (a["key"], a["state"], a["q"], a["x"], a["mask"],
+                    a["pref"], a["now"], a["costs"], a["acc_f"])
+
+        def f_avals(b):
+            a = av[b]
+            return (a["state"], a["q"], a["tickets"], a["y"], a["mask"],
+                    a["now"], a["acc_i"])
+
+        def v_avals(b):
+            a = av[b]
+            return (a["q"], a["tickets"], a["y"], a["mask"], a["now"])
+
+        self._s_route = {
+            b: self._aot(route_fused,
+                         donate_argnums=STREAM_DONATION["_s_route"],
+                         avals=r_avals(b), shardings=r_sh)
+            for b in self.buckets}
+        self._s_route_pref = None if route_pref_fused is None else {
+            b: self._aot(route_pref_fused,
+                         donate_argnums=STREAM_DONATION["_s_route_pref"],
+                         avals=r_avals(b), shardings=r_sh)
+            for b in self.buckets}
+        self._s_feedback = None if feedback_fused is None else {
+            b: self._aot(feedback_fused,
+                         donate_argnums=STREAM_DONATION["_s_feedback"],
+                         avals=f_avals(b), shardings=f_sh)
+            for b in self.buckets}
+        self._s_resolve = {
+            b: self._aot(resolve_fused,
+                         donate_argnums=STREAM_DONATION["_s_resolve"],
+                         avals=v_avals(b), shardings=v_sh)
+            for b in self.buckets}
+        # per-(bucket, live-count) mask / zero-pref caches: placed once,
+        # reused every call (never donated)
+        self._masks, self._zero_prefs = {}, {}
+        self._tick_dev = _tick32(self.tick)
+        if mesh is not None:
+            self._tick_dev = jax.device_put(self._tick_dev, self._rep_sh)
+        self._sync_stream_costs()
+
+    def _sync_stream_costs(self):
+        """Refresh the replicated cost-vector operand of the AOT route
+        programs (the AOT call path validates placement, so the mirror must
+        live on the mesh)."""
+        if not self.streaming:
+            return
+        self._costs_dev = (self.costs if self.mesh is None
+                           else jax.device_put(self.costs, self._rep_sh))
+
+    def _stream_mask(self, b: int, n: int) -> jax.Array:
+        m = self._masks.get((b, n))
+        if m is None:
+            m = self._shard_batch(jnp.arange(b, dtype=jnp.int32)
+                                  < jnp.int32(n), "route_stream")
+            self._masks[(b, n)] = m
+        return m
+
+    def _pad_batch(self, arr: jax.Array, b: int, what: str) -> jax.Array:
+        """End-pad a formed batch to its bucket and place it on the mesh.
+
+        Padding sits at the *end* deliberately: live row i keeps global
+        position i for every bucket, so per-row randomness under
+        partitionable threefry (prefix-stable in the batch axis) draws the
+        same bits whatever the padding — the bucket-identity contract for
+        pairs and posterior. The flip side is that under a mesh the
+        padding changes which device owns a live row, so *tickets* are
+        bucket-dependent there (opaque handles either way; the posterior
+        fold is made layout-canonical inside the feedback program
+        instead)."""
+        return self._shard_batch(stream.pad_rows(arr, b), what)
+
+    def _zero_pref(self, b: int) -> jax.Array:
+        z = self._zero_prefs.get(b)
+        if z is None:
+            z = self._shard_batch(jnp.zeros((b,), jnp.float32),
+                                  "route_stream")
+            self._zero_prefs[b] = z
+        return z
+
+    def route_stream(self, x: jax.Array, prefs: jax.Array | None = None):
+        """Route a formed batch of *arbitrary* size through the AOT bucket
+        programs: pad to the smallest bucket >= n, run the fused
+        route program (selection + masked ring enqueue + cost accounting,
+        hot buffers donated), slice the padding back off. Returns
+        (a1 (n,), a2 (n,), tickets (n,)) exactly like ``route_batch`` —
+        padded rows never enter the ring or the posterior, and the live
+        rows are bit-identical to routing the unpadded batch. Zero
+        recompiles for any n <= max(buckets); n above the ladder raises
+        (form smaller batches — see ``serving.stream.form_batches``)."""
+        if not self.streaming:
+            raise RuntimeError(
+                "route_stream needs RouterServiceConfig(buckets=...): the "
+                "tick-batch service compiles no AOT bucket programs")
+        x = jnp.asarray(x, jnp.float32)
+        n = x.shape[0]
+        b = stream.bucket_for(n, self.buckets)
+        xb = self._pad_batch(x, b, "route_stream")
+        mask = self._stream_mask(b, n)
+        if prefs is None:
+            prog, pref_row = self._s_route[b], self._zero_pref(b)
+        else:
+            if self._s_route_pref is None:
+                raise ValueError(
+                    f"policy '{self.policy.name}' has no act_pref path — "
+                    f"per-request prefs need a preference-aware policy "
+                    f"(the pooled FGTS/eps-greedy/LinUCB families)")
+            pref_row = jnp.asarray(prefs, jnp.float32)
+            if pref_row.shape != (n,):
+                raise ValueError(
+                    f"prefs shape {pref_row.shape} != ({n},) — one scalar "
+                    f"cost weight per query row")
+            prog = self._s_route_pref[b]
+            pref_row = self._pad_batch(pref_row, b, "route_stream")
+        key = self._next_key()
+        if self.mesh is not None:
+            key = jax.device_put(key, self._rep_sh)
+        self.tick += 1                 # host mirror of the device clock
+        self.state, self.pending, self._tick_dev, a1, a2, tickets, \
+            self._duel_cost = prog(key, self.state, self.pending, xb, mask,
+                                   pref_row, self._tick_dev,
+                                   self._costs_dev, self._duel_cost)
+        self.n_routed += n
+        return a1[:n], a2[:n], tickets[:n]
+
+    def feedback_stream(self, tickets: jax.Array, y: jax.Array):
+        """Streaming twin of ``feedback_batch``: pad the delivered batch to
+        the next bucket (padding masked out of the resolve), run the fused
+        AOT feedback program — shard-local resolve + masked posterior fold,
+        ring/state/tick donated. Same delivery semantics as feedback_batch
+        (out-of-order, partial, duplicate, stale all fine) with one
+        streaming addition: under a mesh, tickets must come back through
+        the shard that issued them (the service keeps batch positions
+        stable, so delivering votes at the positions their queries were
+        routed in satisfies this for free). Returns the folded count (lazy
+        device scalar on the masked path, host int on the compaction
+        fallback)."""
+        if not self.streaming:
+            raise RuntimeError(
+                "feedback_stream needs RouterServiceConfig(buckets=...): "
+                "the tick-batch service compiles no AOT bucket programs")
+        tickets = jnp.asarray(tickets, jnp.int32)
+        y = jnp.asarray(y, jnp.float32)
+        if tickets.shape != y.shape:
+            raise ValueError(
+                f"feedback_stream: tickets shape {tickets.shape} != votes "
+                f"shape {y.shape} — one vote per delivered ticket")
+        n = tickets.shape[0]
+        b = stream.bucket_for(n, self.buckets)
+        tk = self._pad_batch(tickets, b, "feedback_stream")
+        yb = self._pad_batch(y, b, "feedback_stream")
+        mask = self._stream_mask(b, n)
+        if self._s_feedback is not None:
+            self.state, self.pending, self._tick_dev, self._n_folded, \
+                n_ok = self._s_feedback[b](self.state, self.pending, tk,
+                                           yb, mask, self._tick_dev,
+                                           self._n_folded)
+            return n_ok
+        # no masked update: donated AOT resolve, legacy host-shaped fold
+        self.pending, self._tick_dev, res = self._s_resolve[b](
+            self.pending, tk, yb, mask, self._tick_dev)
+        return self._fold_compact(res)
+
     def _shard_batch(self, x: jax.Array, what: str = "batch") -> jax.Array:
         """Mesh mode: place a (B, ...) array batch-sharded (no-op on a
         single device); B must divide over the batch-shard count."""
@@ -462,7 +878,13 @@ class RouterService:
         the same posterior. Prefs are traced operands of one compiled
         program — distinct values never retrace — and are recorded with
         each issued duel so the feedback fold conditions on them.
+
+        In streaming mode (``cfg.buckets``) this delegates to
+        ``route_stream``: the batch pads to the next bucket and runs the
+        fused AOT program — any batch size up the ladder, zero recompiles.
         """
+        if self.streaming:
+            return self.route_stream(x, prefs=prefs)
         x = self._shard_batch(x, "route_batch")
         if prefs is None:
             self.state, a1, a2 = self._act(self._next_key(), self.state, x)
@@ -516,7 +938,12 @@ class RouterService:
         runs without a single host sync. Policies without one keep the
         host-side compaction path (which must concretize the survivor
         count to shape the batch — each new count retraces once).
+
+        In streaming mode (``cfg.buckets``) this delegates to
+        ``feedback_stream`` (padded AOT resolve + fold, buffers donated).
         """
+        if self.streaming:
+            return self.feedback_stream(tickets, y)
         tickets = jnp.asarray(tickets, jnp.int32)
         y = jnp.asarray(y, jnp.float32)
         if tickets.shape != y.shape:
@@ -543,11 +970,14 @@ class RouterService:
                 self.state, res.x, res.a1, res.a2, res.y, res.age, res.ok)
             self._n_folded = self._n_folded + n_ok
             return n_ok
-        # host-side compaction fallback: each new surviving count retraces
-        # the jitted update once (the update is the ring scatter; the SGLD
-        # refresh lives in act). Shaping the compacted batch forces the one
-        # host sync this path is named for (baselined in
-        # analysis/baseline.json).
+        return self._fold_compact(res)
+
+    def _fold_compact(self, res: fq.ResolvedDuels) -> int:
+        """Host-side compaction fallback for policies without a masked
+        update: each new surviving count retraces the jitted update once
+        (the update is the ring scatter; the SGLD refresh lives in act).
+        Shaping the compacted batch forces the one host sync this path is
+        named for (baselined in analysis/baseline.json)."""
         ok = np.asarray(res.ok)
         n_host = int(ok.sum())
         self._n_folded = self._n_folded + n_host
@@ -580,11 +1010,21 @@ class RouterService:
         the checkpointed buffer."""
         y = self._shard_batch(jnp.asarray(y, jnp.float32), "feedback_direct")
         if tickets is not None:
-            self.pending, _ = self._resolve(
-                self.pending,
-                self._shard_batch(jnp.asarray(tickets, jnp.int32),
-                                  "feedback_direct"),
-                y, _tick32(self.tick))
+            t = jnp.asarray(tickets, jnp.int32)
+            if self.streaming:
+                # the streaming ring resolves through the AOT bucket
+                # programs (shard-local addressing; legacy resolve assumes
+                # the global ring layout)
+                b = stream.bucket_for(t.shape[0], self.buckets)
+                self.pending, self._tick_dev, _ = self._s_resolve[b](
+                    self.pending,
+                    self._pad_batch(t, b, "feedback_direct"),
+                    self._pad_batch(y, b, "feedback_direct"),
+                    self._stream_mask(b, t.shape[0]), self._tick_dev)
+            else:
+                self.pending, _ = self._resolve(
+                    self.pending, self._shard_batch(t, "feedback_direct"),
+                    y, _tick32(self.tick))
         self.state = self._update(
             self.state, self._shard_batch(x, "feedback_direct"),
             self._shard_batch(jnp.asarray(a1), "feedback_direct"),
@@ -728,6 +1168,7 @@ class RouterService:
         self.state = self._pool_retire(self.state,
                                        jnp.asarray(k, jnp.int32))
         self.costs = mp.get_pool(self.state).costs
+        self._sync_stream_costs()
 
     def swap_model(self, k: int, entry: PoolEntry, replay=None) -> None:
         """Replace slot ``k``'s model in place (retrained successor, new
@@ -748,6 +1189,7 @@ class RouterService:
         self.pool[slot] = entry
         self._ever_used[slot] = True
         self.costs = mp.get_pool(self.state).costs
+        self._sync_stream_costs()
 
     def seed_replay(self, x, a1, a2, y) -> int:
         """Offline→online seeding: fold a batch of historical duels into
@@ -789,8 +1231,20 @@ class RouterService:
             fns.update(pool_set=self._pool_set,
                        pool_retire=self._pool_retire,
                        update_seed=self._update_seed)
-        return {name: fn._cache_size() for name, fn in fns.items()
-                if fn is not None}
+        counts = {name: fn._cache_size() for name, fn in fns.items()
+                  if fn is not None}
+        if self.streaming:
+            # AOT executables cannot retrace — their count is the bucket
+            # ladder size, fixed at construction. Reporting them keeps
+            # assert_flat honest about the whole surface (a stray lazy-path
+            # compile still shows up in the entries above).
+            counts["s_route"] = len(self._s_route)
+            if self._s_route_pref is not None:
+                counts["s_route_pref"] = len(self._s_route_pref)
+            if self._s_feedback is not None:
+                counts["s_feedback"] = len(self._s_feedback)
+            counts["s_resolve"] = len(self._s_resolve)
+        return counts
 
     # -- persistence (posterior + replay + in-flight duels survive restarts) -
 
@@ -834,8 +1288,17 @@ class RouterService:
         if self.mesh is not None:     # re-place restored buffers on the mesh
             self.state = jax.device_put(self.state, self._rep_sh)
             self.pending = jax.device_put(
-                self.pending, rr.to_shardings(self.mesh,
-                                              rr.pending_specs(self.mesh)))
+                self.pending, rr.to_shardings(
+                    self.mesh,
+                    rr.stream_pending_specs(self.mesh) if self.streaming
+                    else rr.pending_specs(self.mesh)))
+        if self.streaming:
+            # re-seat the device clock and cost mirror behind the restored
+            # host tick/state
+            self._tick_dev = _tick32(self.tick)
+            if self.mesh is not None:
+                self._tick_dev = jax.device_put(self._tick_dev,
+                                                self._rep_sh)
         if self.dynamic:
             # the pool travels with the state: re-sync the cost mirror
             # (entry names/registry are host bookkeeping and not part of
@@ -843,4 +1306,5 @@ class RouterService:
             self.costs = mp.get_pool(self.state).costs
             self._ever_used = [bool(v) for v in
                                np.asarray(payload["ever_used"])]
+            self._sync_stream_costs()
         return step

@@ -25,9 +25,11 @@ the served program and the dry-run stay one story.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.serving.feedback_queue import PendingDuels, ResolvedDuels
+from repro.serving.feedback_queue import PendingDuels, ResolvedDuels, \
+    next_pow2
 
 
 def batch_axes(mesh) -> tuple:
@@ -45,9 +47,22 @@ def n_batch_shards(mesh) -> int:
 
 
 def round_capacity(capacity: int, mesh) -> int:
-    """Smallest pending-ring capacity >= requested that the mesh divides."""
+    """Smallest pending-ring capacity >= requested that the mesh divides.
+
+    The ring's slot addressing is modular on a wrapping int32 ticket, so
+    the capacity must be a power of two (``feedback_queue.init_pending``
+    enforces it); for that capacity to also divide over the mesh the
+    batch-shard count must itself be a power of two. Non-power-of-two
+    meshes fail loudly here rather than silently breaking the ring's
+    collision-free-across-wrap contract."""
     n = n_batch_shards(mesh)
-    return ((max(capacity, 1) + n - 1) // n) * n
+    if n & (n - 1):
+        raise ValueError(
+            f"mesh has {n} batch shards ({dict(mesh.shape)}): the pending "
+            f"ring needs a power-of-two capacity (wrapping int32 slot "
+            f"arithmetic) that divides over the shards, which requires a "
+            f"power-of-two batch-shard count — reshape the mesh")
+    return next_pow2(max(capacity, n))
 
 
 # ---------------------------------------------------------------------------
@@ -100,6 +115,34 @@ def resolved_specs(mesh) -> ResolvedDuels:
     bx = batch_axes(mesh)
     return ResolvedDuels(x=P(bx, None), a1=P(bx), a2=P(bx), y=P(bx),
                          age=P(bx), ok=P(bx), pref=P(bx))
+
+
+def stream_pending_specs(mesh) -> PendingDuels:
+    """Shard-local streaming ring (``enqueue_stream``/``resolve_stream``):
+    the capacity axis shards like the legacy ring, but ``next_ticket`` is
+    the (S,) per-shard sequence counter and shards with it — under
+    shard_map every device sees a (C/S,)-row ring plus its own (1,)
+    counter, so enqueue and resolve lower with zero collectives (tickets
+    are strided by shard: ``ticket = seq * S + shard``)."""
+    bx = batch_axes(mesh)
+    return PendingDuels(x=P(bx, None), a1=P(bx), a2=P(bx), ticket=P(bx),
+                        issued_at=P(bx), valid=P(bx), next_ticket=P(bx),
+                        pref=P(bx))
+
+
+def shard_index(mesh):
+    """Traceable flat batch-shard index, for use INSIDE shard_map: the
+    row-major position of this device along the batch axes (matches the
+    order capacity/batch rows are laid out in)."""
+    bx = batch_axes(mesh)
+    sizes = dict(mesh.shape)
+
+    def idx() -> jax.Array:
+        i = jnp.int32(0)
+        for a in bx:
+            i = i * sizes[a] + jax.lax.axis_index(a)
+        return i
+    return idx
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,59 @@
+"""Seeded buffer-donation hazards + clean twins.
+
+Mimics the AOT-bucket-program shape of ``serving/router_service.py``: a
+module-level ``STREAM_DONATION`` table, dict-comprehension program builds
+that cite it, and call sites that must rebind every donated operand in
+the same assignment.  Parsed by tests/test_analysis.py, never executed.
+"""
+STREAM_DONATION = {
+    "_s_route": (1, 2),
+    "_s_feedback": (0, 1),
+    "_s_stale": (0,),  # PLANT: trace-hazard/donation-drift
+}
+
+
+class FakeStream:
+    def build(self, route_fused, feedback_fused, resolve_fused, avals):
+        # clean: argnums come from the table under the matching key
+        self._s_route = {
+            b: self._aot(route_fused,
+                         donate_argnums=STREAM_DONATION["_s_route"],
+                         avals=avals[b])
+            for b in self.buckets}
+        # drift: literal argnums disagree with the table entry
+        self._s_feedback = {
+            b: self._aot(feedback_fused,
+                         donate_argnums=(0, 2),  # PLANT: trace-hazard/donation-drift
+                         avals=avals[b])
+            for b in self.buckets}
+        # drift: cites the table, but under another program's key
+        self._s_resolve = {
+            b: self._aot(resolve_fused,
+                         donate_argnums=STREAM_DONATION["_s_route"],  # PLANT: trace-hazard/donation-drift
+                         avals=avals[b])
+            for b in self.buckets}
+
+    def route_leak(self, key, x):
+        state = self.state
+        out, a1 = self._s_route[8](key, state, self.pending, x)
+        grad = state.theta + 1.0  # PLANT: trace-hazard/use-after-donate
+        return out, a1, grad
+
+    def drain_leak(self, tickets, y):
+        q = self.pending
+        prog = self._s_feedback[8]
+        self.state, q2 = prog(q, self.state, tickets, y)
+        return q2, q.valid  # PLANT: trace-hazard/use-after-donate
+
+    # ------------------------- clean twins ---------------------------------
+
+    def route_clean(self, key, x):
+        self.state, self.pending, a1 = self._s_route[8](
+            key, self.state, self.pending, x)
+        return a1
+
+    def drain_clean(self, tickets, y):
+        prog = self._s_feedback[8]
+        self.pending, self.state = prog(self.pending, self.state,
+                                        tickets, y)
+        return self.pending

@@ -22,7 +22,8 @@ REPO = HERE.parent
 FIXDIR = HERE / "analysis_fixtures"
 
 PASS_FIXTURES = {
-    "trace-hazard": ["fx_trace_hazard.py", "serving/fx_serving.py"],
+    "trace-hazard": ["fx_trace_hazard.py", "serving/fx_serving.py",
+                     "serving/fx_donation.py"],
     "prng-hygiene": ["fx_prng.py"],
     "retrace-hazard": ["fx_retrace.py"],
     "partition-coverage": ["fx_partition.py"],
