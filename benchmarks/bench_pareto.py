@@ -19,7 +19,7 @@ Both report *tilted* regret — utilities discounted by the tilt the row was
 served under, ``u~_k = u_k - (L / feedback_scale) * cost_k`` (scores fit
 ``feedback_scale * u``, so a score-space tilt L is a utility-space tilt
 L/scale) — plus the realized mean duel cost, giving the regret-vs-cost
-front table. Acceptance: the shared posterior stays within 10% tilted
+front table. Acceptance: the shared posterior stays within 8% tilted
 regret of every per-tilt retrained baseline.
 
 The zero-retrace contract rides along: a ``RouterService`` is driven
@@ -223,8 +223,12 @@ def run(smoke: bool = False, out: str | None = "BENCH_7.json"):
     worst = max(ratios.values())
     print(f"{'ratio':>13} " + "".join(f"{ratios[v]:>17.3f}x"
                                       for v in TILTS))
+    # acceptance tightened 1.10x -> 1.08x once the pref-stratified
+    # feel-good weight closed the low-tilt gap (lam=0 ratio 1.082 -> 1.056:
+    # zero-pref rows no longer share their feel-good bonus scale with the
+    # high-tilt rows that dominate the replay ring)
     print(f"# pareto: worst pref/retrain regret ratio {worst:.3f}x "
-          f"(acceptance <= 1.10x), retrace flat={retrace['flat']}")
+          f"(acceptance <= 1.08x), retrace flat={retrace['flat']}")
 
     if not smoke and out:
         payload = dict(

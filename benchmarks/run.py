@@ -31,6 +31,10 @@ results/bench.csv). Mapping to the paper:
     pareto    bench_pareto          one pref-conditioned posterior vs
                                     per-tilt retrained FGTS (regret-vs-cost
                                     front + zero-retrace contract)
+    refresh   bench_refresh         online representation refresh: logged
+                                    duels -> IPW-calibrated CCFT retrain ->
+                                    retrace-free table swap, vs frozen /
+                                    oracle tables under drift
     roofline  roofline              EXPERIMENTS.md §Roofline source
 
 Benches that emit paired ``<shape>:kernel`` / ``<shape>:xla`` rows get a
@@ -57,13 +61,15 @@ def main() -> None:
     from . import (bench_autopilot, bench_baselines, bench_delayed,
                    bench_dynamic_pool, bench_generalization, bench_kernels,
                    bench_mixinstruct, bench_mmlu_naive, bench_pareto,
-                   bench_routerbench, bench_scores_table, bench_sgld,
-                   bench_sharded_serving, bench_streaming, roofline)
+                   bench_refresh, bench_routerbench, bench_scores_table,
+                   bench_sgld, bench_sharded_serving, bench_streaming,
+                   roofline)
     benches = {
         "tab1": bench_scores_table.run,
         "kernels": bench_kernels.run,
         "sgld": bench_sgld.run,
         "pareto": bench_pareto.run,
+        "refresh": bench_refresh.run,
         "fig1": bench_mmlu_naive.run,
         "fig2": bench_routerbench.run,
         "fig2cd": bench_generalization.run,

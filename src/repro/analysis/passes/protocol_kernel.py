@@ -58,6 +58,7 @@ PROTOCOL_ARITY = {
     "act_masked": 5,      # (state, key, x, a1, a2)  [forced-pair variant]
     "act_pref": 5,        # (state, key, x, prefs, ...)
     "update_pref": 7,     # (state, x, a1, a2, y, age, prefs)
+    "propensity": 4,      # (state, x, a1, a2) — logging-propensity readout
 }
 NON_CALLABLE_SLOTS = {"name"}
 

@@ -69,6 +69,7 @@ DONATED_ARGNUMS = {
     "_s_route": (1, 2, 6, 8),
     "_s_route_pref": (1, 2, 6, 8),
     "_s_feedback": (0, 1, 5, 6),
+    "_s_feedback_log": (0, 1, 5, 6, 7),
     "_s_resolve": (0, 4),
 }
 DONATION_TABLE = "STREAM_DONATION"

@@ -334,9 +334,15 @@ def wrap(pol: RoutingPolicy, cfg: AutopilotConfig, *,
                 pol.update_pref(state.inner, x, a1, a2, y, pref, mask),
                 _count(state.ctrl, a1, a2, y, mask))
 
+    propensity = None
+    if pol.propensity is not None:
+        def propensity(state, x, a1, a2):
+            return pol.propensity(state.inner, x, a1, a2)
+
     return RoutingPolicy(init, act, update,
                          name=f"autopilot({pol.name})",
                          update_delayed=update_delayed,
                          update_masked=update_masked,
                          act_pref=act_pref,
-                         update_pref=update_pref)
+                         update_pref=update_pref,
+                         propensity=propensity)

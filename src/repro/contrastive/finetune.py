@@ -53,12 +53,34 @@ def jaccard_targets(tok_a: jax.Array, tok_b: jax.Array, vocab: int):
     return inter / union
 
 
-def make_category_pairs(key, tokens, mask, cats, batch: int):
-    """Pairs labelled by category equality (the paper's pair construction)."""
+def _distinct_partner(key, ia, n: int):
+    """Uniform partner index guaranteed != ia: shift by 1..n-1 (mod n).
+
+    A plain second randint self-pairs with probability 1/n, yielding
+    trivial target-1 rows that dilute the contrastive signal; the shift
+    keeps ib uniform over the n-1 non-anchor rows.
+    """
+    off = jax.random.randint(key, ia.shape, 0, max(n - 1, 1))
+    return (ia + 1 + off) % n
+
+
+def make_category_pairs(key, tokens, mask, cats, batch: int,
+                        row_weights=None):
+    """Pairs labelled by category equality (the paper's pair construction).
+
+    ``row_weights`` (optional, (n,) nonnegative) biases *anchor* sampling —
+    the refresh trainer uses it to match the offline corpus to the live
+    traffic's category mix. Partners stay uniform over the other rows.
+    """
     k1, k2 = jax.random.split(key)
     n = tokens.shape[0]
-    ia = jax.random.randint(k1, (batch,), 0, n)
-    ib = jax.random.randint(k2, (batch,), 0, n)
+    if row_weights is None:
+        ia = jax.random.randint(k1, (batch,), 0, n)
+    else:
+        p = jnp.asarray(row_weights, jnp.float32)
+        p = jnp.maximum(p, 0.0) + 1e-9          # keep support everywhere
+        ia = jax.random.choice(k1, n, (batch,), p=p / p.sum())
+    ib = _distinct_partner(k2, ia, n)
     target = (cats[ia] == cats[ib]).astype(jnp.float32)
     return {"tok_a": tokens[ia], "mask_a": mask[ia],
             "tok_b": tokens[ib], "mask_b": mask[ib], "target": target}
@@ -68,7 +90,7 @@ def make_generic_pairs(key, tokens, mask, vocab: int, batch: int):
     k1, k2 = jax.random.split(key)
     n = tokens.shape[0]
     ia = jax.random.randint(k1, (batch,), 0, n)
-    ib = jax.random.randint(k2, (batch,), 0, n)
+    ib = _distinct_partner(k2, ia, n)
     target = jaccard_targets(tokens[ia], tokens[ib], vocab)
     return {"tok_a": tokens[ia], "mask_a": mask[ia],
             "tok_b": tokens[ib], "mask_b": mask[ib], "target": target}
@@ -76,26 +98,37 @@ def make_generic_pairs(key, tokens, mask, vocab: int, batch: int):
 
 def pretrain_generic(key, params, tokens, mask, cfg: EncoderConfig,
                      steps: int = 200, batch: int = 64, lr: float = 2e-3):
+    """Dispatch-async: the loss rides a device-side accumulator (the step
+    loop never blocks on a host sync); one sync at the end yields the
+    mean loss over the run — PR 8 serving discipline."""
     opt = adamw_init(params)
-    losses = []
+    loss_sum = jnp.zeros(())
     for i in range(steps):
         key, kb = jax.random.split(key)
         b = make_generic_pairs(kb, tokens, mask, cfg.vocab_size, batch)
         params, opt, loss = train_step(params, opt, b, cfg, lr)
-        losses.append(float(loss))
-    return params, losses
+        loss_sum = loss_sum + loss
+    return params, [float(loss_sum) / max(steps, 1)]
 
 
 def finetune_categorical(key, params, tokens, mask, cats, cfg: EncoderConfig,
                          epochs: int = 4, steps_per_epoch: int = 50,
-                         batch: int = 64, lr: float = 1e-3):
-    """The paper's E2/E4 fine-tuning: `epochs` x a fixed number of steps."""
+                         batch: int = 64, lr: float = 1e-3,
+                         row_weights=None):
+    """The paper's E2/E4 fine-tuning: `epochs` x a fixed number of steps.
+
+    Dispatch-async: losses accumulate on device and sync once per epoch
+    (the returned list holds one mean loss per epoch). ``row_weights``
+    biases anchor sampling (see ``make_category_pairs``)."""
     opt = adamw_init(params)
     losses = []
     for e in range(epochs):
+        loss_sum = jnp.zeros(())
         for i in range(steps_per_epoch):
             key, kb = jax.random.split(key)
-            b = make_category_pairs(kb, tokens, mask, cats, batch)
+            b = make_category_pairs(kb, tokens, mask, cats, batch,
+                                    row_weights=row_weights)
             params, opt, loss = train_step(params, opt, b, cfg, lr)
-            losses.append(float(loss))
+            loss_sum = loss_sum + loss
+        losses.append(float(loss_sum) / max(steps_per_epoch, 1))
     return params, losses

@@ -110,6 +110,7 @@ def _as_delay(delay) -> DelaySpec:
 def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
         batch: int = 1, delay: DelaySpec | int | None = 0,
         pool_schedule: "mp.PoolSchedule | None" = None,
+        refresh_schedule=None,
         aux_fn: Callable | None = None,
         pref_fn: Callable | None = None):
     """Run any RoutingPolicy over the stream. Returns (cum_regret (T,), state).
@@ -134,6 +135,15 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
     is measured against the best **active** arm per tick. Requires a
     pool-backed policy (state is a ``PooledState``); None leaves the loop
     bit-identical to the static path.
+
+    ``refresh_schedule`` (a ``refresh.RefreshSchedule``) replays
+    representation-refresh table swaps inside the same scan: at scan step s
+    the pool's whole (K_max, d) embedding table is replaced
+    (``refresh.apply_refresh`` — shape-static, one ``where`` per step) before
+    the act, modelling a deployment whose CCFT table is periodically
+    re-trained while the posterior keeps serving. Composes with
+    ``pool_schedule`` (membership events land first, then the table swap).
+    Requires a pool-backed policy; None keeps every path bit-identical.
 
     ``aux_fn(state, a1, a2) -> pytree`` is an optional per-tick observable
     evaluated on the post-act state and the routed pair inside the same
@@ -169,8 +179,22 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
     rows = jnp.arange(batch)
     keys = jax.random.split(k_loop, n_steps)
     steps = jnp.arange(n_steps, dtype=jnp.int32)
-    if pool_schedule is not None:
+    any_sched = pool_schedule is not None or refresh_schedule is not None
+    if any_sched:
         mp.get_pool(state0)        # fail fast on a non-pooled policy
+    if refresh_schedule is not None:
+        from repro.refresh.trainer import apply_refresh
+    else:
+        apply_refresh = None
+
+    def fold_pool_events(state, s):
+        """Membership events first, then the table swap due at step s."""
+        pool = mp.get_pool(state)
+        if pool_schedule is not None:
+            pool = mp.apply_events(pool, pool_schedule, s)
+        if refresh_schedule is not None:
+            pool = apply_refresh(pool, refresh_schedule, s)
+        return mp.set_pool(state, pool)
 
     prefs = None
     if pref_fn is not None:
@@ -207,7 +231,7 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
         return (cum, state, ys[1]) if aux_fn is not None else (cum, state)
 
     if spec.trivial:
-        if pool_schedule is None:
+        if not any_sched:
             def step(state, inp):
                 k, x_b, u_b = inp[:3]
                 p_b = inp[3] if prefs is not None else None
@@ -227,8 +251,7 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
         def sched_step(state, inp):
             s, k, x_b, u_b = inp[:4]
             p_b = inp[4] if prefs is not None else None
-            pool = mp.apply_events(mp.get_pool(state), pool_schedule, s)
-            state = mp.set_pool(state, pool)
+            state = fold_pool_events(state, s)
             k_act, k_fb = jax.random.split(k)
             state, a1, a2 = do_act(k_act, state, x_b, p_b)
             y = sample_preference(k_fb, env.feedback_scale * u_b[rows, a1],
@@ -280,10 +303,10 @@ def run(key: jax.Array, env: EnvData, policy: RoutingPolicy,
         p_b = inp[4] if prefs is not None else None
         k_act, k_fb, k_lag = jax.random.split(k, 3)
 
-        # 0. pool membership events due this tick land before anything else
-        if pool_schedule is not None:
-            pool = mp.apply_events(mp.get_pool(state), pool_schedule, s)
-            state = mp.set_pool(state, pool)
+        # 0. pool membership / table-refresh events due this tick land
+        #    before anything else
+        if any_sched:
+            state = fold_pool_events(state, s)
 
         # 1. resolve: the slot due at tick s (lag <= cap < r guarantees any
         #    valid entry here was scheduled for exactly this tick)

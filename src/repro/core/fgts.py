@@ -136,6 +136,15 @@ def likelihood_batch(theta: jax.Array, x: jax.Array, a1: jax.Array,
         s_all = jnp.where(arm_mask[None, :], s_all, -jnp.inf)
     s_opp = (s2 if j == 1 else s1) - t_opp               # tilted a^{3-j}
     feelgood = jnp.max(s_all, axis=-1) - s_opp
+    if pref is not None and costs is not None:
+        # Pref-stratified feel-good: a duel served under tilt p carries
+        # optimism weight mu / (1 + p). Tilted rows' feel-good targets the
+        # cheap end of the pool; at full weight that cross-tilt optimism
+        # bleeds through the shared theta and over-explores cheap arms on
+        # untilted rows (the BENCH_7 lam0 gap). p = 0 rows divide by
+        # exactly 1.0 — bitwise-identical to the untilted objective.
+        mu_row = cfg.mu / (1.0 + jnp.maximum(pref, 0.0))
+        return pref_ll - mu_row * feelgood               # (m,)
     return pref_ll - cfg.mu * feelgood                   # (m,)
 
 

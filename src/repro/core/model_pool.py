@@ -122,6 +122,19 @@ def set_arm(pool: ModelPool, slot, emb, cost) -> ModelPool:
     )
 
 
+def set_table(pool: ModelPool, a_emb) -> ModelPool:
+    """Whole-table embedding refresh: replace every row of ``a_emb`` in one
+    assignment and bump the generation — the online-CCFT-refresh twin of
+    ``set_arm``. Costs and the active mask are untouched (a refresh changes
+    *representations*, not membership), shapes/treedef are preserved, and
+    the table may be traced — one compiled program serves every refresh."""
+    a_emb = jnp.asarray(a_emb, jnp.float32)
+    if a_emb.shape != pool.a_emb.shape:
+        raise ValueError(f"refreshed table shape {a_emb.shape} != pool "
+                         f"table shape {pool.a_emb.shape}")
+    return pool._replace(a_emb=a_emb, generation=pool.generation + 1)
+
+
 def retire_arm(pool: ModelPool, slot) -> ModelPool:
     """Mask flip only: the embedding row (and every replay-ring duel that
     references it) is retained so the posterior keeps learning from the

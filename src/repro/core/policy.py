@@ -79,6 +79,16 @@ class RoutingPolicy(NamedTuple):
     each duel was served under, so preference-aware learners (the FGTS
     feel-good term) can condition on the trade-off the duel actually
     optimized for.
+
+    ``propensity(state, x, a1, a2)`` is the optional *logging-propensity*
+    readout for causal offline calibration: the policy's own estimate of
+    the probability it selected the pair (a1, a2) for each row, evaluated
+    on the post-``act`` state (the same posterior that made the choice).
+    It is a pure read — no state change, no randomness — so the serving
+    route programs can record it on-device alongside the duel with zero
+    extra syncs, and an offline refresh job can inverse-propensity-weight
+    the logged outcomes ("Causal LLM Routing", PAPERS.md). Policies that
+    leave it None log propensity 1.0 (IPW becomes a no-op).
     """
     init: Callable[[jax.Array], Any]
     act: Callable[[jax.Array, Any, jax.Array], tuple]
@@ -89,6 +99,7 @@ class RoutingPolicy(NamedTuple):
     act_masked: Callable[..., tuple] | None = None
     act_pref: Callable[..., tuple] | None = None
     update_pref: Callable[..., Any] | None = None
+    propensity: Callable[..., jax.Array] | None = None
 
 
 def staleness_weight(age: jax.Array, half_life: float) -> jax.Array:
@@ -163,6 +174,43 @@ def select_pair(x: jax.Array, a_emb: jax.Array, theta1: jax.Array,
     if mask is not None:
         a2 = mask_fallback_pair(s2, a1, a2)
     return a1, a2
+
+
+# Inverse temperature of the soft-Thompson propensity estimate. Score gaps
+# in this repo's normalized-feature score space are O(0.1-0.5); beta = 8
+# turns a 0.3 gap into ~11x selection odds — discriminative without
+# saturating to a one-hot (which would make IPW weights explode).
+PROPENSITY_BETA = 8.0
+
+
+def pair_propensity(x: jax.Array, a_emb: jax.Array, theta1: jax.Array,
+                    theta2: jax.Array, a1: jax.Array, a2: jax.Array,
+                    mask: jax.Array | None = None,
+                    beta: float = PROPENSITY_BETA) -> jax.Array:
+    """Soft-Thompson selection-propensity estimate for a duelled pair.
+
+    The exact probability that posterior-sampled argmax selection picked
+    (a1, a2) is intractable; the standard surrogate is the softmax
+    relaxation of each sample's argmax at inverse temperature ``beta``
+    over the (active-)arm scores of the thetas that made the choice:
+
+        p(a1, a2 | x) ~= softmax(beta s^1)[a1] * softmax(beta s^2)[a2]
+
+    Pure XLA via the two-matmul score identity (no Pallas call), so it
+    evaluates inside sharded/AOT route programs and adds no host sync.
+    Inactive arms score -inf and get exactly zero mass.
+    """
+    den = jnp.sqrt(jnp.maximum((x * x) @ (a_emb * a_emb).T, 1e-24))
+    s1 = ((x * theta1[None, :]) @ a_emb.T) / den
+    s2 = ((x * theta2[None, :]) @ a_emb.T) / den
+    if mask is not None:
+        m2 = jnp.atleast_2d(mask)
+        s1 = jnp.where(m2, s1, -jnp.inf)
+        s2 = jnp.where(m2, s2, -jnp.inf)
+    p1 = jax.nn.softmax(beta * s1, axis=-1)
+    p2 = jax.nn.softmax(beta * s2, axis=-1)
+    rows = jnp.arange(x.shape[0])
+    return p1[rows, a1] * p2[rows, a2]
 
 
 def cost_tilt_vector(costs: jax.Array | None,
@@ -277,9 +325,14 @@ def fgts_policy(a_emb: jax.Array | ModelPool, cfg: fgts.FGTSConfig, *,
             return fgts.observe_batch(state, x, a1, a2, y, mask=mask,
                                       pref=pref)
 
+    def propensity(state, x, a1, a2):
+        return pair_propensity(x, a_emb, state.theta1.mean(axis=0),
+                               state.theta2.mean(axis=0), a1, a2)
+
     return RoutingPolicy(init, act, update, name="fgts_cdb",
                          update_masked=update_masked,
-                         act_pref=act_pref, update_pref=update_pref)
+                         act_pref=act_pref, update_pref=update_pref,
+                         propensity=propensity)
 
 
 def _fgts_policy_pooled(pool0: ModelPool, cfg: fgts.FGTSConfig, *,
@@ -347,9 +400,16 @@ def _fgts_policy_pooled(pool0: ModelPool, cfg: fgts.FGTSConfig, *,
             inner=fgts.observe_batch(state.inner, x, a1, a2, y, mask=mask,
                                      pref=pref))
 
+    def propensity(state, x, a1, a2):
+        inner, pool = state.inner, state.pool
+        return pair_propensity(x, pool.a_emb, inner.theta1.mean(axis=0),
+                               inner.theta2.mean(axis=0), a1, a2,
+                               mask=pool.active)
+
     return RoutingPolicy(init, act, update, name="fgts_cdb",
                          update_masked=update_masked, act_masked=act_masked,
-                         act_pref=act_pref, update_pref=update_pref)
+                         act_pref=act_pref, update_pref=update_pref,
+                         propensity=propensity)
 
 
 def vanilla_ts_policy(a_emb: jax.Array, cfg: fgts.FGTSConfig,

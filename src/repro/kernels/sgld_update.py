@@ -5,11 +5,13 @@ each SGLD step evaluates (the gradient of) the minibatch potential
 
     U_data(theta) = sum_i valid_i * L^j(theta, x_i, a1_i, a2_i, y_i)
     L^j = eta * softplus(-y <theta, phi1 - phi2>)
-        - mu  * (max_{k active} (s_k - t_ik) - (s_opp - t_opp))   (feel-good)
+        - mu_i * (max_{k active} (s_k - t_ik) - (s_opp - t_opp))  (feel-good)
 
-with phi(x,a) = (x*a)/||x*a||, s_k = <theta, phi(x, a_k)> and the optional
+with phi(x,a) = (x*a)/||x*a||, s_k = <theta, phi(x, a_k)>, the optional
 per-row preference tilt t_ik = pref_i * cost_k (zero when preference
-conditioning is off — then the term is the plain feel-good max). The naive
+conditioning is off — then the term is the plain feel-good max), and the
+pref-stratified feel-good weight mu_i = mu / (1 + max(pref_i, 0)) (exactly
+mu on untilted rows). The naive
 evaluation materializes an (m, K, d) feature tensor per gradient step. This
 kernel fuses the whole minibatch term into two MXU matmuls per tile via the
 same Hadamard identity the serving kernel uses:
@@ -147,7 +149,12 @@ def _tile_terms(mode, theta, x, a1, a2, y, duel, valid, pref, a, mask,
         smax = jnp.max(jnp.where(live, s - t, -jnp.inf), axis=1)
         t_opp = jnp.sum(jnp.where(oh2 if j == 1 else oh1, t, 0.0), axis=1)
         opp = (s2 if j == 1 else s1) - t_opp
-        terms = pref_ll - mu * (smax - opp)
+        # pref-stratified feel-good weight mu / (1 + pref): tilted rows get
+        # proportionally less optimism so their cheap-end feel-good doesn't
+        # bleed into untilted rows. pref = 0 divides by exactly 1.0 — the
+        # untilted term stays bitwise identical (padding rows included).
+        mu_row = mu / (1.0 + jnp.maximum(pref, 0.0))
+        terms = pref_ll - mu_row * (smax - opp)
     else:                                            # mixed duel + click rows
         click = eta * jnp.where(y > 0.5, jax.nn.softplus(-s1),
                                 jax.nn.softplus(s1))
@@ -182,8 +189,10 @@ def _tile_grad(mode, theta, x, a1, a2, y, duel, valid, pref, a, mask,
         # evenly over tied maxima, so the hand gradient must too
         eq = ((sm == smax[:, None]) & live).astype(jnp.float32)
         cnt = jnp.maximum(jnp.sum(eq, axis=1), 1.0)
-        w = w - mu * (eq / cnt[:, None])
-        w = w + mu * (oh2 if j == 1 else oh1)
+        # per-row feel-good weight — must mirror _tile_terms exactly
+        mu_row = mu / (1.0 + jnp.maximum(pref, 0.0))
+        w = w - mu_row[:, None] * (eq / cnt[:, None])
+        w = w + mu_row[:, None] * (oh2 if j == 1 else oh1)
     else:
         dclick = eta * jnp.where(y > 0.5, -jax.nn.sigmoid(-s1),
                                  jax.nn.sigmoid(s1))

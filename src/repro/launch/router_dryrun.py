@@ -86,9 +86,9 @@ def make_resolve_step(expiry: int | None = None):
     from repro.serving import feedback_queue as fq
 
     def resolve_step(qx, qa1, qa2, qticket, qissued, qvalid, next_ticket,
-                     qpref, tickets, y, now):
+                     qpref, qprop, qcat, tickets, y, now):
         q = fq.PendingDuels(qx, qa1, qa2, qticket, qissued, qvalid,
-                            next_ticket, qpref)
+                            next_ticket, qpref, qprop, qcat)
         q2, res = fq.resolve(q, tickets, y, now, max_age=expiry)
         return (q2.valid, res.x, res.a1, res.a2, res.y, res.age, res.ok,
                 res.pref)
@@ -170,7 +170,8 @@ def run(global_batch: int, horizon: int = 65_536, out: str | None = None,
                      sds((cap,), jnp.int32), sds((cap,), jnp.int32),
                      sds((cap,), jnp.int32), sds((cap,), jnp.int32),
                      sds((cap,), jnp.bool_), sds((), jnp.int32),
-                     sds((cap,), jnp.float32),
+                     sds((cap,), jnp.float32), sds((cap,), jnp.float32),
+                     sds((cap,), jnp.int32),
                      sds((global_batch,), jnp.int32),
                      sds((global_batch,), jnp.float32), sds((), jnp.int32))
             results.append(_compile(make_resolve_step(), qargs,

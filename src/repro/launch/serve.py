@@ -10,6 +10,7 @@ Usage:
     PYTHONPATH=src python -m repro.launch.serve --mesh 4,2 --batch 8
     PYTHONPATH=src python -m repro.launch.serve --autopilot --budget 0.5 \
         --pool-schedule "+arctic-480b@5"
+    PYTHONPATH=src python -m repro.launch.serve --refresh-every 128
 
 ``--mesh data,model`` serves through the mesh-sharded RouterService: act is
 shard_map-partitioned over the batch, the pending ring and replay update
@@ -151,6 +152,15 @@ def main():
                          "duel cost ($/1k tok) to hold via the lambda tilt")
     ap.add_argument("--autopilot-every", type=int, default=4,
                     help="rounds between autopilot control ticks")
+    ap.add_argument("--refresh-every", type=int, default=0, metavar="DUELS",
+                    help="online representation refresh: once this many new "
+                         "duels are in the log, re-run CCFT against the "
+                         "logged outcomes (inverse-propensity-calibrated) "
+                         "and hot-swap the embedding table — retrace-free "
+                         "(0 = off; implies a dynamic pool)")
+    ap.add_argument("--refresh-naive", action="store_true",
+                    help="refresh ablation: score logged duels without the "
+                         "IPW correction for the router's selection bias")
     ap.add_argument("--arrival", default=None, metavar="SPEC",
                     help="serve an event-time arrival stream instead of "
                          "fixed synchronous rounds: 'poisson:RATE', "
@@ -256,12 +266,19 @@ def main():
     pool = all_entries[:len(pool_names)]
     arrivals = dict(zip(arrival_names, all_entries[len(pool_names):]))
     k_max = len(pool_names) + len(arrival_names) \
-        if (events or args.autopilot) else None
+        if (events or args.autopilot or args.refresh_every) else None
     ap_cfg = None
     if args.autopilot:
         from repro.autopilot import AutopilotConfig
         ap_cfg = AutopilotConfig(every=args.autopilot_every,
                                  budget=args.budget)
+    rcfg = None
+    if args.refresh_every:
+        from repro.refresh import RefreshConfig
+        rcfg = RefreshConfig(every=args.refresh_every,
+                             n_categories=n_cats,
+                             causal=not args.refresh_naive,
+                             epochs=1, steps_per_epoch=10, batch=32)
 
     enc_cfg = EncoderConfig(d_model=emb_dim, n_layers=2, n_heads=4, d_ff=256,
                             max_len=32)
@@ -279,6 +296,7 @@ def main():
                                             stale_half_life=args.stale_half_life,
                                             k_max=k_max,
                                             autopilot=ap_cfg,
+                                            refresh=rcfg,
                                             buckets=buckets),
                         mesh=mesh)
 
@@ -290,10 +308,30 @@ def main():
             gen_models[name] = (cfg, lm.init_params(ks[2], cfg))
 
     cc = CorpusConfig(n_categories=n_cats, seq_len=32)
+    refresh_tick = None
+    if args.refresh_every:
+        from repro.refresh import refresh_table
+        # the offline corpus CCFT was originally fine-tuned on: the refresh
+        # re-runs it with anchor sampling tilted to the live category mix
+        offline = make_split(ks[6], 16, cc)
+
+        def refresh_tick(step):
+            if not svc.refresh_due():
+                return
+            table, info = refresh_table(
+                jax.random.fold_in(ks[7], step), svc.export_log(),
+                enc_params, enc_cfg, offline, rcfg, n_models,
+                costs=svc.costs)
+            svc.apply_table(table)
+            print(f"[serve] step {step}: representation refresh on "
+                  f"{info['n_duels']} logged duels "
+                  f"(mix={np.round(np.asarray(info['mix']), 2)}, "
+                  f"{'IPW' if rcfg.causal else 'naive'} scores) — "
+                  f"table hot-swapped")
     if args.arrival:
         row_of_slot = np.arange(n_models) % skills.shape[0]
         _serve_stream(args, spec, buckets, svc, skills, row_of_slot, cc,
-                      n_cats, ks, pref_sampler)
+                      n_cats, ks, pref_sampler, refresh_tick)
         return
     regrets = []
     pref_log, duel_cost_log = [], []   # realized-cost readout per tilt
@@ -334,7 +372,8 @@ def main():
         x = svc.embed(toks, mask)
         prefs = None if pref_sampler is None else pref_sampler(
             jax.random.fold_in(ks[5], r), r, args.batch)
-        a1, a2, tickets = svc.route_batch(x, prefs=prefs)
+        a1, a2, tickets = svc.route_batch(
+            x, prefs=prefs, cats=cats if args.refresh_every else None)
         if prefs is not None:
             pref_log.append(np.asarray(prefs))
             duel_cost_log.append(np.asarray(
@@ -367,6 +406,8 @@ def main():
         for _, due_tickets, due_y in due:
             svc.feedback_batch(due_tickets, due_y)
         svc.expire_pending()
+        if refresh_tick is not None:
+            refresh_tick(r)
         # regret vs the best *active* arm (retired arms are not a benchmark)
         if svc.dynamic:
             act = jnp.asarray(svc.active_mask())
@@ -422,7 +463,7 @@ def main():
 
 
 def _serve_stream(args, spec, buckets, svc, skills, row_of_slot, cc,
-                  n_cats, ks, pref_sampler):
+                  n_cats, ks, pref_sampler, refresh_tick=None):
     """Event-time streaming serving: cut the simulated arrival stream into
     dynamic batches (``--max-wait`` deadline forming) and drive them through
     the AOT bucket programs, reporting sustained QPS and per-request latency
@@ -447,7 +488,8 @@ def _serve_stream(args, spec, buckets, svc, skills, row_of_slot, cc,
         prefs = None if pref_sampler is None else pref_sampler(
             jax.random.fold_in(ks[5], i), i, fb.n)
         t_r = time.time()
-        a1, a2, tickets = svc.route_stream(x, prefs=prefs)
+        a1, a2, tickets = svc.route_stream(
+            x, prefs=prefs, cats=cats if refresh_tick is not None else None)
         jax.block_until_ready(tickets)
         service = time.time() - t_r
         lat.append(fb.t_form - times[fb.start:fb.start + fb.n] + service)
@@ -456,6 +498,8 @@ def _serve_stream(args, spec, buckets, svc, skills, row_of_slot, cc,
         y = sample_preference(kf, 8.0 * utils[rows, a1],
                               8.0 * utils[rows, a2])
         svc.feedback_stream(tickets, y)
+        if refresh_tick is not None:
+            refresh_tick(i)
         reg = jnp.mean(jnp.max(utils, axis=-1)
                        - 0.5 * (utils[rows, a1] + utils[rows, a2]))
         regrets.append(float(reg))

@@ -1,0 +1,19 @@
+"""Online representation loop: duel logging, causal CCFT refresh, table swap.
+
+``duel_log`` is the serving-side data capture (jitted ring fold, host
+export); ``trainer`` is the offline job (IPW duel scores -> CCFT weighting
+-> refreshed (K_max, d) table) plus the precomputed ``RefreshSchedule`` for
+``env.run``. The hot swap itself lives in ``core.model_pool.set_table`` and
+``serving.RouterService.apply_table``.
+"""
+from repro.refresh.duel_log import DuelLog, init_log, fold, export
+from repro.refresh.trainer import (RefreshConfig, RefreshSchedule,
+                                   apply_refresh, assign_categories,
+                                   category_mix, duel_scores, refresh_table,
+                                   schedule)
+
+__all__ = [
+    "DuelLog", "init_log", "fold", "export",
+    "RefreshConfig", "RefreshSchedule", "apply_refresh", "assign_categories",
+    "category_mix", "duel_scores", "refresh_table", "schedule",
+]

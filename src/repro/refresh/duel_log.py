@@ -1,0 +1,118 @@
+"""Exportable duel-log ring — the data side of the online representation loop.
+
+The serving layer's replay ring (``fgts.FGTSState``) exists to train the
+*posterior* and therefore stores exactly what the likelihood needs. The
+refresh loop needs more: to re-run CCFT on live traffic and causally
+calibrate it against the router's own selection bias, every logged duel must
+carry the query features, the routed pair, the outcome, the preference it
+was served under, the act-time selection propensity, and (when known) the
+query's category. ``DuelLog`` is a fixed-capacity ring of exactly that
+tuple, folded inside the jitted feedback programs (single masked scatter per
+field, the ``fgts.observe_batch`` idiom — zero new syncs on the serving
+path) and exported wholesale to the host for the offline refresh job.
+
+Capacity must be a power of two: the write head is ``count % capacity`` on a
+wrapping int32 counter, and only a power-of-two capacity keeps slot
+addressing consistent across the 2^31 wrap (same contract as the pending
+ring and the replay ring).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DuelLog(NamedTuple):
+    """Ring of resolved live duels with their causal-logging companions."""
+    x: jax.Array          # (C, d) float32 — query features
+    a1: jax.Array         # (C,)  int32   — routed pair
+    a2: jax.Array         # (C,)  int32
+    y: jax.Array          # (C,)  float32 — preference outcome (+1/-1)
+    pref: jax.Array       # (C,)  float32 — per-duel preference weight
+    prop: jax.Array       # (C,)  float32 — act-time pair propensity
+    cat: jax.Array        # (C,)  int32   — query category (-1 = unknown)
+    issued_at: jax.Array  # (C,)  int32   — service tick the duel was issued
+    valid: jax.Array      # (C,)  bool    — slot holds a folded duel
+    count: jax.Array      # ()    int32   — duels folded so far (write head)
+
+
+def init_log(capacity: int, dim: int) -> DuelLog:
+    """Empty log. ``capacity`` must be a power of two (wrapping int32 write
+    head, same contract as ``feedback_queue.init_pending``)."""
+    if capacity < 1 or capacity & (capacity - 1):
+        raise ValueError(
+            f"DuelLog capacity must be a power of two (slot = count % "
+            f"capacity on a wrapping int32 counter); got {capacity} — "
+            f"round up with feedback_queue.next_pow2")
+    z = jnp.zeros
+    return DuelLog(
+        x=z((capacity, dim), jnp.float32),
+        a1=z((capacity,), jnp.int32),
+        a2=z((capacity,), jnp.int32),
+        y=z((capacity,), jnp.float32),
+        pref=z((capacity,), jnp.float32),
+        prop=jnp.ones((capacity,), jnp.float32),
+        cat=jnp.full((capacity,), -1, jnp.int32),
+        issued_at=z((capacity,), jnp.int32),
+        valid=z((capacity,), bool),
+        count=z((), jnp.int32),
+    )
+
+
+def fold(log: DuelLog, x: jax.Array, a1: jax.Array, a2: jax.Array,
+         y: jax.Array, pref: jax.Array, prop: jax.Array, cat: jax.Array,
+         issued_at: jax.Array, mask: jax.Array) -> DuelLog:
+    """Masked single-scatter append of a resolved batch (shape-static).
+
+    Rows where ``mask`` is False (stale votes, bucket padding) are never
+    written — kept row i lands at slot ``(count + rank_i) % C`` with rank
+    counted over kept rows only, so the result is bit-identical to
+    compacting first and appending sequentially (the ``fgts.observe_batch``
+    idiom, including the keep-last-C overflow rule that also keeps scatter
+    indices unique). Pure pytree code: it jits, shards and donates exactly
+    like the pending ring next to it.
+    """
+    cap = log.x.shape[0]
+    mask = mask.astype(bool)
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    n = jnp.sum(mask, dtype=log.count.dtype)
+    write = mask & (rank >= n - cap)          # over-capacity: keep last C
+    idx = jnp.where(write, (log.count + rank) % cap, cap)   # cap = OOB, drop
+    return DuelLog(
+        x=log.x.at[idx].set(x, mode="drop"),
+        a1=log.a1.at[idx].set(a1.astype(jnp.int32), mode="drop"),
+        a2=log.a2.at[idx].set(a2.astype(jnp.int32), mode="drop"),
+        y=log.y.at[idx].set(y.astype(jnp.float32), mode="drop"),
+        pref=log.pref.at[idx].set(pref.astype(jnp.float32), mode="drop"),
+        prop=log.prop.at[idx].set(prop.astype(jnp.float32), mode="drop"),
+        cat=log.cat.at[idx].set(cat.astype(jnp.int32), mode="drop"),
+        issued_at=log.issued_at.at[idx].set(issued_at.astype(jnp.int32),
+                                            mode="drop"),
+        valid=log.valid.at[idx].set(True, mode="drop"),
+        count=log.count + n,
+    )
+
+
+def export(log: DuelLog) -> dict:
+    """Device -> host export of the logged duels for the offline refresh job.
+
+    One deliberate ``jax.device_get`` of the whole ring (refresh cadence is
+    hundreds-of-rounds, so this sync is off the serving hot path by
+    construction); returns only the valid rows as numpy arrays.
+    """
+    import numpy as np
+    host = jax.device_get(log)
+    keep = np.asarray(host.valid, bool)
+    return {
+        "x": np.asarray(host.x)[keep],
+        "a1": np.asarray(host.a1)[keep],
+        "a2": np.asarray(host.a2)[keep],
+        "y": np.asarray(host.y)[keep],
+        "pref": np.asarray(host.pref)[keep],
+        "prop": np.asarray(host.prop)[keep],
+        "cat": np.asarray(host.cat)[keep],
+        "issued_at": np.asarray(host.issued_at)[keep],
+        "count": int(host.count),
+    }

@@ -1,0 +1,202 @@
+"""The offline half of the online representation loop: causal CCFT refresh.
+
+Given an exported ``DuelLog`` (see ``refresh.duel_log``) and the offline
+corpus CCFT was originally fine-tuned on, ``refresh_table`` re-runs the
+paper's representation pipeline against *live* evidence:
+
+1. **Encoder refresh** — ``contrastive.finetune_categorical`` on the offline
+   corpus, with anchor sampling re-weighted to the live traffic's category
+   mix (``row_weights``): categories the deployment actually sees get
+   proportionally more contrastive signal.
+2. **Causal duel scores** — per-(arm, category) win rates from the logged
+   duels, inverse-propensity-weighted per "Causal LLM Routing: End-to-End
+   Regret Minimization from Observational Data" (PAPERS.md): a win logged
+   under propensity p counts 1/p, so arms the logging policy under-served
+   are not spuriously scored down by their own scarcity. ``causal=False``
+   is the naive estimator (the bench's ablation on deliberately biased
+   logs). Propensities are clipped at ``prop_floor`` for variance control.
+3. **Table rebuild** — ``ccft.model_embeddings`` on the refreshed category
+   embeddings and duel scores, through any of the paper's four weighting
+   variants — an offline job emitting a refreshed (K_max, d) table for
+   ``RouterService.apply_table`` / ``model_pool.set_table``.
+
+Everything here runs *off* the serving path (host-side, minutes-scale
+cadence); the only serving-side artifacts are the jitted log fold and the
+jitted table swap, both retrace-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ccft
+from repro.core.model_pool import ModelPool
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshConfig:
+    """Knobs of the standing refresh cycle.
+
+    ``every`` is the service-side cadence: ``RouterService.refresh_due()``
+    turns True once that many duels have been folded into the log since the
+    last ``apply_table`` (0 = manual refreshes only). ``capacity`` sizes
+    the duel-log ring (rounded up to a power of two by the service).
+    ``causal`` is the calibration knob: True inverse-propensity-weights
+    logged outcomes, False is the naive estimator.
+    """
+    every: int = 0
+    capacity: int = 1024
+    n_categories: int = 8
+    weighting: str = "excel_perf_cost"   # one of ccft.WEIGHTINGS
+    tau: int = 3
+    causal: bool = True
+    prop_floor: float = 0.05             # IPW clip: w = 1 / max(p, floor)
+    lam: float = 0.05                    # perf-cost blend for *_cost variants
+    epochs: int = 2
+    steps_per_epoch: int = 20
+    batch: int = 64
+    lr: float = 1e-3
+    reseed: bool = False                 # re-warm-start posterior after swap
+
+    def __post_init__(self):
+        if self.weighting not in ccft.WEIGHTINGS:
+            raise ValueError(f"refresh weighting {self.weighting!r} not in "
+                             f"{ccft.WEIGHTINGS}")
+        if self.capacity < 1:
+            raise ValueError(f"refresh capacity must be >= 1, "
+                             f"got {self.capacity}")
+        if not 0.0 < self.prop_floor <= 1.0:
+            raise ValueError(f"prop_floor must be in (0, 1], "
+                             f"got {self.prop_floor}")
+
+
+def category_mix(cat, n_categories: int):
+    """(M,) live-traffic category weights from logged labels (-1 = unknown
+    rows are ignored; an empty/unlabelled log degrades to uniform)."""
+    cat = jnp.asarray(cat, jnp.int32)
+    known = (cat >= 0) & (cat < n_categories)
+    counts = jnp.zeros((n_categories,), jnp.float32).at[
+        jnp.where(known, cat, n_categories)].add(1.0, mode="drop")
+    return jnp.where(jnp.sum(counts) > 0, counts,
+                     jnp.ones((n_categories,), jnp.float32))
+
+
+def assign_categories(x, xi):
+    """Nearest-category-prototype labels for unlabelled log rows.
+
+    x: (N, d) query features; xi: (d, M) category embeddings. Cosine
+    argmax — the same geometry the router scores with.
+    """
+    xn = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+    cn = xi / jnp.maximum(jnp.linalg.norm(xi, axis=0, keepdims=True), 1e-12)
+    return jnp.argmax(xn @ cn, axis=-1).astype(jnp.int32)
+
+
+def duel_scores(a1, a2, y, cat, prop, k_max: int, n_categories: int, *,
+                causal: bool = True, prop_floor: float = 0.05,
+                smoothing: float = 1.0):
+    """(K_max, M) per-(arm, category) duel win rates from logged outcomes.
+
+    Each duel contributes one Bernoulli observation to both arms in its
+    category column (a1 wins on y > 0, ties split); under ``causal`` each
+    observation is weighted by 1 / max(propensity, floor), the standard
+    IPW correction for the logging policy's selection bias. Laplace
+    smoothing pulls unseen (arm, category) cells to 0.5 instead of 0 so a
+    never-duelled arm is "unknown", not "bad". Rows with an out-of-range
+    category are dropped.
+    """
+    a1 = jnp.asarray(a1, jnp.int32)
+    a2 = jnp.asarray(a2, jnp.int32)
+    y = jnp.asarray(y, jnp.float32)
+    cat = jnp.asarray(cat, jnp.int32)
+    w = 1.0 / jnp.clip(jnp.asarray(prop, jnp.float32), prop_floor, 1.0) \
+        if causal else jnp.ones(y.shape, jnp.float32)
+    ok = (cat >= 0) & (cat < n_categories)
+    col = jnp.where(ok, cat, n_categories)         # OOB -> dropped scatter
+    w = jnp.where(ok, w, 0.0)
+    win1 = jnp.where(y > 0, 1.0, jnp.where(y < 0, 0.0, 0.5))
+    wins = jnp.zeros((k_max, n_categories + 1), jnp.float32)
+    wins = wins.at[a1, col].add(w * win1, mode="drop")
+    wins = wins.at[a2, col].add(w * (1.0 - win1), mode="drop")
+    plays = jnp.zeros((k_max, n_categories + 1), jnp.float32)
+    plays = plays.at[a1, col].add(w, mode="drop")
+    plays = plays.at[a2, col].add(w, mode="drop")
+    wins, plays = wins[:, :n_categories], plays[:, :n_categories]
+    return (wins + 0.5 * smoothing) / (plays + smoothing)
+
+
+def refresh_table(key, log_data: dict, enc_params, enc_cfg, offline,
+                  cfg: RefreshConfig, k_max: int,
+                  costs=None) -> tuple[jax.Array, dict]:
+    """One refresh cycle: logged duels -> refreshed (K_max, d) table.
+
+    ``log_data`` is a ``duel_log.export`` dict (host arrays); ``offline``
+    is the (tokens, mask, cats) corpus CCFT originally fine-tuned on;
+    ``enc_params`` the encoder to refresh from. ``costs`` (K_max,) switches
+    the *_cost weighting variants to the paper's perf - lam*cost blend.
+    Returns (table, info) where info carries the refreshed encoder params,
+    per-epoch losses, the live category mix and the duel-score matrix.
+    """
+    from repro.contrastive import finetune_categorical
+    from repro.encoder.model import encode
+
+    tokens, mask, cats = offline
+    m = cfg.n_categories
+    mix = category_mix(log_data["cat"], m)
+    row_w = mix[jnp.asarray(cats, jnp.int32)]      # live-mix anchor weights
+    params, losses = finetune_categorical(
+        key, enc_params, tokens, mask, cats, enc_cfg, epochs=cfg.epochs,
+        steps_per_epoch=cfg.steps_per_epoch, batch=cfg.batch, lr=cfg.lr,
+        row_weights=row_w)
+    emb = encode(params, tokens, mask, enc_cfg)
+    xi = ccft.category_embeddings(emb, jnp.asarray(cats, jnp.int32), m)
+
+    cat = jnp.asarray(log_data["cat"], jnp.int32)
+    if cat.shape[0]:
+        inferred = assign_categories(jnp.asarray(log_data["x"]), xi)
+        cat = jnp.where(cat >= 0, cat, inferred)
+    scores = duel_scores(log_data["a1"], log_data["a2"], log_data["y"], cat,
+                         log_data["prop"], k_max, m, causal=cfg.causal,
+                         prop_floor=cfg.prop_floor)
+    if costs is not None and cfg.weighting.endswith("cost"):
+        scores = ccft.perf_cost_scores(
+            scores, jnp.asarray(costs, jnp.float32)[:, None], cfg.lam)
+    table = ccft.model_embeddings(xi, scores, cfg.weighting, tau=cfg.tau)
+    return table, dict(params=params, losses=losses, mix=mix, scores=scores,
+                       n_duels=int(log_data["x"].shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# Refresh schedules for the env loop (precomputed tables, in-scan swaps)
+# ---------------------------------------------------------------------------
+
+class RefreshSchedule(NamedTuple):
+    """E table swaps replayed inside ``env.run``'s lax.scan: at scan step
+    ``step[e]`` the pool's whole embedding table becomes ``table[e]``.
+    Shape-static (misses are where'd away), mirroring ``PoolSchedule``."""
+    step: jax.Array     # (E,) int32
+    table: jax.Array    # (E, K_max, d) float32
+
+
+def schedule(events) -> RefreshSchedule:
+    """Build a RefreshSchedule from host (step, table) tuples."""
+    steps = [int(s) for s, _ in events]
+    tables = [jnp.asarray(t, jnp.float32) for _, t in events]
+    return RefreshSchedule(step=jnp.asarray(steps, jnp.int32),
+                           table=jnp.stack(tables))
+
+
+def apply_refresh(pool: ModelPool, sched: RefreshSchedule, s) -> ModelPool:
+    """Fold the table swap due at scan step ``s`` into the pool (at most one
+    event per step; none = the pool rides through bit-unchanged)."""
+    hit = sched.step == jnp.asarray(s, sched.step.dtype)          # (E,)
+    n_hit = jnp.sum(hit, dtype=jnp.int32)
+    mixed = jnp.einsum("e,ekd->kd", hit.astype(sched.table.dtype),
+                       sched.table)
+    return pool._replace(
+        a_emb=jnp.where(n_hit > 0, mixed, pool.a_emb),
+        generation=pool.generation + n_hit,
+    )

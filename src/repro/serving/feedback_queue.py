@@ -66,6 +66,13 @@ class PendingDuels(NamedTuple):
     #                         shard-local streaming mode a (S,) per-shard
     #                         sequence counter instead (see enqueue_stream)
     pref: jax.Array | None = None  # (C,) f32 — per-duel preference weight
+    # Causal-logging companions (the duel-log ring reads them off resolved
+    # feedback): the act-time selection propensity of the routed pair (1.0
+    # when the policy exposes none — IPW then degrades to a no-op) and the
+    # query's category label (-1 = unknown; the refresh trainer infers it
+    # offline when absent). None on legacy states/checkpoints.
+    prop: jax.Array | None = None  # (C,) f32 — act-time pair propensity
+    cat: jax.Array | None = None   # (C,) int32 — query category (-1 unknown)
 
 
 class ResolvedDuels(NamedTuple):
@@ -79,6 +86,8 @@ class ResolvedDuels(NamedTuple):
     age: jax.Array          # (B,)  int32 — now - issued_at (modular)
     ok: jax.Array           # (B,)  bool
     pref: jax.Array | None = None  # (B,) f32 — pref the duel was served under
+    prop: jax.Array | None = None  # (B,) f32 — act-time pair propensity
+    cat: jax.Array | None = None   # (B,) int32 — query category (-1 unknown)
 
 
 def init_pending(capacity: int, dim: int,
@@ -119,12 +128,15 @@ def init_pending(capacity: int, dim: int,
         valid=z((capacity,), bool),
         next_ticket=z((() if shards is None else (shards,)), jnp.int32),
         pref=z((capacity,), jnp.float32),
+        prop=jnp.ones((capacity,), jnp.float32),
+        cat=jnp.full((capacity,), -1, jnp.int32),
     )
 
 
 def enqueue(q: PendingDuels, x: jax.Array, a1: jax.Array, a2: jax.Array,
-            now: jax.Array,
-            pref: jax.Array | None = None) -> tuple[PendingDuels, jax.Array]:
+            now: jax.Array, pref: jax.Array | None = None,
+            prop: jax.Array | None = None,
+            cat: jax.Array | None = None) -> tuple[PendingDuels, jax.Array]:
     """Issue a batch of B duels: one scatter per field, tickets returned.
 
     Slots are ``ticket % capacity`` so a full buffer silently overwrites the
@@ -143,6 +155,10 @@ def enqueue(q: PendingDuels, x: jax.Array, a1: jax.Array, a2: jax.Array,
     now = jnp.asarray(now, jnp.int32)
     if pref is None:
         pref = jnp.zeros((b,), jnp.float32)
+    if prop is None:
+        prop = jnp.ones((b,), jnp.float32)
+    if cat is None:
+        cat = jnp.full((b,), -1, jnp.int32)
     return q._replace(
         x=q.x.at[idx].set(x[drop:]),
         a1=q.a1.at[idx].set(a1[drop:].astype(jnp.int32)),
@@ -154,6 +170,10 @@ def enqueue(q: PendingDuels, x: jax.Array, a1: jax.Array, a2: jax.Array,
         next_ticket=q.next_ticket + b,
         pref=None if q.pref is None
         else q.pref.at[idx].set(pref[drop:].astype(jnp.float32)),
+        prop=None if q.prop is None
+        else q.prop.at[idx].set(prop[drop:].astype(jnp.float32)),
+        cat=None if q.cat is None
+        else q.cat.at[idx].set(cat[drop:].astype(jnp.int32)),
     ), tickets
 
 
@@ -203,7 +223,9 @@ def resolve(q: PendingDuels, tickets: jax.Array, y: jax.Array,
         matched.astype(jnp.int32))
     batch = ResolvedDuels(x=q.x[slots], a1=q.a1[slots], a2=q.a2[slots],
                           y=jnp.asarray(y), age=age, ok=ok,
-                          pref=None if q.pref is None else q.pref[slots])
+                          pref=None if q.pref is None else q.pref[slots],
+                          prop=None if q.prop is None else q.prop[slots],
+                          cat=None if q.cat is None else q.cat[slots])
     return q._replace(valid=q.valid & (hit == 0)), batch
 
 
@@ -243,7 +265,9 @@ def pending_count(q: PendingDuels) -> jax.Array:
 
 def enqueue_stream(q: PendingDuels, x: jax.Array, a1: jax.Array,
                    a2: jax.Array, now: jax.Array, pref: jax.Array,
-                   mask: jax.Array, shard, n_shards: int
+                   mask: jax.Array, shard, n_shards: int,
+                   prop: jax.Array | None = None,
+                   cat: jax.Array | None = None
                    ) -> tuple[PendingDuels, jax.Array]:
     """Masked shard-local issue: rows where ``mask`` is False (bucket
     padding) are never written and get ticket -1.
@@ -269,6 +293,10 @@ def enqueue_stream(q: PendingDuels, x: jax.Array, a1: jax.Array,
     write = mask & (rank >= n - cap)              # over-capacity: keep last C
     idx = jnp.where(write, seq % cap, cap)        # cap = OOB -> mode="drop"
     now = jnp.asarray(now, jnp.int32)
+    if prop is None:
+        prop = jnp.ones(mask.shape, jnp.float32)
+    if cat is None:
+        cat = jnp.full(mask.shape, -1, jnp.int32)
     return q._replace(
         x=q.x.at[idx].set(x, mode="drop"),
         a1=q.a1.at[idx].set(a1.astype(jnp.int32), mode="drop"),
@@ -280,6 +308,10 @@ def enqueue_stream(q: PendingDuels, x: jax.Array, a1: jax.Array,
         next_ticket=q.next_ticket + n,
         pref=None if q.pref is None
         else q.pref.at[idx].set(pref.astype(jnp.float32), mode="drop"),
+        prop=None if q.prop is None
+        else q.prop.at[idx].set(prop.astype(jnp.float32), mode="drop"),
+        cat=None if q.cat is None
+        else q.cat.at[idx].set(cat.astype(jnp.int32), mode="drop"),
     ), tickets
 
 
@@ -325,5 +357,7 @@ def resolve_stream(q: PendingDuels, tickets: jax.Array, y: jax.Array,
         matched.astype(jnp.int32))
     batch = ResolvedDuels(x=q.x[slots], a1=q.a1[slots], a2=q.a2[slots],
                           y=jnp.asarray(y), age=age, ok=ok,
-                          pref=None if q.pref is None else q.pref[slots])
+                          pref=None if q.pref is None else q.pref[slots],
+                          prop=None if q.prop is None else q.prop[slots],
+                          cat=None if q.cat is None else q.cat[slots])
     return q._replace(valid=q.valid & (hit == 0)), batch

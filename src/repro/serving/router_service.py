@@ -49,6 +49,8 @@ from repro.core.policy import (RoutingPolicy, fgts_policy, staleness_weight,
                                with_staleness)
 from repro.data.pool import PoolEntry
 from repro.encoder.model import EncoderConfig, encode
+from repro.refresh import duel_log as dl
+from repro.refresh.trainer import RefreshConfig
 from repro.sharding import routing_rules as rr
 from . import feedback_queue as fq
 from . import stream
@@ -65,6 +67,8 @@ STREAM_DONATION = {
     "_s_route": (1, 2, 6, 8),       # state, ring, tick, duel-cost acc
     "_s_route_pref": (1, 2, 6, 8),  # state, ring, tick, duel-cost acc
     "_s_feedback": (0, 1, 5, 6),    # state, ring, tick, folded-count acc
+    # refresh-enabled feedback twin: same donations plus the duel-log ring
+    "_s_feedback_log": (0, 1, 5, 6, 7),
     "_s_resolve": (0, 4),           # ring, tick
 }
 
@@ -121,6 +125,18 @@ class RouterServiceConfig:
     # pending ring switches to shard-local ticket addressing under a mesh.
     # None = the legacy tick-batch surface (lazy jit, one batch shape).
     buckets: Optional[tuple] = None
+    # -- online representation refresh --------------------------------------
+    # Standing CCFT refresh loop (requires k_max: the refreshed table swaps
+    # through the policy's ModelPool). Setting this makes the service (1)
+    # record act-time selection propensities and query categories with every
+    # issued duel — computed inside the jitted route programs, riding the
+    # pending ring, no new syncs — and (2) fold resolved feedback into an
+    # exportable ``refresh.DuelLog`` ring inside the jitted feedback
+    # programs. ``export_log()`` hands the logged duels to the offline
+    # trainer (``refresh.refresh_table``) and ``apply_table`` swaps the
+    # refreshed (K_max, d) table in retrace-free. None = no logging, every
+    # program byte-identical to a refresh-less service.
+    refresh: Optional[RefreshConfig] = None
     # -- pool autopilot -----------------------------------------------------
     # Closed-loop population management (requires k_max): the policy is
     # wrapped with repro.autopilot — posterior-dominance auto-retirement,
@@ -145,6 +161,11 @@ class RouterServiceConfig:
             raise ValueError(
                 f"feedback_expiry={self.feedback_expiry} must be >= 0 "
                 f"ticks (None disables age expiry)")
+        if self.refresh is not None and self.k_max is None:
+            raise ValueError(
+                "RouterServiceConfig(refresh=...) needs a dynamic pool "
+                "(k_max=...): the refreshed table swaps through the "
+                "policy's ModelPool (apply_table / model_pool.set_table)")
 
 
 class RouterService:
@@ -189,7 +210,10 @@ class RouterService:
         if self.dynamic:
             pool0 = mp.init_pool(self.a_emb, jnp.asarray(entry_costs),
                                  k_max=cfg.k_max)
-            self.costs = pool0.costs            # (K_max,) padded mirror
+            # (K_max,) padded mirror — copied: the pool's own buffer lives
+            # inside the (donated) policy state, and the mirror must survive
+            # the streaming programs consuming their state operand
+            self.costs = jnp.array(pool0.costs)
             arms = pool0
         else:
             self.costs = jnp.asarray(entry_costs)
@@ -236,6 +260,18 @@ class RouterService:
             self.pending = fq.init_pending(capacity, self.a_emb.shape[1])
         self.tick = 0                  # route_batch calls (the service clock)
         self.n_routed = 0
+        # online representation refresh: the exportable duel-log ring rides
+        # next to the policy state (replicated under a mesh) and is folded
+        # inside the jitted feedback programs; None when refresh is off —
+        # every program then stays byte-identical to a refresh-less build
+        self.refresh_on = cfg.refresh is not None
+        if self.refresh_on:
+            self.duel_log = dl.init_log(fq.next_pow2(cfg.refresh.capacity),
+                                        self.a_emb.shape[1])
+            self._count_at_swap = 0    # log.count at the last apply_table
+            self._table_swaps = 0
+        else:
+            self.duel_log = None
         # on-device stats accumulators: the hot path only *adds* to these
         # (lazy, no host sync); service_stats() materializes them in one
         # deliberate device_get. Process-local by design — not part of the
@@ -265,6 +301,14 @@ class RouterService:
         def pool_retire(state, slot):
             return mp.set_pool(state, mp.retire_arm(mp.get_pool(state),
                                                     slot))
+
+        # refresh-loop table swap: the whole (K_max, d) embedding table is a
+        # *traced* operand (the swap_model idiom, one table-sized scatter +
+        # generation bump), so one compiled program serves every refreshed
+        # table — a refresh tick never retraces act/update
+        def table_swap(state, table):
+            return mp.set_pool(state, mp.set_table(mp.get_pool(state),
+                                                   table))
 
         half_life = cfg.stale_half_life if self._staleness_wrapped else None
         masked = self.policy.update_masked
@@ -299,11 +343,38 @@ class RouterService:
         else:
             masked_update_pref = None
 
+        # refresh instrumentation: when the log is on, the act programs
+        # additionally return the act-time pair propensity (the policy's
+        # ``propensity`` readout; constant 1.0 when it exposes none, so IPW
+        # degrades to the naive estimator) and the feedback programs fold
+        # resolved duels into the exportable duel-log ring — all inside the
+        # same jitted dispatches, zero extra syncs on the hot path
+        record = self.refresh_on
+        prop_fn = self.policy.propensity
+        if prop_fn is None:
+            def prop_fn(state, x, a1, a2):
+                return jnp.ones(a1.shape, jnp.float32)
+        act_core, act_pref_core, fold_log = self.policy.act, act_pref, None
+        if record:
+            def act_core(key, state, x, _act=self.policy.act):
+                state, a1, a2 = _act(key, state, x)
+                return state, a1, a2, prop_fn(state, x, a1, a2)
+            if act_pref is not None:
+                def act_pref_core(key, state, x, pref, _ap=act_pref):
+                    state, a1, a2 = _ap(key, state, x, pref)
+                    return state, a1, a2, prop_fn(state, x, a1, a2)
+
+            def fold_log(log, res, now):
+                return dl.fold(log, res.x, res.a1, res.a2, res.y, res.pref,
+                               res.prop, res.cat, now - res.age, res.ok)
+
         # raw (un-jitted) traceables, reused by the streaming AOT builder so
         # both surfaces fold feedback through literally the same closures
         self._traceables = {"masked_update": masked_update,
                             "masked_update_pref": masked_update_pref,
-                            "act_pref": act_pref, "act_mesh": None,
+                            "act_core": act_core,
+                            "act_pref_core": act_pref_core,
+                            "fold_log": fold_log, "act_mesh": None,
                             "act_pref_mesh": None}
 
         def seed_fn(fn):
@@ -326,9 +397,10 @@ class RouterService:
 
         if mesh is None:
             self._n_shards = 1
-            self._act = jax.jit(self.policy.act)
-            self._act_pref = (jax.jit(act_pref)
-                              if act_pref is not None else None)
+            self._act = jax.jit(act_core)
+            self._act_pref = (jax.jit(act_pref_core)
+                              if act_pref_core is not None else None)
+            self._fold_log = jax.jit(fold_log) if record else None
             self._update = jax.jit(self.policy.update)
             self._update_delayed = (jax.jit(self.policy.update_delayed)
                                     if self.policy.update_delayed is not None
@@ -344,6 +416,7 @@ class RouterService:
             if self.dynamic:
                 self._pool_set = jax.jit(pool_set)
                 self._pool_retire = jax.jit(pool_retire)
+                self._table_swap = jax.jit(table_swap)
                 # offline->online seeding folds replay duels through the
                 # policy's shape-stable masked update when it has one
                 if cfg.autopilot is not None:
@@ -384,36 +457,42 @@ class RouterService:
         # with a replicated key would repeat the same gate on every shard)
         use_sm = cfg.act_shard_map if cfg.act_shard_map is not None \
             else (cfg.policy_factory is None and cfg.autopilot is None)
+        # the propensity row (refresh logging) shards like every other
+        # per-query vector — computed per shard inside the same program
+        act_extra = (P(bx),) if record else ()
+        out_extra = (row,) if record else ()
         if use_sm:
-            act = shard_map(self.policy.act, mesh=mesh,
+            act = shard_map(act_core, mesh=mesh,
                             in_specs=(P(), P(), rr.query_batch_spec(mesh)),
-                            out_specs=(P(), P(bx), P(bx)),
+                            out_specs=(P(), P(bx), P(bx)) + act_extra,
                             check_rep=False)
         else:
-            def act(key, state, x, _act=self.policy.act):
+            def act(key, state, x, _act=act_core):
                 with jax.threefry_partitionable(True):
                     return _act(key, state, x)
         self._traceables["act_mesh"] = act
         self._act = jax.jit(act, in_shardings=(rep, rep, qry),
-                            out_shardings=(rep, row, row))
+                            out_shardings=(rep, row, row) + out_extra)
         # the pref operand shards like every per-query vector: each device
         # tilts only the rows it scores (rr.pref_spec)
         self._act_pref = None
-        if act_pref is not None:
+        if act_pref_core is not None:
             if use_sm:
                 act_p = shard_map(
-                    act_pref, mesh=mesh,
+                    act_pref_core, mesh=mesh,
                     in_specs=(P(), P(), rr.query_batch_spec(mesh),
                               rr.pref_spec(mesh)),
-                    out_specs=(P(), P(bx), P(bx)), check_rep=False)
+                    out_specs=(P(), P(bx), P(bx)) + act_extra,
+                    check_rep=False)
             else:
-                def act_p(key, state, x, pref, _ap=act_pref):
+                def act_p(key, state, x, pref, _ap=act_pref_core):
                     with jax.threefry_partitionable(True):
                         return _ap(key, state, x, pref)
             self._traceables["act_pref_mesh"] = act_p
             self._act_pref = jax.jit(act_p,
                                      in_shardings=(rep, rep, qry, row),
-                                     out_shardings=(rep, row, row))
+                                     out_shardings=(rep, row, row)
+                                     + out_extra)
         self._update = jax.jit(
             self.policy.update,
             in_shardings=(rep, qry, row, row, row),
@@ -444,12 +523,20 @@ class RouterService:
             in_shardings=(rep, rep, rep, rep, rep, rep),
             out_shardings=rep)
             if self.policy.update_delayed is not None else None)
+        enq_sh = (pend, qry, row, row, rep, row)
+        if record:
+            enq_sh = enq_sh + (row, row)    # prop, cat operands
         self._enqueue = jax.jit(
-            fq.enqueue, in_shardings=(pend, qry, row, row, rep, row),
-            out_shardings=(pend, row))
+            fq.enqueue, in_shardings=enq_sh, out_shardings=(pend, row))
         self._resolve = jax.jit(
             resolve, in_shardings=(pend, row, row, rep),
             out_shardings=(pend, res_sh))
+        self._fold_log = None
+        if record:
+            log_sh = rr.to_shardings(mesh, rr.duel_log_specs(mesh))
+            self._fold_log = jax.jit(fold_log,
+                                     in_shardings=(log_sh, res_sh, rep),
+                                     out_shardings=log_sh)
         if self.dynamic:
             self._pool_set = jax.jit(pool_set,
                                      in_shardings=(rep, rep, rep, rep),
@@ -457,6 +544,9 @@ class RouterService:
             self._pool_retire = jax.jit(pool_retire,
                                         in_shardings=(rep, rep),
                                         out_shardings=rep)
+            self._table_swap = jax.jit(table_swap,
+                                       in_shardings=(rep, rep),
+                                       out_shardings=rep)
             # replay batches have arbitrary lengths: fold them replicated
             # (the state stays meshed), masked path first
             if masked_update is not None:
@@ -474,6 +564,10 @@ class RouterService:
         self.pending = jax.device_put(self.pending, pend)
         self._n_folded = jax.device_put(self._n_folded, rep)
         self._duel_cost = jax.device_put(self._duel_cost, rep)
+        if record:
+            self.duel_log = jax.device_put(
+                self.duel_log, rr.to_shardings(mesh,
+                                               rr.duel_log_specs(mesh)))
 
     # -- streaming serving (cfg.buckets) -------------------------------------
 
@@ -503,14 +597,18 @@ class RouterService:
         f32, i32 = jnp.float32, jnp.int32
         d = self.a_emb.shape[1]
         s = jax.ShapeDtypeStruct
-        return {"key": self._avals(self._key),
-                "state": self._avals(self.state),
-                "q": self._avals(self.pending),
-                "x": s((b, d), f32), "mask": s((b,), jnp.bool_),
-                "pref": s((b,), f32), "now": s((), i32),
-                "costs": self._avals(self.costs),
-                "acc_f": s((), f32), "acc_i": s((), i32),
-                "tickets": s((b,), i32), "y": s((b,), f32)}
+        av = {"key": self._avals(self._key),
+              "state": self._avals(self.state),
+              "q": self._avals(self.pending),
+              "x": s((b, d), f32), "mask": s((b,), jnp.bool_),
+              "pref": s((b,), f32), "now": s((), i32),
+              "costs": self._avals(self.costs),
+              "acc_f": s((), f32), "acc_i": s((), i32),
+              "tickets": s((b,), i32), "y": s((b,), f32)}
+        if self.refresh_on:
+            av["cat"] = s((b,), i32)
+            av["log"] = self._avals(self.duel_log)
+        return av
 
     def _build_stream_programs(self):
         """AOT-compile the streaming surface: per padding bucket, one fused
@@ -534,6 +632,7 @@ class RouterService:
         """
         cfg, mesh, policy = self.cfg, self.mesh, self.policy
         n_shards = self._n_shards
+        record = self.refresh_on
         tr = self._traceables
         masked_update = tr["masked_update"]
         masked_update_pref = tr["masked_update_pref"]
@@ -542,14 +641,16 @@ class RouterService:
         # surface jits (shard_map for the FGTS default, partitionable GSPMD
         # otherwise); single-device act is re-wrapped under partitionable
         # threefry — the default threefry lowering folds the batch shape
-        # into the stream and is NOT padding-stable.
+        # into the stream and is NOT padding-stable. With refresh logging
+        # the cores return a fourth output, the act-time pair propensity.
         if mesh is None:
-            def s_act(key, state, x, _act=policy.act):
+            def s_act(key, state, x, _act=tr["act_core"]):
                 with jax.threefry_partitionable(True):
                     return _act(key, state, x)
             s_act_pref = None
-            if tr["act_pref"] is not None:
-                def s_act_pref(key, state, x, pref, _ap=tr["act_pref"]):
+            if tr["act_pref_core"] is not None:
+                def s_act_pref(key, state, x, pref,
+                               _ap=tr["act_pref_core"]):
                     with jax.threefry_partitionable(True):
                         return _ap(key, state, x, pref)
         else:
@@ -562,9 +663,9 @@ class RouterService:
         # the row, so the feedback path lowers with zero collectives
         # (asserted against the compiled HLO in tests).
         if mesh is None:
-            def enq(q, x, a1, a2, now, pref, mask):
+            def enq(q, x, a1, a2, now, pref, mask, prop=None, cat=None):
                 return fq.enqueue_stream(q, x, a1, a2, now, pref, mask,
-                                         0, n_shards)
+                                         0, n_shards, prop=prop, cat=cat)
 
             def rsv(q, tickets, y, mask, now):
                 return fq.resolve_stream(q, tickets, y, mask, now, 0,
@@ -576,14 +677,25 @@ class RouterService:
             rowp = rr.per_query_spec(mesh)
             qryp = rr.query_batch_spec(mesh)
 
-            def enq_local(q, x, a1, a2, now, pref, mask):
-                return fq.enqueue_stream(q, x, a1, a2, now, pref, mask,
-                                         sidx(), n_shards)
+            if record:
+                def enq_local(q, x, a1, a2, now, pref, mask, prop, cat):
+                    return fq.enqueue_stream(q, x, a1, a2, now, pref,
+                                             mask, sidx(), n_shards,
+                                             prop=prop, cat=cat)
 
-            enq = shard_map(enq_local, mesh=mesh,
-                            in_specs=(pspec, qryp, rowp, rowp, P(), rowp,
-                                      rowp),
-                            out_specs=(pspec, rowp), check_rep=False)
+                enq = shard_map(enq_local, mesh=mesh,
+                                in_specs=(pspec, qryp, rowp, rowp, P(),
+                                          rowp, rowp, rowp, rowp),
+                                out_specs=(pspec, rowp), check_rep=False)
+            else:
+                def enq_local(q, x, a1, a2, now, pref, mask):
+                    return fq.enqueue_stream(q, x, a1, a2, now, pref,
+                                             mask, sidx(), n_shards)
+
+                enq = shard_map(enq_local, mesh=mesh,
+                                in_specs=(pspec, qryp, rowp, rowp, P(),
+                                          rowp, rowp),
+                                out_specs=(pspec, rowp), check_rep=False)
 
             def rsv_local(q, tickets, y, mask, now):
                 return fq.resolve_stream(q, tickets, y, mask, now, sidx(),
@@ -600,22 +712,48 @@ class RouterService:
         # so the hot path never ships the clock from the host; the host
         # ``self.tick`` mirror advances in lockstep for checkpoints/expiry
         # (both wrap int32-identically).
-        def route_fused(key, state, q, x, mask, pref, now, costs, acc):
-            state, a1, a2 = s_act(key, state, x)
-            now = now + 1
-            q, tickets = enq(q, x, a1, a2, now, pref, mask)
-            live = jnp.where(mask, costs[a1] + costs[a2], 0.0)
-            return state, q, now, a1, a2, tickets, acc + jnp.sum(live)
+        # With refresh logging the route programs take one extra trailing
+        # operand (the per-row category, -1 = unknown) and thread the
+        # act-time propensity into the ring — donated argnums unchanged
+        # (state/ring/tick/acc keep their positions).
+        if record:
+            def route_fused(key, state, q, x, mask, pref, now, costs, acc,
+                            cat):
+                state, a1, a2, prop = s_act(key, state, x)
+                now = now + 1
+                q, tickets = enq(q, x, a1, a2, now, pref, mask, prop, cat)
+                live = jnp.where(mask, costs[a1] + costs[a2], 0.0)
+                return state, q, now, a1, a2, tickets, acc + jnp.sum(live)
 
-        route_pref_fused = None
-        if s_act_pref is not None:
-            def route_pref_fused(key, state, q, x, mask, pref, now, costs,
-                                 acc):
-                state, a1, a2 = s_act_pref(key, state, x, pref)
+            route_pref_fused = None
+            if s_act_pref is not None:
+                def route_pref_fused(key, state, q, x, mask, pref, now,
+                                     costs, acc, cat):
+                    state, a1, a2, prop = s_act_pref(key, state, x, pref)
+                    now = now + 1
+                    q, tickets = enq(q, x, a1, a2, now, pref, mask, prop,
+                                     cat)
+                    live = jnp.where(mask, costs[a1] + costs[a2], 0.0)
+                    return state, q, now, a1, a2, tickets, \
+                        acc + jnp.sum(live)
+        else:
+            def route_fused(key, state, q, x, mask, pref, now, costs, acc):
+                state, a1, a2 = s_act(key, state, x)
                 now = now + 1
                 q, tickets = enq(q, x, a1, a2, now, pref, mask)
                 live = jnp.where(mask, costs[a1] + costs[a2], 0.0)
                 return state, q, now, a1, a2, tickets, acc + jnp.sum(live)
+
+            route_pref_fused = None
+            if s_act_pref is not None:
+                def route_pref_fused(key, state, q, x, mask, pref, now,
+                                     costs, acc):
+                    state, a1, a2 = s_act_pref(key, state, x, pref)
+                    now = now + 1
+                    q, tickets = enq(q, x, a1, a2, now, pref, mask)
+                    live = jnp.where(mask, costs[a1] + costs[a2], 0.0)
+                    return state, q, now, a1, a2, tickets, \
+                        acc + jnp.sum(live)
 
         # Canonicalize the fold layout on the mesh: gather the resolved
         # batch to every device *before* the posterior update. The fold
@@ -638,25 +776,42 @@ class RouterService:
                     lambda a: jax.lax.with_sharding_constraint(a, rep_sh),
                     res)
 
-        feedback_fused = None
+        feedback_fused = feedback_log_fused = None
         if masked_update_pref is not None:
             # preference-conditioned fold (same precedence as
             # feedback_batch: the ring records the pref each duel was
             # served under, zeros when the caller passed none)
-            def feedback_fused(state, q, tickets, y, mask, now, acc):
-                q, res = rsv(q, tickets, y, mask, now)
-                res = canon(res)
-                n_ok = jnp.sum(res.ok).astype(jnp.int32)
-                state = masked_update_pref(state, res.x, res.a1, res.a2,
-                                           res.y, res.age, res.ok, res.pref)
-                return state, q, now, acc + n_ok, n_ok
+            def fb_fold(state, res):
+                return masked_update_pref(state, res.x, res.a1, res.a2,
+                                          res.y, res.age, res.ok, res.pref)
         elif masked_update is not None:
+            def fb_fold(state, res):
+                return masked_update(state, res.x, res.a1, res.a2, res.y,
+                                     res.age, res.ok)
+        else:
+            fb_fold = None
+        if fb_fold is not None and record:
+            fold_log = tr["fold_log"]
+
+            # refresh twin of the feedback program: the duel-log ring rides
+            # as one extra donated operand (STREAM_DONATION appends it, so
+            # the shared argnums keep their positions) and every surviving
+            # row is folded into it after canonicalization — the log, like
+            # the posterior, is bitwise invariant to bucket padding
+            def feedback_log_fused(state, q, tickets, y, mask, now, acc,
+                                   log):
+                q, res = rsv(q, tickets, y, mask, now)
+                res = canon(res)
+                n_ok = jnp.sum(res.ok).astype(jnp.int32)
+                log = fold_log(log, res, now)
+                state = fb_fold(state, res)
+                return state, q, now, acc + n_ok, log, n_ok
+        elif fb_fold is not None:
             def feedback_fused(state, q, tickets, y, mask, now, acc):
                 q, res = rsv(q, tickets, y, mask, now)
                 res = canon(res)
                 n_ok = jnp.sum(res.ok).astype(jnp.int32)
-                state = masked_update(state, res.x, res.a1, res.a2, res.y,
-                                      res.age, res.ok)
+                state = fb_fold(state, res)
                 return state, q, now, acc + n_ok, n_ok
 
         def resolve_fused(q, tickets, y, mask, now):
@@ -664,28 +819,39 @@ class RouterService:
             return q, now, res
 
         if mesh is None:
-            r_sh = f_sh = v_sh = None
+            r_sh = f_sh = fl_sh = v_sh = None
         else:
             rep, row, qry = self._rep_sh, self._row_sh, self._x_sh
             pend = rr.to_shardings(mesh, rr.stream_pending_specs(mesh))
             res_sh = rr.to_shardings(mesh, rr.resolved_specs(mesh))
-            r_sh = ((rep, rep, pend, qry, row, row, rep, rep, rep),
+            cat_in = (row,) if record else ()
+            r_sh = ((rep, rep, pend, qry, row, row, rep, rep, rep)
+                    + cat_in,
                     (rep, pend, rep, row, row, row, rep))
             f_sh = ((rep, pend, row, row, row, rep, rep),
                     (rep, pend, rep, rep, rep))
+            fl_sh = None
+            if record:
+                log_sh = rr.to_shardings(mesh, rr.duel_log_specs(mesh))
+                fl_sh = ((rep, pend, row, row, row, rep, rep, log_sh),
+                         (rep, pend, rep, rep, log_sh, rep))
             v_sh = ((pend, row, row, row, rep), (pend, rep, res_sh))
 
         av = {b: self._stream_avals(b) for b in self.buckets}
 
         def r_avals(b):
             a = av[b]
-            return (a["key"], a["state"], a["q"], a["x"], a["mask"],
+            base = (a["key"], a["state"], a["q"], a["x"], a["mask"],
                     a["pref"], a["now"], a["costs"], a["acc_f"])
+            return base + ((a["cat"],) if record else ())
 
         def f_avals(b):
             a = av[b]
             return (a["state"], a["q"], a["tickets"], a["y"], a["mask"],
                     a["now"], a["acc_i"])
+
+        def fl_avals(b):
+            return f_avals(b) + (av[b]["log"],)
 
         def v_avals(b):
             a = av[b]
@@ -706,14 +872,19 @@ class RouterService:
                          donate_argnums=STREAM_DONATION["_s_feedback"],
                          avals=f_avals(b), shardings=f_sh)
             for b in self.buckets}
+        self._s_feedback_log = None if feedback_log_fused is None else {
+            b: self._aot(feedback_log_fused,
+                         donate_argnums=STREAM_DONATION["_s_feedback_log"],
+                         avals=fl_avals(b), shardings=fl_sh)
+            for b in self.buckets}
         self._s_resolve = {
             b: self._aot(resolve_fused,
                          donate_argnums=STREAM_DONATION["_s_resolve"],
                          avals=v_avals(b), shardings=v_sh)
             for b in self.buckets}
-        # per-(bucket, live-count) mask / zero-pref caches: placed once,
-        # reused every call (never donated)
-        self._masks, self._zero_prefs = {}, {}
+        # per-(bucket, live-count) mask / zero-pref / unknown-category
+        # caches: placed once, reused every call (never donated)
+        self._masks, self._zero_prefs, self._neg_cats = {}, {}, {}
         self._tick_dev = _tick32(self.tick)
         if mesh is not None:
             self._tick_dev = jax.device_put(self._tick_dev, self._rep_sh)
@@ -722,11 +893,15 @@ class RouterService:
     def _sync_stream_costs(self):
         """Refresh the replicated cost-vector operand of the AOT route
         programs (the AOT call path validates placement, so the mirror must
-        live on the mesh)."""
+        live on the mesh). Always a fresh copy: under a dynamic pool
+        ``self.costs`` aliases ``pool.costs`` *inside* the donated policy
+        state, and passing the same buffer as both a donated and a
+        non-donated operand is an XLA execute error."""
         if not self.streaming:
             return
-        self._costs_dev = (self.costs if self.mesh is None
-                           else jax.device_put(self.costs, self._rep_sh))
+        self._costs_dev = (jnp.array(self.costs) if self.mesh is None
+                           else jax.device_put(
+                               jnp.array(self.costs), self._rep_sh))
 
     def _stream_mask(self, b: int, n: int) -> jax.Array:
         m = self._masks.get((b, n))
@@ -758,7 +933,16 @@ class RouterService:
             self._zero_prefs[b] = z
         return z
 
-    def route_stream(self, x: jax.Array, prefs: jax.Array | None = None):
+    def _unknown_cat(self, b: int) -> jax.Array:
+        c = self._neg_cats.get(b)
+        if c is None:
+            c = self._shard_batch(jnp.full((b,), -1, jnp.int32),
+                                  "route_stream")
+            self._neg_cats[b] = c
+        return c
+
+    def route_stream(self, x: jax.Array, prefs: jax.Array | None = None,
+                     cats: jax.Array | None = None):
         """Route a formed batch of *arbitrary* size through the AOT bucket
         programs: pad to the smallest bucket >= n, run the fused
         route program (selection + masked ring enqueue + cost accounting,
@@ -796,10 +980,24 @@ class RouterService:
         if self.mesh is not None:
             key = jax.device_put(key, self._rep_sh)
         self.tick += 1                 # host mirror of the device clock
-        self.state, self.pending, self._tick_dev, a1, a2, tickets, \
-            self._duel_cost = prog(key, self.state, self.pending, xb, mask,
-                                   pref_row, self._tick_dev,
-                                   self._costs_dev, self._duel_cost)
+        if self.refresh_on:
+            # extra trailing operand: the query categories the duel log
+            # records (-1 = unknown; the refresh trainer infers offline)
+            if cats is None:
+                catb = self._unknown_cat(b)
+            else:
+                catb = self._pad_batch(jnp.asarray(cats, jnp.int32), b,
+                                       "route_stream")
+            self.state, self.pending, self._tick_dev, a1, a2, tickets, \
+                self._duel_cost = prog(key, self.state, self.pending, xb,
+                                       mask, pref_row, self._tick_dev,
+                                       self._costs_dev, self._duel_cost,
+                                       catb)
+        else:
+            self.state, self.pending, self._tick_dev, a1, a2, tickets, \
+                self._duel_cost = prog(key, self.state, self.pending, xb,
+                                       mask, pref_row, self._tick_dev,
+                                       self._costs_dev, self._duel_cost)
         self.n_routed += n
         return a1[:n], a2[:n], tickets[:n]
 
@@ -830,6 +1028,14 @@ class RouterService:
         tk = self._pad_batch(tickets, b, "feedback_stream")
         yb = self._pad_batch(y, b, "feedback_stream")
         mask = self._stream_mask(b, n)
+        if self._s_feedback_log is not None:
+            # refresh-enabled twin: the duel-log ring is donated through
+            # and rebound with the rest of the hot buffers
+            self.state, self.pending, self._tick_dev, self._n_folded, \
+                self.duel_log, n_ok = self._s_feedback_log[b](
+                    self.state, self.pending, tk, yb, mask,
+                    self._tick_dev, self._n_folded, self.duel_log)
+            return n_ok
         if self._s_feedback is not None:
             self.state, self.pending, self._tick_dev, self._n_folded, \
                 n_ok = self._s_feedback[b](self.state, self.pending, tk,
@@ -839,6 +1045,9 @@ class RouterService:
         # no masked update: donated AOT resolve, legacy host-shaped fold
         self.pending, self._tick_dev, res = self._s_resolve[b](
             self.pending, tk, yb, mask, self._tick_dev)
+        if self.refresh_on:
+            self.duel_log = self._fold_log(self.duel_log, res,
+                                           self._tick_dev)
         return self._fold_compact(res)
 
     def _shard_batch(self, x: jax.Array, what: str = "batch") -> jax.Array:
@@ -861,7 +1070,8 @@ class RouterService:
     def embed(self, tokens: jax.Array, mask: jax.Array) -> jax.Array:
         return encode(self.enc_params, tokens, mask, self.enc_cfg)
 
-    def route_batch(self, x: jax.Array, prefs: jax.Array | None = None):
+    def route_batch(self, x: jax.Array, prefs: jax.Array | None = None,
+                    cats: jax.Array | None = None):
         """x: (B, d) query features. Returns (a1 (B,), a2 (B,), tickets (B,)).
 
         One policy.act per batch: for FGTS.CDB that amortizes the SGLD
@@ -879,15 +1089,25 @@ class RouterService:
         program — distinct values never retrace — and are recorded with
         each issued duel so the feedback fold conditions on them.
 
+        ``cats`` (B,) int32 are optional query-category labels (-1 =
+        unknown) recorded with each duel for the representation-refresh
+        log; with refresh off they are ignored.
+
         In streaming mode (``cfg.buckets``) this delegates to
         ``route_stream``: the batch pads to the next bucket and runs the
         fused AOT program — any batch size up the ladder, zero recompiles.
         """
         if self.streaming:
-            return self.route_stream(x, prefs=prefs)
+            return self.route_stream(x, prefs=prefs, cats=cats)
         x = self._shard_batch(x, "route_batch")
+        prop = None
         if prefs is None:
-            self.state, a1, a2 = self._act(self._next_key(), self.state, x)
+            if self.refresh_on:
+                self.state, a1, a2, prop = self._act(self._next_key(),
+                                                     self.state, x)
+            else:
+                self.state, a1, a2 = self._act(self._next_key(),
+                                               self.state, x)
             pref_row = jnp.zeros((x.shape[0],), jnp.float32)
         else:
             if self._act_pref is None:
@@ -900,16 +1120,30 @@ class RouterService:
                 raise ValueError(
                     f"prefs shape {pref_row.shape} != ({x.shape[0]},) — one "
                     f"scalar cost weight per query row")
-            self.state, a1, a2 = self._act_pref(self._next_key(), self.state,
-                                                x, self._shard_batch(
-                                                    pref_row, "route_batch"))
+            pref_sh = self._shard_batch(pref_row, "route_batch")
+            if self.refresh_on:
+                self.state, a1, a2, prop = self._act_pref(
+                    self._next_key(), self.state, x, pref_sh)
+            else:
+                self.state, a1, a2 = self._act_pref(
+                    self._next_key(), self.state, x, pref_sh)
         # clock first, then issue at the new tick: feedback redeemed before
         # the next routing round reports age 0 (so feedback_expiry=N means
         # "survives N further rounds", matching env.run's lag-D => age-D)
         self.tick += 1
-        self.pending, tickets = self._enqueue(
-            self.pending, x, a1, a2, _tick32(self.tick),
-            self._shard_batch(pref_row, "route_batch"))
+        if self.refresh_on:
+            # the act-time propensity and the query category ride the ring
+            # with the duel (resolved into the exportable log later)
+            cat_row = (jnp.full((x.shape[0],), -1, jnp.int32)
+                       if cats is None else jnp.asarray(cats, jnp.int32))
+            self.pending, tickets = self._enqueue(
+                self.pending, x, a1, a2, _tick32(self.tick),
+                self._shard_batch(pref_row, "route_batch"), prop,
+                self._shard_batch(cat_row, "route_batch"))
+        else:
+            self.pending, tickets = self._enqueue(
+                self.pending, x, a1, a2, _tick32(self.tick),
+                self._shard_batch(pref_row, "route_batch"))
         self.n_routed += int(x.shape[0])     # static shape: no device sync
         # realized duel cost rides on-device; spend() is lazy
         self._duel_cost = self._duel_cost + self.spend(a1) + self.spend(a2)
@@ -955,6 +1189,11 @@ class RouterService:
         y = self._shard_batch(y, "feedback_batch")
         self.pending, res = self._resolve(
             self.pending, tickets, y, _tick32(self.tick))
+        if self.refresh_on:
+            # fold the resolved batch into the exportable duel log (one
+            # more lazy jitted dispatch — still zero host syncs)
+            self.duel_log = self._fold_log(self.duel_log, res,
+                                           _tick32(self.tick))
         n_ok = jnp.sum(res.ok).astype(jnp.int32)    # lazy device count
         if self._update_pref is not None and res.pref is not None:
             # preference-conditioned fold: each duel updates under the pref
@@ -1056,12 +1295,70 @@ class RouterService:
         sides of every issued pair at the pool's per-1k rates), in-flight
         pending count. This is the summary call the hot path defers to —
         route_batch/feedback_batch only ever add lazily."""
-        n_folded, duel_cost, pending = jax.device_get(
-            (self._n_folded, self._duel_cost,
-             fq.pending_count(self.pending)))
-        return {"tick": self.tick, "n_routed": self.n_routed,
-                "n_folded": int(n_folded), "duel_cost": float(duel_cost),
-                "pending": int(pending)}
+        if self.refresh_on:
+            n_folded, duel_cost, pending, logged = jax.device_get(
+                (self._n_folded, self._duel_cost,
+                 fq.pending_count(self.pending), self.duel_log.count))
+        else:
+            n_folded, duel_cost, pending = jax.device_get(
+                (self._n_folded, self._duel_cost,
+                 fq.pending_count(self.pending)))
+        out = {"tick": self.tick, "n_routed": self.n_routed,
+               "n_folded": int(n_folded), "duel_cost": float(duel_cost),
+               "pending": int(pending)}
+        if self.refresh_on:
+            out["duels_logged"] = int(logged)
+            out["table_swaps"] = self._table_swaps
+        return out
+
+    # -- online representation refresh (cfg.refresh) -------------------------
+
+    def _require_refresh(self, what: str):
+        if not self.refresh_on:
+            raise RuntimeError(
+                f"{what} needs the refresh loop: construct the service "
+                f"with RouterServiceConfig(refresh=RefreshConfig(...))")
+
+    def export_log(self) -> dict:
+        """Host export of the logged duels — the input of the offline
+        refresh job (``refresh.refresh_table``). One deliberate device
+        transfer of the whole ring; refresh cadence is hundreds of rounds,
+        so this read is off the hot path by construction."""
+        self._require_refresh("export_log")
+        return dl.export(self.duel_log)
+
+    def refresh_due(self) -> bool:
+        """True once ``cfg.refresh.every`` new duels have been folded into
+        the log since the last ``apply_table`` (always False when every=0:
+        manual refreshes only). One scalar device read — call it at the
+        refresh-check cadence, not per batch."""
+        if not self.refresh_on or self.cfg.refresh.every <= 0:
+            return False
+        count = jax.device_get(self.duel_log.count)
+        return int(count) - self._count_at_swap >= self.cfg.refresh.every
+
+    def apply_table(self, table, replay=None) -> None:
+        """Hot-swap the whole (K_max, d) embedding table (e.g. a refreshed
+        CCFT table from ``refresh.refresh_table``): one jitted table-sized
+        scatter through ``model_pool.set_table``. The table is a *traced*
+        operand, so every refresh reuses ONE compiled swap program and the
+        act/update programs never retrace — the pool generation bumps,
+        costs and the active mask ride through untouched. The posterior is
+        kept as-is (duels learned under the old geometry still shape it)
+        unless ``replay=(x, a1, a2, y)`` re-warm-starts it through
+        ``seed_replay`` (e.g. ``model_pool.warm_start_duels`` against the
+        refreshed table)."""
+        self._require_dynamic("apply_table")
+        table = jnp.asarray(table, jnp.float32)
+        if self.mesh is not None:
+            table = jax.device_put(table, self._rep_sh)
+        self.state = self._table_swap(self.state, table)
+        if self.refresh_on:
+            count = jax.device_get(self.duel_log.count)
+            self._count_at_swap = int(count)
+            self._table_swaps += 1
+        if replay is not None:
+            self.seed_replay(*replay)
 
     # -- dynamic pool membership (requires cfg.k_max) ------------------------
 
@@ -1167,7 +1464,7 @@ class RouterService:
             raise RuntimeError("cannot retire the last active arm")
         self.state = self._pool_retire(self.state,
                                        jnp.asarray(k, jnp.int32))
-        self.costs = mp.get_pool(self.state).costs
+        self.costs = jnp.array(mp.get_pool(self.state).costs)
         self._sync_stream_costs()
 
     def swap_model(self, k: int, entry: PoolEntry, replay=None) -> None:
@@ -1188,7 +1485,7 @@ class RouterService:
             jnp.asarray(slot, jnp.int32))
         self.pool[slot] = entry
         self._ever_used[slot] = True
-        self.costs = mp.get_pool(self.state).costs
+        self.costs = jnp.array(mp.get_pool(self.state).costs)
         self._sync_stream_costs()
 
     def seed_replay(self, x, a1, a2, y) -> int:
@@ -1230,7 +1527,10 @@ class RouterService:
         if self.dynamic:
             fns.update(pool_set=self._pool_set,
                        pool_retire=self._pool_retire,
-                       update_seed=self._update_seed)
+                       update_seed=self._update_seed,
+                       table_swap=self._table_swap)
+        if self.refresh_on:
+            fns["fold_log"] = self._fold_log
         counts = {name: fn._cache_size() for name, fn in fns.items()
                   if fn is not None}
         if self.streaming:
@@ -1243,6 +1543,8 @@ class RouterService:
                 counts["s_route_pref"] = len(self._s_route_pref)
             if self._s_feedback is not None:
                 counts["s_feedback"] = len(self._s_feedback)
+            if self._s_feedback_log is not None:
+                counts["s_feedback_log"] = len(self._s_feedback_log)
             counts["s_resolve"] = len(self._s_resolve)
         return counts
 
@@ -1260,6 +1562,10 @@ class RouterService:
             # virgin-slot preference (and its inheritance warning) keeps
             # working after a checkpoint round-trip
             payload["ever_used"] = jnp.asarray(self._ever_used)
+        if self.refresh_on:
+            # the duel log (propensities included) restarts with the
+            # posterior: a crash never loses the refresh loop's evidence
+            payload["duel_log"] = self.duel_log
         return save_checkpoint(path, step if step is not None
                                else self.n_routed, payload)
 
@@ -1271,6 +1577,8 @@ class RouterService:
                 "n_routed": jnp.asarray(self.n_routed)}
         if self.dynamic:
             like["ever_used"] = jnp.asarray(self._ever_used)
+        if self.refresh_on:
+            like["duel_log"] = self.duel_log
         try:
             payload = restore_checkpoint(path, step, like)
         except AssertionError as e:
@@ -1307,4 +1615,16 @@ class RouterService:
             self._ever_used = [bool(v) for v in
                                np.asarray(payload["ever_used"])]
             self._sync_stream_costs()
+        if self.refresh_on:
+            self.duel_log = payload["duel_log"]
+            if self.mesh is not None:
+                self.duel_log = jax.device_put(
+                    self.duel_log,
+                    rr.to_shardings(self.mesh,
+                                    rr.duel_log_specs(self.mesh)))
+            # the refresh cadence marker is process-local (like the stats
+            # accumulators): re-anchor it at the restored log head so a
+            # restart never fires a spurious immediate refresh
+            count = jax.device_get(self.duel_log.count)
+            self._count_at_swap = int(count)
         return step

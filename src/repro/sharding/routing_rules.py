@@ -107,14 +107,15 @@ def pending_specs(mesh) -> PendingDuels:
     bx = batch_axes(mesh)
     return PendingDuels(x=P(bx, None), a1=P(bx), a2=P(bx), ticket=P(bx),
                         issued_at=P(bx), valid=P(bx), next_ticket=P(),
-                        pref=P(bx))
+                        pref=P(bx), prop=P(bx), cat=P(bx))
 
 
 def resolved_specs(mesh) -> ResolvedDuels:
     """The gathered feedback batch stays batch-sharded end to end."""
     bx = batch_axes(mesh)
     return ResolvedDuels(x=P(bx, None), a1=P(bx), a2=P(bx), y=P(bx),
-                         age=P(bx), ok=P(bx), pref=P(bx))
+                         age=P(bx), ok=P(bx), pref=P(bx), prop=P(bx),
+                         cat=P(bx))
 
 
 def stream_pending_specs(mesh) -> PendingDuels:
@@ -127,7 +128,18 @@ def stream_pending_specs(mesh) -> PendingDuels:
     bx = batch_axes(mesh)
     return PendingDuels(x=P(bx, None), a1=P(bx), a2=P(bx), ticket=P(bx),
                         issued_at=P(bx), valid=P(bx), next_ticket=P(bx),
-                        pref=P(bx))
+                        pref=P(bx), prop=P(bx), cat=P(bx))
+
+
+def duel_log_specs(mesh):
+    """The exportable duel-log ring (``refresh.duel_log.DuelLog``) is
+    *replicated* like the policy state it sits next to: every device folds
+    the same resolved batch (the fold happens after the feedback gather is
+    canonicalized batch-wide), the ring is small next to the query stream,
+    and the export-for-training read then needs no resharding."""
+    from repro.refresh.duel_log import DuelLog
+    return DuelLog(x=P(), a1=P(), a2=P(), y=P(), pref=P(), prop=P(),
+                   cat=P(), issued_at=P(), valid=P(), count=P())
 
 
 def shard_index(mesh):

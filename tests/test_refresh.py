@@ -1,0 +1,413 @@
+"""Online representation-refresh invariants (repro.refresh + RouterService).
+
+Contracts pinned:
+
+  * duel-log ring: masked folds drop exactly the masked rows, wraparound
+    keeps the latest ``capacity`` duels, export round-trips the valid rows
+    through one device_get;
+  * IPW duel scores undo opponent-selection bias that inverts the naive
+    estimator's ranking (the causal-calibration knob);
+  * a bit-identical table swap is a behavioural no-op: act and update
+    produce bitwise-identical results across every registered pool-backed
+    policy (only the pool generation moves);
+  * a live service's refresh cycle — route with recorded propensities,
+    fold, export, ``apply_table`` — compiles zero new programs after
+    warmup (single-device here, 8-device mesh lane below);
+  * propensities are recorded in (0, 1] by scoring policies and as the
+    1.0 sentinel by propensity-less policies;
+  * checkpoints round-trip the duel log (propensities included) and the
+    refresh cadence re-anchors on restore;
+  * a crashed refresh job leaves the service serving the old table;
+  * ``env.run(refresh_schedule=...)`` swaps the scheduled tables inside
+    the scan and leaves the no-schedule path bit-identical;
+  * the contrastive pair samplers never emit self-pairs (the degenerate
+    target-1 rows the ``_distinct_partner`` fix removed).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, env as env_lib, fgts, policy
+from repro.core import model_pool as mp
+from repro.refresh import (RefreshConfig, category_mix, duel_scores, export,
+                           fold, init_log, refresh_table, schedule)
+
+KEY = jax.random.PRNGKey(3)
+DIM = 16
+K = 4
+M = 3
+
+
+def _cfg(**kw):
+    d = dict(n_models=K, dim=DIM, horizon=64, sgld_steps=2, sgld_minibatch=4)
+    d.update(kw)
+    return fgts.FGTSConfig(**d)
+
+
+def _pool():
+    a_emb = jax.random.normal(jax.random.PRNGKey(0), (K, DIM))
+    costs = jnp.asarray([0.1, 0.2, 0.3, 0.4], jnp.float32)
+    return mp.init_pool(a_emb, costs)
+
+
+def _service(refresh=RefreshConfig(capacity=64, n_categories=M), **cfg_kw):
+    from repro.encoder import EncoderConfig, init_encoder
+    from repro.serving import PoolEntry, RouterService, RouterServiceConfig
+    enc_cfg = EncoderConfig(d_model=DIM, n_layers=1, n_heads=2, d_ff=32,
+                            max_len=8)
+    enc = init_encoder(KEY, enc_cfg)
+    entries = [PoolEntry(name=f"m{i}", arch="granite-3-2b",
+                         cost_per_1k_tokens=0.1 * (i + 1),
+                         embedding=np.random.RandomState(i).randn(DIM)
+                         .astype(np.float32)) for i in range(K)]
+    cfg = RouterServiceConfig(fgts=_cfg(), feedback_capacity=64, k_max=K,
+                              refresh=refresh, **cfg_kw)
+    return RouterService(entries, enc, enc_cfg, cfg)
+
+
+def _drive(svc, rounds=3, batch=8, seed=0):
+    rng = np.random.default_rng(seed)
+    for _ in range(rounds):
+        x = jnp.asarray(rng.normal(size=(batch, DIM)), jnp.float32)
+        a1, a2, t = svc.route_batch(x, cats=jnp.arange(batch) % M)
+        svc.feedback_batch(t, jnp.asarray(
+            np.sign(rng.normal(size=(batch,))), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# duel-log ring
+# ---------------------------------------------------------------------------
+
+def test_init_log_requires_pow2():
+    with pytest.raises(ValueError):
+        init_log(12, DIM)
+    assert init_log(16, DIM).x.shape == (16, DIM)
+
+
+def _fold_batch(log, a1, a2, y, mask, base=0):
+    n = len(a1)
+    x = jnp.arange(n * DIM, dtype=jnp.float32).reshape(n, DIM) + base
+    return fold(log, x, jnp.asarray(a1, jnp.int32), jnp.asarray(a2, jnp.int32),
+                jnp.asarray(y, jnp.float32), jnp.zeros((n,), jnp.float32),
+                jnp.full((n,), 0.5, jnp.float32), jnp.arange(n) % M,
+                jnp.zeros((n,), jnp.int32), jnp.asarray(mask, bool))
+
+
+def test_fold_masks_rows_and_exports_valid():
+    log = init_log(8, DIM)
+    log = _fold_batch(log, [0, 1, 2, 3], [1, 2, 3, 0], [1, -1, 1, -1],
+                      [True, False, True, False])
+    out = export(log)
+    assert out["count"] == 2
+    np.testing.assert_array_equal(out["a1"], [0, 2])
+    np.testing.assert_array_equal(out["y"], [1.0, 1.0])
+    np.testing.assert_array_equal(out["prop"], [0.5, 0.5])
+
+
+def test_fold_wraparound_keeps_latest():
+    log = init_log(4, DIM)
+    for i in range(3):
+        log = _fold_batch(log, [i, i + 1], [i + 1, i], [1, -1],
+                          [True, True], base=100 * i)
+    out = export(log)
+    assert out["count"] == 6
+    assert out["x"].shape == (4, DIM)             # full ring, oldest gone
+    np.testing.assert_array_equal(sorted(out["a1"]), [1, 2, 2, 3])
+
+
+def test_fold_batch_wider_than_capacity_keeps_last():
+    log = init_log(4, DIM)
+    log = _fold_batch(log, [10, 11, 12, 13, 14, 15], [1, 2, 3, 0, 1, 2],
+                      [1] * 6, [True] * 6)
+    out = export(log)
+    assert out["count"] == 6 and out["x"].shape == (4, DIM)
+    np.testing.assert_array_equal(sorted(out["a1"]), [12, 13, 14, 15])
+
+
+# ---------------------------------------------------------------------------
+# trainer: category mix + causal duel scores
+# ---------------------------------------------------------------------------
+
+def test_category_mix_ignores_unknown_and_degrades_uniform():
+    np.testing.assert_array_equal(
+        np.asarray(category_mix(jnp.asarray([0, 0, 2, -1, 7]), 3)),
+        [2.0, 0.0, 1.0])
+    np.testing.assert_array_equal(
+        np.asarray(category_mix(jnp.asarray([-1, -1]), 3)), [1.0, 1.0, 1.0])
+
+
+def test_duel_scores_ipw_beats_naive_on_biased_log():
+    """Opponent-selection bias: arm 1 (strong) duels the champion 90% of
+    the time, arm 2 (mediocre) the punching bag. Naive win rates invert
+    arms 1 and 2; IPW restores the true order."""
+    utils = np.array([0.9, 0.8, 0.5, 0.2])
+    rng = np.random.default_rng(7)
+    n = 2000
+    anchor = rng.integers(1, 3, n)
+    easy = rng.random(n) < 0.9
+    opp = np.where(anchor == 1, np.where(easy, 0, 3), np.where(easy, 3, 0))
+    prop = np.where(easy, 0.9, 0.1).astype(np.float32)
+    # BTL outcomes: the upset probabilities are what IPW re-weights into
+    # an unbiased win rate (deterministic outcomes would tie arms 1 and 2
+    # exactly — both beat arm 3 and lose to arm 0)
+    p_win = 1.0 / (1.0 + np.exp(-8.0 * (utils[anchor] - utils[opp])))
+    y = np.where(rng.random(n) < p_win, 1.0, -1.0).astype(np.float32)
+    causal = duel_scores(anchor, opp, y, np.zeros(n, np.int32), prop, 4, 1,
+                         causal=True)[:, 0]
+    naive = duel_scores(anchor, opp, y, np.zeros(n, np.int32), prop, 4, 1,
+                        causal=False)[:, 0]
+    assert causal[1] > causal[2], "IPW must rank the strong arm first"
+    assert naive[1] < naive[2], "the bias this test builds must fool naive"
+
+
+def test_duel_scores_unseen_cells_are_unknown_not_bad():
+    s = duel_scores(jnp.asarray([0]), jnp.asarray([1]), jnp.asarray([1.0]),
+                    jnp.asarray([0]), jnp.asarray([1.0]), 4, 2)
+    np.testing.assert_allclose(np.asarray(s[2:, :]), 0.5)   # never duelled
+    np.testing.assert_allclose(np.asarray(s[:, 1]), 0.5)    # other category
+
+
+# ---------------------------------------------------------------------------
+# identity table swap: behavioural no-op across registered policies
+# ---------------------------------------------------------------------------
+
+POOL = _pool()
+POOLED_POLICIES = {
+    "fgts_pooled": policy.fgts_policy(POOL, _cfg()),
+    "uniform_pooled": baselines.uniform_policy(POOL),
+    "eps_greedy_pooled": baselines.eps_greedy_policy(
+        POOL, baselines.EpsGreedyConfig(n_models=K, dim=DIM)),
+    "linucb_pooled": baselines.linucb_duel_policy(
+        POOL, baselines.LinUCBConfig(n_models=K, dim=DIM)),
+}
+
+
+@pytest.mark.parametrize("name", sorted(POOLED_POLICIES))
+def test_identity_swap_is_behavioural_noop(name):
+    pol = POOLED_POLICIES[name]
+    state = pol.init(jax.random.PRNGKey(1))
+    pool = mp.get_pool(state)
+    swapped = mp.set_pool(state, mp.set_table(pool, pool.a_emb))
+    assert int(mp.get_pool(swapped).generation) == int(pool.generation) + 1
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, DIM))
+    k = jax.random.PRNGKey(3)
+    s_a, a1_a, a2_a = jax.jit(pol.act)(k, state, x)
+    s_b, a1_b, a2_b = jax.jit(pol.act)(k, swapped, x)
+    np.testing.assert_array_equal(np.asarray(a1_a), np.asarray(a1_b))
+    np.testing.assert_array_equal(np.asarray(a2_a), np.asarray(a2_b))
+    y = jnp.ones((4,), jnp.float32)
+    u_a = jax.jit(pol.update)(s_a, x, a1_a, a2_a, y)
+    u_b = jax.jit(pol.update)(s_b, x, a1_b, a2_b, y)
+    for la, lb in zip(jax.tree.leaves(u_a), jax.tree.leaves(u_b)):
+        if la.shape == ():            # generation is the one moving scalar
+            continue
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# live service: propensities, cadence, zero-retrace, crash safety
+# ---------------------------------------------------------------------------
+
+def test_propensities_recorded_in_unit_interval():
+    svc = _service()
+    _drive(svc, rounds=2)
+    out = svc.export_log()
+    assert out["x"].shape[0] == 16
+    assert (out["prop"] > 0.0).all() and (out["prop"] <= 1.0).all()
+    # a scoring policy's pair propensities are non-degenerate
+    assert np.unique(out["prop"]).size > 1
+    np.testing.assert_array_equal(np.unique(out["cat"]), np.arange(M))
+
+
+def test_propensityless_policy_logs_sentinel_one():
+    svc = _service(policy_factory=lambda arms, costs, cfg:
+                   baselines.uniform_policy(arms))
+    _drive(svc, rounds=1)
+    np.testing.assert_array_equal(export(svc.duel_log)["prop"], 1.0)
+
+
+def test_refresh_due_cadence_and_reanchor():
+    svc = _service(refresh=RefreshConfig(every=16, capacity=64,
+                                         n_categories=M))
+    assert not svc.refresh_due()
+    _drive(svc, rounds=1)                       # 8 duels
+    assert not svc.refresh_due()
+    _drive(svc, rounds=1)                       # 16
+    assert svc.refresh_due()
+    svc.apply_table(mp.get_pool(svc.state).a_emb)
+    assert not svc.refresh_due()                # cadence re-anchored
+    _drive(svc, rounds=2)
+    assert svc.refresh_due()
+
+
+def test_refresh_cycle_zero_retrace(assert_flat):
+    svc = _service()
+    _drive(svc, rounds=2)
+    table = jax.random.normal(jax.random.PRNGKey(9), (K, DIM))
+    svc.apply_table(table)                      # warm the swap program
+    with assert_flat(svc):
+        _drive(svc, rounds=2, seed=1)
+        svc.export_log()
+        svc.apply_table(table * 0.5)
+        _drive(svc, rounds=1, seed=2)
+
+
+def test_crashed_refresh_serves_old_table():
+    svc = _service()
+    _drive(svc, rounds=2)
+    before = np.asarray(mp.get_pool(svc.state).a_emb)
+    log = svc.export_log()
+    with pytest.raises(ValueError):
+        # the offline job dies (bad config) *after* the export: nothing
+        # about the serving state may have moved
+        RefreshConfig(weighting="nope")
+    np.testing.assert_array_equal(
+        np.asarray(mp.get_pool(svc.state).a_emb), before)
+    a1, a2, t = svc.route_batch(jnp.asarray(
+        np.random.default_rng(3).normal(size=(8, DIM)), jnp.float32))
+    svc.feedback_batch(t, jnp.ones((8,), jnp.float32))
+    assert svc.service_stats()["table_swaps"] == 0
+
+
+def test_refresh_requires_dynamic_pool():
+    from repro.serving import RouterServiceConfig
+    with pytest.raises(ValueError):
+        RouterServiceConfig(fgts=_cfg(),
+                            refresh=RefreshConfig(capacity=64))
+
+
+def test_checkpoint_roundtrips_duel_log(tmp_path):
+    svc = _service()
+    _drive(svc, rounds=3)
+    svc.apply_table(jax.random.normal(jax.random.PRNGKey(4), (K, DIM)))
+    svc.save(str(tmp_path), step=7)
+    svc2 = _service()
+    svc2.restore(str(tmp_path), step=7)
+    a, b = svc.export_log(), svc2.export_log()
+    for k in ("x", "a1", "a2", "y", "pref", "prop", "cat"):
+        np.testing.assert_array_equal(a[k], b[k])
+    assert a["count"] == b["count"]
+    assert not svc2.refresh_due()               # cadence re-anchored
+    _drive(svc2, rounds=1, seed=9)              # restored service serves
+
+
+# ---------------------------------------------------------------------------
+# offline trainer end-to-end + env-loop schedule
+# ---------------------------------------------------------------------------
+
+def test_refresh_table_end_to_end():
+    from repro.data.synth import CorpusConfig, make_split
+    from repro.encoder import EncoderConfig, init_encoder
+    enc_cfg = EncoderConfig(d_model=DIM, n_layers=1, n_heads=2, d_ff=32,
+                            max_len=8)
+    enc = init_encoder(KEY, enc_cfg)
+    svc = _service()
+    _drive(svc, rounds=3)
+    cc = CorpusConfig(n_categories=M, seq_len=8)
+    offline = make_split(jax.random.PRNGKey(5), 4, cc)
+    rcfg = RefreshConfig(capacity=64, n_categories=M, epochs=1,
+                         steps_per_epoch=2, batch=8)
+    table, info = refresh_table(jax.random.PRNGKey(6), svc.export_log(),
+                                enc, enc_cfg, offline, rcfg, K,
+                                costs=np.asarray(svc.costs))
+    assert table.shape == (K, DIM)
+    assert np.isfinite(np.asarray(table)).all()
+    assert info["n_duels"] == 24
+    svc.apply_table(table)
+    assert svc.service_stats()["table_swaps"] == 1
+
+
+def test_env_refresh_schedule_applies_tables():
+    pol = POOLED_POLICIES["fgts_pooled"]
+    key = jax.random.PRNGKey(8)
+    e = env_lib.EnvData(
+        x=jax.random.normal(key, (16, DIM)),
+        utils=jax.random.uniform(jax.random.PRNGKey(9), (16, K)))
+    t0 = jax.random.normal(jax.random.PRNGKey(10), (K, DIM))
+    t1 = jax.random.normal(jax.random.PRNGKey(11), (K, DIM))
+    sched = schedule([(1, t0), (3, t1)])
+    cum, state = env_lib.run(key, e, pol, batch=4, refresh_schedule=sched)
+    pool = mp.get_pool(state)
+    np.testing.assert_array_equal(np.asarray(pool.a_emb), np.asarray(t1))
+    assert int(pool.generation) == 2
+    # no schedule stays bit-identical to the baseline path
+    cum_a, st_a = env_lib.run(key, e, pol, batch=4)
+    cum_b, st_b = env_lib.run(key, e, pol, batch=4, refresh_schedule=None)
+    np.testing.assert_array_equal(np.asarray(cum_a), np.asarray(cum_b))
+
+
+# ---------------------------------------------------------------------------
+# satellite regression: contrastive pair samplers never self-pair
+# ---------------------------------------------------------------------------
+
+def test_pair_samplers_never_self_pair():
+    from repro.contrastive.finetune import _distinct_partner
+    for n in (2, 3, 5, 17):
+        for s in range(5):
+            k1, k2 = jax.random.split(jax.random.PRNGKey(s))
+            ia = jax.random.randint(k1, (64,), 0, n)
+            ib = _distinct_partner(k2, ia, n)
+            assert not np.any(np.asarray(ia) == np.asarray(ib))
+            assert np.asarray((ib >= 0) & (ib < n)).all()
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+def test_mesh_refresh_cycle_zero_retrace():
+    """8-device lane: duel logging + export + table swap on the mesh —
+    propensities recorded per shard, the refresh tick compiles nothing
+    after warmup, and batch/stream paths agree on the logged count."""
+    from repro.launch import mesh as mesh_lib
+    from repro.encoder import EncoderConfig, init_encoder
+    from repro.serving import PoolEntry, RouterService, RouterServiceConfig
+    mesh = mesh_lib.make_debug_mesh(4, 2)
+    enc_cfg = EncoderConfig(d_model=DIM, n_layers=1, n_heads=2, d_ff=32,
+                            max_len=8)
+    enc = init_encoder(KEY, enc_cfg)
+    entries = [PoolEntry(name=f"m{i}", arch="granite-3-2b",
+                         cost_per_1k_tokens=0.1 * (i + 1),
+                         embedding=np.random.RandomState(i).randn(DIM)
+                         .astype(np.float32)) for i in range(K)]
+    cfg = RouterServiceConfig(
+        fgts=_cfg(horizon=256), feedback_capacity=128, k_max=K,
+        refresh=RefreshConfig(capacity=128, n_categories=M), buckets=(16,))
+    svc = RouterService(entries, enc, enc_cfg, cfg, mesh=mesh)
+    rng = np.random.default_rng(1)
+
+    def tick(seed):
+        x = jnp.asarray(rng.normal(size=(16, DIM)), jnp.float32)
+        a1, a2, t = svc.route_batch(x, cats=jnp.arange(16) % M)
+        svc.feedback_batch(t, jnp.ones((16,), jnp.float32))
+        a1, a2, t = svc.route_stream(np.asarray(x), cats=np.arange(16) % M)
+        svc.feedback_stream(t, np.ones((16,), np.float32))
+
+    tick(0)
+    table = jnp.asarray(rng.normal(size=(K, DIM)), jnp.float32)
+    svc.apply_table(table)                      # warm the swap program
+    counts = svc.compiled_program_counts()
+    tick(1)
+    svc.apply_table(table * 0.5)
+    tick(2)
+    assert svc.compiled_program_counts() == counts
+    out = svc.export_log()
+    assert out["x"].shape[0] == 96
+    assert (out["prop"] > 0.0).all() and (out["prop"] <= 1.0).all()
+    assert svc.service_stats()["duels_logged"] == 96
+
+
+def test_category_pairs_honour_row_weights():
+    from repro.contrastive.finetune import make_category_pairs
+    n = 12
+    tokens = jnp.arange(n * 4, dtype=jnp.int32).reshape(n, 4) % 32
+    mask = jnp.ones((n, 4), jnp.float32)
+    cats = jnp.arange(n, dtype=jnp.int32) % M
+    w = jnp.where(cats == 0, 1.0, 0.0)          # anchors only from cat 0
+    b = make_category_pairs(jax.random.PRNGKey(12), tokens, mask, cats, 64,
+                            row_weights=w)
+    anchors_cat0 = np.isin(np.asarray(b["tok_a"][:, 0]),
+                           np.asarray(tokens[cats == 0][:, 0]))
+    assert anchors_cat0.all()
